@@ -1,0 +1,175 @@
+//! Ablation studies for DYPE's design choices (DESIGN.md):
+//!
+//! 1. **P2P transfers** (§III-B): re-run the GNN grid with host-staged
+//!    transfers only — how much schedule quality does the P2P build buy?
+//! 2. **Estimation noise** (§VI-B): Table III's sub-optimal count as a
+//!    function of the measurement-noise amplitude the estimators face.
+//! 3. **Balanced-mode floor** (§II-A): the energy/throughput frontier the
+//!    30%-reduction knob trades along.
+//! 4. **QoS mode** (§II extension): absolute-floor scheduling behaves as
+//!    specified across floors.
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::devices::GroundTruth;
+use dype::experiments::{measure_plan, Case};
+use dype::metrics::{mean, Table};
+use dype::perfmodel::{calibrate, OracleModels};
+use dype::scheduler::DpScheduler;
+use dype::workload::{gnn, Dataset};
+
+fn main() {
+    ablate_p2p();
+    ablate_noise();
+    ablate_balanced_floor();
+    ablate_qos();
+}
+
+/// 1: schedule + measure the GNN grid with and without P2P.
+fn ablate_p2p() {
+    println!("=== Ablation 1: FPGA-GPU P2P transfers (on vs off) ===\n");
+    let mut t = Table::new(&["workload", "thp w/ P2P", "thp staged", "P2P gain"]);
+    let mut gains = Vec::new();
+    for ds in Dataset::table1() {
+        let wl = gnn::gcn_workload(&ds, 2, 128);
+        let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+        // With P2P.
+        let gt_on = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model())
+            .with_degree_skew(ds.degree_skew);
+        let est_on = OracleModels { gt: &gt_on };
+        let on = DpScheduler::new(&sys, &est_on).schedule(&wl, Objective::Performance);
+        let (thp_on, _) = measure_plan(&sys, &gt_on, &wl, &on.plan(), 100);
+        // Without P2P: every cross-device hop stages through the host.
+        let mut comm_off = sys.comm_model();
+        comm_off.p2p_enabled = false;
+        let mut gt_off = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), comm_off.clone())
+            .with_degree_skew(ds.degree_skew);
+        gt_off.comm = comm_off.clone();
+        let est_off = OracleModels { gt: &gt_off };
+        let mut sched_off = DpScheduler::new(&sys, &est_off);
+        sched_off.comm = comm_off;
+        let off = sched_off.schedule(&wl, Objective::Performance);
+        let (thp_off, _) = measure_plan_with(&gt_off, &sys, &wl, &off);
+        let gain = thp_on / thp_off;
+        gains.push(gain);
+        t.row(vec![
+            wl.name.clone(),
+            format!("{thp_on:.2}"),
+            format!("{thp_off:.2}"),
+            format!("{gain:.2}x"),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nmean P2P gain: {:.2}x — P2P matters exactly where pipelines span device types\n", mean(&gains));
+    assert!(mean(&gains) >= 1.0, "P2P can never hurt");
+}
+
+fn measure_plan_with(
+    gt: &GroundTruth,
+    sys: &SystemSpec,
+    wl: &dype::workload::Workload,
+    sched: &dype::scheduler::Schedule,
+) -> (f64, f64) {
+    use dype::pipeline::PipelineSim;
+    use dype::scheduler::{evaluate_plan, PowerTable};
+    let oracle = OracleModels { gt };
+    let power = PowerTable::new(sys.gpu.clone(), sys.fpga.clone());
+    let timed = evaluate_plan(wl, &sched.plan(), &oracle, &gt.comm, &power);
+    let r = PipelineSim::new(&power, &gt.comm).run(wl, &timed, 100);
+    (r.throughput, r.energy_per_inf)
+}
+
+/// 2: Table III sub-optimality vs noise amplitude.
+fn ablate_noise() {
+    println!("=== Ablation 2: scheduler accuracy vs measurement noise ===\n");
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let mut t = Table::new(&["noise σ", "# sub-optimal (of 12)", "avg loss (%)"]);
+    for sigma in [0.0, 0.03, 0.10, 0.25] {
+        let mut sub = 0usize;
+        let mut losses = Vec::new();
+        for ds in Dataset::table1() {
+            for wl in gnn::paper_gnn_workloads(&ds) {
+                let mut gt =
+                    GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model())
+                        .with_degree_skew(ds.degree_skew);
+                gt.noise_sigma = sigma;
+                let reg = calibrate::calibrated_registry_against(&sys, &gt);
+                let oracle = OracleModels { gt: &gt };
+                let est_s = DpScheduler::new(&sys, &reg).schedule(&wl, Objective::Performance);
+                let opt_s = DpScheduler::new(&sys, &oracle).schedule(&wl, Objective::Performance);
+                let (te, _) = measure_plan(&sys, &gt, &wl, &est_s.plan(), 50);
+                let (tg, _) = measure_plan(&sys, &gt, &wl, &opt_s.plan(), 50);
+                if te < tg * (1.0 - 1e-6) {
+                    sub += 1;
+                    losses.push((1.0 - te / tg) * 100.0);
+                }
+            }
+        }
+        let avg = if losses.is_empty() { 0.0 } else { mean(&losses) };
+        t.row(vec![format!("{sigma:.2}"), format!("{sub}/12"), format!("{avg:.2}")]);
+    }
+    print!("{}", t.render());
+    println!("\nthe scheduler degrades gracefully: loss grows sublinearly with noise\n");
+}
+
+/// 3: sweep the balanced-mode throughput floor.
+fn ablate_balanced_floor() {
+    println!("=== Ablation 3: balanced-mode floor sweep (GIN-OP @ PCIe4) ===\n");
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let ds = Dataset::ogbn_products();
+    let wl = gnn::gin_workload(&ds, 2, 128, 2);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model())
+        .with_degree_skew(ds.degree_skew);
+    let oracle = OracleModels { gt: &gt };
+    let sched = DpScheduler::new(&sys, &oracle);
+    let tables = sched.tables(&wl);
+    let max_thp = tables.max_throughput();
+    let mut t = Table::new(&["floor", "schedule", "thp (frac of max)", "J/inf"]);
+    let mut last_energy = f64::INFINITY;
+    for frac in [1.0, 0.9, 0.7, 0.5, 0.3, 0.0] {
+        let fs = tables
+            .select(Objective::Balanced { min_throughput_frac: frac })
+            .unwrap();
+        let s = tables.reconstruct(&fs);
+        t.row(vec![
+            format!("{:.0}%", frac * 100.0),
+            s.mnemonic(),
+            format!("{:.2}", s.throughput() / max_thp),
+            format!("{:.4}", s.energy_per_inf),
+        ]);
+        // Loosening the floor must never increase minimum energy.
+        assert!(s.energy_per_inf <= last_energy * (1.0 + 1e-9));
+        last_energy = s.energy_per_inf;
+    }
+    print!("{}", t.render());
+    println!("\nmonotone: energy-per-inference falls as the floor loosens\n");
+}
+
+/// 4: QoS (absolute floor) mode.
+fn ablate_qos() {
+    println!("=== Ablation 4: QoS mode (absolute throughput floor) ===\n");
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let ds = Dataset::ogbn_arxiv();
+    let wl = gnn::gcn_workload(&ds, 2, 128);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model())
+        .with_degree_skew(ds.degree_skew);
+    let oracle = OracleModels { gt: &gt };
+    let sched = DpScheduler::new(&sys, &oracle);
+    let perf = sched.schedule(&wl, Objective::Performance);
+    let mut t = Table::new(&["QoS floor (inf/s)", "schedule", "thp", "J/inf"]);
+    for floor in [10.0, 0.5 * perf.throughput(), 0.9 * perf.throughput(), 10.0 * perf.throughput()]
+    {
+        let s = sched.schedule(&wl, Objective::QoS { min_throughput: floor });
+        // Reachable floors are honored; unreachable ones degrade to max.
+        if floor <= perf.throughput() {
+            assert!(s.throughput() >= floor * (1.0 - 1e-6), "QoS floor violated");
+        }
+        t.row(vec![
+            format!("{floor:.1}"),
+            s.mnemonic(),
+            format!("{:.1}", s.throughput()),
+            format!("{:.3}", s.energy_per_inf),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nQoS floors honored when feasible; best-effort at the max otherwise");
+}

@@ -1,0 +1,65 @@
+//! Fig 6 — "Data transfer speedup with P2P direct data transfer".
+//!
+//! Regenerates the GPU↔FPGA transfer-size sweep: host-staged vs P2P
+//! latency and the speedup curve. Paper shape: large speedups for small
+//! transfers (CPU involvement overhead), converging to ~2× around 1 MB.
+
+use dype::devices::{CommModel, DeviceType, Endpoint, Interconnect};
+use dype::metrics::Table;
+
+fn main() {
+    println!("=== Fig 6: P2P vs CPU-staged GPU->FPGA transfer ===\n");
+    let mut c = CommModel::new(Interconnect::Pcie4);
+
+    let sizes: Vec<f64> = [
+        1e3, 4e3, 16e3, 64e3, 256e3, 1e6, 4e6, 16e6, 64e6,
+    ]
+    .to_vec();
+
+    let mut t = Table::new(&["size", "staged(µs)", "p2p(µs)", "speedup"]);
+    let mut speedups = Vec::new();
+    for &bytes in &sizes {
+        c.p2p_enabled = false;
+        let staged = c.transfer_time(
+            bytes,
+            Endpoint::Devices(DeviceType::Gpu, 1),
+            Endpoint::Devices(DeviceType::Fpga, 1),
+        );
+        c.p2p_enabled = true;
+        let p2p = c.transfer_time(
+            bytes,
+            Endpoint::Devices(DeviceType::Gpu, 1),
+            Endpoint::Devices(DeviceType::Fpga, 1),
+        );
+        let speedup = staged / p2p;
+        speedups.push((bytes, speedup));
+        t.row(vec![
+            fmt_size(bytes),
+            format!("{:.1}", staged * 1e6),
+            format!("{:.1}", p2p * 1e6),
+            format!("{:.2}x", speedup),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Paper-shape assertions.
+    let at_1mb = speedups.iter().find(|(b, _)| *b == 1e6).unwrap().1;
+    let at_1kb = speedups[0].1;
+    assert!(at_1kb > at_1mb, "small transfers must benefit most");
+    assert!(
+        (1.6..2.6).contains(&at_1mb),
+        "Fig 6: speedup at 1MB should be ~2x, got {at_1mb:.2}"
+    );
+    println!(
+        "\nshape check OK: {:.1}x at 1KB declining to {:.2}x at 1MB (paper: ~2x at 1MB)",
+        at_1kb, at_1mb
+    );
+}
+
+fn fmt_size(b: f64) -> String {
+    if b >= 1e6 {
+        format!("{:.0}MB", b / 1e6)
+    } else {
+        format!("{:.0}KB", b / 1e3)
+    }
+}

@@ -1,0 +1,65 @@
+//! Fig 8 — "Throughput and energy efficiency gain of DYPE over GPU-only
+//! on sliding-window-based transformer workloads of window size fixed to
+//! 512".
+//!
+//! Sweep seq_len at w = 512 on PCIe 4.0 (plus the other interconnects for
+//! context). Paper shape: gains exist but *shrink* as the sequence grows —
+//! rising communication overhead outpaces the benefit of FPGA attention.
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::experiments::{measure_plan, Case, Registries, MEASURE_N};
+use dype::metrics::Table;
+use dype::scheduler::{baselines, DpScheduler};
+use dype::workload::transformer;
+
+fn main() {
+    println!("=== Fig 8: DYPE gain over GPU-only, transformers w=512 ===\n");
+    let regs = Registries::train();
+    let seqs = [1024u64, 2048, 4096, 8192, 16384];
+
+    for ic in Interconnect::ALL {
+        let sys = SystemSpec::paper_testbed(ic);
+        let est = regs.get(ic);
+        let mut t = Table::new(&["seq_len", "DYPE thp", "GPU-only thp", "thp gain", "eng gain"]);
+        let mut gains = Vec::new();
+        for &seq in &seqs {
+            let wl = transformer::paper_transformer(seq, 512);
+            let case = Case::new(sys.clone(), wl.clone(), 0.0);
+            let dype = DpScheduler::new(&sys, est).schedule(&wl, Objective::Performance);
+            let gpu = baselines::gpu_only(&sys, est, &wl, Objective::Performance);
+            let d = case.measure(&dype.plan(), MEASURE_N);
+            let gpu_sys = SystemSpec { n_fpga: 0, ..sys.clone() };
+            let g = measure_plan(&gpu_sys, &case.gt, &wl, &gpu.plan(), MEASURE_N);
+            let thp_gain = d.0 / g.0;
+            let eng_gain = g.1 / d.1;
+            gains.push(thp_gain);
+            t.row(vec![
+                seq.to_string(),
+                format!("{:.2}", d.0),
+                format!("{:.2}", g.0),
+                format!("{:.2}x", thp_gain),
+                format!("{:.2}x", eng_gain),
+            ]);
+        }
+        println!("--- {ic} ---");
+        print!("{}\n", t.render());
+
+        if ic == Interconnect::Pcie4 {
+            let peak = gains.iter().cloned().fold(0.0f64, f64::max);
+            let last = *gains.last().unwrap();
+            assert!(peak >= 1.0, "DYPE should beat GPU-only somewhere in the sweep");
+            // DIVERGENCE NOTE (EXPERIMENTS.md): the paper's Fig 8 shows
+            // gains *tapering* with sequence length (their measured comm
+            // overhead outgrew the heterogeneity benefit). On this
+            // substrate the GPU's dense quadratic attention grows faster
+            // than the (linear) transfer volume, so the gain *rises* with
+            // seq instead. Both curves agree that gains exist and that
+            // the absolute advantage is modest at short sequences.
+            println!(
+                "shape (PCIe4): gains {:?} — rising with seq on this substrate; paper's Fig 8 tapers (see EXPERIMENTS.md)\n",
+                gains.iter().map(|g| format!("{g:.2}x")).collect::<Vec<_>>()
+            );
+            let _ = (peak, last);
+        }
+    }
+}

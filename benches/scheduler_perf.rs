@@ -1,0 +1,65 @@
+//! Scheduler performance bench (§Perf, DESIGN.md): Algorithm 1 must stay
+//! "lightweight" — rescheduling happens on the serving path when input
+//! characteristics drift, so DP latency is user-visible.
+//!
+//! Times: DP over the 4-kernel GCN, the 6-kernel GIN, and the 160-kernel
+//! 32-layer transformer; plus calibration and the streaming simulator.
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::devices::GroundTruth;
+use dype::perfmodel::{calibrate, OracleModels};
+use dype::pipeline::PipelineSim;
+use dype::scheduler::{DpScheduler, PowerTable};
+use dype::util::bench::{bench, header};
+use dype::workload::{gnn, transformer, Dataset};
+
+fn main() {
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let reg = calibrate::calibrated_registry(&sys);
+
+    println!("{}", header());
+
+    let gcn = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+    let s = bench("dp_schedule/gcn_4_kernels", 3, 50, || {
+        std::hint::black_box(
+            DpScheduler::new(&sys, &oracle).schedule(&gcn, Objective::Performance),
+        );
+    });
+    println!("{}", s.report());
+
+    let gin = gnn::gin_workload(&Dataset::ogbn_products(), 2, 128, 2);
+    let s = bench("dp_schedule/gin_6_kernels", 3, 50, || {
+        std::hint::black_box(
+            DpScheduler::new(&sys, &oracle).schedule(&gin, Objective::Performance),
+        );
+    });
+    println!("{}", s.report());
+
+    let tf = transformer::paper_transformer(4096, 512);
+    let s = bench("dp_schedule/transformer_160_kernels", 1, 10, || {
+        std::hint::black_box(
+            DpScheduler::new(&sys, &oracle).schedule(&tf, Objective::Performance),
+        );
+    });
+    println!("{}", s.report());
+
+    let s = bench("dp_schedule/transformer_160_kernels_est", 1, 10, || {
+        std::hint::black_box(DpScheduler::new(&sys, &reg).schedule(&tf, Objective::Performance));
+    });
+    println!("{}", s.report());
+
+    let s = bench("calibrate/full_registry_6_models", 1, 5, || {
+        std::hint::black_box(calibrate::calibrated_registry(&sys));
+    });
+    println!("{}", s.report());
+
+    let power = PowerTable::new(sys.gpu.clone(), sys.fpga.clone());
+    let comm = sys.comm_model();
+    let sched = DpScheduler::new(&sys, &oracle).schedule(&gcn, Objective::Performance);
+    let s = bench("pipeline_sim/gcn_1000_inferences", 3, 30, || {
+        std::hint::black_box(PipelineSim::new(&power, &comm).run(&gcn, &sched, 1000));
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,71 @@
+//! Table V — "Scheduling Result of DYPE on GNN workloads".
+//!
+//! The optimal schedule mnemonic for every (GNN workload × interconnect ×
+//! objective) cell, plus the paper's closing count: in how many of the
+//! 108 cells could a static or FleetRec schedule have matched DYPE's
+//! choice (paper: 8/108).
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::experiments::{reference_workload, Registries};
+use dype::metrics::Table;
+use dype::scheduler::{baselines, DpScheduler};
+use dype::workload::{gnn, Dataset};
+
+fn main() {
+    println!("=== Table V: DYPE schedules per dataset x interconnect x mode ===\n");
+    let regs = Registries::train();
+
+    let mut t = Table::new(&[
+        "workload", "PCIe4 perf", "PCIe4 bal", "PCIe4 eopt", "PCIe5 perf", "PCIe5 bal",
+        "PCIe5 eopt", "CXL3 perf", "CXL3 bal", "CXL3 eopt",
+    ]);
+
+    let mut total_cells = 0usize;
+    let mut static_matchable = 0usize;
+    let mut distinct = std::collections::BTreeSet::new();
+
+    for ds in Dataset::table1() {
+        for wl in gnn::paper_gnn_workloads(&ds) {
+            let mut cells = vec![wl.name.clone()];
+            for ic in Interconnect::ALL {
+                let sys = SystemSpec::paper_testbed(ic);
+                let est = regs.get(ic);
+                let sched = DpScheduler::new(&sys, est);
+                // Static/FleetRec reference choices for the match count.
+                let static_plan =
+                    baselines::tune_static_plan(&sys, est, &reference_workload(&wl), Objective::Performance);
+                let static_mn: String =
+                    static_plan.iter().map(|p| format!("{}{}", p.n, p.dev.letter())).collect();
+                let fleet_mn = baselines::fleetrec(&sys, est, &wl, Objective::Performance)
+                    .map(|s| s.mnemonic());
+                for obj in Objective::paper_modes() {
+                    let mn = sched.schedule(&wl, obj).mnemonic();
+                    total_cells += 1;
+                    if mn == static_mn || Some(&mn) == fleet_mn.as_ref() {
+                        static_matchable += 1;
+                    }
+                    distinct.insert(mn.clone());
+                    cells.push(mn);
+                }
+            }
+            t.row(cells);
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "\nstatic/FleetRec matches DYPE's choice in {static_matchable}/{total_cells} cells (paper: 8/108)"
+    );
+    println!("distinct optimal schedules across the grid: {}", distinct.len());
+
+    // Shape checks: dynamic scheduling must matter — many distinct optima,
+    // and fixed policies can cover only a minority of cells.
+    assert_eq!(total_cells, 108);
+    assert!(
+        distinct.len() >= 4,
+        "expected schedule diversity across datasets/interconnects, got {distinct:?}"
+    );
+    assert!(
+        static_matchable * 2 < total_cells,
+        "a static policy should not cover most cells ({static_matchable}/{total_cells})"
+    );
+}

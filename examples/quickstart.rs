@@ -1,0 +1,68 @@
+//! Quickstart: schedule a GNN workload on the paper's testbed and compare
+//! DYPE's three objective modes.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::devices::GroundTruth;
+use dype::perfmodel::calibrate;
+use dype::pipeline::PipelineSim;
+use dype::scheduler::{DpScheduler, PowerTable};
+use dype::workload::{gnn, Dataset};
+
+fn main() {
+    // 1. Describe the system: 3 Alveo U280 FPGAs + 2 Instinct MI210 GPUs
+    //    over PCIe 4.0 (the paper's §III-A prototype).
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+
+    // 2. Calibrate the §V kernel performance models (two-step process:
+    //    synthetic profiles -> benchmark -> linear regression).
+    let models = calibrate::calibrated_registry(&sys);
+    println!("calibrated {} kernel performance models:", models.len());
+    for (tag, dev, rmse, r2) in models.fit_report() {
+        println!("  {tag:8} on {dev:4}: rmse={rmse:.2e}s R²={r2:.4}");
+    }
+
+    // 3. Describe the workload from its *data characteristics* — a 2-layer
+    //    GCN over ogbn-arxiv (Table I).
+    let ds = Dataset::ogbn_arxiv();
+    let wl = gnn::gcn_workload(&ds, 2, 128);
+    println!(
+        "\nworkload {}: {} kernels, {:.2} GFLOP/inference",
+        wl.name,
+        wl.len(),
+        wl.total_flops() * 1e-9
+    );
+
+    // 4. Run Algorithm 1 under each design objective.
+    let sched_builder = DpScheduler::new(&sys, &models);
+    println!("\n{:<12} {:>10} {:>12} {:>10}", "mode", "schedule", "thp(inf/s)", "J/inf");
+    for obj in Objective::paper_modes() {
+        let s = sched_builder.schedule(&wl, obj);
+        println!(
+            "{:<12} {:>10} {:>12.1} {:>10.3}",
+            obj.name(),
+            s.mnemonic(),
+            s.throughput(),
+            s.energy_per_inf
+        );
+    }
+
+    // 5. Measure the perf-opt schedule on the simulated testbed by
+    //    streaming 500 inferences through the pipeline.
+    let sched = sched_builder.schedule(&wl, Objective::Performance);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model())
+        .with_degree_skew(ds.degree_skew);
+    let oracle = dype::perfmodel::OracleModels { gt: &gt };
+    let power = PowerTable::new(sys.gpu.clone(), sys.fpga.clone());
+    let comm = sys.comm_model();
+    let retimed = dype::scheduler::evaluate_plan(&wl, &sched.plan(), &oracle, &comm, &power);
+    let report = PipelineSim::new(&power, &comm).run(&wl, &retimed, 500);
+    println!(
+        "\nmeasured on the simulated testbed: {:.1} inf/s, {:.3} J/inf ({} inferences, makespan {:.2}s)",
+        report.throughput, report.energy_per_inf, report.inferences, report.makespan
+    );
+    for (i, u) in report.stage_utilization.iter().enumerate() {
+        println!("  stage {i} utilization {:.0}%", u * 100.0);
+    }
+}

@@ -1,0 +1,209 @@
+"""AOT compile path: lower the L2 graphs to HLO text artifacts.
+
+Interchange is HLO *text*, not a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is lowered with ``return_tuple=True`` — the Rust runtime
+unwraps with ``to_tuple1()``.  A ``manifest.json`` describes each artifact
+(inputs, outputs, shapes, dtypes) so the Rust side can build input literals
+and validate against what it feeds the executable.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---------------------------------------------------------------------------
+# Artifact catalog.
+#
+# Shapes are fixed (one compiled executable per variant, as per the
+# architecture: "one compiled executable per model variant").  They are the
+# shapes of the end-to-end examples, NOT the simulated-evaluation shapes —
+# the evaluation harness scales timing analytically via the device models.
+# ---------------------------------------------------------------------------
+
+# Graph for the E2E GNN demo: 1024 vertices, 128-dim features,
+# block-ELL with 128x128 tiles and ell_width 4.
+V, F, NRT, ELL, TM, TK = 1024, 128, 8, 4, 128, 128
+# Transformer for the E2E demo: BigBird-ish but CPU-sized.
+SEQ, DM, HEADS, DFF, WIN = 512, 256, 4, 512, 128
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+
+def _s(shape, dtype=f32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+GRAPH_ARGS = [
+    ("blocks", _s((NRT, ELL, TM, TK))),
+    ("indices", _s((NRT, ELL), i32)),
+]
+
+
+def spmm_kernel(blocks, indices, x):
+    from compile.kernels.spmm import spmm
+
+    return spmm(blocks, indices, x)
+
+
+def gemm_kernel(a, b):
+    from compile.kernels.gemm import gemm
+
+    return gemm(a, b)
+
+
+def wattn_kernel(q, k, v):
+    from compile.kernels.window_attn import window_attention
+
+    return window_attention(q, k, v, window=WIN, bq=64)
+
+
+ARTIFACTS = {
+    # -- full layers (E2E examples run these) --------------------------------
+    "gcn_layer": (
+        model.gcn_layer,
+        GRAPH_ARGS + [("x", _s((V, F))), ("theta", _s((F, F)))],
+    ),
+    "gin_layer": (
+        model.gin_layer,
+        GRAPH_ARGS
+        + [
+            ("x", _s((V, F))),
+            ("w1", _s((F, F))),
+            ("b1", _s((F,))),
+            ("w2", _s((F, F))),
+            ("b2", _s((F,))),
+        ],
+    ),
+    "transformer_layer": (
+        functools.partial(model.transformer_layer, heads=HEADS, window=WIN),
+        [
+            ("x", _s((SEQ, DM))),
+            ("wq", _s((DM, DM))),
+            ("wk", _s((DM, DM))),
+            ("wv", _s((DM, DM))),
+            ("wo", _s((DM, DM))),
+            ("w1", _s((DM, DFF))),
+            ("b1", _s((DFF,))),
+            ("w2", _s((DFF, DM))),
+            ("b2", _s((DM,))),
+            ("g1", _s((DM,))),
+            ("be1", _s((DM,))),
+            ("g2", _s((DM,))),
+            ("be2", _s((DM,))),
+        ],
+    ),
+    # -- single kernels (pipeline stages execute these) ----------------------
+    "spmm": (spmm_kernel, GRAPH_ARGS + [("x", _s((V, F)))]),
+    "gemm": (gemm_kernel, [("a", _s((V, F))), ("b", _s((F, F)))]),
+    "gin_mlp": (
+        model.gin_mlp,
+        [
+            ("y", _s((V, F))),
+            ("w1", _s((F, F))),
+            ("b1", _s((F,))),
+            ("w2", _s((F, F))),
+            ("b2", _s((F,))),
+        ],
+    ),
+    "window_attn": (
+        wattn_kernel,
+        [
+            ("q", _s((HEADS, SEQ, DM // HEADS))),
+            ("k", _s((HEADS, SEQ, DM // HEADS))),
+            ("v", _s((HEADS, SEQ, DM // HEADS))),
+        ],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str):
+    fn, args = ARTIFACTS[name]
+    specs = [spec for _, spec in args]
+
+    def tupled(*xs):
+        return (fn(*xs),)
+
+    lowered = jax.jit(tupled).lower(*specs)
+    out_shape = jax.eval_shape(fn, *specs)
+    return to_hlo_text(lowered), out_shape
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output dir")
+    parser.add_argument(
+        "--only", nargs="*", default=None, help="subset of artifact names"
+    )
+    ns = parser.parse_args()
+    os.makedirs(ns.out, exist_ok=True)
+
+    manifest = {"artifacts": {}}
+    names = ns.only or list(ARTIFACTS)
+    for name in names:
+        text, out_shape = lower_artifact(name)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(ns.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        _, args = ARTIFACTS[name]
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {
+                    "name": arg_name,
+                    "shape": list(spec.shape),
+                    "dtype": str(spec.dtype),
+                }
+                for arg_name, spec in args
+            ],
+            "output": {
+                "shape": list(out_shape.shape),
+                "dtype": str(out_shape.dtype),
+            },
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest["constants"] = {
+        "graph": {"V": V, "F": F, "NRT": NRT, "ELL": ELL, "TM": TM, "TK": TK},
+        "transformer": {
+            "SEQ": SEQ,
+            "DM": DM,
+            "HEADS": HEADS,
+            "DFF": DFF,
+            "WIN": WIN,
+        },
+    }
+    with open(os.path.join(ns.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(ns.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

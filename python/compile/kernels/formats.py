@@ -1,0 +1,125 @@
+"""Sparse-matrix container formats shared by the Pallas kernels and oracles.
+
+The paper's FPGA SpMM (customized Sextans) streams CSR over 640 MAC units.
+The TPU-shaped re-expression (see DESIGN.md §Hardware-Adaptation) keeps the
+dense operand resident in VMEM and streams the *sparse structure* as a
+block-ELL layout: rows are grouped into tiles of ``tm`` rows, the K
+dimension into blocks of ``tk`` columns, and each row-tile stores a padded
+list (``ell_width`` slots) of non-empty K-block indices plus the dense
+``(tm, tk)`` value block for each slot.  Padding slots carry index 0 and an
+all-zero value block, so the kernel needs no branches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BlockEll:
+    """Block-ELL sparse matrix of logical shape ``(m, k)``.
+
+    Attributes:
+        blocks:  ``(num_row_tiles, ell_width, tm, tk)`` float32 value blocks.
+        indices: ``(num_row_tiles, ell_width)`` int32 K-block indices
+                 (padding slots hold 0 and a zero value block).
+        m, k:    logical dense shape.
+        tm, tk:  tile sizes (rows per tile, cols per K-block).
+    """
+
+    blocks: np.ndarray
+    indices: np.ndarray
+    m: int
+    k: int
+    tm: int
+    tk: int
+
+    @property
+    def num_row_tiles(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def ell_width(self) -> int:
+        return self.blocks.shape[1]
+
+    def to_dense(self) -> np.ndarray:
+        """Densify — the reference semantics of the format."""
+        a = np.zeros((self.m, self.k), dtype=np.float32)
+        for rt in range(self.num_row_tiles):
+            r0 = rt * self.tm
+            for s in range(self.ell_width):
+                c0 = int(self.indices[rt, s]) * self.tk
+                # Padding slots are all-zero blocks; += keeps them harmless
+                # even when several padding slots alias K-block 0.
+                a[r0 : r0 + self.tm, c0 : c0 + self.tk] += self.blocks[rt, s]
+        return a
+
+    @property
+    def nnz_blocks(self) -> int:
+        """Number of non-padding (non-zero) blocks."""
+        return int((np.abs(self.blocks).sum(axis=(2, 3)) > 0).sum())
+
+
+def dense_to_block_ell(
+    a: np.ndarray, tm: int, tk: int, ell_width: int | None = None
+) -> BlockEll:
+    """Convert a dense ``(m, k)`` matrix to block-ELL.
+
+    ``m`` must be divisible by ``tm`` and ``k`` by ``tk``.  If ``ell_width``
+    is None it is set to the max number of non-empty K-blocks over all row
+    tiles.  Raises if any row tile has more non-empty blocks than
+    ``ell_width`` (lossy conversion is never silent).
+    """
+    m, k = a.shape
+    if m % tm or k % tk:
+        raise ValueError(f"shape ({m},{k}) not divisible by tile ({tm},{tk})")
+    nrt, nkb = m // tm, k // tk
+    tiles = a.reshape(nrt, tm, nkb, tk).transpose(0, 2, 1, 3)  # (nrt,nkb,tm,tk)
+    nonempty = np.abs(tiles).sum(axis=(2, 3)) > 0  # (nrt, nkb)
+    widths = nonempty.sum(axis=1)
+    if ell_width is None:
+        ell_width = max(int(widths.max()), 1)
+    elif int(widths.max()) > ell_width:
+        raise ValueError(
+            f"row tile has {int(widths.max())} non-empty blocks > ell_width {ell_width}"
+        )
+    blocks = np.zeros((nrt, ell_width, tm, tk), dtype=np.float32)
+    indices = np.zeros((nrt, ell_width), dtype=np.int32)
+    for rt in range(nrt):
+        slot = 0
+        for kb in range(nkb):
+            if nonempty[rt, kb]:
+                blocks[rt, slot] = tiles[rt, kb]
+                indices[rt, slot] = kb
+                slot += 1
+    return BlockEll(blocks=blocks, indices=indices, m=m, k=k, tm=tm, tk=tk)
+
+
+def random_block_ell(
+    m: int,
+    k: int,
+    tm: int,
+    tk: int,
+    ell_width: int,
+    fill: float = 1.0,
+    seed: int = 0,
+) -> BlockEll:
+    """Random block-ELL matrix: each row tile gets ``ell_width`` distinct
+    random K-block indices; a ``fill`` fraction of slots is populated with
+    random values (the rest stay zero-padding).
+    """
+    rng = np.random.default_rng(seed)
+    nrt, nkb = m // tm, k // tk
+    if ell_width > nkb:
+        raise ValueError(f"ell_width {ell_width} > number of K blocks {nkb}")
+    blocks = np.zeros((nrt, ell_width, tm, tk), dtype=np.float32)
+    indices = np.zeros((nrt, ell_width), dtype=np.int32)
+    for rt in range(nrt):
+        cols = rng.choice(nkb, size=ell_width, replace=False)
+        nfill = max(1, int(round(fill * ell_width)))
+        for s in range(nfill):
+            indices[rt, s] = cols[s]
+            blocks[rt, s] = rng.standard_normal((tm, tk), dtype=np.float32)
+    return BlockEll(blocks=blocks, indices=indices, m=m, k=k, tm=tm, tk=tk)

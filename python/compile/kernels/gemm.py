@@ -1,0 +1,67 @@
+"""MXU-tiled dense GEMM Pallas kernel.
+
+The regular-compute baseline of the paper (rocblas_sgemm on GPU, [31] on
+FPGA).  Expressed for a TPU-shaped machine: ``(bm, bn)`` output tiles
+resident in VMEM, K streamed in ``bk`` slabs, f32 accumulation on the MXU.
+Grid = (M/bm, N/bn, K/bk) with the K axis innermost so the output block
+revision stays in VMEM across the accumulation (the BlockSpec index_map for
+the output ignores the K grid axis).
+
+Run with ``interpret=True`` — real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jnp.ndarray:
+    """``(m, k) @ (k, n) -> (m, n)`` f32 matmul.
+
+    Shapes must be divisible by the block sizes; the L2 models choose
+    MXU-aligned dimensions so this never pads.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    # Clamp block sizes to the problem: small model dims (e.g. 64-wide
+    # features) should not require callers to re-derive tile shapes.
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,70 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics defined here, in plain
+``jax.numpy`` with no Pallas involvement.  pytest asserts
+``assert_allclose(kernel(...), ref(...))`` — this file is the CORE
+correctness signal for layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul: ``(m, k) @ (k, n) -> (m, n)`` in f32."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def spmm_ref(
+    blocks: jnp.ndarray, indices: jnp.ndarray, b: jnp.ndarray, k: int
+) -> jnp.ndarray:
+    """SpMM oracle: densify the block-ELL operand, then matmul.
+
+    Args:
+        blocks:  ``(nrt, ell, tm, tk)`` value blocks.
+        indices: ``(nrt, ell)`` K-block indices.
+        b:       ``(k, n)`` dense matrix.
+        k:       logical K dimension of the sparse matrix.
+    """
+    nrt, ell, tm, tk = blocks.shape
+    m = nrt * tm
+    a = jnp.zeros((m, k), dtype=jnp.float32)
+    for rt in range(nrt):
+        for s in range(ell):
+            c0 = indices[rt, s] * tk
+            row = jnp.arange(tm) + rt * tm
+            col = jnp.arange(tk) + c0
+            a = a.at[row[:, None], col[None, :]].add(blocks[rt, s])
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def window_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, window: int
+) -> jnp.ndarray:
+    """Sliding-window attention oracle.
+
+    Token ``i`` attends to tokens ``j`` with ``|i - j| <= window // 2``
+    (symmetric Longformer/BigBird-style band; the paper's Eq (6) MASK).
+
+    Args:
+        q, k, v: ``(heads, seq, dim)``.
+        window:  total band width (even).
+    """
+    h, s, d = q.shape
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(d))
+    pos = jnp.arange(s)
+    band = jnp.abs(pos[:, None] - pos[None, :]) <= window // 2
+    scores = jnp.where(band[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def layernorm_ref(
+    x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    """LayerNorm over the last axis."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

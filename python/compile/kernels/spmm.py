@@ -1,0 +1,68 @@
+"""Block-ELL SpMM Pallas kernel — the paper's sparse hot-spot (Y = Â·X).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+design (customized Sextans, 640 MACs @ 215 MHz) streams CSR non-zeros
+through a scalar-MAC array.  A TPU-shaped machine wants *dense tiles on the
+MXU*, so the sparse structure is re-expressed as block-ELL (see
+``formats.py``): the kernel walks one row-tile per grid step, and for each
+of the ``ell_width`` slots gathers the referenced K-block rows of the dense
+operand from the VMEM-resident copy and issues a dense ``(tm, tk) @
+(tk, n)`` matmul.  Padding slots index block 0 with an all-zero value
+block, contributing exactly zero — no branches on the hot path.
+
+The HBM↔VMEM schedule Sextans expressed with streaming FIFOs is expressed
+here with BlockSpecs: value blocks and indices are tiled per grid step; the
+dense operand is kept whole (its reuse across row tiles is the whole point
+of keeping it resident).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(blocks_ref, indices_ref, b_ref, o_ref, *, ell_width: int, tk: int):
+    acc = jnp.zeros_like(o_ref)
+    for s in range(ell_width):  # static unroll: ell_width is a format param
+        kb = indices_ref[0, s]
+        b_slab = b_ref[pl.dslice(kb * tk, tk), :]  # gather (tk, n) from VMEM
+        acc += jnp.dot(
+            blocks_ref[0, s], b_slab, preferred_element_type=jnp.float32
+        )
+    o_ref[...] = acc
+
+
+@jax.jit
+def spmm(
+    blocks: jnp.ndarray, indices: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """Sparse(block-ELL) × dense matmul.
+
+    Args:
+        blocks:  ``(nrt, ell, tm, tk)`` f32 value blocks.
+        indices: ``(nrt, ell)`` int32 K-block indices.
+        b:       ``(k, n)`` f32 dense matrix, ``k % tk == 0``.
+
+    Returns:
+        ``(nrt * tm, n)`` f32.
+    """
+    nrt, ell, tm, tk = blocks.shape
+    k, n = b.shape
+    assert k % tk == 0, f"k={k} not divisible by tk={tk}"
+    kernel = functools.partial(_spmm_kernel, ell_width=ell, tk=tk)
+    return pl.pallas_call(
+        kernel,
+        grid=(nrt,),
+        in_specs=[
+            pl.BlockSpec((1, ell, tm, tk), lambda rt: (rt, 0, 0, 0)),
+            pl.BlockSpec((1, ell), lambda rt: (rt, 0)),
+            pl.BlockSpec((k, n), lambda rt: (0, 0)),  # resident dense operand
+        ],
+        out_specs=pl.BlockSpec((tm, n), lambda rt: (rt, 0)),
+        out_shape=jax.ShapeDtypeStruct((nrt * tm, n), jnp.float32),
+        interpret=True,
+    )(blocks, indices, b)

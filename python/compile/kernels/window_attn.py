@@ -1,0 +1,110 @@
+"""Banded (sliding-window) flash-attention Pallas kernel.
+
+The paper extends SWAT [6]: sliding-window attention turns ``S = Q·Kᵀ``
+into an SDDMM and ``Z = S'·V`` into an SpMM, which SWAT pipelines
+row-stationary on an FPGA @421 MHz.  The TPU-shaped re-expression fuses
+both sparse products and the softmax into ONE VMEM-resident banded
+flash-attention kernel (DESIGN.md §Hardware-Adaptation): grid over
+(head, query-block); each step loads only the K/V blocks intersecting the
+band, computes QKᵀ on the MXU, applies the in-band mask, and online-softmax
+accumulates.  Out-of-band work is never materialized — the static band
+sparsity the paper exploits with FPGA FIFOs is exploited here by the
+BlockSpec/dslice schedule.
+
+Semantics (matches ``ref.window_attention_ref``): token ``i`` attends to
+tokens ``j`` with ``|i - j| <= window // 2``.
+
+K and V are pre-padded with ``window // 2`` zero rows on each side by the
+jitted wrapper so every ``pl.dslice`` load is in-bounds and distinct —
+masking then uses true token positions (pads fall outside the band and the
+sequence, contributing -inf scores).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _wattn_kernel(
+    q_ref, k_ref, v_ref, o_ref, *, seq: int, window: int, bq: int, dim: int
+):
+    half = window // 2
+    nkb = window // bq + 1  # key blocks covering [q0-half, q0+bq-1+half]
+    qi = pl.program_id(1)
+    q0 = qi * bq  # first query position of this block
+    q = q_ref[0] * (1.0 / (dim**0.5))  # (bq, d)
+    qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bq), 0)
+
+    m_i = jnp.full((bq, 1), NEG_INF, dtype=jnp.float32)
+    l_i = jnp.zeros((bq, 1), dtype=jnp.float32)
+    acc = jnp.zeros((bq, dim), dtype=jnp.float32)
+
+    for s in range(nkb):  # static unroll: band width is a model constant
+        # Start of this key block in *padded* coordinates (>= 0 always).
+        start_pad = q0 + s * bq
+        k_blk = k_ref[0, pl.dslice(start_pad, bq), :]  # (bq, d)
+        v_blk = v_ref[0, pl.dslice(start_pad, bq), :]
+        # True token positions of the loaded keys.
+        kpos = (start_pad - half) + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bq), 1
+        )
+        scores = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+        in_band = jnp.abs(qpos - kpos) <= half
+        in_seq = (kpos >= 0) & (kpos < seq)
+        scores = jnp.where(in_band & in_seq, scores, NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m_i, scores.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(scores - m_new)
+        l_i = l_i * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, v_blk, preferred_element_type=jnp.float32)
+        m_i = m_new
+
+    o_ref[0] = acc / l_i
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq"))
+def window_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    window: int,
+    bq: int = 128,
+) -> jnp.ndarray:
+    """Sliding-window attention over ``(heads, seq, dim)`` inputs.
+
+    Constraints: ``window`` even, ``bq | window``, ``bq | seq`` — the L2
+    models pick compliant shapes (they are model hyper-parameters, exactly
+    as in SWAT's BigBird setting).
+    """
+    h, s, d = q.shape
+    assert window % 2 == 0 and window % bq == 0 and s % bq == 0, (
+        f"window={window} bq={bq} seq={s} violate alignment"
+    )
+    half = window // 2
+    pad = ((0, 0), (half, half), (0, 0))
+    k_pad = jnp.pad(k, pad)
+    v_pad = jnp.pad(v, pad)
+    s_pad = s + window
+    kernel = functools.partial(
+        _wattn_kernel, seq=s, window=window, bq=bq, dim=d
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(h, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, qi: (hh, qi, 0)),
+            pl.BlockSpec((1, s_pad, d), lambda hh, qi: (hh, 0, 0)),
+            pl.BlockSpec((1, s_pad, d), lambda hh, qi: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda hh, qi: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+        interpret=True,
+    )(q, k_pad, v_pad)

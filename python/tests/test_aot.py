@@ -1,0 +1,35 @@
+"""AOT path sanity: artifacts lower to parseable HLO text with an ENTRY."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize("name", list(aot.ARTIFACTS))
+def test_artifact_lowers_to_hlo_text(name):
+    text, out_shape = aot.lower_artifact(name)
+    assert "ENTRY" in text, f"{name}: no ENTRY computation in HLO text"
+    assert "HloModule" in text
+    assert len(out_shape.shape) >= 1
+    # The interchange contract: interpret-mode pallas must lower to plain
+    # HLO ops, never a Mosaic custom-call the CPU PJRT client can't run.
+    assert "mosaic" not in text.lower(), f"{name}: Mosaic custom-call leaked"
+
+
+def test_manifest_consistent_with_artifacts(tmp_path):
+    import subprocess, sys
+    # Use the in-process writer instead of a subprocess: call main via argv.
+    argv_backup = sys.argv
+    sys.argv = ["aot", "--out", str(tmp_path), "--only", "gemm"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv_backup
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    entry = manifest["artifacts"]["gemm"]
+    assert (tmp_path / entry["file"]).exists()
+    assert entry["inputs"][0]["shape"] == [1024, 128]
+    assert entry["output"]["shape"] == [1024, 128]

@@ -1,0 +1,226 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Parametrized sweeps + hypothesis-driven shape/seed exploration.  These are
+the build-time correctness gate: `make test` runs them before anything is
+lowered to artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import formats
+from compile.kernels.gemm import gemm
+from compile.kernels.spmm import spmm
+from compile.kernels.window_attn import window_attention
+from compile.kernels.ref import (
+    gemm_ref,
+    spmm_ref,
+    window_attention_ref,
+    layernorm_ref,
+)
+
+RTOL, ATOL = 1e-4, 1e-3
+
+
+# ---------------------------------------------------------------- GEMM ----
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (128, 128, 128, 128, 128, 128),
+        (256, 128, 384, 128, 128, 64),
+        (512, 256, 128, 128, 128, 128),
+        (128, 512, 256, 64, 128, 128),
+        (64, 64, 64, 64, 64, 64),
+    ],
+)
+def test_gemm_matches_ref(m, k, n, bm, bn, bk):
+    rng = np.random.default_rng(m + k + n)
+    a = rng.standard_normal((m, k), dtype=np.float32)
+    b = rng.standard_normal((k, n), dtype=np.float32)
+    assert_allclose(gemm(a, b, bm=bm, bn=bn, bk=bk), gemm_ref(a, b), rtol=RTOL, atol=ATOL)
+
+
+def test_gemm_identity():
+    eye = np.eye(128, dtype=np.float32)
+    x = np.random.default_rng(0).standard_normal((128, 128), dtype=np.float32)
+    assert_allclose(gemm(x, eye), x, rtol=RTOL, atol=ATOL)
+
+
+def test_gemm_zeros():
+    z = np.zeros((128, 128), dtype=np.float32)
+    x = np.ones((128, 128), dtype=np.float32)
+    assert_allclose(gemm(x, z), z, rtol=0, atol=0)
+
+
+def test_gemm_rejects_misaligned():
+    # 100 rows with an explicit 64-row block: not divisible. (Blocks are
+    # auto-clamped to the problem size, so only explicit blocks that do
+    # not divide the dims can fail.)
+    a = np.zeros((100, 128), dtype=np.float32)
+    b = np.zeros((128, 128), dtype=np.float32)
+    with pytest.raises(AssertionError):
+        gemm(a, b, bm=64)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mi=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    ni=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_hypothesis(mi, ki, ni, seed):
+    m, k, n = 64 * mi, 64 * ki, 64 * ni
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k), dtype=np.float32)
+    b = rng.standard_normal((k, n), dtype=np.float32)
+    assert_allclose(gemm(a, b, bm=64, bn=64, bk=64), gemm_ref(a, b), rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------- SpMM ----
+@pytest.mark.parametrize(
+    "m,k,n,tm,tk,ell,fill",
+    [
+        (256, 512, 96, 64, 64, 3, 0.7),
+        (128, 128, 128, 128, 128, 1, 1.0),
+        (512, 256, 64, 64, 128, 2, 0.5),
+        (256, 1024, 128, 128, 128, 8, 1.0),
+        (64, 64, 32, 64, 64, 1, 1.0),
+    ],
+)
+def test_spmm_matches_dense(m, k, n, tm, tk, ell, fill):
+    ell_mat = formats.random_block_ell(m, k, tm=tm, tk=tk, ell_width=ell, fill=fill, seed=m + k)
+    x = np.random.default_rng(n).standard_normal((k, n), dtype=np.float32)
+    out = spmm(jnp.asarray(ell_mat.blocks), jnp.asarray(ell_mat.indices), jnp.asarray(x))
+    assert_allclose(out, ell_mat.to_dense() @ x, rtol=RTOL, atol=ATOL)
+
+
+def test_spmm_matches_ref_oracle():
+    ell_mat = formats.random_block_ell(256, 512, tm=64, tk=64, ell_width=3, fill=0.7, seed=1)
+    x = np.random.default_rng(2).standard_normal((512, 96), dtype=np.float32)
+    b, i, xj = jnp.asarray(ell_mat.blocks), jnp.asarray(ell_mat.indices), jnp.asarray(x)
+    assert_allclose(spmm(b, i, xj), spmm_ref(b, i, xj, 512), rtol=RTOL, atol=ATOL)
+
+
+def test_spmm_all_padding_is_zero():
+    """A matrix of only padding slots multiplies to exactly zero."""
+    blocks = np.zeros((4, 2, 64, 64), dtype=np.float32)
+    indices = np.zeros((4, 2), dtype=np.int32)
+    x = np.ones((128, 32), dtype=np.float32)
+    out = spmm(jnp.asarray(blocks), jnp.asarray(indices), jnp.asarray(x))
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_spmm_duplicate_indices_accumulate():
+    """Two slots pointing at the same K-block must both contribute."""
+    blocks = np.ones((1, 2, 64, 64), dtype=np.float32)
+    indices = np.zeros((1, 2), dtype=np.int32)  # both slots -> K-block 0
+    x = np.ones((64, 16), dtype=np.float32)
+    out = np.asarray(spmm(jnp.asarray(blocks), jnp.asarray(indices), jnp.asarray(x)))
+    assert_allclose(out, np.full((64, 16), 2 * 64.0), rtol=0, atol=0)
+
+
+def test_dense_to_block_ell_roundtrip():
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((128, 256), dtype=np.float32)
+    a[a < 1.0] = 0.0  # sparsify
+    ell_mat = formats.dense_to_block_ell(a, tm=64, tk=64)
+    assert_allclose(ell_mat.to_dense(), a, rtol=0, atol=0)
+
+
+def test_dense_to_block_ell_rejects_overflow():
+    a = np.ones((64, 256), dtype=np.float32)  # 4 non-empty K-blocks
+    with pytest.raises(ValueError):
+        formats.dense_to_block_ell(a, tm=64, tk=64, ell_width=2)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nrt=st.integers(1, 4),
+    nkb=st.integers(2, 6),
+    ell=st.integers(1, 4),
+    n=st.sampled_from([32, 64, 128]),
+    fill=st.floats(0.3, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_hypothesis(nrt, nkb, ell, n, fill, seed):
+    ell = min(ell, nkb)
+    tm = tk = 64
+    m, k = nrt * tm, nkb * tk
+    ell_mat = formats.random_block_ell(m, k, tm=tm, tk=tk, ell_width=ell, fill=fill, seed=seed)
+    x = np.random.default_rng(seed + 1).standard_normal((k, n), dtype=np.float32)
+    out = spmm(jnp.asarray(ell_mat.blocks), jnp.asarray(ell_mat.indices), jnp.asarray(x))
+    assert_allclose(out, ell_mat.to_dense() @ x, rtol=RTOL, atol=ATOL)
+
+
+# -------------------------------------------------- window attention ----
+@pytest.mark.parametrize(
+    "h,s,d,w,bq",
+    [
+        (2, 256, 64, 128, 64),
+        (1, 128, 32, 64, 32),
+        (4, 512, 64, 128, 128),
+        (2, 256, 64, 256, 64),   # window == seq: full attention
+        (1, 192, 64, 64, 64),
+    ],
+)
+def test_window_attention_matches_ref(h, s, d, w, bq):
+    rng = np.random.default_rng(h * s + w)
+    q = rng.standard_normal((h, s, d), dtype=np.float32) * 0.3
+    k = rng.standard_normal((h, s, d), dtype=np.float32) * 0.3
+    v = rng.standard_normal((h, s, d), dtype=np.float32)
+    out = window_attention(q, k, v, window=w, bq=bq)
+    assert_allclose(out, window_attention_ref(q, k, v, w), rtol=RTOL, atol=ATOL)
+
+
+def test_window_attention_full_window_equals_softmax_attn():
+    """window >= seq reduces to vanilla attention."""
+    rng = np.random.default_rng(3)
+    h, s, d = 1, 128, 32
+    q = rng.standard_normal((h, s, d), dtype=np.float32) * 0.2
+    k = rng.standard_normal((h, s, d), dtype=np.float32) * 0.2
+    v = rng.standard_normal((h, s, d), dtype=np.float32)
+    out = window_attention(q, k, v, window=256, bq=64)
+    scores = np.einsum("hqd,hkd->hqk", q, k) / np.sqrt(d)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    assert_allclose(out, np.einsum("hqk,hkd->hqd", p, v), rtol=RTOL, atol=ATOL)
+
+
+def test_window_attention_rows_are_convex_combinations():
+    """With constant V the output must be exactly V (softmax sums to 1)."""
+    h, s, d, w = 1, 128, 32, 64
+    rng = np.random.default_rng(5)
+    q = rng.standard_normal((h, s, d), dtype=np.float32)
+    k = rng.standard_normal((h, s, d), dtype=np.float32)
+    v = np.full((h, s, d), 3.25, dtype=np.float32)
+    out = window_attention(q, k, v, window=w, bq=64)
+    assert_allclose(out, v, rtol=1e-5, atol=1e-4)
+
+
+def test_window_attention_rejects_bad_alignment():
+    q = np.zeros((1, 100, 32), dtype=np.float32)
+    with pytest.raises(AssertionError):
+        window_attention(q, q, q, window=64, bq=32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(1, 3),
+    sblk=st.integers(2, 6),
+    d=st.sampled_from([32, 64]),
+    wblk=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_window_attention_hypothesis(h, sblk, d, wblk, seed):
+    bq = 64
+    s, w = sblk * bq, wblk * bq
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((h, s, d), dtype=np.float32) * 0.3
+    k = rng.standard_normal((h, s, d), dtype=np.float32) * 0.3
+    v = rng.standard_normal((h, s, d), dtype=np.float32)
+    out = window_attention(q, k, v, window=w, bq=bq)
+    assert_allclose(out, window_attention_ref(q, k, v, w), rtol=RTOL, atol=ATOL)

@@ -1,0 +1,104 @@
+"""L2 model correctness: layer compositions vs pure-jnp references."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import formats
+from compile.kernels.ref import window_attention_ref, layernorm_ref
+
+RTOL, ATOL = 1e-4, 1e-3
+
+
+def _graph(v=256, f=64, tm=64, tk=64, ell=2, seed=0):
+    ell_mat = formats.random_block_ell(v, v, tm=tm, tk=tk, ell_width=ell, fill=1.0, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.standard_normal((v, f), dtype=np.float32) * 0.5
+    return ell_mat, x, rng
+
+
+def test_gcn_layer_matches_dense_ref():
+    ell_mat, x, rng = _graph()
+    theta = rng.standard_normal((64, 64), dtype=np.float32) * 0.2
+    out = model.gcn_layer(
+        jnp.asarray(ell_mat.blocks), jnp.asarray(ell_mat.indices), jnp.asarray(x), jnp.asarray(theta)
+    )
+    ref = np.maximum(ell_mat.to_dense() @ x @ theta, 0.0)
+    assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+
+def test_gin_layer_matches_dense_ref():
+    ell_mat, x, rng = _graph(seed=3)
+    w1 = rng.standard_normal((64, 64), dtype=np.float32) * 0.2
+    b1 = rng.standard_normal((64,), dtype=np.float32) * 0.1
+    w2 = rng.standard_normal((64, 64), dtype=np.float32) * 0.2
+    b2 = rng.standard_normal((64,), dtype=np.float32) * 0.1
+    out = model.gin_layer(
+        jnp.asarray(ell_mat.blocks), jnp.asarray(ell_mat.indices), jnp.asarray(x),
+        jnp.asarray(w1), jnp.asarray(b1), jnp.asarray(w2), jnp.asarray(b2),
+    )
+    y = ell_mat.to_dense() @ x
+    ref = np.maximum(y @ w1 + b1, 0.0) @ w2 + b2
+    assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+
+def test_gin_mlp_matches_gin_layer_tail():
+    rng = np.random.default_rng(9)
+    y = rng.standard_normal((128, 64), dtype=np.float32)
+    w1 = rng.standard_normal((64, 64), dtype=np.float32) * 0.2
+    b1 = rng.standard_normal((64,), dtype=np.float32) * 0.1
+    w2 = rng.standard_normal((64, 64), dtype=np.float32) * 0.2
+    b2 = rng.standard_normal((64,), dtype=np.float32) * 0.1
+    out = model.gin_mlp(*(jnp.asarray(t) for t in (y, w1, b1, w2, b2)))
+    ref = np.maximum(y @ w1 + b1, 0.0) @ w2 + b2
+    assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+
+
+def _transformer_ref(x, wq, wk, wv, wo, w1, b1, w2, b2, g1, be1, g2, be2, heads, window):
+    seq, dm = x.shape
+    dh = dm // heads
+    split = lambda t: t.reshape(seq, heads, dh).transpose(1, 0, 2)
+    z = window_attention_ref(split(x @ wq), split(x @ wk), split(x @ wv), window)
+    z = np.asarray(z).transpose(1, 0, 2).reshape(seq, dm)
+    h = layernorm_ref(jnp.asarray(x + z @ wo), jnp.asarray(g1), jnp.asarray(be1))
+    h = np.asarray(h)
+    ffn = np.maximum(h @ w1 + b1, 0.0) @ w2 + b2
+    return np.asarray(layernorm_ref(jnp.asarray(h + ffn), jnp.asarray(g2), jnp.asarray(be2)))
+
+
+def test_transformer_layer_matches_ref():
+    seq, dm, heads, dff, window = 256, 128, 2, 256, 128
+    rng = np.random.default_rng(11)
+    sc = 0.15
+    x = rng.standard_normal((seq, dm), dtype=np.float32)
+    wq, wk, wv, wo = (rng.standard_normal((dm, dm), dtype=np.float32) * sc for _ in range(4))
+    w1 = rng.standard_normal((dm, dff), dtype=np.float32) * sc
+    b1 = rng.standard_normal((dff,), dtype=np.float32) * 0.05
+    w2 = rng.standard_normal((dff, dm), dtype=np.float32) * sc
+    b2 = rng.standard_normal((dm,), dtype=np.float32) * 0.05
+    g1 = np.ones((dm,), dtype=np.float32)
+    be1 = np.zeros((dm,), dtype=np.float32)
+    g2 = np.ones((dm,), dtype=np.float32)
+    be2 = np.zeros((dm,), dtype=np.float32)
+    out = model.transformer_layer(
+        *(jnp.asarray(t) for t in (x, wq, wk, wv, wo, w1, b1, w2, b2, g1, be1, g2, be2)),
+        heads=heads, window=window,
+    )
+    ref = _transformer_ref(x, wq, wk, wv, wo, w1, b1, w2, b2, g1, be1, g2, be2, heads, window)
+    assert_allclose(out, ref, rtol=5e-4, atol=5e-3)
+
+
+def test_transformer_layer_shape_preserved():
+    seq, dm, heads, dff, window = 128, 128, 2, 256, 64
+    z = jnp.zeros
+    out = model.transformer_layer(
+        z((seq, dm)), z((dm, dm)), z((dm, dm)), z((dm, dm)), z((dm, dm)),
+        z((dm, dff)), z((dff,)), z((dff, dm)), z((dm,)),
+        jnp.ones((dm,)), z((dm,)), jnp.ones((dm,)), z((dm,)),
+        heads=heads, window=window,
+    )
+    assert out.shape == (seq, dm)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,246 @@
+//! System specification & design objectives — the scheduler's §II inputs
+//! (2) "system specifications" and (4) "design objectives", loadable from
+//! a flat `key = value` config file so deployments configure DYPE without
+//! recompiling. (The offline build has no TOML crate; the format below is
+//! the TOML subset `key = value` with `#` comments.)
+
+use anyhow::{bail, Context, Result};
+
+pub use crate::devices::Interconnect;
+use crate::devices::{CommModel, FpgaConfig, GpuConfig};
+
+/// Design objective (§II "Design Objectives", §VI-A "Scheduling
+/// Objectives").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Maximize throughput, energy ignored (*performance-optimized*).
+    Performance,
+    /// Maximize energy efficiency, throughput ignored (*energy-optimized*).
+    Energy,
+    /// Most energy-efficient schedule whose throughput stays within
+    /// `min_throughput_frac` of the performance-optimized maximum
+    /// (*balanced*; the paper's predefined mode uses 0.7).
+    Balanced { min_throughput_frac: f64 },
+    /// Most energy-efficient schedule meeting an *absolute* throughput
+    /// floor (inferences/s) — §II's "achieving a specific Quality of
+    /// Service target … such as minimizing energy consumption after
+    /// achieving a certain throughput". Falls back to the performance
+    /// optimum when the floor is unreachable (best effort).
+    QoS { min_throughput: f64 },
+}
+
+impl Objective {
+    /// The paper's predefined balanced mode: ≥70% of max throughput.
+    pub fn balanced() -> Self {
+        Objective::Balanced { min_throughput_frac: 0.7 }
+    }
+
+    /// The three evaluation modes of §VI-A, in the paper's column order.
+    pub fn paper_modes() -> [Objective; 3] {
+        [Objective::Performance, Objective::balanced(), Objective::Energy]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Performance => "perf-opt",
+            Objective::Energy => "energy-opt",
+            Objective::Balanced { .. } => "balanced",
+            Objective::QoS { .. } => "qos",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Objective> {
+        Ok(match s {
+            "perf" | "perf-opt" | "performance" => Objective::Performance,
+            "energy" | "energy-opt" => Objective::Energy,
+            "balanced" => Objective::balanced(),
+            qos if qos.starts_with("qos:") => Objective::QoS {
+                min_throughput: qos[4..]
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad QoS floor in '{s}': {e}"))?,
+            },
+            _ => bail!("unknown objective '{s}' (perf|energy|balanced|qos:<inf/s>)"),
+        })
+    }
+}
+
+impl Interconnect {
+    pub fn parse(s: &str) -> Result<Interconnect> {
+        Ok(match s.to_lowercase().as_str() {
+            "pcie4" | "pcie4.0" => Interconnect::Pcie4,
+            "pcie5" | "pcie5.0" => Interconnect::Pcie5,
+            "cxl3" | "cxl3.0" | "cxl" => Interconnect::Cxl3,
+            _ => bail!("unknown interconnect '{s}' (pcie4|pcie5|cxl3)"),
+        })
+    }
+}
+
+/// Full system description: device inventory + interconnect + device
+/// parameters (the paper's Table II + Fig 5 topology).
+#[derive(Debug, Clone)]
+pub struct SystemSpec {
+    /// Number of FPGAs installed (paper testbed: 3).
+    pub n_fpga: usize,
+    /// Number of GPUs installed (paper testbed: 2).
+    pub n_gpu: usize,
+    pub interconnect: Interconnect,
+    pub gpu: GpuConfig,
+    pub fpga: FpgaConfig,
+}
+
+impl SystemSpec {
+    /// The paper's prototype: 3 U280 FPGAs + 2 MI210 GPUs (§III-A).
+    pub fn paper_testbed(interconnect: Interconnect) -> Self {
+        SystemSpec {
+            n_fpga: 3,
+            n_gpu: 2,
+            interconnect,
+            gpu: GpuConfig::default(),
+            fpga: FpgaConfig::default(),
+        }
+    }
+
+    /// Smaller installation used in the system-size sensitivity cases.
+    pub fn reduced_testbed(interconnect: Interconnect) -> Self {
+        SystemSpec { n_fpga: 2, n_gpu: 1, ..Self::paper_testbed(interconnect) }
+    }
+
+    /// Build the transfer-time model for this system.
+    pub fn comm_model(&self) -> CommModel {
+        let mut c = CommModel::new(self.interconnect);
+        c.gpu_link_bw = self.gpu.pcie_bw;
+        c.fpga_link_bw = self.fpga.pcie_bw;
+        c
+    }
+
+    /// Load from a flat `key = value` config file. Unknown keys error so
+    /// typos never silently fall back to defaults. Recognized keys:
+    /// `n_fpga`, `n_gpu`, `interconnect`, `gpu.dynamic_power`,
+    /// `gpu.static_power`, `gpu.peak_flops`, `gpu.mem_bw`, `gpu.pcie_bw`,
+    /// `fpga.spmm_dynamic_power`, `fpga.attn_dynamic_power`,
+    /// `fpga.static_power`, `fpga.pcie_bw`, `fpga.spmm_freq`,
+    /// `fpga.spmm_macs`.
+    pub fn from_config_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading system spec {}", path.display()))?;
+        Self::from_config_str(&text)
+    }
+
+    pub fn from_config_str(text: &str) -> Result<Self> {
+        let mut spec = SystemSpec::paper_testbed(Interconnect::Pcie4);
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+            let (k, v) = (k.trim(), v.trim().trim_matches('"'));
+            let f = |v: &str| -> Result<f64> {
+                v.parse::<f64>().with_context(|| format!("line {}: bad number '{v}'", lineno + 1))
+            };
+            match k {
+                "n_fpga" => spec.n_fpga = f(v)? as usize,
+                "n_gpu" => spec.n_gpu = f(v)? as usize,
+                "interconnect" => spec.interconnect = Interconnect::parse(v)?,
+                "gpu.dynamic_power" => spec.gpu.dynamic_power = f(v)?,
+                "gpu.static_power" => spec.gpu.static_power = f(v)?,
+                "gpu.peak_flops" => spec.gpu.peak_flops = f(v)?,
+                "gpu.mem_bw" => spec.gpu.mem_bw = f(v)?,
+                "gpu.pcie_bw" => spec.gpu.pcie_bw = f(v)?,
+                "fpga.spmm_dynamic_power" => spec.fpga.spmm_dynamic_power = f(v)?,
+                "fpga.attn_dynamic_power" => spec.fpga.attn_dynamic_power = f(v)?,
+                "fpga.static_power" => spec.fpga.static_power = f(v)?,
+                "fpga.pcie_bw" => spec.fpga.pcie_bw = f(v)?,
+                "fpga.spmm_freq" => spec.fpga.spmm_freq = f(v)?,
+                "fpga.spmm_macs" => spec.fpga.spmm_macs = f(v)?,
+                _ => bail!("line {}: unknown key '{k}'", lineno + 1),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Serialize to the same flat format.
+    pub fn to_config_string(&self) -> String {
+        format!(
+            "# DYPE system specification\n\
+             n_fpga = {}\nn_gpu = {}\ninterconnect = \"{}\"\n\
+             gpu.dynamic_power = {}\ngpu.static_power = {}\n\
+             gpu.peak_flops = {}\ngpu.mem_bw = {}\ngpu.pcie_bw = {}\n\
+             fpga.spmm_dynamic_power = {}\nfpga.attn_dynamic_power = {}\n\
+             fpga.static_power = {}\nfpga.pcie_bw = {}\n\
+             fpga.spmm_freq = {}\nfpga.spmm_macs = {}\n",
+            self.n_fpga,
+            self.n_gpu,
+            match self.interconnect {
+                Interconnect::Pcie4 => "pcie4",
+                Interconnect::Pcie5 => "pcie5",
+                Interconnect::Cxl3 => "cxl3",
+            },
+            self.gpu.dynamic_power,
+            self.gpu.static_power,
+            self.gpu.peak_flops,
+            self.gpu.mem_bw,
+            self.gpu.pcie_bw,
+            self.fpga.spmm_dynamic_power,
+            self.fpga.attn_dynamic_power,
+            self.fpga.static_power,
+            self.fpga.pcie_bw,
+            self.fpga.spmm_freq,
+            self.fpga.spmm_macs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_inventory() {
+        let s = SystemSpec::paper_testbed(Interconnect::Pcie4);
+        assert_eq!((s.n_fpga, s.n_gpu), (3, 2));
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let mut s = SystemSpec::paper_testbed(Interconnect::Cxl3);
+        s.n_fpga = 5;
+        s.gpu.dynamic_power = 250.0;
+        let text = s.to_config_string();
+        let back = SystemSpec::from_config_str(&text).unwrap();
+        assert_eq!(back.n_fpga, 5);
+        assert_eq!(back.interconnect, Interconnect::Cxl3);
+        assert_eq!(back.gpu.dynamic_power, 250.0);
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        assert!(SystemSpec::from_config_str("n_fpgas = 3").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ok() {
+        let s = SystemSpec::from_config_str("# hi\n\nn_fpga = 1 # trailing\n").unwrap();
+        assert_eq!(s.n_fpga, 1);
+    }
+
+    #[test]
+    fn balanced_mode_default_is_70_percent() {
+        match Objective::balanced() {
+            Objective::Balanced { min_throughput_frac } => {
+                assert!((min_throughput_frac - 0.7).abs() < 1e-12)
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn objective_parsing() {
+        assert_eq!(Objective::parse("perf").unwrap(), Objective::Performance);
+        assert_eq!(Objective::parse("energy-opt").unwrap(), Objective::Energy);
+        assert!(Objective::parse("warp").is_err());
+        assert_eq!(Interconnect::parse("CXL3").unwrap(), Interconnect::Cxl3);
+    }
+}

@@ -1,0 +1,157 @@
+//! Ground-truth FPGA timing model (Alveo U280 stand-in).
+//!
+//! The paper's FPGA kernels have *analytically predictable* latency (§V) —
+//! we use the paper's own formulas as the backbone of the ground truth:
+//!
+//! * SpMM: customized Sextans [30] — `t = C·(nnz + 13·M)·N / (MACs·F)`
+//!   (§V, C a calibration constant); we add a row-skew load-imbalance
+//!   factor, the real-world effect that makes even FPGA timing slightly
+//!   input-dependent and gives the §V estimator something to miss.
+//! * Sliding-window attention: SWAT [6] — Eq (9):
+//!   `t = C·(seq·t_pipeline + t_init)·(w/1024)/F`.
+//! * Dense GEMM: the HLS overlay of [31] at ~0.55 TFLOPS FP32, so
+//!   FPGA-only baselines can execute the dense kernels too (they must —
+//!   the paper runs FPGA-only end to end).
+
+use super::types::FpgaConfig;
+use crate::workload::KernelKind;
+
+/// Deterministic FPGA kernel-time model. All returns are seconds.
+#[derive(Debug, Clone)]
+pub struct FpgaModel {
+    pub cfg: FpgaConfig,
+    /// Row-degree skew of the graph currently loaded (0 = uniform). Set
+    /// from `Dataset::degree_skew` by the ground-truth harness.
+    pub degree_skew: f64,
+}
+
+impl FpgaModel {
+    pub fn new(cfg: FpgaConfig) -> Self {
+        FpgaModel { cfg, degree_skew: 0.0 }
+    }
+
+    pub fn with_skew(cfg: FpgaConfig, degree_skew: f64) -> Self {
+        FpgaModel { cfg, degree_skew }
+    }
+
+    /// Execution time of `kind` on ONE FPGA.
+    pub fn kernel_time(&self, kind: &KernelKind) -> f64 {
+        let c = &self.cfg;
+        match *kind {
+            KernelKind::SpMM { m, n, nnz, .. } => {
+                // Sextans streaming model: one MAC-array pass over
+                // (nnz + 13·M) elements per dense column, N columns.
+                let cycles = (nnz as f64 + 13.0 * m as f64) * n as f64 / c.spmm_macs;
+                // Load imbalance: skewed row degrees stall the PE array.
+                let imbalance = 1.0 + 0.18 * self.degree_skew;
+                cycles * imbalance / c.spmm_freq + c.launch_overhead
+            }
+            KernelKind::WindowAttn { seq, window, .. } => {
+                // SWAT Eq (9) verbatim (C folded to 1.0 in ground truth;
+                // estimators fit their own C).
+                let cyc = seq as f64 * c.attn_t_pipeline + c.attn_t_init;
+                cyc * (window as f64 / 1024.0) / c.attn_freq + c.launch_overhead
+            }
+            KernelKind::Gemm { .. } => {
+                let compute = kind.flops() / c.gemm_peak_flops;
+                let mem = kind.bytes() / c.mem_bw;
+                compute.max(mem) + c.launch_overhead
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Dataset, KernelKind};
+
+    fn model() -> FpgaModel {
+        FpgaModel::new(FpgaConfig::default())
+    }
+
+    #[test]
+    fn sextans_formula_matches_hand_calc() {
+        let m = model();
+        let k = KernelKind::SpMM { m: 1000, k: 1000, n: 64, nnz: 10_000 };
+        let expect = (10_000.0 + 13.0 * 1000.0) * 64.0 / 640.0 / 215e6 + m.cfg.launch_overhead;
+        assert!((m.kernel_time(&k) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn swat_formula_matches_hand_calc() {
+        let m = model();
+        let k = KernelKind::WindowAttn { seq: 4096, window: 512, heads: 8, dim: 64 };
+        let expect = (4096.0 * 201.0 + 904.0) * 0.5 / 421e6 + m.cfg.launch_overhead;
+        assert!((m.kernel_time(&k) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fpga_attention_linear_in_seq_and_window() {
+        let m = model();
+        let base = m.kernel_time(&KernelKind::WindowAttn { seq: 2048, window: 512, heads: 8, dim: 64 });
+        let seq2 = m.kernel_time(&KernelKind::WindowAttn { seq: 4096, window: 512, heads: 8, dim: 64 });
+        let win2 = m.kernel_time(&KernelKind::WindowAttn { seq: 2048, window: 1024, heads: 8, dim: 64 });
+        assert!((seq2 / base - 2.0).abs() < 0.05);
+        assert!((win2 / base - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn skew_slows_spmm() {
+        let k = KernelKind::SpMM { m: 100_000, k: 100_000, n: 128, nnz: 1_000_000 };
+        let uniform = model().kernel_time(&k);
+        let skewed = FpgaModel::with_skew(FpgaConfig::default(), 1.0).kernel_time(&k);
+        assert!(skewed > uniform);
+    }
+
+    /// §I headline: three U280s ≈ one MI210 on high-sparsity SpMM with
+    /// ~1.5-1.8× better energy efficiency. This test pins the calibration
+    /// of the two ground-truth models to that claim.
+    #[test]
+    fn three_fpga_vs_one_gpu_on_high_sparsity_spmm() {
+        use crate::devices::gpu::GpuModel;
+        use crate::devices::types::GpuConfig;
+        let ds = Dataset::ogbn_arxiv(); // 99.996% sparse
+        let k = KernelKind::SpMM {
+            m: ds.vertices,
+            k: ds.vertices,
+            n: 128,
+            nnz: ds.edges + ds.vertices,
+        };
+        let t_gpu = GpuModel::new(GpuConfig::default()).kernel_time(&k);
+        let t_fpga = model().kernel_time(&k);
+        // 3 FPGAs split rows ⇒ ~t_fpga/3: "comparable" = within 2×.
+        let three_f = t_fpga / 3.0;
+        let ratio = three_f / t_gpu;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "3×FPGA should be comparable to 1×GPU, got ratio {ratio}"
+        );
+        // Energy: 3 FPGAs at 55 W vs 1 GPU at 300 W.
+        let e_fpga = 3.0 * 55.0 * three_f;
+        let e_gpu = 300.0 * t_gpu;
+        let eff_gain = e_gpu / e_fpga;
+        assert!(
+            eff_gain > 1.2,
+            "FPGA energy-efficiency advantage missing: {eff_gain}"
+        );
+    }
+
+    /// Low-sparsity graphs flip the preference to the GPU (Table V: GCN-S1
+    /// perf-opt schedules are pure-GPU).
+    #[test]
+    fn gpu_wins_low_sparsity_spmm() {
+        use crate::devices::gpu::GpuModel;
+        use crate::devices::types::GpuConfig;
+        let ds = Dataset::synthetic1(); // 99.77% sparse = "dense" here
+        let k = KernelKind::SpMM {
+            m: ds.vertices,
+            k: ds.vertices,
+            n: ds.feature_len,
+            nnz: ds.edges,
+        };
+        let t_gpu = GpuModel::new(GpuConfig::default()).kernel_time(&k);
+        let t_fpga = model().kernel_time(&k);
+        assert!(t_fpga / 3.0 > 1.5 * t_gpu, "even 3 FPGAs should lose on S1");
+    }
+}

@@ -1,0 +1,155 @@
+//! Ground-truth GPU timing model (MI210 stand-in).
+//!
+//! Substitution note (DESIGN.md): the paper measures rocSPARSE / rocBLAS /
+//! PyTorch kernels on real MI210s. Here the "hardware" is an analytical
+//! roofline with empirically-shaped efficiency curves:
+//!
+//! * dense GEMM — high MXU-style utilization that degrades for small
+//!   matrices (launch + tile quantization);
+//! * sparse SpMM — compute efficiency collapses with density^½ (cache-line
+//!   under-utilization on scattered rows), the effect the paper's Eq (7)
+//!   features (nnz, GFLOP, arithmetic intensity) are designed to track;
+//! * sliding-window attention — executed as *dense* attention (§V: GPU
+//!   implementations only reduce memory, not time), so cost is quadratic
+//!   in sequence length. This is the crossover driver in Fig 8.
+//!
+//! These curves are *richer* than the §V linear estimators: the estimators
+//! are trained against this model through the calibration harness exactly
+//! as the paper trains against measurements, preserving the
+//! estimator-vs-oracle gap that Table III quantifies.
+
+use super::types::GpuConfig;
+use crate::workload::KernelKind;
+
+/// Deterministic GPU kernel-time model. All returns are seconds.
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    pub cfg: GpuConfig,
+}
+
+impl GpuModel {
+    pub fn new(cfg: GpuConfig) -> Self {
+        GpuModel { cfg }
+    }
+
+    /// Dense-GEMM compute efficiency as a function of the problem volume.
+    /// Large GNN-scale GEMMs reach ~85% of peak; small ones are launch- and
+    /// tile-bound.
+    fn gemm_efficiency(&self, m: u64, k: u64, n: u64) -> f64 {
+        let vol = (m as f64) * (k as f64) * (n as f64);
+        // Half-saturation at 1.3e8 MACs (~512³): matches the observation
+        // that MI210 sgemm hits peak only beyond ~1k-sized squares.
+        0.85 * vol / (vol + 1.3e8)
+    }
+
+    /// Sparse compute efficiency: fraction of peak FLOPs rocSPARSE-like
+    /// CSR SpMM sustains at a given operand density. Calibrated against
+    /// the paper's §I anchor (3×U280 ≈ 1×MI210 at ogbn-arxiv-level
+    /// sparsity) and the Table V regime boundaries (GPU wins S1 outright;
+    /// FPGAs take over at OP/S4 sparsity). Real CSR kernels sit in the
+    /// low single-digit percent of peak on graphs this sparse.
+    fn spmm_efficiency(&self, density: f64) -> f64 {
+        (1.3 * density.sqrt()).clamp(5e-4, 0.4)
+    }
+
+    /// Execution time of `kind` on ONE GPU.
+    pub fn kernel_time(&self, kind: &KernelKind) -> f64 {
+        let c = &self.cfg;
+        match *kind {
+            KernelKind::Gemm { m, k, n } => {
+                let flops = kind.flops();
+                let compute = flops / (c.peak_flops * self.gemm_efficiency(m, k, n));
+                let mem = kind.bytes() / c.mem_bw;
+                compute.max(mem) + c.launch_overhead
+            }
+            KernelKind::SpMM { .. } => {
+                let eff = self.spmm_efficiency(kind.density());
+                let compute = kind.flops() / (c.peak_flops * eff);
+                // Irregular gathers achieve ~60% of streaming bandwidth.
+                let mem = kind.bytes() / (c.mem_bw * 0.6);
+                compute.max(mem) + c.launch_overhead
+            }
+            KernelKind::WindowAttn { seq, heads, dim, .. } => {
+                // §V: dense computation — the band mask saves no time.
+                // Attention is NOT one clean GEMM: QKᵀ, masked softmax and
+                // S'V are separate memory-bound kernels with transposes in
+                // between, so sustained efficiency is roughly half of a
+                // same-volume sgemm and several launches are paid.
+                let d_model = (heads * dim) as f64;
+                let s = seq as f64;
+                // QKᵀ and S'V over the FULL seq×seq score matrix.
+                let flops = 4.0 * s * s * d_model + 5.0 * s * s * heads as f64;
+                let eff = 0.5 * self.gemm_efficiency(seq, heads * dim, seq);
+                let compute = flops / (c.peak_flops * eff);
+                // Score-matrix traffic dominates memory: written by QKᵀ,
+                // read+written by softmax, read by S'V.
+                let mem = (heads as f64 * s * s * 4.0 * 4.0
+                    + 4.0 * s * d_model * 4.0)
+                    / c.mem_bw;
+                compute.max(mem) + 4.0 * c.launch_overhead
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::KernelKind;
+
+    fn model() -> GpuModel {
+        GpuModel::new(GpuConfig::default())
+    }
+
+    #[test]
+    fn big_gemm_near_roofline() {
+        let m = model();
+        let k = KernelKind::Gemm { m: 170_000, k: 128, n: 128 };
+        let t = m.kernel_time(&k);
+        let ideal = k.flops() / m.cfg.peak_flops;
+        assert!(t > ideal, "cannot beat peak");
+        assert!(t < 4.0 * ideal, "large GEMM should be reasonably efficient: {t} vs {ideal}");
+    }
+
+    #[test]
+    fn sparser_spmm_is_less_efficient() {
+        let m = model();
+        // Same FLOPs, different density: the sparser one must be slower
+        // per-FLOP (that is the paper's core GPU-vs-FPGA premise).
+        let dense = KernelKind::SpMM { m: 10_000, k: 10_000, n: 128, nnz: 1_000_000 };
+        let sparse = KernelKind::SpMM { m: 100_000, k: 100_000, n: 128, nnz: 1_000_000 };
+        let per_flop_d = m.kernel_time(&dense) / dense.flops();
+        let per_flop_s = m.kernel_time(&sparse) / sparse.flops();
+        assert!(per_flop_s > per_flop_d);
+    }
+
+    #[test]
+    fn window_attention_is_quadratic_in_seq() {
+        let m = model();
+        let t1 = m.kernel_time(&KernelKind::WindowAttn { seq: 2048, window: 512, heads: 8, dim: 64 });
+        let t2 = m.kernel_time(&KernelKind::WindowAttn { seq: 8192, window: 512, heads: 8, dim: 64 });
+        // 4× seq ⇒ ~16× time (dense execution ignores the window).
+        assert!(t2 / t1 > 8.0, "expected quadratic growth, got {}", t2 / t1);
+    }
+
+    #[test]
+    fn window_size_does_not_change_gpu_time() {
+        let m = model();
+        let a = m.kernel_time(&KernelKind::WindowAttn { seq: 4096, window: 512, heads: 8, dim: 64 });
+        let b = m.kernel_time(&KernelKind::WindowAttn { seq: 4096, window: 4096, heads: 8, dim: 64 });
+        assert_eq!(a, b, "GPU runs dense attention regardless of window");
+    }
+
+    #[test]
+    fn times_are_positive_and_finite() {
+        let m = model();
+        for k in [
+            KernelKind::Gemm { m: 64, k: 64, n: 64 },
+            KernelKind::SpMM { m: 100, k: 100, n: 8, nnz: 10 },
+            KernelKind::WindowAttn { seq: 1024, window: 512, heads: 8, dim: 64 },
+        ] {
+            let t = m.kernel_time(&k);
+            assert!(t.is_finite() && t > 0.0);
+        }
+    }
+}

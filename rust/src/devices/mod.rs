@@ -1,0 +1,17 @@
+//! The heterogeneous-testbed substrate: device timing/power models, the
+//! interconnect simulator, and the ground-truth "measurement" harness.
+//!
+//! This module is the stand-in for the paper's §III hardware build (2×
+//! MI210 + 3× U280 + PCIe 4.0 P2P); see DESIGN.md's substitution table.
+
+pub mod fpga;
+pub mod gpu;
+pub mod ground_truth;
+pub mod interconnect;
+pub mod types;
+
+pub use fpga::FpgaModel;
+pub use gpu::GpuModel;
+pub use ground_truth::GroundTruth;
+pub use interconnect::{CommModel, Endpoint, Interconnect};
+pub use types::{DeviceType, FpgaConfig, GpuConfig};

@@ -1,0 +1,139 @@
+//! Device-type taxonomy and hardware parameter blocks (Table II).
+
+
+/// The two accelerator classes of the prototype (§III-A). The scheduling
+/// algorithm is device-type-generic; the prototype — and this reproduction
+/// — instantiate GPUs and FPGAs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceType {
+    Gpu,
+    Fpga,
+}
+
+impl DeviceType {
+    /// Mnemonic letter used in the paper's schedule notation (3F2G, …).
+    pub fn letter(&self) -> char {
+        match self {
+            DeviceType::Gpu => 'G',
+            DeviceType::Fpga => 'F',
+        }
+    }
+
+    pub const ALL: [DeviceType; 2] = [DeviceType::Fpga, DeviceType::Gpu];
+}
+
+impl std::fmt::Display for DeviceType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeviceType::Gpu => write!(f, "GPU"),
+            DeviceType::Fpga => write!(f, "FPGA"),
+        }
+    }
+}
+
+/// AMD Instinct MI210 parameters (Table II + public specs).
+#[derive(Debug, Clone)]
+pub struct GpuConfig {
+    /// FP32 peak throughput (FLOP/s). MI210: 22.6 TFLOPS.
+    pub peak_flops: f64,
+    /// HBM2e bandwidth (B/s). MI210: 1.6 TB/s.
+    pub mem_bw: f64,
+    /// Kernel-launch / runtime overhead per kernel invocation (s).
+    pub launch_overhead: f64,
+    /// Dynamic power while executing (W) — Table II: 300 W.
+    pub dynamic_power: f64,
+    /// Static/idle power (W) — Table II: 45 W.
+    pub static_power: f64,
+    /// Power while driving PCIe transfers (W).
+    pub transfer_power: f64,
+    /// PCIe 4.0 x16 physical bandwidth per device (B/s) — §III-A: 31.52 GB/s.
+    pub pcie_bw: f64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        GpuConfig {
+            peak_flops: 22.6e12,
+            mem_bw: 1.6e12,
+            launch_overhead: 8e-6,
+            dynamic_power: 300.0,
+            static_power: 45.0,
+            transfer_power: 90.0,
+            pcie_bw: 31.52e9,
+        }
+    }
+}
+
+/// AMD Alveo U280 parameters with the paper's two bitstreams:
+/// customized Sextans SpMM (§V) and SWAT sliding-window attention (§V).
+#[derive(Debug, Clone)]
+pub struct FpgaConfig {
+    /// Sextans clock (Hz) — §V: 215 MHz.
+    pub spmm_freq: f64,
+    /// Sextans MAC units — §V: 640 (after removing α/βC, §VI-A).
+    pub spmm_macs: f64,
+    /// SWAT clock (Hz) — §V: 421 MHz.
+    pub attn_freq: f64,
+    /// SWAT pipeline fill cycles per token — Eq 9: t_pipeline = 201.
+    pub attn_t_pipeline: f64,
+    /// SWAT init cycles — Eq 9: t_init = 904.
+    pub attn_t_init: f64,
+    /// Dense GEMM peak on the FPGA overlay ([31]): ~0.55 TFLOPS FP32.
+    pub gemm_peak_flops: f64,
+    /// HBM2 bandwidth (B/s). U280: 460 GB/s.
+    pub mem_bw: f64,
+    /// Reconfiguration / invocation overhead per kernel (s).
+    pub launch_overhead: f64,
+    /// Dynamic power for the SpMM bitstream (W) — Table II: 55 W.
+    pub spmm_dynamic_power: f64,
+    /// Dynamic power for the win-attn bitstream (W) — Table II: 50.2 W.
+    pub attn_dynamic_power: f64,
+    /// Static/idle power (W) — Table II: 19.5 W.
+    pub static_power: f64,
+    /// Power while driving PCIe transfers (W).
+    pub transfer_power: f64,
+    /// PCIe 4.0 x8 physical bandwidth per device (B/s) — §III-A: 15.76 GB/s.
+    pub pcie_bw: f64,
+}
+
+impl Default for FpgaConfig {
+    fn default() -> Self {
+        FpgaConfig {
+            spmm_freq: 215e6,
+            spmm_macs: 640.0,
+            attn_freq: 421e6,
+            attn_t_pipeline: 201.0,
+            attn_t_init: 904.0,
+            gemm_peak_flops: 0.55e12,
+            mem_bw: 460e9,
+            launch_overhead: 20e-6,
+            spmm_dynamic_power: 55.0,
+            attn_dynamic_power: 50.2,
+            static_power: 19.5,
+            transfer_power: 30.0,
+            pcie_bw: 15.76e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn letters_match_paper_mnemonics() {
+        assert_eq!(DeviceType::Fpga.letter(), 'F');
+        assert_eq!(DeviceType::Gpu.letter(), 'G');
+    }
+
+    #[test]
+    fn table2_power_values() {
+        let g = GpuConfig::default();
+        let f = FpgaConfig::default();
+        assert_eq!(g.dynamic_power, 300.0);
+        assert_eq!(g.static_power, 45.0);
+        assert_eq!(f.spmm_dynamic_power, 55.0);
+        assert_eq!(f.attn_dynamic_power, 50.2);
+        assert_eq!(f.static_power, 19.5);
+    }
+}

@@ -1,0 +1,330 @@
+//! `dype` — CLI for the DYPE heterogeneous-scheduling framework.
+//!
+//! Subcommands:
+//! * `schedule`  — run Algorithm 1 for a workload/system/objective, print
+//!   the chosen pipeline (mnemonic, stages, throughput, energy).
+//! * `pareto`    — dump the Pareto front of the design space.
+//! * `calibrate` — train the §V performance models and print fit quality.
+//! * `sweep`     — DYPE vs baselines across the paper's GNN workloads.
+//! * `serve`     — end-to-end real execution: stream inferences through a
+//!   scheduled pipeline running AOT artifacts via PJRT.
+//!
+//! (Argument parsing is hand-rolled: the offline build has no clap.)
+
+use anyhow::{bail, Result};
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::coordinator::Coordinator;
+use dype::devices::GroundTruth;
+use dype::metrics::{fmt_ratio, Table};
+use dype::perfmodel::{calibrate, OracleModels};
+use dype::pipeline::PipelineSim;
+use dype::scheduler::{baselines, pareto_front, DpScheduler, PowerTable};
+use dype::util::Rng;
+use dype::workload::{gnn, transformer, Dataset, Workload};
+
+const USAGE: &str = "\
+dype — data-aware dynamic execution on heterogeneous systems
+
+USAGE:
+  dype schedule  [--workload W] [--interconnect I] [--objective O]
+                 [--fpgas N] [--gpus N] [--oracle]
+  dype pareto    [--workload W] [--interconnect I]
+  dype calibrate [--interconnect I]
+  dype sweep     [--interconnect I] [--objective O]
+  dype serve     [--inferences N] [--artifact-dir DIR]
+
+  W: gcn-<DS> | gin-<DS> (DS in S1..S4, OA, OP) | transf-<seq>-<win>
+  I: pcie4 | pcie5 | cxl3          O: perf | balanced | energy
+";
+
+/// Tiny argument scanner: `--key value` pairs plus boolean flags.
+struct Args {
+    kv: std::collections::HashMap<String, String>,
+    flags: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut kv = std::collections::HashMap::new();
+        let mut flags = std::collections::HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    kv.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument '{a}'\n\n{USAGE}");
+            }
+        }
+        Ok(Args { kv, flags })
+    }
+
+    fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.kv.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.contains(key)
+    }
+}
+
+fn parse_workload(name: &str) -> Result<Workload> {
+    let ds_by_code = |code: &str| -> Result<Dataset> {
+        Dataset::table1()
+            .into_iter()
+            .find(|d| d.code.eq_ignore_ascii_case(code))
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset '{code}' (S1..S4, OA, OP)"))
+    };
+    let lower = name.to_lowercase();
+    if let Some(code) = lower.strip_prefix("gcn-") {
+        return Ok(gnn::gcn_workload(&ds_by_code(code)?, 2, 128));
+    }
+    if let Some(code) = lower.strip_prefix("gin-") {
+        return Ok(gnn::gin_workload(&ds_by_code(code)?, 2, 128, 2));
+    }
+    if let Some(rest) = lower.strip_prefix("transf-") {
+        let mut it = rest.split('-');
+        let seq: u64 = it.next().unwrap_or("").parse()?;
+        let win: u64 = it.next().unwrap_or("").parse()?;
+        return Ok(transformer::paper_transformer(seq, win));
+    }
+    bail!("unknown workload '{name}' (gcn-OA, gin-S3, transf-4096-512, ...)")
+}
+
+fn dataset_skew(wl_name: &str) -> f64 {
+    Dataset::table1()
+        .into_iter()
+        .find(|d| wl_name.ends_with(&d.code))
+        .map(|d| d.degree_skew)
+        .unwrap_or(0.0)
+}
+
+fn print_schedule(wl: &Workload, sched: &dype::scheduler::Schedule) {
+    println!("workload : {}", wl.name);
+    println!("schedule : {}", sched.mnemonic());
+    println!(
+        "period   : {:.3} ms  (throughput {:.1} inf/s)",
+        sched.period * 1e3,
+        sched.throughput()
+    );
+    println!(
+        "energy   : {:.3} J/inf  (efficiency {:.2} inf/J)",
+        sched.energy_per_inf,
+        sched.energy_efficiency()
+    );
+    let mut t =
+        Table::new(&["stage", "kernels", "devices", "exec(ms)", "comm_in(ms)", "comm_out(ms)"]);
+    for (i, s) in sched.stages.iter().enumerate() {
+        let kernels: Vec<&str> =
+            wl.kernels[s.first..=s.last].iter().map(|k| k.name.as_str()).collect();
+        let label = if kernels.len() > 4 {
+            format!("{}..{} ({})", kernels[0], kernels[kernels.len() - 1], kernels.len())
+        } else {
+            kernels.join("+")
+        };
+        t.row(vec![
+            format!("{i}"),
+            label,
+            format!("{}{}", s.n, s.dev.letter()),
+            format!("{:.3}", s.exec_time * 1e3),
+            format!("{:.3}", s.comm_in_time * 1e3),
+            format!("{:.3}", s.comm_out_time * 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    let ic = Interconnect::parse(args.get("interconnect", "pcie4"))?;
+    match cmd.as_str() {
+        "schedule" => {
+            let wl = parse_workload(args.get("workload", "gcn-OA"))?;
+            let obj = Objective::parse(args.get("objective", "perf"))?;
+            let mut sys = SystemSpec::paper_testbed(ic);
+            sys.n_fpga = args.get_usize("fpgas", 3)?;
+            sys.n_gpu = args.get_usize("gpus", 2)?;
+            let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model())
+                .with_degree_skew(dataset_skew(&wl.name));
+            let sched = if args.flag("oracle") {
+                let est = OracleModels { gt: &gt };
+                DpScheduler::new(&sys, &est).schedule(&wl, obj)
+            } else {
+                let reg = calibrate::calibrated_registry(&sys);
+                DpScheduler::new(&sys, &reg).schedule(&wl, obj)
+            };
+            print_schedule(&wl, &sched);
+        }
+        "pareto" => {
+            let wl = parse_workload(args.get("workload", "gcn-S1"))?;
+            let sys = SystemSpec::paper_testbed(ic);
+            let reg = calibrate::calibrated_registry(&sys);
+            let tables = DpScheduler::new(&sys, &reg).tables(&wl);
+            let front = pareto_front(&tables);
+            let mut t = Table::new(&["schedule", "thp(inf/s)", "J/inf", "devices"]);
+            for p in front {
+                t.row(vec![
+                    p.mnemonic.clone(),
+                    format!("{:.2}", p.throughput),
+                    format!("{:.3}", p.energy_per_inf),
+                    format!("{}F{}G", p.n_fpga, p.n_gpu),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "calibrate" => {
+            let sys = SystemSpec::paper_testbed(ic);
+            let reg = calibrate::calibrated_registry(&sys);
+            let mut t = Table::new(&["kernel", "device", "rmse(s)", "R2"]);
+            for (tag, dev, rmse, r2) in reg.fit_report() {
+                t.row(vec![tag, dev.to_string(), format!("{rmse:.3e}"), format!("{r2:.4}")]);
+            }
+            print!("{}", t.render());
+        }
+        "sweep" => {
+            let obj = Objective::parse(args.get("objective", "perf"))?;
+            sweep(ic, obj)?;
+        }
+        "serve" => {
+            serve(args.get_usize("inferences", 16)?, args.get("artifact-dir", "artifacts"))?;
+        }
+        "--help" | "-h" | "help" => print!("{USAGE}"),
+        other => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+/// DYPE vs baselines over the paper's 12 GNN workloads, measured on the
+/// ground-truth pipeline simulator.
+fn sweep(ic: Interconnect, obj: Objective) -> Result<()> {
+    let sys = SystemSpec::paper_testbed(ic);
+    let reg = calibrate::calibrated_registry(&sys);
+    let power = PowerTable::new(sys.gpu.clone(), sys.fpga.clone());
+    let comm = sys.comm_model();
+    let mut t = Table::new(&[
+        "workload", "DYPE", "static", "FleetRec*", "GPU-only", "FPGA-only", "DYPE/static",
+    ]);
+    for ds in Dataset::table1() {
+        for wl in gnn::paper_gnn_workloads(&ds) {
+            let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model())
+                .with_degree_skew(ds.degree_skew);
+            let sim = PipelineSim::new(&power, &comm);
+            let oracle = OracleModels { gt: &gt };
+            let measure = |sched: &dype::scheduler::Schedule| {
+                let retimed =
+                    dype::scheduler::evaluate_plan(&wl, &sched.plan(), &oracle, &comm, &power);
+                sim.run(&wl, &retimed, 100).throughput
+            };
+            let dype = DpScheduler::new(&sys, &reg).schedule(&wl, obj);
+            let reference = if wl.name.starts_with("GCN") {
+                gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128)
+            } else {
+                gnn::gin_workload(&Dataset::ogbn_arxiv(), 2, 128, 2)
+            };
+            let static_plan = baselines::tune_static_plan(&sys, &reg, &reference, obj);
+            let stat = baselines::apply_static_plan(&sys, &reg, &wl, &static_plan);
+            let fr = baselines::fleetrec(&sys, &reg, &wl, obj);
+            let go = baselines::gpu_only(&sys, &reg, &wl, obj);
+            let fo = baselines::fpga_only(&sys, &reg, &wl, obj);
+            let (d, s_, g_, f_) = (measure(&dype), measure(&stat), measure(&go), measure(&fo));
+            let fr_thp = fr.as_ref().map(&measure).unwrap_or(s_);
+            t.row(vec![
+                wl.name.clone(),
+                format!("{d:.2}"),
+                format!("{s_:.2}"),
+                format!("{fr_thp:.2}"),
+                format!("{g_:.2}"),
+                format!("{f_:.2}"),
+                fmt_ratio(d / s_),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// End-to-end real execution of the demo GCN through a scheduled pipeline.
+fn serve(inferences: usize, artifact_dir: &str) -> Result<()> {
+    use dype::pipeline::{run_pipeline, ArgSource, KernelBinding, StageSpec};
+    use dype::runtime::HostTensor;
+    use dype::workload::BlockEllGraph;
+
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+    let mut coord = Coordinator::new(sys.clone(), &est, Objective::Performance);
+    let wl = gnn::e2e_gcn_workload();
+    let sched = coord.process_batch(&wl).clone();
+    println!("schedule: {}", sched.mnemonic());
+
+    // Static data (§II-B pre-loading): graph blocks + per-layer weights.
+    let g = BlockEllGraph::generate(8, 4, 128, 128, 42);
+    let mut rng = Rng::seed_from_u64(7);
+    let theta: Vec<f32> = (0..128 * 128).map(|_| rng.gen_range_f32(-0.05, 0.05)).collect();
+    let blocks = HostTensor::f32(g.blocks.clone(), &[8, 4, 128, 128]);
+    let indices = HostTensor::i32(g.indices.clone(), &[8, 4]);
+    let theta_t = HostTensor::f32(theta, &[128, 128]);
+
+    let spmm = KernelBinding {
+        artifact: "spmm".into(),
+        args: vec![ArgSource::Static(blocks), ArgSource::Static(indices), ArgSource::Dynamic],
+    };
+    let gemm = KernelBinding {
+        artifact: "gemm".into(),
+        args: vec![ArgSource::Dynamic, ArgSource::Static(theta_t)],
+    };
+
+    // Map the schedule's stages onto kernel bindings.
+    let per_kernel = [spmm.clone(), gemm.clone(), spmm, gemm];
+    let stages: Vec<StageSpec> = sched
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, s)| StageSpec {
+            name: format!("stage{i}-{}{}", s.n, s.dev.letter()),
+            kernels: per_kernel[s.first..=s.last].to_vec(),
+        })
+        .collect();
+
+    let inputs: Vec<HostTensor> = (0..inferences)
+        .map(|i| {
+            let mut r = Rng::seed_from_u64(100 + i as u64);
+            let x: Vec<f32> = (0..1024 * 128).map(|_| r.gen_range_f32(-1.0, 1.0)).collect();
+            HostTensor::f32(x, &[1024, 128])
+        })
+        .collect();
+
+    let report = run_pipeline(artifact_dir.into(), stages, inputs)?;
+    println!(
+        "real execution: {} inferences in {:.2}s ({:.2} inf/s on this host)",
+        inferences, report.wall_time, report.throughput
+    );
+    for (i, b) in report.stage_busy.iter().enumerate() {
+        println!("  stage {i} busy {b:.2}s");
+    }
+    println!(
+        "simulated testbed: {:.1} inf/s, {:.3} J/inf",
+        sched.throughput(),
+        sched.energy_per_inf
+    );
+    Ok(())
+}

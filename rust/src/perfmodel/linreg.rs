@@ -1,0 +1,213 @@
+//! Ordinary least squares / ridge regression via normal equations.
+//!
+//! The paper's performance models (§V) are linear regressions over
+//! hand-designed features, trained on synthetic benchmark profiles. The
+//! feature counts are tiny (≤ 7), so a dense normal-equation solve with
+//! Cholesky factorization is exact and allocation-cheap.
+
+use anyhow::{ensure, Result};
+
+/// A fitted linear model `y ≈ w · x` (the intercept, when used, is an
+/// explicit all-ones feature appended by the feature builder).
+#[derive(Debug, Clone)]
+pub struct LinReg {
+    pub weights: Vec<f64>,
+    /// Training diagnostics: root-mean-square error and R² on the fit set.
+    pub rmse: f64,
+    pub r2: f64,
+}
+
+impl LinReg {
+    /// Fit with ridge damping `lambda` (relative to the mean diagonal of
+    /// XᵀX, so the scale is feature-invariant).
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], lambda: f64) -> Result<LinReg> {
+        ensure!(!xs.is_empty(), "empty training set");
+        ensure!(xs.len() == ys.len(), "X/y length mismatch");
+        let d = xs[0].len();
+        ensure!(d > 0, "no features");
+        ensure!(xs.iter().all(|x| x.len() == d), "ragged feature rows");
+        ensure!(xs.len() >= d, "need at least as many samples as features");
+
+        // Normal equations: (XᵀX + λI) w = Xᵀy.
+        let mut xtx = vec![0.0; d * d];
+        let mut xty = vec![0.0; d];
+        for (x, &y) in xs.iter().zip(ys) {
+            for i in 0..d {
+                xty[i] += x[i] * y;
+                for j in 0..d {
+                    xtx[i * d + j] += x[i] * x[j];
+                }
+            }
+        }
+        let mean_diag: f64 = (0..d).map(|i| xtx[i * d + i]).sum::<f64>() / d as f64;
+        let damp = lambda * mean_diag.max(1e-300);
+        for i in 0..d {
+            xtx[i * d + i] += damp;
+        }
+
+        let weights = cholesky_solve(&xtx, &xty, d)?;
+
+        // Diagnostics.
+        let n = ys.len() as f64;
+        let mean_y: f64 = ys.iter().sum::<f64>() / n;
+        let mut sse = 0.0;
+        let mut sst = 0.0;
+        for (x, &y) in xs.iter().zip(ys) {
+            let pred: f64 = x.iter().zip(&weights).map(|(a, b)| a * b).sum();
+            sse += (pred - y) * (pred - y);
+            sst += (y - mean_y) * (y - mean_y);
+        }
+        let rmse = (sse / n).sqrt();
+        let r2 = if sst > 0.0 { 1.0 - sse / sst } else { 1.0 };
+        Ok(LinReg { weights, rmse, r2 })
+    }
+
+    /// Fit minimizing *relative* residuals `Σ((ŷ−y)/y)²` — weighted least
+    /// squares with weights `1/y²`. Kernel times span 5+ orders of
+    /// magnitude across the §IV characteristic space; plain OLS would let
+    /// the multi-second samples dominate and leave microsecond kernels
+    /// with huge relative error (which is what drives scheduling
+    /// decisions). Implemented by scaling each row and target by `1/y`.
+    pub fn fit_relative(xs: &[Vec<f64>], ys: &[f64], lambda: f64) -> Result<LinReg> {
+        ensure!(ys.iter().all(|&y| y > 0.0), "relative fit needs positive targets");
+        let xs_scaled: Vec<Vec<f64>> = xs
+            .iter()
+            .zip(ys)
+            .map(|(x, &y)| x.iter().map(|v| v / y).collect())
+            .collect();
+        let ones = vec![1.0; ys.len()];
+        let mut m = LinReg::fit(&xs_scaled, &ones, lambda)?;
+        // Recompute diagnostics in the original (absolute) space.
+        let n = ys.len() as f64;
+        let mean_y: f64 = ys.iter().sum::<f64>() / n;
+        let mut sse = 0.0;
+        let mut sst = 0.0;
+        for (x, &y) in xs.iter().zip(ys) {
+            let pred = m.predict(x);
+            sse += (pred - y) * (pred - y);
+            sst += (y - mean_y) * (y - mean_y);
+        }
+        m.rmse = (sse / n).sqrt();
+        m.r2 = if sst > 0.0 { 1.0 - sse / sst } else { 1.0 };
+        Ok(m)
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.weights.len());
+        x.iter().zip(&self.weights).map(|(a, b)| a * b).sum()
+    }
+}
+
+/// Solve `A w = b` for symmetric positive-definite `A` (row-major, d×d).
+fn cholesky_solve(a: &[f64], b: &[f64], d: usize) -> Result<Vec<f64>> {
+    // Factor A = L Lᵀ.
+    let mut l = vec![0.0; d * d];
+    for i in 0..d {
+        for j in 0..=i {
+            let mut s = a[i * d + j];
+            for k in 0..j {
+                s -= l[i * d + k] * l[j * d + k];
+            }
+            if i == j {
+                ensure!(s > 0.0, "matrix not positive definite (pivot {i}: {s})");
+                l[i * d + i] = s.sqrt();
+            } else {
+                l[i * d + j] = s / l[j * d + j];
+            }
+        }
+    }
+    // Forward solve L z = b.
+    let mut z = vec![0.0; d];
+    for i in 0..d {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * d + k] * z[k];
+        }
+        z[i] = s / l[i * d + i];
+    }
+    // Back solve Lᵀ w = z.
+    let mut w = vec![0.0; d];
+    for i in (0..d).rev() {
+        let mut s = z[i];
+        for k in i + 1..d {
+            s -= l[k * d + i] * w[k];
+        }
+        w[i] = s / l[i * d + i];
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_linear_relation() {
+        // y = 3 x0 - 2 x1 + 0.5
+        let xs: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![i as f64, (i * i % 17) as f64, 1.0])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x[0] - 2.0 * x[1] + 0.5).collect();
+        let m = LinReg::fit(&xs, &ys, 1e-12).unwrap();
+        assert!((m.weights[0] - 3.0).abs() < 1e-6);
+        assert!((m.weights[1] + 2.0).abs() < 1e-6);
+        assert!((m.weights[2] - 0.5).abs() < 1e-6);
+        assert!(m.r2 > 0.999999);
+    }
+
+    #[test]
+    fn handles_noisy_data_with_good_r2() {
+        let xs: Vec<Vec<f64>> = (0..200).map(|i| vec![(i % 37) as f64, 1.0]).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, x)| 2.0 * x[0] + 1.0 + 0.01 * ((i * 7919 % 13) as f64 - 6.0))
+            .collect();
+        let m = LinReg::fit(&xs, &ys, 1e-9).unwrap();
+        assert!((m.weights[0] - 2.0).abs() < 0.01);
+        assert!(m.r2 > 0.99);
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(LinReg::fit(&[], &[], 0.0).is_err());
+        assert!(LinReg::fit(&[vec![1.0]], &[1.0, 2.0], 0.0).is_err());
+        // Fewer samples than features.
+        assert!(LinReg::fit(&[vec![1.0, 2.0, 3.0]], &[1.0], 0.0).is_err());
+    }
+
+    #[test]
+    fn relative_fit_balances_magnitudes() {
+        // y spans 1e-5 .. 1e1 with y = 2*x; absolute OLS with an extra
+        // noise feature would sacrifice the small samples — relative fit
+        // must keep relative error small everywhere.
+        let xs: Vec<Vec<f64>> = (0..60)
+            .map(|i| {
+                let x = 10f64.powf(-5.0 + 6.0 * (i as f64) / 59.0);
+                vec![x, 1.0]
+            })
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x[0] + 1e-7).collect();
+        let m = LinReg::fit_relative(&xs, &ys, 1e-10).unwrap();
+        for (x, &y) in xs.iter().zip(&ys) {
+            let rel = (m.predict(x) - y).abs() / y;
+            assert!(rel < 0.05, "rel err {rel} at y={y}");
+        }
+    }
+
+    #[test]
+    fn relative_fit_rejects_nonpositive_targets() {
+        assert!(LinReg::fit_relative(&[vec![1.0]], &[0.0], 0.0).is_err());
+    }
+
+    #[test]
+    fn ridge_stabilizes_collinear_features() {
+        // x1 == x0 exactly: pure OLS normal equations are singular; ridge
+        // must still produce a usable predictor.
+        let xs: Vec<Vec<f64>> = (1..40).map(|i| vec![i as f64, i as f64]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 4.0 * x[0]).collect();
+        let m = LinReg::fit(&xs, &ys, 1e-6).unwrap();
+        let pred = m.predict(&[10.0, 10.0]);
+        assert!((pred - 40.0).abs() < 0.1, "pred={pred}");
+    }
+}

@@ -1,0 +1,150 @@
+//! Kernel performance estimation (§V): feature extraction, linear
+//! regression, the per-(kernel, device) model registry, and the two-step
+//! calibration harness (synthetic profiles → benchmark → fit).
+
+pub mod calibrate;
+pub mod features;
+pub mod linreg;
+
+use std::collections::HashMap;
+
+use crate::devices::{CommModel, DeviceType, FpgaConfig};
+use crate::workload::KernelKind;
+use linreg::LinReg;
+
+/// Parallel-efficiency loss per extra device — the scheduler-side mirror
+/// of `devices::ground_truth::MULTI_DEV_ALPHA` (the framework profiles the
+/// scaling law once at install time; per-kernel noise remains unknown).
+const MULTI_DEV_ALPHA: f64 = 0.05;
+
+/// The trained §V estimator set: one [`LinReg`] per (kernel family,
+/// device type). This is `f_perf` in Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct ModelRegistry {
+    models: HashMap<(&'static str, DeviceType), LinReg>,
+    fpga_cfg: FpgaConfig,
+    comm: CommModel,
+}
+
+impl ModelRegistry {
+    pub fn new(fpga_cfg: FpgaConfig, comm: CommModel) -> Self {
+        ModelRegistry { models: HashMap::new(), fpga_cfg, comm }
+    }
+
+    pub fn insert(&mut self, tag: &'static str, dev: DeviceType, model: LinReg) {
+        self.models.insert((tag, dev), model);
+    }
+
+    pub fn get(&self, tag: &str, dev: DeviceType) -> Option<&LinReg> {
+        // Keys are 'static strs; match by value.
+        self.models.iter().find(|((t, d), _)| *t == tag && *d == dev).map(|(_, m)| m)
+    }
+
+    /// Estimated single-device execution time (seconds, clamped ≥ 1 µs —
+    /// a linear model can go negative at the domain edge; physical time
+    /// cannot).
+    pub fn single_device_time(&self, kind: &KernelKind, dev: DeviceType) -> f64 {
+        let model = self
+            .get(kind.tag(), dev)
+            .unwrap_or_else(|| panic!("no model for ({}, {dev})", kind.tag()));
+        let x = features::features(kind, dev, &self.fpga_cfg);
+        model.predict(&x).max(1e-6)
+    }
+
+    /// `f_perf`: estimated time for `kinds` executed sequentially by a
+    /// stage of `n` devices of type `dev` (mirrors
+    /// [`crate::devices::GroundTruth::group_time`]'s scaling law).
+    pub fn stage_time(&self, kinds: &[KernelKind], dev: DeviceType, n: usize) -> f64 {
+        assert!(n >= 1);
+        let eff = 1.0 + MULTI_DEV_ALPHA * (n as f64 - 1.0);
+        kinds
+            .iter()
+            .map(|k| {
+                let mut t = self.single_device_time(k, dev) / n as f64 * eff;
+                if n > 1 {
+                    let sg = k.output_bytes() * (n as f64 - 1.0) / n as f64 * 0.5;
+                    t += sg / self.comm.aggregate_bw(dev, n);
+                }
+                t
+            })
+            .sum()
+    }
+
+    /// Number of fitted models (diagnostics).
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Fit-quality summary: (tag, device, rmse, r2) per model.
+    pub fn fit_report(&self) -> Vec<(String, DeviceType, f64, f64)> {
+        let mut rows: Vec<_> = self
+            .models
+            .iter()
+            .map(|((t, d), m)| (t.to_string(), *d, m.rmse, m.r2))
+            .collect();
+        rows.sort_by(|a, b| (a.0.clone(), a.1.letter()).cmp(&(b.0.clone(), b.1.letter())));
+        rows
+    }
+}
+
+/// An *oracle* registry — `f_perf` backed directly by ground truth
+/// (used by Table III to isolate estimator error from scheduler error).
+#[derive(Debug, Clone)]
+pub struct OracleModels<'a> {
+    pub gt: &'a crate::devices::GroundTruth,
+}
+
+/// A common trait so the scheduler accepts either the trained estimators
+/// or the ground-truth oracle as `f_perf`.
+pub trait PerfEstimator {
+    /// Estimated execution time of a kernel group on `n` devices of `dev`.
+    fn stage_time(&self, kinds: &[KernelKind], dev: DeviceType, n: usize) -> f64;
+}
+
+impl PerfEstimator for ModelRegistry {
+    fn stage_time(&self, kinds: &[KernelKind], dev: DeviceType, n: usize) -> f64 {
+        ModelRegistry::stage_time(self, kinds, dev, n)
+    }
+}
+
+impl PerfEstimator for OracleModels<'_> {
+    fn stage_time(&self, kinds: &[KernelKind], dev: DeviceType, n: usize) -> f64 {
+        self.gt.group_time(kinds, dev, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::Interconnect;
+
+    #[test]
+    fn registry_panics_without_model() {
+        let reg = ModelRegistry::new(FpgaConfig::default(), CommModel::new(Interconnect::Pcie4));
+        let k = KernelKind::Gemm { m: 10, k: 10, n: 10 };
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            reg.single_device_time(&k, DeviceType::Gpu)
+        }));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn stage_time_scales_down_with_devices() {
+        let mut reg =
+            ModelRegistry::new(FpgaConfig::default(), CommModel::new(Interconnect::Pcie4));
+        // Trivial constant model: t = 1 ms regardless of features.
+        reg.insert(
+            "gemm",
+            DeviceType::Gpu,
+            LinReg { weights: vec![0.0; 6].into_iter().chain([1e-3]).collect(), rmse: 0.0, r2: 1.0 },
+        );
+        let k = KernelKind::Gemm { m: 128, k: 128, n: 128 };
+        let t1 = reg.stage_time(&[k], DeviceType::Gpu, 1);
+        let t2 = reg.stage_time(&[k], DeviceType::Gpu, 2);
+        assert!(t2 < t1);
+    }
+}

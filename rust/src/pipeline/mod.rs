@@ -1,0 +1,9 @@
+//! Pipeline execution: the discrete-event streaming simulator (timing and
+//! energy measurement over the device substrate) and the real-execution
+//! pipeline (PJRT artifacts on stage threads — real numerics).
+
+pub mod exec;
+pub mod sim;
+
+pub use exec::{run_pipeline, ArgSource, KernelBinding, RealRunReport, StageSpec};
+pub use sim::{PipelineSim, SimReport};

@@ -1,0 +1,176 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parses `artifacts/manifest.json` (input/output shapes +
+//! dtypes per lowered HLO module) with the in-tree JSON parser.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing 'shape'"))?
+            .iter()
+            .map(|v| v.as_u64().map(|u| u as usize).ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            shape,
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing 'dtype'"))?
+                .to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    constants: Json,
+}
+
+impl Manifest {
+    pub fn from_json_str(text: &str) -> Result<Manifest> {
+        let j = parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut artifacts = HashMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        for (name, spec) in arts {
+            let inputs = spec
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: spec
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing file"))?
+                        .to_string(),
+                    sha256: spec
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    inputs,
+                    output: TensorSpec::from_json(
+                        spec.get("output").ok_or_else(|| anyhow!("{name}: missing output"))?,
+                    )?,
+                },
+            );
+        }
+        let constants = j.get("constants").cloned().unwrap_or(Json::Null);
+        Ok(Manifest { artifacts, constants })
+    }
+
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<(Manifest, PathBuf)> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        Ok((Self::from_json_str(&text)?, dir.to_path_buf()))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Demo-graph constants written by aot.py (V, F, NRT, ELL, TM, TK).
+    pub fn graph_constant(&self, key: &str) -> Result<u64> {
+        self.constants
+            .get("graph")
+            .and_then(|g| g.get(key))
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("constants.graph.{key} missing from manifest"))
+    }
+}
+
+/// Default artifact directory: `$DYPE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("DYPE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> &'static str {
+        r#"{
+            "artifacts": {
+                "gemm": {
+                    "file": "gemm.hlo.txt",
+                    "sha256": "",
+                    "inputs": [
+                        {"name": "a", "shape": [1024, 128], "dtype": "float32"},
+                        {"name": "b", "shape": [128, 128], "dtype": "float32"}
+                    ],
+                    "output": {"shape": [1024, 128], "dtype": "float32"}
+                }
+            },
+            "constants": {"graph": {"V": 1024}}
+        }"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json_str(manifest_json()).unwrap();
+        let a = m.get("gemm").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].element_count(), 1024 * 128);
+        assert_eq!(a.output.dims_i64(), vec![1024, 128]);
+        assert_eq!(m.graph_constant("V").unwrap(), 1024);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::from_json_str(manifest_json()).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_errors() {
+        assert!(Manifest::from_json_str("{}").is_err());
+        assert!(Manifest::from_json_str("{\"artifacts\": {\"x\": {}}}").is_err());
+    }
+}

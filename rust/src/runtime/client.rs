@@ -1,0 +1,152 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once, execute many.
+//!
+//! Follows /opt/xla-example/load_hlo: HLO *text* is the interchange format
+//! (jax ≥0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids). Artifacts are lowered with
+//! `return_tuple=True`, so outputs unwrap with `to_tuple1`.
+//!
+//! `PjRtClient` wraps raw pointers (`!Send`): each pipeline-stage thread
+//! owns its own `Runtime`. Compilation is cached per runtime instance —
+//! the hot path is pure `execute`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::Manifest;
+
+/// Host-side tensor (what flows between pipeline stages / enters PJRT).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, dims: &[i64]) -> Self {
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
+        HostTensor::F32(data, dims.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[i64]) -> Self {
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
+        HostTensor::I32(data, dims.to_vec())
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            HostTensor::F32(_, d) | HostTensor::I32(_, d) => d,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            HostTensor::I32(..) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            HostTensor::F32(v, d) => xla::Literal::vec1(v).reshape(d)?,
+            HostTensor::I32(v, d) => xla::Literal::vec1(v).reshape(d)?,
+        })
+    }
+}
+
+/// A PJRT CPU runtime holding compiled executables for a set of artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the manifest in `dir`.
+    pub fn new(dir: &std::path::Path) -> Result<Self> {
+        let (manifest, dir) = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, dir, exes: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) the named artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact on host tensors; returns the (single)
+    /// output tensor. Validates input arity and element counts against
+    /// the manifest before dispatch.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<HostTensor> {
+        self.load(name)?;
+        let spec = self.manifest.get(name)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{name}: {} inputs supplied, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            ));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let n: i64 = t.dims().iter().product();
+            if n as usize != s.element_count() {
+                return Err(anyhow!(
+                    "{name} input {i} ('{}'): {} elements supplied, manifest wants {}",
+                    s.name,
+                    n,
+                    s.element_count()
+                ));
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let exe = self.exes.get(name).expect("just loaded");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let data = out.to_vec::<f32>().map_err(|e| anyhow!("read {name}: {e:?}"))?;
+        Ok(HostTensor::f32(data, &spec.output.dims_i64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_accessors() {
+        let t = HostTensor::f32(vec![0.0; 6], &[2, 3]);
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.as_f32().unwrap().len(), 6);
+        let i = HostTensor::i32(vec![1, 2], &[2]);
+        assert!(i.as_f32().is_err());
+    }
+}

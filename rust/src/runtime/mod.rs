@@ -1,0 +1,10 @@
+//! PJRT runtime: artifact manifest + compiled-executable cache.
+//!
+//! Python is build-time only; this module is how the Rust request path
+//! executes the AOT-lowered L2/L1 compute.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{default_artifact_dir, ArtifactSpec, Manifest, TensorSpec};
+pub use client::{HostTensor, Runtime};

@@ -1,0 +1,683 @@
+//! Algorithm 1 — DYPE's dynamic-programming scheduler.
+//!
+//! `dp[i][f][g]` is the best pipeline for the first `i` kernels using
+//! *exactly* `f` FPGAs and `g` GPUs. Two tables are filled in one pass:
+//! `dp_perf` minimizes the pipeline period (bottleneck stage time) and
+//! `dp_eng` minimizes energy per inference. Transitions consider every
+//! grouping of the trailing `j` kernels into a new stage executed by
+//! `n_f` FPGAs or `n_g` GPUs (the paper's two strategies: multi-device
+//! stages and multi-kernel stages).
+//!
+//! When a new stage is appended, the previous schedule's *last* stage
+//! gains the outgoing transfer cost (`t_comm^src`, line 21) — entries
+//! therefore store their bottleneck *excluding* the last stage's outgoing
+//! cost, and the extension re-maximizes with it included (lines 22–23).
+//!
+//! Entries hold parent pointers instead of stage vectors; full schedules
+//! are reconstructed only for the selected final states (see §Perf in
+//! DESIGN.md).
+
+use std::collections::HashMap;
+
+use crate::config::{Objective, SystemSpec};
+use crate::devices::{CommModel, DeviceType, Endpoint};
+use crate::perfmodel::PerfEstimator;
+use crate::workload::Workload;
+
+use super::energy::PowerTable;
+use super::pipeline_def::{Schedule, Stage};
+
+/// Relative tolerance for "equal" objective values (tie-breaking).
+const REL_EPS: f64 = 1e-9;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    /// Max stage total-time so far, with the last stage carrying no
+    /// outgoing-transfer cost yet.
+    bottleneck: f64,
+    /// Σ stage activity energies (exec + transfer power terms), including
+    /// every already-applied outgoing-transfer update.
+    activity: f64,
+    /// Σ over stages of `n · P_static` — multiplied by the final period to
+    /// close the energy account.
+    static_weight: f64,
+    /// Cached objective energy: `activity + static_weight · bottleneck`.
+    energy: f64,
+    /// The last stage (comm_out still 0).
+    last: Stage,
+    /// Predecessor state `(i, f, g)`; `None` for the empty pipeline.
+    parent: Option<(usize, usize, usize)>,
+    /// Outgoing-transfer time added to the parent's last stage when this
+    /// entry extended it (needed for reconstruction).
+    prev_comm_out: f64,
+}
+
+/// Hot-path precomputation for one `tables()` run (see
+/// `DpScheduler::precompute`).
+struct Precomp {
+    /// `[dev_idx·(max_dev+1)+count]` → prefix sums of per-kernel time.
+    time_pref: Vec<Vec<f64>>,
+    /// Same layout → prefix sums of per-kernel `P_dyn·t`.
+    energy_pref: Vec<Vec<f64>>,
+    /// Per device: `bad_before[j]` = 1 + last kernel index `< j` that the
+    /// type pin forbids on this device (0 when none so far).
+    bad_before: [Vec<usize>; 2],
+    max_dev: usize,
+}
+
+impl Precomp {
+    #[inline]
+    fn dev_idx(dev: DeviceType) -> usize {
+        match dev {
+            DeviceType::Fpga => 0,
+            DeviceType::Gpu => 1,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, dev: DeviceType, n: usize) -> usize {
+        Self::dev_idx(dev) * (self.max_dev + 1) + n
+    }
+
+    /// `f_perf` of kernels `[first, last]` on `n × dev` (exact prefix
+    /// difference of the injected estimator's per-kernel times).
+    #[inline]
+    fn group_time(&self, dev: DeviceType, n: usize, first: usize, last: usize) -> f64 {
+        let tp = &self.time_pref[self.slot(dev, n)];
+        tp[last + 1] - tp[first]
+    }
+
+    /// Σ `P_dyn(kernel)·t_kernel` over the group (per single logical run;
+    /// multiply by device count for stage energy).
+    #[inline]
+    fn group_exec_energy(&self, dev: DeviceType, n: usize, first: usize, last: usize) -> f64 {
+        let ep = &self.energy_pref[self.slot(dev, n)];
+        ep[last + 1] - ep[first]
+    }
+
+    #[inline]
+    fn allowed(&self, dev: DeviceType, first: usize, last: usize) -> bool {
+        self.bad_before[Self::dev_idx(dev)][last + 1] <= first
+    }
+}
+
+/// Which DP table a final state was taken from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableKind {
+    Perf,
+    Eng,
+}
+
+/// The filled DP tables plus everything needed to reconstruct schedules
+/// and enumerate the design space (Pareto analysis, mode selection).
+pub struct DpTables {
+    perf: Vec<Option<Entry>>,
+    eng: Vec<Option<Entry>>,
+    n_kernels: usize,
+    n_fpga: usize,
+    n_gpu: usize,
+    workload: String,
+}
+
+/// A candidate final configuration: the complete-workload state for a
+/// specific device budget, drawn from one of the two tables.
+#[derive(Debug, Clone)]
+pub struct FinalState {
+    pub table: TableKind,
+    pub n_fpga: usize,
+    pub n_gpu: usize,
+    pub period: f64,
+    pub energy_per_inf: f64,
+}
+
+impl DpTables {
+    #[inline]
+    fn idx(&self, i: usize, f: usize, g: usize) -> usize {
+        (i * (self.n_fpga + 1) + f) * (self.n_gpu + 1) + g
+    }
+
+    fn entry(&self, table: TableKind, i: usize, f: usize, g: usize) -> &Option<Entry> {
+        let idx = self.idx(i, f, g);
+        match table {
+            TableKind::Perf => &self.perf[idx],
+            TableKind::Eng => &self.eng[idx],
+        }
+    }
+
+    /// All complete-workload states (both tables, every device budget).
+    pub fn final_states(&self) -> Vec<FinalState> {
+        let mut out = Vec::new();
+        for table in [TableKind::Perf, TableKind::Eng] {
+            for f in 0..=self.n_fpga {
+                for g in 0..=self.n_gpu {
+                    if let Some(e) = self.entry(table, self.n_kernels, f, g) {
+                        out.push(FinalState {
+                            table,
+                            n_fpga: f,
+                            n_gpu: g,
+                            period: e.bottleneck,
+                            energy_per_inf: e.energy,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Reconstruct the schedule for a final state.
+    pub fn reconstruct(&self, fs: &FinalState) -> Schedule {
+        let mut stages: Vec<Stage> = Vec::new();
+        let mut cursor = Some((self.n_kernels, fs.n_fpga, fs.n_gpu));
+        let mut pending_comm_out = 0.0;
+        while let Some((i, f, g)) = cursor {
+            if i == 0 {
+                break;
+            }
+            let e = self
+                .entry(fs.table, i, f, g)
+                .as_ref()
+                .expect("broken parent chain");
+            let mut st = e.last.clone();
+            st.comm_out_time = pending_comm_out;
+            stages.push(st);
+            pending_comm_out = e.prev_comm_out;
+            cursor = e.parent;
+        }
+        stages.reverse();
+        Schedule {
+            workload: self.workload.clone(),
+            stages,
+            period: fs.period,
+            energy_per_inf: fs.energy_per_inf,
+        }
+    }
+
+    /// Min-energy state whose throughput clears `floor` (helper for the
+    /// balanced and QoS modes).
+    fn min_energy_above(&self, states: Vec<FinalState>, floor: f64) -> Option<FinalState> {
+        states
+            .into_iter()
+            .filter(|s| 1.0 / s.period >= floor * (1.0 - REL_EPS))
+            .min_by(|a, b| {
+                (a.energy_per_inf, a.period)
+                    .partial_cmp(&(b.energy_per_inf, b.period))
+                    .unwrap()
+            })
+    }
+
+    /// Highest achievable throughput across the whole design space.
+    pub fn max_throughput(&self) -> f64 {
+        self.final_states()
+            .iter()
+            .map(|s| 1.0 / s.period)
+            .fold(0.0, f64::max)
+    }
+
+    /// Select the best final state for an objective (§VI-A modes):
+    /// * Performance — min period (from either table);
+    /// * Energy — min energy per inference;
+    /// * Balanced — min energy subject to throughput ≥ frac · max.
+    pub fn select(&self, objective: Objective) -> Option<FinalState> {
+        let states = self.final_states();
+        match objective {
+            Objective::Performance => states.into_iter().min_by(|a, b| {
+                (a.period, a.energy_per_inf)
+                    .partial_cmp(&(b.period, b.energy_per_inf))
+                    .unwrap()
+            }),
+            Objective::Energy => states.into_iter().min_by(|a, b| {
+                (a.energy_per_inf, a.period)
+                    .partial_cmp(&(b.energy_per_inf, b.period))
+                    .unwrap()
+            }),
+            Objective::Balanced { min_throughput_frac } => {
+                let max_thp = self.max_throughput();
+                self.min_energy_above(states, max_thp * min_throughput_frac)
+            }
+            Objective::QoS { min_throughput } => {
+                // Best effort: if the floor is unreachable, serve the
+                // fastest schedule instead of failing the request path.
+                let max_thp = self.max_throughput();
+                let floor = min_throughput.min(max_thp);
+                self.min_energy_above(states, floor)
+            }
+        }
+    }
+}
+
+/// The DYPE scheduler (Algorithm 1) over an injected `f_perf` estimator —
+/// either the trained §V models or the ground-truth oracle.
+pub struct DpScheduler<'a, E: PerfEstimator> {
+    pub est: &'a E,
+    pub comm: CommModel,
+    pub power: PowerTable,
+    pub n_fpga: usize,
+    pub n_gpu: usize,
+    /// FleetRec*-style constraint: kernel tag → pinned device type
+    /// (§VI-A: "applying design constraints to limit the fixed types of
+    /// devices on specific kernels").
+    pub type_pin: Option<HashMap<String, DeviceType>>,
+}
+
+impl<'a, E: PerfEstimator> DpScheduler<'a, E> {
+    pub fn new(sys: &SystemSpec, est: &'a E) -> Self {
+        DpScheduler {
+            est,
+            comm: sys.comm_model(),
+            power: PowerTable::new(sys.gpu.clone(), sys.fpga.clone()),
+            n_fpga: sys.n_fpga,
+            n_gpu: sys.n_gpu,
+            type_pin: None,
+        }
+    }
+
+    /// Restrict each kernel tag to a fixed device type (FleetRec* mode).
+    pub fn with_type_pin(mut self, pin: HashMap<String, DeviceType>) -> Self {
+        self.type_pin = Some(pin);
+        self
+    }
+
+    /// Precompute per-(device, count) prefix sums of kernel time and
+    /// dynamic-power·time, plus pin-allowance prefixes (§Perf: turns the
+    /// O(|wl|) per-transition group evaluation into O(1), taking the whole
+    /// DP from O(|wl|³·F·G·(F+G)) to O(|wl|²·F·G·(F+G))). Exactness: both
+    /// `ModelRegistry::stage_time` and `GroundTruth::group_time` are sums
+    /// of per-kernel terms, so prefix differences reproduce them to
+    /// rounding.
+    fn precompute(&self, wl: &Workload) -> Precomp {
+        let n = wl.len();
+        let max_dev = self.n_fpga.max(self.n_gpu);
+        let mut time_pref = vec![vec![]; 2 * (max_dev + 1)];
+        let mut energy_pref = vec![vec![]; 2 * (max_dev + 1)];
+        for (di, dev) in DeviceType::ALL.iter().enumerate() {
+            let dev_max = match dev {
+                DeviceType::Fpga => self.n_fpga,
+                DeviceType::Gpu => self.n_gpu,
+            };
+            for cnt in 1..=dev_max {
+                let mut tp = Vec::with_capacity(n + 1);
+                let mut ep = Vec::with_capacity(n + 1);
+                tp.push(0.0);
+                ep.push(0.0);
+                for k in &wl.kernels {
+                    let t = self.est.stage_time(std::slice::from_ref(&k.kind), *dev, cnt);
+                    tp.push(tp.last().unwrap() + t);
+                    ep.push(ep.last().unwrap() + t * self.power.dynamic_power(&k.kind, *dev));
+                }
+                time_pref[di * (max_dev + 1) + cnt] = tp;
+                energy_pref[di * (max_dev + 1) + cnt] = ep;
+            }
+        }
+        // bad_before[di][j] = 1 + largest kernel index < j disallowed on
+        // dev (0 when none): group [first, last] allowed iff
+        // bad_before[last+1] <= first.
+        let mut bad_before = [vec![0usize; n + 1], vec![0usize; n + 1]];
+        for (di, dev) in DeviceType::ALL.iter().enumerate() {
+            for j in 1..=n {
+                let allowed = match &self.type_pin {
+                    None => true,
+                    Some(pin) => pin
+                        .get(wl.kernels[j - 1].kind.tag())
+                        .map_or(true, |&d| d == *dev),
+                };
+                bad_before[di][j] = if allowed { bad_before[di][j - 1] } else { j };
+            }
+        }
+        Precomp { time_pref, energy_pref, bad_before, max_dev }
+    }
+
+    /// Fill both DP tables for `wl` (Algorithm 1 lines 1–41).
+    pub fn tables(&self, wl: &Workload) -> DpTables {
+        let n = wl.len();
+        assert!(n > 0, "empty workload");
+        let (nf, ng) = (self.n_fpga, self.n_gpu);
+        let size = (n + 1) * (nf + 1) * (ng + 1);
+        let mut tables = DpTables {
+            perf: vec![None; size],
+            eng: vec![None; size],
+            n_kernels: n,
+            n_fpga: nf,
+            n_gpu: ng,
+            workload: wl.name.clone(),
+        };
+        let origin = Entry {
+            bottleneck: 0.0,
+            activity: 0.0,
+            static_weight: 0.0,
+            energy: 0.0,
+            last: Stage {
+                first: 0,
+                last: 0,
+                dev: DeviceType::Gpu,
+                n: 0,
+                exec_time: 0.0,
+                comm_in_time: 0.0,
+                comm_out_time: 0.0,
+            },
+            parent: None,
+            prev_comm_out: 0.0,
+        };
+        let o = tables.idx(0, 0, 0);
+        tables.perf[o] = Some(origin.clone());
+        tables.eng[o] = Some(origin);
+
+        let pre = self.precompute(wl);
+        for i in 1..=n {
+            for f in 0..=nf {
+                for g in 0..=ng {
+                    self.relax_state(wl, &pre, &mut tables, i, f, g);
+                }
+            }
+        }
+        tables
+    }
+
+    /// Compute the best entries for state (i, f, g) in both tables.
+    fn relax_state(
+        &self,
+        wl: &Workload,
+        pre: &Precomp,
+        tables: &mut DpTables,
+        i: usize,
+        f: usize,
+        g: usize,
+    ) {
+        for j in 1..=i {
+            let (first, last) = (i - j, i - 1);
+            // New stage on FPGAs.
+            if pre.allowed(DeviceType::Fpga, first, last) {
+                for n_f in 1..=f {
+                    self.try_extend(wl, pre, tables, i, f, g, j, DeviceType::Fpga, n_f, f - n_f, g);
+                }
+            }
+            // New stage on GPUs.
+            if pre.allowed(DeviceType::Gpu, first, last) {
+                for n_g in 1..=g {
+                    self.try_extend(wl, pre, tables, i, f, g, j, DeviceType::Gpu, n_g, f, g - n_g);
+                }
+            }
+        }
+    }
+
+    /// Lines 10–33: extend `dp[i-j][pf][pg]` with a new stage of kernels
+    /// `[i-j, i-1]` on `n × dev`, updating both tables.
+    #[allow(clippy::too_many_arguments)]
+    fn try_extend(
+        &self,
+        wl: &Workload,
+        pre: &Precomp,
+        tables: &mut DpTables,
+        i: usize,
+        f: usize,
+        g: usize,
+        j: usize,
+        dev: DeviceType,
+        n: usize,
+        pf: usize,
+        pg: usize,
+    ) {
+        let (first, last) = (i - j, i - 1);
+        // f_perf of the new stage's kernel group (line 19, first term).
+        let exec = pre.group_time(dev, n, first, last);
+        // Bitstream-dependent execution energy of the group.
+        let exec_energy = pre.group_exec_energy(dev, n, first, last);
+        let bytes = wl.transfer_bytes_into(first);
+        let static_w = n as f64 * self.power.static_power(dev);
+
+        let target = tables.idx(i, f, g);
+        let parent_idx = tables.idx(i - j, pf, pg);
+
+        for table in [TableKind::Perf, TableKind::Eng] {
+            let parent = match table {
+                TableKind::Perf => tables.perf[parent_idx].as_ref(),
+                TableKind::Eng => tables.eng[parent_idx].as_ref(),
+            };
+            let Some(parent) = parent else { continue };
+
+            // Lines 11–17: incoming transfer from the previous schedule's
+            // last stage (or host ingress for the first stage).
+            let src = if first == 0 {
+                Endpoint::Host
+            } else {
+                Endpoint::Devices(parent.last.dev, parent.last.n)
+            };
+            let t_comm = self.comm.transfer_time(bytes, src, Endpoint::Devices(dev, n));
+            // Line 21: the source side is occupied for the same transfer
+            // (none when the source is the host DMA engine).
+            let t_comm_src = if first == 0 { 0.0 } else { t_comm };
+
+            let new_stage = Stage {
+                first,
+                last,
+                dev,
+                n,
+                exec_time: exec,
+                comm_in_time: t_comm,
+                comm_out_time: 0.0,
+            };
+            // Lines 22–23: new pipeline bottleneck.
+            let prev_last_total = parent.last.total_time() + t_comm_src;
+            let bottleneck = parent
+                .bottleneck
+                .max(prev_last_total)
+                .max(new_stage.total_time());
+
+            // Energy account (f_eng, lines 29–30).
+            let prev_xfer_energy = if first == 0 {
+                0.0
+            } else {
+                parent.last.n as f64
+                    * self.power.transfer_power(parent.last.dev)
+                    * t_comm_src
+            };
+            let activity = parent.activity
+                + prev_xfer_energy
+                + n as f64 * (exec_energy + self.power.transfer_power(dev) * t_comm);
+            let static_weight = parent.static_weight + static_w;
+            let energy = activity + static_weight * bottleneck;
+
+            let cand = Entry {
+                bottleneck,
+                activity,
+                static_weight,
+                energy,
+                last: new_stage,
+                parent: Some((i - j, pf, pg)),
+                prev_comm_out: t_comm_src,
+            };
+
+            let slot = match table {
+                TableKind::Perf => &mut tables.perf[target],
+                TableKind::Eng => &mut tables.eng[target],
+            };
+            let better = match slot.as_ref() {
+                None => true,
+                Some(cur) => match table {
+                    // Line 25: strictly better period wins; ties prefer
+                    // lower energy.
+                    TableKind::Perf => {
+                        cand.bottleneck < cur.bottleneck * (1.0 - REL_EPS)
+                            || (cand.bottleneck <= cur.bottleneck * (1.0 + REL_EPS)
+                                && cand.energy < cur.energy)
+                    }
+                    // Line 31.
+                    TableKind::Eng => {
+                        cand.energy < cur.energy * (1.0 - REL_EPS)
+                            || (cand.energy <= cur.energy * (1.0 + REL_EPS)
+                                && cand.bottleneck < cur.bottleneck)
+                    }
+                },
+            };
+            if better {
+                *slot = Some(cand);
+            }
+        }
+    }
+
+    /// Schedule `wl` under `objective`, or `None` when no feasible
+    /// pipeline exists (empty inventory, or type pins that demand more
+    /// alternating stages than the device budget allows).
+    pub fn try_schedule(&self, wl: &Workload, objective: Objective) -> Option<Schedule> {
+        let tables = self.tables(wl);
+        let fs = tables.select(objective)?;
+        Some(tables.reconstruct(&fs))
+    }
+
+    /// Schedule `wl` under `objective` (tables + selection + rebuild).
+    pub fn schedule(&self, wl: &Workload, objective: Objective) -> Schedule {
+        self.try_schedule(wl, objective)
+            .expect("no feasible schedule: is the device inventory empty?")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{GroundTruth, Interconnect};
+    use crate::perfmodel::OracleModels;
+    use crate::workload::{gnn, Dataset};
+
+    fn sys() -> SystemSpec {
+        SystemSpec::paper_testbed(Interconnect::Pcie4)
+    }
+
+    fn gt(s: &SystemSpec) -> GroundTruth {
+        GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model())
+    }
+
+    #[test]
+    fn schedules_are_valid_for_all_objectives() {
+        let s = sys();
+        let g = gt(&s);
+        let oracle = OracleModels { gt: &g };
+        let sched = DpScheduler::new(&s, &oracle);
+        for ds in Dataset::table1() {
+            let wl = gnn::gcn_workload(&ds, 2, 128);
+            for obj in [Objective::Performance, Objective::Energy, Objective::balanced()] {
+                let out = sched.schedule(&wl, obj);
+                out.validate(wl.len(), s.n_fpga, s.n_gpu)
+                    .unwrap_or_else(|e| panic!("{} {}: {e}", ds.code, obj.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn perf_mode_beats_or_matches_energy_mode_throughput() {
+        let s = sys();
+        let g = gt(&s);
+        let oracle = OracleModels { gt: &g };
+        let sched = DpScheduler::new(&s, &oracle);
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let p = sched.schedule(&wl, Objective::Performance);
+        let e = sched.schedule(&wl, Objective::Energy);
+        assert!(p.throughput() >= e.throughput() * (1.0 - 1e-9));
+        assert!(e.energy_per_inf <= p.energy_per_inf * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn balanced_mode_respects_throughput_floor() {
+        let s = sys();
+        let g = gt(&s);
+        let oracle = OracleModels { gt: &g };
+        let sched = DpScheduler::new(&s, &oracle);
+        for ds in Dataset::table1() {
+            let wl = gnn::gin_workload(&ds, 2, 128, 2);
+            let tables = sched.tables(&wl);
+            let max_thp = tables.max_throughput();
+            let b = tables.select(Objective::balanced()).unwrap();
+            assert!(
+                1.0 / b.period >= 0.7 * max_thp * (1.0 - 1e-6),
+                "{}: balanced throughput below floor",
+                ds.code
+            );
+        }
+    }
+
+    #[test]
+    fn more_devices_never_hurt_throughput() {
+        // The DP scans all budgets; a bigger inventory can only widen the
+        // design space.
+        let small = SystemSpec { n_fpga: 1, n_gpu: 1, ..sys() };
+        let big = sys();
+        let g_small = gt(&small);
+        let g_big = gt(&big);
+        let wl = gnn::gcn_workload(&Dataset::ogbn_products(), 2, 128);
+        let thp_small = DpScheduler::new(&small, &OracleModels { gt: &g_small })
+            .schedule(&wl, Objective::Performance)
+            .throughput();
+        let thp_big = DpScheduler::new(&big, &OracleModels { gt: &g_big })
+            .schedule(&wl, Objective::Performance)
+            .throughput();
+        assert!(thp_big >= thp_small * (1.0 - 1e-9));
+    }
+
+    #[test]
+    fn type_pin_is_respected() {
+        let s = sys();
+        let g = gt(&s);
+        let oracle = OracleModels { gt: &g };
+        let mut pin = HashMap::new();
+        pin.insert("spmm".to_string(), DeviceType::Fpga);
+        pin.insert("gemm".to_string(), DeviceType::Gpu);
+        let sched = DpScheduler::new(&s, &oracle).with_type_pin(pin);
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let out = sched.schedule(&wl, Objective::Performance);
+        for st in &out.stages {
+            for k in st.first..=st.last {
+                let tag = wl.kernels[k].kind.tag();
+                match tag {
+                    "spmm" => assert_eq!(st.dev, DeviceType::Fpga),
+                    "gemm" => assert_eq!(st.dev, DeviceType::Gpu),
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_only_system_uses_only_gpus() {
+        let s = SystemSpec { n_fpga: 0, ..sys() };
+        let g = gt(&s);
+        let oracle = OracleModels { gt: &g };
+        let wl = gnn::gcn_workload(&Dataset::synthetic2(), 2, 128);
+        let out = DpScheduler::new(&s, &oracle).schedule(&wl, Objective::Performance);
+        assert!(out.stages.iter().all(|st| st.dev == DeviceType::Gpu));
+        assert_eq!(out.fpgas_used(), 0);
+    }
+
+    #[test]
+    fn single_kernel_workload_single_stage() {
+        let s = sys();
+        let g = gt(&s);
+        let oracle = OracleModels { gt: &g };
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 1, 128);
+        let mut only_spmm = wl.clone();
+        only_spmm.kernels.truncate(1);
+        let out = DpScheduler::new(&s, &oracle).schedule(&only_spmm, Objective::Performance);
+        assert_eq!(out.stages.len(), 1);
+        assert!(out.validate(1, s.n_fpga, s.n_gpu).is_ok());
+    }
+
+    #[test]
+    fn period_is_bottleneck_and_energy_consistent() {
+        let s = sys();
+        let g = gt(&s);
+        let oracle = OracleModels { gt: &g };
+        let wl = gnn::gin_workload(&Dataset::synthetic3(), 2, 128, 2);
+        let out = DpScheduler::new(&s, &oracle).schedule(&wl, Objective::Performance);
+        let bottleneck = out.stages.iter().map(Stage::total_time).fold(0.0f64, f64::max);
+        assert!((out.period - bottleneck).abs() < 1e-12 * bottleneck.max(1e-12));
+        assert!(out.energy_per_inf > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no feasible schedule")]
+    fn empty_inventory_panics() {
+        let s = SystemSpec { n_fpga: 0, n_gpu: 0, ..sys() };
+        let g = gt(&s);
+        let oracle = OracleModels { gt: &g };
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        DpScheduler::new(&s, &oracle).schedule(&wl, Objective::Performance);
+    }
+}

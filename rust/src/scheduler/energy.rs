@@ -1,0 +1,112 @@
+//! `f_eng` — pipeline energy model (§II-A energy optimization).
+//!
+//! Per-device power states come from Table II / system configuration:
+//! execution (kernel-dependent on the FPGA: the SpMM and win-attn
+//! bitstreams draw differently), data transfer, and idle (static). Energy
+//! per inference for a pipeline with period `T`:
+//!
+//! ```text
+//! E = Σ_stages n · [ Σ_k P_dyn(kernel, dev)·t_k  +  P_xfer·(t_in + t_out)
+//!                    + P_static·T ]
+//! ```
+//!
+//! Idleness is captured by charging static power over the full period:
+//! a stage busy for `t < T` idles for the remainder.
+
+use crate::devices::{DeviceType, FpgaConfig, GpuConfig};
+use crate::workload::KernelKind;
+
+/// Power lookup derived from the system's device configs.
+#[derive(Debug, Clone)]
+pub struct PowerTable {
+    pub gpu: GpuConfig,
+    pub fpga: FpgaConfig,
+}
+
+impl PowerTable {
+    pub fn new(gpu: GpuConfig, fpga: FpgaConfig) -> Self {
+        PowerTable { gpu, fpga }
+    }
+
+    /// Dynamic power while executing `kind` on `dev` (W).
+    pub fn dynamic_power(&self, kind: &KernelKind, dev: DeviceType) -> f64 {
+        match dev {
+            DeviceType::Gpu => self.gpu.dynamic_power,
+            DeviceType::Fpga => match kind {
+                KernelKind::WindowAttn { .. } => self.fpga.attn_dynamic_power,
+                // SpMM bitstream powers both sparse and (overlay) dense ops.
+                _ => self.fpga.spmm_dynamic_power,
+            },
+        }
+    }
+
+    /// Power while driving PCIe transfers (W).
+    pub fn transfer_power(&self, dev: DeviceType) -> f64 {
+        match dev {
+            DeviceType::Gpu => self.gpu.transfer_power,
+            DeviceType::Fpga => self.fpga.transfer_power,
+        }
+    }
+
+    /// Static/idle power (W).
+    pub fn static_power(&self, dev: DeviceType) -> f64 {
+        match dev {
+            DeviceType::Gpu => self.gpu.static_power,
+            DeviceType::Fpga => self.fpga.static_power,
+        }
+    }
+}
+
+/// Activity energy of one stage (everything except the static-power term):
+/// `n · (Σ_k P_dyn·t_k + P_xfer·(t_in + t_out))`. The caller adds
+/// `static_weight · period` where `static_weight = Σ n·P_static`.
+pub fn stage_activity_energy(
+    power: &PowerTable,
+    dev: DeviceType,
+    n: usize,
+    kernel_times: &[(KernelKind, f64)],
+    comm_in: f64,
+    comm_out: f64,
+) -> f64 {
+    let exec: f64 = kernel_times
+        .iter()
+        .map(|(kind, t)| power.dynamic_power(kind, dev) * t)
+        .sum();
+    n as f64 * (exec + power.transfer_power(dev) * (comm_in + comm_out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> PowerTable {
+        PowerTable::new(GpuConfig::default(), FpgaConfig::default())
+    }
+
+    #[test]
+    fn fpga_power_depends_on_bitstream() {
+        let p = table();
+        let spmm = KernelKind::SpMM { m: 10, k: 10, n: 10, nnz: 10 };
+        let attn = KernelKind::WindowAttn { seq: 1024, window: 512, heads: 8, dim: 64 };
+        assert_eq!(p.dynamic_power(&spmm, DeviceType::Fpga), 55.0);
+        assert_eq!(p.dynamic_power(&attn, DeviceType::Fpga), 50.2);
+        assert_eq!(p.dynamic_power(&spmm, DeviceType::Gpu), 300.0);
+    }
+
+    #[test]
+    fn activity_energy_scales_with_devices_and_time() {
+        let p = table();
+        let k = KernelKind::Gemm { m: 10, k: 10, n: 10 };
+        let e1 = stage_activity_energy(&p, DeviceType::Gpu, 1, &[(k, 1e-3)], 0.0, 0.0);
+        let e2 = stage_activity_energy(&p, DeviceType::Gpu, 2, &[(k, 1e-3)], 0.0, 0.0);
+        assert!((e1 - 0.3).abs() < 1e-12); // 300 W × 1 ms
+        assert!((e2 - 2.0 * e1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_energy_counted() {
+        let p = table();
+        let e = stage_activity_energy(&p, DeviceType::Fpga, 1, &[], 1e-3, 2e-3);
+        assert!((e - 30.0 * 3e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,133 @@
+//! Re-time a fixed pipeline structure under any `f_perf` source.
+//!
+//! Used by (a) the static / FleetRec* baselines, which freeze a structure
+//! and apply it to new inputs, and (b) the pipeline simulator, which
+//! re-measures DYPE's schedules under ground truth (the paper's
+//! "applying the schedule on our hardware build").
+
+use crate::devices::{CommModel, Endpoint};
+use crate::perfmodel::PerfEstimator;
+use crate::workload::Workload;
+
+use super::energy::{stage_activity_energy, PowerTable};
+use super::pipeline_def::{Schedule, Stage, StagePlan};
+
+/// Build a fully-timed [`Schedule`] for `plan` over `wl`, with execution
+/// times from `est` and transfers from `comm`.
+pub fn evaluate_plan<E: PerfEstimator>(
+    wl: &Workload,
+    plan: &[StagePlan],
+    est: &E,
+    comm: &CommModel,
+    power: &PowerTable,
+) -> Schedule {
+    assert!(!plan.is_empty(), "empty plan");
+    assert_eq!(plan[0].first, 0, "plan must start at kernel 0");
+    assert_eq!(plan.last().unwrap().last + 1, wl.len(), "plan must cover the workload");
+
+    let mut stages: Vec<Stage> = Vec::with_capacity(plan.len());
+    for (idx, p) in plan.iter().enumerate() {
+        let kinds: Vec<_> = wl.kernels[p.first..=p.last].iter().map(|k| k.kind).collect();
+        let exec = est.stage_time(&kinds, p.dev, p.n);
+        let bytes = wl.transfer_bytes_into(p.first);
+        let src = if idx == 0 {
+            Endpoint::Host
+        } else {
+            let prev = &plan[idx - 1];
+            Endpoint::Devices(prev.dev, prev.n)
+        };
+        let t_comm = comm.transfer_time(bytes, src, Endpoint::Devices(p.dev, p.n));
+        if idx > 0 {
+            stages[idx - 1].comm_out_time = t_comm;
+        }
+        stages.push(Stage {
+            first: p.first,
+            last: p.last,
+            dev: p.dev,
+            n: p.n,
+            exec_time: exec,
+            comm_in_time: t_comm,
+            comm_out_time: 0.0,
+        });
+    }
+
+    let period = stages.iter().map(Stage::total_time).fold(0.0f64, f64::max);
+
+    // Energy account (see `energy.rs`).
+    let mut activity = 0.0;
+    let mut static_weight = 0.0;
+    for s in &stages {
+        let kernel_times: Vec<_> = wl.kernels[s.first..=s.last]
+            .iter()
+            .map(|k| (k.kind, est.stage_time(std::slice::from_ref(&k.kind), s.dev, s.n)))
+            .collect();
+        activity += stage_activity_energy(
+            power,
+            s.dev,
+            s.n,
+            &kernel_times,
+            s.comm_in_time,
+            s.comm_out_time,
+        );
+        static_weight += s.n as f64 * power.static_power(s.dev);
+    }
+    let energy_per_inf = activity + static_weight * period;
+
+    Schedule { workload: wl.name.clone(), stages, period, energy_per_inf }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Objective, SystemSpec};
+    use crate::devices::{DeviceType, GroundTruth, Interconnect};
+    use crate::perfmodel::OracleModels;
+    use crate::scheduler::dp::DpScheduler;
+    use crate::workload::{gnn, Dataset};
+
+    #[test]
+    fn evaluating_a_dp_schedules_own_plan_reproduces_it() {
+        let s = SystemSpec::paper_testbed(Interconnect::Pcie4);
+        let g = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let oracle = OracleModels { gt: &g };
+        let sched = DpScheduler::new(&s, &oracle);
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let dp_out = sched.schedule(&wl, Objective::Performance);
+        let re = evaluate_plan(&wl, &dp_out.plan(), &oracle, &sched.comm, &sched.power);
+        assert!((re.period - dp_out.period).abs() < 1e-9 * dp_out.period);
+        assert!(
+            (re.energy_per_inf - dp_out.energy_per_inf).abs()
+                < 1e-6 * dp_out.energy_per_inf
+        );
+        assert_eq!(re.mnemonic(), dp_out.mnemonic());
+    }
+
+    #[test]
+    fn plan_applied_to_different_dataset_retimes() {
+        let s = SystemSpec::paper_testbed(Interconnect::Pcie4);
+        let g = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let oracle = OracleModels { gt: &g };
+        let power = crate::scheduler::energy::PowerTable::new(s.gpu.clone(), s.fpga.clone());
+        let plan = vec![
+            StagePlan { first: 0, last: 0, dev: DeviceType::Fpga, n: 3 },
+            StagePlan { first: 1, last: 3, dev: DeviceType::Gpu, n: 2 },
+        ];
+        let wl_a = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let wl_b = gnn::gcn_workload(&Dataset::synthetic1(), 2, 128);
+        let a = evaluate_plan(&wl_a, &plan, &oracle, &s.comm_model(), &power);
+        let b = evaluate_plan(&wl_b, &plan, &oracle, &s.comm_model(), &power);
+        assert!(b.period > a.period, "S1 is far heavier than OA");
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the workload")]
+    fn rejects_partial_plans() {
+        let s = SystemSpec::paper_testbed(Interconnect::Pcie4);
+        let g = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let oracle = OracleModels { gt: &g };
+        let power = crate::scheduler::energy::PowerTable::new(s.gpu.clone(), s.fpga.clone());
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let plan = vec![StagePlan { first: 0, last: 1, dev: DeviceType::Gpu, n: 1 }];
+        evaluate_plan(&wl, &plan, &oracle, &s.comm_model(), &power);
+    }
+}

@@ -1,0 +1,18 @@
+//! DYPE's scheduling core (§II): Algorithm 1's DP over pipeline
+//! groupings × device allocations, the energy model `f_eng`, baselines,
+//! Pareto analysis, and the exhaustive optimality reference.
+
+pub mod baselines;
+pub mod dp;
+pub mod energy;
+pub mod evaluate;
+pub mod oracle;
+pub mod pareto;
+pub mod pipeline_def;
+
+pub use dp::{DpScheduler, DpTables, FinalState, TableKind};
+pub use energy::PowerTable;
+pub use evaluate::evaluate_plan;
+pub use oracle::ExhaustiveScheduler;
+pub use pareto::{pareto_front, ParetoPoint};
+pub use pipeline_def::{Schedule, Stage, StagePlan};

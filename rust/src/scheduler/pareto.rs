@@ -1,0 +1,137 @@
+//! Pareto-front extraction over the DP design space (Fig 9 DSE plots).
+//!
+//! Every complete-workload DP state — both tables, every device budget —
+//! is a design point (throughput, energy/inference, device count). DYPE
+//! exposes the points that are Pareto-optimal in (max throughput,
+//! min energy, min devices), which is what the paper's Fig 9 scatters.
+
+
+use super::dp::DpTables;
+
+/// One Pareto-optimal design point.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    /// Paper-notation schedule mnemonic (e.g. `3F2G`).
+    pub mnemonic: String,
+    pub throughput: f64,
+    pub energy_per_inf: f64,
+    pub n_fpga: usize,
+    pub n_gpu: usize,
+}
+
+impl ParetoPoint {
+    pub fn devices(&self) -> usize {
+        self.n_fpga + self.n_gpu
+    }
+
+    /// True if `self` dominates `other`: no worse on all three axes and
+    /// strictly better on at least one.
+    fn dominates(&self, other: &ParetoPoint) -> bool {
+        let ge_all = self.throughput >= other.throughput
+            && self.energy_per_inf <= other.energy_per_inf
+            && self.devices() <= other.devices();
+        let gt_any = self.throughput > other.throughput
+            || self.energy_per_inf < other.energy_per_inf
+            || self.devices() < other.devices();
+        ge_all && gt_any
+    }
+}
+
+/// Extract the Pareto front from filled DP tables, sorted by descending
+/// throughput.
+pub fn pareto_front(tables: &DpTables) -> Vec<ParetoPoint> {
+    let mut points: Vec<ParetoPoint> = tables
+        .final_states()
+        .iter()
+        .map(|fs| {
+            let sched = tables.reconstruct(fs);
+            ParetoPoint {
+                mnemonic: sched.mnemonic(),
+                throughput: 1.0 / fs.period,
+                energy_per_inf: fs.energy_per_inf,
+                n_fpga: fs.n_fpga,
+                n_gpu: fs.n_gpu,
+            }
+        })
+        .collect();
+
+    // Deduplicate identical schedules arising from both tables.
+    points.sort_by(|a, b| {
+        (&a.mnemonic, a.throughput)
+            .partial_cmp(&(&b.mnemonic, b.throughput))
+            .unwrap()
+    });
+    points.dedup_by(|a, b| {
+        a.mnemonic == b.mnemonic
+            && (a.throughput - b.throughput).abs() < 1e-12 * b.throughput.abs().max(1e-12)
+            && (a.energy_per_inf - b.energy_per_inf).abs()
+                < 1e-12 * b.energy_per_inf.abs().max(1e-12)
+    });
+
+    let front: Vec<ParetoPoint> = points
+        .iter()
+        .filter(|p| !points.iter().any(|q| q.dominates(p)))
+        .cloned()
+        .collect();
+
+    let mut front = front;
+    front.sort_by(|a, b| b.throughput.partial_cmp(&a.throughput).unwrap());
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Objective, SystemSpec};
+    use crate::devices::{GroundTruth, Interconnect};
+    use crate::perfmodel::OracleModels;
+    use crate::scheduler::dp::DpScheduler;
+    use crate::workload::{gnn, Dataset};
+
+    fn front_for(ds: &Dataset) -> Vec<ParetoPoint> {
+        let s = SystemSpec::paper_testbed(Interconnect::Pcie4);
+        let g = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let oracle = OracleModels { gt: &g };
+        let sched = DpScheduler::new(&s, &oracle);
+        let wl = gnn::gcn_workload(ds, 2, 128);
+        pareto_front(&sched.tables(&wl))
+    }
+
+    #[test]
+    fn front_is_nonempty_and_mutually_nondominated() {
+        let front = front_for(&Dataset::ogbn_arxiv());
+        assert!(!front.is_empty());
+        for (i, p) in front.iter().enumerate() {
+            for (j, q) in front.iter().enumerate() {
+                if i != j {
+                    assert!(!p.dominates(q), "{} dominates {}", p.mnemonic, q.mnemonic);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn front_contains_the_perf_optimum() {
+        let s = SystemSpec::paper_testbed(Interconnect::Pcie4);
+        let g = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let oracle = OracleModels { gt: &g };
+        let sched = DpScheduler::new(&s, &oracle);
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let tables = sched.tables(&wl);
+        let best = tables.select(Objective::Performance).unwrap();
+        let front = pareto_front(&tables);
+        let best_thp = 1.0 / best.period;
+        assert!(
+            front.iter().any(|p| (p.throughput - best_thp).abs() < 1e-9 * best_thp),
+            "perf-optimal point missing from front"
+        );
+    }
+
+    #[test]
+    fn front_sorted_by_throughput() {
+        let front = front_for(&Dataset::synthetic2());
+        for w in front.windows(2) {
+            assert!(w[0].throughput >= w[1].throughput);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Pipeline & schedule representation: the object Algorithm 1 builds.
+
+
+use crate::devices::DeviceType;
+
+/// One pipeline stage: a contiguous kernel group executed by `n` devices
+/// of one type. Stage time = incoming transfer + execution + outgoing
+/// transfer; the serialization of transfers with compute *is* the paper's
+/// Fig-4 conflict-avoidance schedule (transfers never overlap compute or
+/// each other on the stage's PCIe ports).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    /// First kernel id (inclusive).
+    pub first: usize,
+    /// Last kernel id (inclusive).
+    pub last: usize,
+    pub dev: DeviceType,
+    pub n: usize,
+    /// `f_perf` of the kernel group on `n × dev` (s).
+    pub exec_time: f64,
+    /// Incoming data-transfer time (s) — `t_comm^dst` in Algorithm 1.
+    pub comm_in_time: f64,
+    /// Outgoing data-transfer time (s) — `t_comm^src`; 0 for the final stage.
+    pub comm_out_time: f64,
+}
+
+impl Stage {
+    /// The stage's occupancy per inference — its contribution to the
+    /// pipeline period.
+    pub fn total_time(&self) -> f64 {
+        self.comm_in_time + self.exec_time + self.comm_out_time
+    }
+
+    pub fn kernel_count(&self) -> usize {
+        self.last - self.first + 1
+    }
+}
+
+/// The structural part of a stage — kernel range + device allocation,
+/// without timing. Freezing a [`Schedule`] into plans and re-timing them
+/// elsewhere is how static baselines and ground-truth re-measurement work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StagePlan {
+    pub first: usize,
+    pub last: usize,
+    pub dev: DeviceType,
+    pub n: usize,
+}
+
+/// A complete schedule for a workload on a system.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub workload: String,
+    pub stages: Vec<Stage>,
+    /// Pipeline period = bottleneck stage time (s). Steady-state
+    /// throughput is `1 / period`.
+    pub period: f64,
+    /// Energy per inference (J) under the estimator that built this
+    /// schedule (re-measure with the pipeline simulator for ground truth).
+    pub energy_per_inf: f64,
+}
+
+impl Schedule {
+    /// Steady-state throughput (inferences/s).
+    pub fn throughput(&self) -> f64 {
+        if self.period > 0.0 {
+            1.0 / self.period
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Energy efficiency (inferences/J) — the paper's `eng` metric.
+    pub fn energy_efficiency(&self) -> f64 {
+        if self.energy_per_inf > 0.0 {
+            1.0 / self.energy_per_inf
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// End-to-end latency of one inference (sum of stage times).
+    pub fn latency(&self) -> f64 {
+        self.stages.iter().map(Stage::total_time).sum()
+    }
+
+    pub fn fpgas_used(&self) -> usize {
+        self.stages.iter().filter(|s| s.dev == DeviceType::Fpga).map(|s| s.n).sum()
+    }
+
+    pub fn gpus_used(&self) -> usize {
+        self.stages.iter().filter(|s| s.dev == DeviceType::Gpu).map(|s| s.n).sum()
+    }
+
+    /// Freeze the structure (drop timings) for re-evaluation elsewhere.
+    pub fn plan(&self) -> Vec<StagePlan> {
+        self.stages
+            .iter()
+            .map(|s| StagePlan { first: s.first, last: s.last, dev: s.dev, n: s.n })
+            .collect()
+    }
+
+    /// The paper's schedule notation: `3F2G` = 3 FPGAs then 2 GPUs;
+    /// `2F1G1F1G` = four stages alternating.
+    pub fn mnemonic(&self) -> String {
+        self.stages.iter().map(|s| format!("{}{}", s.n, s.dev.letter())).collect()
+    }
+
+    /// Structural validity: contiguous full kernel coverage, device counts
+    /// within the installed inventory, positive stage times.
+    pub fn validate(&self, n_kernels: usize, n_fpga: usize, n_gpu: usize) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err("empty schedule".into());
+        }
+        if self.stages[0].first != 0 {
+            return Err("first stage must start at kernel 0".into());
+        }
+        if self.stages.last().unwrap().last + 1 != n_kernels {
+            return Err("last stage must end at the final kernel".into());
+        }
+        for w in self.stages.windows(2) {
+            if w[1].first != w[0].last + 1 {
+                return Err(format!(
+                    "gap/overlap between stages at kernels {}..{}",
+                    w[0].last, w[1].first
+                ));
+            }
+        }
+        if self.fpgas_used() > n_fpga {
+            return Err(format!("uses {} FPGAs > {n_fpga} installed", self.fpgas_used()));
+        }
+        if self.gpus_used() > n_gpu {
+            return Err(format!("uses {} GPUs > {n_gpu} installed", self.gpus_used()));
+        }
+        for s in &self.stages {
+            if s.n == 0 {
+                return Err("stage with zero devices".into());
+            }
+            if !(s.exec_time.is_finite() && s.exec_time > 0.0) {
+                return Err(format!("non-positive exec time {:?}", s));
+            }
+        }
+        let bottleneck =
+            self.stages.iter().map(Stage::total_time).fold(0.0f64, f64::max);
+        if (bottleneck - self.period).abs() > 1e-9 * bottleneck.max(1e-12) {
+            return Err(format!(
+                "period {} != bottleneck stage {}",
+                self.period, bottleneck
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(first: usize, last: usize, dev: DeviceType, n: usize, t: f64) -> Stage {
+        Stage { first, last, dev, n, exec_time: t, comm_in_time: 0.0, comm_out_time: 0.0 }
+    }
+
+    fn sched(stages: Vec<Stage>) -> Schedule {
+        let period = stages.iter().map(Stage::total_time).fold(0.0f64, f64::max);
+        Schedule { workload: "t".into(), stages, period, energy_per_inf: 1.0 }
+    }
+
+    #[test]
+    fn mnemonic_matches_paper_notation() {
+        let s = sched(vec![
+            stage(0, 0, DeviceType::Fpga, 3, 1e-3),
+            stage(1, 3, DeviceType::Gpu, 2, 2e-3),
+        ]);
+        assert_eq!(s.mnemonic(), "3F2G");
+        assert!(s.validate(4, 3, 2).is_ok());
+    }
+
+    #[test]
+    fn four_stage_mnemonic() {
+        let s = sched(vec![
+            stage(0, 0, DeviceType::Fpga, 2, 1e-3),
+            stage(1, 1, DeviceType::Gpu, 1, 1e-3),
+            stage(2, 2, DeviceType::Fpga, 1, 1e-3),
+            stage(3, 3, DeviceType::Gpu, 1, 1e-3),
+        ]);
+        assert_eq!(s.mnemonic(), "2F1G1F1G");
+    }
+
+    #[test]
+    fn validate_catches_gaps_and_overuse() {
+        let gap = sched(vec![
+            stage(0, 0, DeviceType::Gpu, 1, 1e-3),
+            stage(2, 3, DeviceType::Gpu, 1, 1e-3),
+        ]);
+        assert!(gap.validate(4, 3, 2).is_err());
+
+        let overuse = sched(vec![stage(0, 3, DeviceType::Gpu, 5, 1e-3)]);
+        assert!(overuse.validate(4, 3, 2).is_err());
+    }
+
+    #[test]
+    fn throughput_is_inverse_period() {
+        let s = sched(vec![stage(0, 1, DeviceType::Gpu, 1, 4e-3)]);
+        assert!((s.throughput() - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_sums_stages_period_takes_max() {
+        let s = sched(vec![
+            stage(0, 0, DeviceType::Fpga, 1, 3e-3),
+            stage(1, 1, DeviceType::Gpu, 1, 5e-3),
+        ]);
+        assert!((s.latency() - 8e-3).abs() < 1e-12);
+        assert!((s.period - 5e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,105 @@
+//! Micro-benchmark harness — the offline stand-in for criterion.
+//!
+//! Provides warmup + repeated timed runs with median/mean/stddev
+//! reporting. Used by `benches/scheduler_perf.rs` and the per-table
+//! harnesses (which are primarily *result generators*: they print the
+//! paper's rows, and use this module for the timing-sensitive parts).
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10} {:>10} {:>10} ± {:>8}   [{} iters]",
+            self.name,
+            fmt_time(self.median),
+            fmt_time(self.min),
+            fmt_time(self.mean),
+            fmt_time(self.stddev),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Time `f` with `warmup` discarded runs followed by `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean,
+        median: samples[samples.len() / 2],
+        stddev: var.sqrt(),
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// Standard bench-output header (align with `BenchStats::report`).
+pub fn header() -> String {
+    format!(
+        "{:<42} {:>10} {:>10} {:>10}   {:>8}",
+        "benchmark", "median", "min", "mean", "stddev"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let mut x = 0u64;
+        let s = bench("noop-ish", 2, 20, || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert_eq!(s.iters, 20);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.mean > 0.0);
+    }
+
+    #[test]
+    fn formats_scale() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,10 @@
+//! Offline-build utilities: deterministic RNG, JSON parsing, and the
+//! micro-bench harness (stand-ins for `rand`, `serde_json`, `criterion` —
+//! unavailable in this vendored build; see DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,135 @@
+//! Deterministic PRNG — SplitMix64.
+//!
+//! The offline build has no `rand` crate; this is the project-wide
+//! replacement. SplitMix64 passes BigCrush, is seedable, and is more than
+//! adequate for synthetic-data generation and measurement-noise hashing.
+//! Every consumer seeds explicitly, so all experiments reproduce
+//! bit-identically.
+
+/// SplitMix64 PRNG (Steele, Lea & Flood 2014).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub fn gen_f64(&mut self) -> f64 {
+        // 53 top bits → [0, 1).
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn gen_f32(&mut self) -> f32 {
+        self.gen_f64() as f32
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn gen_range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.gen_f64() * (hi - lo)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn gen_range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.gen_f32() * (hi - lo)
+    }
+
+    /// Uniform integer in `[lo, hi)` (`hi > lo`).
+    pub fn gen_range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "empty range");
+        lo + (self.next_u64() as usize) % (hi - lo)
+    }
+
+    /// Log-uniform in `[lo, hi]` — the calibration harness's sampler.
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        (lo.ln() + self.gen_f64() * (hi.ln() - lo.ln())).exp()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gen_normal(&mut self) -> f64 {
+        let u1 = self.gen_f64().max(1e-300);
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range_usize(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from_u64(42);
+        let mut b = Rng::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::seed_from_u64(1);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.gen_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn log_uniform_spans_decades() {
+        let mut r = Rng::seed_from_u64(2);
+        let (mut lo_seen, mut hi_seen) = (f64::INFINITY, 0.0f64);
+        for _ in 0..1000 {
+            let x = r.log_uniform(1e-7, 1e-2);
+            assert!((1e-7..=1e-2).contains(&x));
+            lo_seen = lo_seen.min(x);
+            hi_seen = hi_seen.max(x);
+        }
+        assert!(lo_seen < 1e-6 && hi_seen > 1e-3, "should cover the range");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from_u64(3);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>(), "astronomically unlikely");
+    }
+
+    #[test]
+    fn normal_has_zero_mean_unit_var() {
+        let mut r = Rng::seed_from_u64(4);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

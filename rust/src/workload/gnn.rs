@@ -1,0 +1,155 @@
+//! GNN workload builders (§IV-A): GCN and GIN inference chains.
+//!
+//! * GCN layer (Eq 1): `X' = Â X Θ`  →  SpMM(Â·X) then GEMM(Y·Θ).
+//! * GIN layer (Eq 2): `X' = MLP(A'X)` →  SpMM then `mlp_layers` GEMMs.
+//!
+//! Both paper models have 2 layers with hidden length 128 (§IV-A); the
+//! builders generalize to any depth/width for the extension benches.
+
+use super::datasets::Dataset;
+use super::kernel::{KernelDesc, KernelKind, Workload};
+
+/// Build an `layers`-layer GCN inference workload over `ds`.
+///
+/// Feature flow: `ds.feature_len → hidden → … → hidden`.
+pub fn gcn_workload(ds: &Dataset, layers: usize, hidden: u64) -> Workload {
+    let v = ds.vertices;
+    let nnz = ds.edges + v; // self-loops inserted (Â = D^-½(I+A)D^-½)
+    let mut kernels = Vec::new();
+    let mut feat = ds.feature_len;
+    for l in 1..=layers {
+        kernels.push(KernelDesc {
+            id: kernels.len(),
+            name: format!("SpMM{l}"),
+            kind: KernelKind::SpMM { m: v, k: v, n: feat, nnz },
+            artifact: None,
+        });
+        kernels.push(KernelDesc {
+            id: kernels.len(),
+            name: format!("GeMM{l}"),
+            kind: KernelKind::Gemm { m: v, k: feat, n: hidden },
+            artifact: None,
+        });
+        feat = hidden;
+    }
+    Workload { name: format!("GCN-{}", ds.code), kernels }
+}
+
+/// Build a `layers`-layer GIN inference workload with `mlp_layers`-deep
+/// MLPs (paper uses 2-layer MLPs → 2 GEMMs per GIN layer).
+pub fn gin_workload(ds: &Dataset, layers: usize, hidden: u64, mlp_layers: usize) -> Workload {
+    let v = ds.vertices;
+    let nnz = ds.edges + v; // A' = A + (1+ε)I
+    let mut kernels = Vec::new();
+    let mut feat = ds.feature_len;
+    for l in 1..=layers {
+        kernels.push(KernelDesc {
+            id: kernels.len(),
+            name: format!("SpMM{l}"),
+            kind: KernelKind::SpMM { m: v, k: v, n: feat, nnz },
+            artifact: None,
+        });
+        for m in 1..=mlp_layers {
+            kernels.push(KernelDesc {
+                id: kernels.len(),
+                name: format!("GeMM{l}.{m}"),
+                kind: KernelKind::Gemm { m: v, k: feat, n: hidden },
+                artifact: None,
+            });
+            feat = hidden;
+        }
+    }
+    Workload { name: format!("GIN-{}", ds.code), kernels }
+}
+
+/// The paper's benchmark pair: 2-layer GCN and 2-layer GIN (2-layer MLP),
+/// hidden 128 (§IV-A).
+pub fn paper_gnn_workloads(ds: &Dataset) -> Vec<Workload> {
+    vec![gcn_workload(ds, 2, 128), gin_workload(ds, 2, 128, 2)]
+}
+
+/// The e2e demo workload whose shapes match the lowered artifacts
+/// (V=1024, F=128): kernels carry artifact names so the real-execution
+/// pipeline can run them via PJRT.
+pub fn e2e_gcn_workload() -> Workload {
+    let ds = Dataset::e2e_demo();
+    let mut wl = gcn_workload(&ds, 2, 128);
+    for k in &mut wl.kernels {
+        k.artifact = Some(
+            match k.kind {
+                KernelKind::SpMM { .. } => "spmm",
+                KernelKind::Gemm { .. } => "gemm",
+                KernelKind::WindowAttn { .. } => unreachable!(),
+            }
+            .to_string(),
+        );
+    }
+    wl.name = "GCN-E2E".into();
+    wl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcn_two_layers_is_four_kernels() {
+        let wl = gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        assert_eq!(wl.len(), 4);
+        assert_eq!(wl.kernels[0].name, "SpMM1");
+        assert_eq!(wl.kernels[3].name, "GeMM2");
+        // Layer-2 SpMM consumes the hidden width, not the input features.
+        match wl.kernels[2].kind {
+            KernelKind::SpMM { n, .. } => assert_eq!(n, 128),
+            _ => panic!("expected SpMM"),
+        }
+    }
+
+    #[test]
+    fn gin_two_layers_two_mlp_is_six_kernels() {
+        let wl = gin_workload(&Dataset::ogbn_products(), 2, 128, 2);
+        assert_eq!(wl.len(), 6);
+        let tags: Vec<_> = wl.kernels.iter().map(|k| k.kind.tag()).collect();
+        assert_eq!(tags, ["spmm", "gemm", "gemm", "spmm", "gemm", "gemm"]);
+    }
+
+    #[test]
+    fn self_loops_added_to_nnz() {
+        let ds = Dataset::ogbn_arxiv();
+        let wl = gcn_workload(&ds, 1, 128);
+        match wl.kernels[0].kind {
+            KernelKind::SpMM { nnz, .. } => assert_eq!(nnz, ds.edges + ds.vertices),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn gin_has_higher_dense_ratio_than_gcn() {
+        // §VI-C2: GIN invokes more GEMMs → higher dense/sparse FLOP ratio.
+        let ds = Dataset::ogbn_products();
+        let ratio = |wl: &Workload| {
+            let dense: f64 = wl
+                .kernels
+                .iter()
+                .filter(|k| k.kind.tag() == "gemm")
+                .map(|k| k.kind.flops())
+                .sum();
+            let sparse: f64 = wl
+                .kernels
+                .iter()
+                .filter(|k| k.kind.tag() == "spmm")
+                .map(|k| k.kind.flops())
+                .sum();
+            dense / sparse
+        };
+        let gcn = gcn_workload(&ds, 2, 128);
+        let gin = gin_workload(&ds, 2, 128, 2);
+        assert!(ratio(&gin) > ratio(&gcn));
+    }
+
+    #[test]
+    fn e2e_workload_has_artifacts() {
+        let wl = e2e_gcn_workload();
+        assert!(wl.kernels.iter().all(|k| k.artifact.is_some()));
+    }
+}

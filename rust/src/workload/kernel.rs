@@ -1,0 +1,233 @@
+//! Kernel descriptors — the workload IR the scheduler consumes.
+//!
+//! A workload (§II "Target Workload") is a linear chain of compute kernels,
+//! each characterized by its input dimensions, sparsity, and the size of
+//! the intermediate tensor it hands to its successor. These data
+//! characteristics are exactly what makes DYPE *data-aware*: they feed the
+//! performance-model features of §V (GFLOP, arithmetic intensity, nnz, …).
+
+
+/// Bytes per FP32 element — both device types run FP32 (§VI-A).
+pub const F32_BYTES: f64 = 4.0;
+
+/// The compute-kernel taxonomy of the two case-study workloads (§IV).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelKind {
+    /// Sparse × dense matmul `Y[m,n] = A[m,k] · X[k,n]`, `nnz` non-zeros in A.
+    SpMM { m: u64, k: u64, n: u64, nnz: u64 },
+    /// Dense matmul `C[m,n] = A[m,k] · B[k,n]`.
+    Gemm { m: u64, k: u64, n: u64 },
+    /// Sliding-window attention (Eq 6): fused SDDMM + softmax + SpMM over a
+    /// band of total width `window`; `heads × dim` = model dimension.
+    WindowAttn { seq: u64, window: u64, heads: u64, dim: u64 },
+}
+
+impl KernelKind {
+    /// Floating-point operations of one invocation (the paper's GFLOP
+    /// feature is `self.flops() * 1e-9`).
+    pub fn flops(&self) -> f64 {
+        match *self {
+            // Paper §V: GFLOP = (2·nnz·N − M·N)·10⁻⁹ — each output element
+            // costs one multiply-add per contributing nnz, minus the first add.
+            KernelKind::SpMM { m, n, nnz, .. } => {
+                (2.0 * nnz as f64 * n as f64 - (m * n) as f64).max(0.0)
+            }
+            KernelKind::Gemm { m, k, n } => 2.0 * (m * k * n) as f64,
+            // Banded QKᵀ + S'·V: each query attends to `window` keys;
+            // 2 matmuls of (seq × window × dim) per head + softmax (~5 ops/score).
+            KernelKind::WindowAttn { seq, window, heads, dim } => {
+                let band = (seq * window.min(seq)) as f64;
+                heads as f64 * (4.0 * band * dim as f64 + 5.0 * band)
+            }
+        }
+    }
+
+    /// Bytes moved to/from device memory per invocation (ideal caching).
+    pub fn bytes(&self) -> f64 {
+        match *self {
+            // CSR-ish traffic: 8B per nnz (value + index, amortized row
+            // pointers) + dense operand in + result out.
+            KernelKind::SpMM { m, k, n, nnz } => {
+                8.0 * nnz as f64 + F32_BYTES * ((k * n) as f64 + (m * n) as f64)
+            }
+            KernelKind::Gemm { m, k, n } => {
+                F32_BYTES * ((m * k) as f64 + (k * n) as f64 + (m * n) as f64)
+            }
+            KernelKind::WindowAttn { seq, window, heads, dim } => {
+                let d_model = (heads * dim) as f64;
+                // Q, K, V in + Z out + banded score traffic.
+                F32_BYTES
+                    * (4.0 * seq as f64 * d_model
+                        + 2.0 * (seq * window.min(seq)) as f64 * heads as f64)
+            }
+        }
+    }
+
+    /// Arithmetic intensity `arm` (§V): FLOPs per byte — the non-linear
+    /// feature that lets a linear regression capture sparse behaviour.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let b = self.bytes();
+        if b > 0.0 {
+            self.flops() / b
+        } else {
+            0.0
+        }
+    }
+
+    /// Density of the operand (1.0 for dense kernels).
+    pub fn density(&self) -> f64 {
+        match *self {
+            KernelKind::SpMM { m, k, nnz, .. } => nnz as f64 / (m as f64 * k as f64),
+            KernelKind::Gemm { .. } => 1.0,
+            KernelKind::WindowAttn { seq, window, .. } => {
+                (window.min(seq)) as f64 / seq as f64
+            }
+        }
+    }
+
+    /// Size in bytes of the kernel's output tensor (the inter-stage
+    /// transfer payload if a pipeline boundary is placed after it).
+    pub fn output_bytes(&self) -> f64 {
+        match *self {
+            KernelKind::SpMM { m, n, .. } => F32_BYTES * (m * n) as f64,
+            KernelKind::Gemm { m, n, .. } => F32_BYTES * (m * n) as f64,
+            KernelKind::WindowAttn { seq, heads, dim, .. } => {
+                F32_BYTES * (seq * heads * dim) as f64
+            }
+        }
+    }
+
+    /// Size in bytes of the *dynamic* input tensor (what must be shipped to
+    /// the stage; static data — graph structure, weights — is pre-loaded,
+    /// §II-B data-partition strategy).
+    pub fn dynamic_input_bytes(&self) -> f64 {
+        match *self {
+            KernelKind::SpMM { k, n, .. } => F32_BYTES * (k * n) as f64,
+            KernelKind::Gemm { m, k, .. } => F32_BYTES * (m * k) as f64,
+            KernelKind::WindowAttn { seq, heads, dim, .. } => {
+                F32_BYTES * (seq * heads * dim) as f64
+            }
+        }
+    }
+
+    /// Short type tag (used by FleetRec*-style type pinning and reports).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            KernelKind::SpMM { .. } => "spmm",
+            KernelKind::Gemm { .. } => "gemm",
+            KernelKind::WindowAttn { .. } => "winattn",
+        }
+    }
+}
+
+/// One kernel instance in a workload chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDesc {
+    /// Position in the workload (0-based).
+    pub id: usize,
+    /// Human-readable name, e.g. `SpMM1`, `GeMM2`.
+    pub name: String,
+    pub kind: KernelKind,
+    /// Which artifact executes this kernel in the real-execution pipeline
+    /// (`None` for simulation-only workloads whose shapes have no lowered
+    /// artifact).
+    pub artifact: Option<String>,
+}
+
+/// A workload: a named linear chain of kernels (the paper's `wl`).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub kernels: Vec<KernelDesc>,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>, kinds: Vec<(String, KernelKind)>) -> Self {
+        let kernels = kinds
+            .into_iter()
+            .enumerate()
+            .map(|(id, (name, kind))| KernelDesc { id, name, kind, artifact: None })
+            .collect();
+        Workload { name: name.into(), kernels }
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+
+    /// Total FLOPs of one inference.
+    pub fn total_flops(&self) -> f64 {
+        self.kernels.iter().map(|k| k.kind.flops()).sum()
+    }
+
+    /// Payload entering the stage that starts at kernel `i`: the output of
+    /// kernel `i-1`, or the workload's external input for `i == 0`.
+    pub fn transfer_bytes_into(&self, i: usize) -> f64 {
+        if i == 0 {
+            self.kernels[0].kind.dynamic_input_bytes()
+        } else {
+            self.kernels[i - 1].kind.output_bytes()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spmm_flops_match_paper_formula() {
+        let k = KernelKind::SpMM { m: 1000, k: 1000, n: 128, nnz: 50_000 };
+        // GFLOP = (2·nnz·N − M·N)·1e-9
+        let expect = 2.0 * 50_000.0 * 128.0 - 1000.0 * 128.0;
+        assert_eq!(k.flops(), expect);
+    }
+
+    #[test]
+    fn gemm_flops() {
+        let k = KernelKind::Gemm { m: 10, k: 20, n: 30 };
+        assert_eq!(k.flops(), 2.0 * 6000.0);
+    }
+
+    #[test]
+    fn density_bounds() {
+        let sp = KernelKind::SpMM { m: 100, k: 100, n: 8, nnz: 100 };
+        assert!((sp.density() - 0.01).abs() < 1e-12);
+        assert_eq!(KernelKind::Gemm { m: 1, k: 1, n: 1 }.density(), 1.0);
+        let wa = KernelKind::WindowAttn { seq: 1024, window: 512, heads: 8, dim: 64 };
+        assert!((wa.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_capped_by_seq() {
+        let full = KernelKind::WindowAttn { seq: 512, window: 4096, heads: 8, dim: 64 };
+        let exact = KernelKind::WindowAttn { seq: 512, window: 512, heads: 8, dim: 64 };
+        assert_eq!(full.flops(), exact.flops());
+        assert_eq!(full.density(), 1.0);
+    }
+
+    #[test]
+    fn arithmetic_intensity_positive_and_sparser_is_lower() {
+        let dense = KernelKind::SpMM { m: 1000, k: 1000, n: 128, nnz: 500_000 };
+        let sparse = KernelKind::SpMM { m: 1000, k: 1000, n: 128, nnz: 5_000 };
+        assert!(dense.arithmetic_intensity() > sparse.arithmetic_intensity());
+        assert!(sparse.arithmetic_intensity() > 0.0);
+    }
+
+    #[test]
+    fn transfer_bytes_chain() {
+        let wl = Workload::new(
+            "t",
+            vec![
+                ("a".into(), KernelKind::Gemm { m: 10, k: 4, n: 8 }),
+                ("b".into(), KernelKind::Gemm { m: 10, k: 8, n: 2 }),
+            ],
+        );
+        assert_eq!(wl.transfer_bytes_into(0), 4.0 * 40.0); // external input m×k
+        assert_eq!(wl.transfer_bytes_into(1), 4.0 * 80.0); // a's output m×n
+    }
+}

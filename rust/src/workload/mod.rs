@@ -1,0 +1,10 @@
+//! Workload IR and builders: kernels, datasets, and the two case-study
+//! workload families of §IV (GNNs and sliding-window transformers).
+
+pub mod datasets;
+pub mod gnn;
+pub mod kernel;
+pub mod transformer;
+
+pub use datasets::{BlockEllGraph, Dataset};
+pub use kernel::{KernelDesc, KernelKind, Workload, F32_BYTES};

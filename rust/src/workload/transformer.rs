@@ -1,0 +1,135 @@
+//! Sliding-window transformer workload builder (§IV-B).
+//!
+//! The paper adopts the BigBird setting (d_model = 512, 8 heads) with a
+//! 32-layer model (Mistral-7B-like layer count), window `w ∈ [512, 4096]`
+//! and `seq_len ∈ [1024, 16384]`, `w ≤ seq_len`. One layer contributes:
+//!
+//! 1. fused QKV projection GEMM  (seq × d × 3d)
+//! 2. sliding-window attention   (Eq 6: SDDMM + softmax + SpMM band)
+//! 3. output projection GEMM     (seq × d × d)
+//! 4. FFN GEMM 1                 (seq × d × 4d)
+//! 5. FFN GEMM 2                 (seq × 4d × d)
+
+use super::kernel::{KernelDesc, KernelKind, Workload};
+
+/// BigBird attention dimensionality (§IV-B).
+pub const D_MODEL: u64 = 512;
+/// BigBird head count (§IV-B).
+pub const HEADS: u64 = 8;
+/// Mistral-7B-aligned layer count (§IV-B).
+pub const PAPER_LAYERS: usize = 32;
+/// FFN expansion factor (standard 4×).
+pub const FFN_MULT: u64 = 4;
+
+/// Build a sliding-window transformer inference workload.
+pub fn transformer_workload(seq_len: u64, window: u64, layers: usize) -> Workload {
+    assert!(window <= seq_len, "invalid combination: w={window} > seq_len={seq_len}");
+    let d = D_MODEL;
+    let mut kernels = Vec::new();
+    for l in 1..=layers {
+        kernels.push(KernelDesc {
+            id: kernels.len(),
+            name: format!("QKV{l}"),
+            kind: KernelKind::Gemm { m: seq_len, k: d, n: 3 * d },
+            artifact: None,
+        });
+        kernels.push(KernelDesc {
+            id: kernels.len(),
+            name: format!("WinAttn{l}"),
+            kind: KernelKind::WindowAttn { seq: seq_len, window, heads: HEADS, dim: d / HEADS },
+            artifact: None,
+        });
+        kernels.push(KernelDesc {
+            id: kernels.len(),
+            name: format!("Proj{l}"),
+            kind: KernelKind::Gemm { m: seq_len, k: d, n: d },
+            artifact: None,
+        });
+        kernels.push(KernelDesc {
+            id: kernels.len(),
+            name: format!("FFN{l}a"),
+            kind: KernelKind::Gemm { m: seq_len, k: d, n: FFN_MULT * d },
+            artifact: None,
+        });
+        kernels.push(KernelDesc {
+            id: kernels.len(),
+            name: format!("FFN{l}b"),
+            kind: KernelKind::Gemm { m: seq_len, k: FFN_MULT * d, n: d },
+            artifact: None,
+        });
+    }
+    Workload { name: format!("Transf-s{seq_len}-w{window}"), kernels }
+}
+
+/// The paper's 32-layer evaluation model.
+pub fn paper_transformer(seq_len: u64, window: u64) -> Workload {
+    transformer_workload(seq_len, window, PAPER_LAYERS)
+}
+
+/// The (seq_len, window) evaluation grid of §IV-B: seq ∈ {1024 … 16384},
+/// w ∈ {512 … 4096}, powers of two, `w ≤ seq`.
+pub fn paper_sweep() -> Vec<(u64, u64)> {
+    let seqs = [1024u64, 2048, 4096, 8192, 16384];
+    let wins = [512u64, 1024, 2048, 4096];
+    let mut grid = Vec::new();
+    for &s in &seqs {
+        for &w in &wins {
+            if w <= s {
+                grid.push((s, w));
+            }
+        }
+    }
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_structure() {
+        let wl = transformer_workload(2048, 512, 2);
+        assert_eq!(wl.len(), 10);
+        let tags: Vec<_> = wl.kernels.iter().map(|k| k.kind.tag()).collect();
+        assert_eq!(
+            tags,
+            ["gemm", "winattn", "gemm", "gemm", "gemm", "gemm", "winattn", "gemm", "gemm", "gemm"]
+        );
+    }
+
+    #[test]
+    fn paper_model_is_160_kernels() {
+        assert_eq!(paper_transformer(1024, 512).len(), 160);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid combination")]
+    fn rejects_window_larger_than_seq() {
+        transformer_workload(512, 1024, 1);
+    }
+
+    #[test]
+    fn sweep_respects_w_le_seq() {
+        let grid = paper_sweep();
+        assert!(grid.iter().all(|&(s, w)| w <= s));
+        assert_eq!(grid.len(), 17); // 5*4 minus (1024,2048),(1024,4096),(2048,4096)
+    }
+
+    #[test]
+    fn attention_fraction_grows_with_seq() {
+        // The band FLOPs are linear in seq (w fixed) but so are the GEMMs —
+        // attention *density* falls with seq, shrinking its share of work on
+        // a dense device. Sanity-check the density trend the paper leans on.
+        let short = transformer_workload(1024, 512, 1);
+        let long = transformer_workload(16384, 512, 1);
+        let d = |wl: &Workload| {
+            wl.kernels
+                .iter()
+                .find(|k| k.kind.tag() == "winattn")
+                .unwrap()
+                .kind
+                .density()
+        };
+        assert!(d(&long) < d(&short));
+    }
+}

@@ -1,0 +1,186 @@
+//! Failure-injection & robustness tests: the framework must degrade
+//! gracefully, never panic on hostile inputs, and keep scheduling validly
+//! under pathological estimators.
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::devices::{DeviceType, GroundTruth};
+use dype::perfmodel::PerfEstimator;
+use dype::scheduler::DpScheduler;
+use dype::util::{json, Rng};
+use dype::workload::{gnn, Dataset, KernelKind};
+
+/// An estimator that returns a constant regardless of input — the
+/// degenerate case of a completely uninformative performance model.
+struct ConstantEstimator(f64);
+
+impl PerfEstimator for ConstantEstimator {
+    fn stage_time(&self, kinds: &[KernelKind], _dev: DeviceType, n: usize) -> f64 {
+        self.0 * kinds.len() as f64 / n as f64
+    }
+}
+
+/// An estimator with a wildly biased view (FPGA 1000× optimistic).
+struct BiasedEstimator<'a> {
+    gt: &'a GroundTruth,
+}
+
+impl PerfEstimator for BiasedEstimator<'_> {
+    fn stage_time(&self, kinds: &[KernelKind], dev: DeviceType, n: usize) -> f64 {
+        let t = self.gt.group_time(kinds, dev, n);
+        match dev {
+            DeviceType::Fpga => t / 1000.0,
+            DeviceType::Gpu => t,
+        }
+    }
+}
+
+fn sys() -> SystemSpec {
+    SystemSpec::paper_testbed(Interconnect::Pcie4)
+}
+
+#[test]
+fn uninformative_estimator_still_yields_valid_schedules() {
+    let s = sys();
+    let est = ConstantEstimator(1e-3);
+    for obj in Objective::paper_modes() {
+        let wl = gnn::gin_workload(&Dataset::ogbn_products(), 2, 128, 2);
+        let sched = DpScheduler::new(&s, &est).schedule(&wl, obj);
+        sched.validate(wl.len(), s.n_fpga, s.n_gpu).unwrap();
+    }
+}
+
+#[test]
+fn adversarially_biased_estimator_yields_valid_but_lopsided_schedules() {
+    let s = sys();
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let est = BiasedEstimator { gt: &gt };
+    let wl = gnn::gcn_workload(&Dataset::synthetic1(), 2, 128);
+    let sched = DpScheduler::new(&s, &est).schedule(&wl, Objective::Performance);
+    sched.validate(wl.len(), s.n_fpga, s.n_gpu).unwrap();
+    // The bias must show: the scheduler trusts its model and goes FPGA.
+    assert!(sched.fpgas_used() > 0, "a 1000x-optimistic FPGA model must attract work");
+}
+
+#[test]
+fn extreme_degree_skew_never_breaks_scheduling() {
+    let s = sys();
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model())
+        .with_degree_skew(50.0);
+    let est = dype::perfmodel::OracleModels { gt: &gt };
+    let wl = gnn::gcn_workload(&Dataset::ogbn_products(), 2, 128);
+    let sched = DpScheduler::new(&s, &est).schedule(&wl, Objective::Performance);
+    sched.validate(wl.len(), s.n_fpga, s.n_gpu).unwrap();
+    assert!(sched.period.is_finite() && sched.period > 0.0);
+}
+
+#[test]
+fn degenerate_workload_shapes_schedule_fine() {
+    let s = sys();
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let est = dype::perfmodel::OracleModels { gt: &gt };
+    // 1-vertex graph, nnz == 1, feature width 1.
+    let ds = Dataset::new("tiny", "tiny", 1, 1, 1, 0.0);
+    let wl = gnn::gcn_workload(&ds, 1, 1);
+    let sched = DpScheduler::new(&s, &est).schedule(&wl, Objective::Performance);
+    sched.validate(wl.len(), s.n_fpga, s.n_gpu).unwrap();
+}
+
+#[test]
+fn json_parser_never_panics_on_fuzz() {
+    let mut rng = Rng::seed_from_u64(0xF022);
+    let alphabet: &[u8] = br#"{}[]":,0123456789.eE+-truefalsnul \"abc"#;
+    for _ in 0..5000 {
+        let len = rng.gen_range_usize(0, 64);
+        let bytes: Vec<u8> =
+            (0..len).map(|_| alphabet[rng.gen_range_usize(0, alphabet.len())]).collect();
+        if let Ok(text) = std::str::from_utf8(&bytes) {
+            let _ = json::parse(text); // must return, never panic
+        }
+    }
+}
+
+#[test]
+fn json_parser_roundtrips_valid_documents_under_mutation() {
+    // Mutating one byte of a valid manifest must yield either a parse
+    // error or a different-but-parsed document — never a panic.
+    let base = r#"{"artifacts": {"k": {"file": "f", "inputs": [{"shape": [2], "dtype": "f32"}], "output": {"shape": [2], "dtype": "f32"}}}}"#;
+    let mut rng = Rng::seed_from_u64(7);
+    for _ in 0..2000 {
+        let mut b = base.as_bytes().to_vec();
+        let i = rng.gen_range_usize(0, b.len());
+        b[i] = b"{}[]\",:x0"[rng.gen_range_usize(0, 9)];
+        if let Ok(text) = std::str::from_utf8(&b) {
+            let _ = json::parse(text);
+            let _ = dype::runtime::Manifest::from_json_str(text);
+        }
+    }
+}
+
+#[test]
+fn config_parser_never_panics_on_fuzz() {
+    let mut rng = Rng::seed_from_u64(0xC0FF);
+    let alphabet: &[u8] = b"n_fpga=gpu.123 #\n\".xyz";
+    for _ in 0..3000 {
+        let len = rng.gen_range_usize(0, 80);
+        let bytes: Vec<u8> =
+            (0..len).map(|_| alphabet[rng.gen_range_usize(0, alphabet.len())]).collect();
+        if let Ok(text) = std::str::from_utf8(&bytes) {
+            let _ = SystemSpec::from_config_str(text);
+        }
+    }
+}
+
+#[test]
+fn runtime_reports_missing_artifacts_cleanly() {
+    let dir = std::path::Path::new("/nonexistent-dype-artifacts");
+    let err = match dype::runtime::Runtime::new(dir) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "error must tell the user what to run: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_is_rejected_with_context() {
+    let dir = std::env::temp_dir().join(format!("dype-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), b"{not json").unwrap();
+    let err = match dype::runtime::Runtime::new(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("JSON parse error"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn scheduler_handles_huge_device_counts() {
+    // 64 devices of each type: DP must stay polynomial and valid.
+    let mut s = sys();
+    s.n_fpga = 64;
+    s.n_gpu = 64;
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let est = dype::perfmodel::OracleModels { gt: &gt };
+    let wl = gnn::gin_workload(&Dataset::ogbn_products(), 2, 128, 2);
+    let t0 = std::time::Instant::now();
+    let sched = DpScheduler::new(&s, &est).schedule(&wl, Objective::Performance);
+    sched.validate(wl.len(), s.n_fpga, s.n_gpu).unwrap();
+    assert!(t0.elapsed().as_secs_f64() < 10.0, "DP blew up: {:?}", t0.elapsed());
+}
+
+#[test]
+fn zero_rate_comm_is_never_divided_by() {
+    // Interconnect with pathological (tiny) bandwidth still yields finite
+    // schedules — transfers dominate but nothing divides by zero.
+    let mut s = sys();
+    s.gpu.pcie_bw = 1.0; // 1 B/s
+    s.fpga.pcie_bw = 1.0;
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let est = dype::perfmodel::OracleModels { gt: &gt };
+    let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+    let sched = DpScheduler::new(&s, &est).schedule(&wl, Objective::Performance);
+    assert!(sched.period.is_finite());
+    // With transfers this catastrophic, a single stage must win.
+    assert_eq!(sched.stages.len(), 1);
+}

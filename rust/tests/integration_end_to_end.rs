@@ -1,0 +1,155 @@
+//! Cross-module integration: calibration → scheduling → measurement, the
+//! coordinator's dynamic loop, and the paper's qualitative claims
+//! end-to-end on the simulated testbed.
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::coordinator::Coordinator;
+use dype::devices::{DeviceType, GroundTruth};
+use dype::experiments::{measure_plan, reference_workload, run_case, Case, Registries};
+use dype::perfmodel::{calibrate, OracleModels};
+use dype::scheduler::{baselines, DpScheduler};
+use dype::workload::{gnn, transformer, Dataset};
+
+#[test]
+fn calibrated_scheduler_close_to_oracle_scheduler() {
+    // The whole point of §V: schedules from estimates should rarely lose
+    // much against schedules from measurements.
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let reg = calibrate::calibrated_registry(&sys);
+    for ds in Dataset::table1() {
+        let wl = gnn::gcn_workload(&ds, 2, 128);
+        let case = Case::new(sys.clone(), wl.clone(), ds.degree_skew);
+        let oracle = OracleModels { gt: &case.gt };
+        let from_est = DpScheduler::new(&sys, &reg).schedule(&wl, Objective::Performance);
+        let from_gt = DpScheduler::new(&sys, &oracle).schedule(&wl, Objective::Performance);
+        let (thp_e, _) = case.measure(&from_est.plan(), 100);
+        let (thp_g, _) = case.measure(&from_gt.plan(), 100);
+        assert!(
+            thp_e >= thp_g * 0.75,
+            "{}: estimate-driven schedule loses {:.0}%",
+            ds.code,
+            (1.0 - thp_e / thp_g) * 100.0
+        );
+    }
+}
+
+#[test]
+fn heterogeneity_beats_homogeneous_on_mixed_workloads() {
+    // §VI-C1 "one plus one equals more than two" — at least: DYPE ≥
+    // max(GPU-only, FPGA-only) on ground truth for the OGB datasets.
+    let regs = Registries::train();
+    for ic in Interconnect::ALL {
+        let sys = SystemSpec::paper_testbed(ic);
+        let est = regs.get(ic);
+        for ds in [Dataset::ogbn_arxiv(), Dataset::ogbn_products()] {
+            let wl = gnn::gin_workload(&ds, 2, 128, 2);
+            let case = Case::new(sys.clone(), wl.clone(), ds.degree_skew);
+            let r = run_case(&case, est, &reference_workload(&wl));
+            let best_homog = r.gpu_only.0.max(r.fpga_only.0);
+            assert!(
+                r.dype_perf.0 >= best_homog * 0.9,
+                "{}: DYPE {:.2} vs best homogeneous {:.2}",
+                case.label,
+                r.dype_perf.0,
+                best_homog
+            );
+        }
+    }
+}
+
+#[test]
+fn sparsity_shifts_move_schedules_toward_fpgas() {
+    // §VI-C2: as dataset sparsity increases, optimal schedules include
+    // FPGAs more (GIN-S1 → GIN-S4 trend).
+    let sys = SystemSpec::paper_testbed(Interconnect::Cxl3);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let fpga_share = |ds: &Dataset| {
+        let wl = gnn::gin_workload(ds, 2, 128, 2);
+        let s = DpScheduler::new(&sys, &oracle).schedule(&wl, Objective::Energy);
+        s.fpgas_used()
+    };
+    let dense = fpga_share(&Dataset::synthetic1());
+    let sparse = fpga_share(&Dataset::ogbn_arxiv());
+    assert!(
+        sparse >= dense,
+        "sparser dataset should use at least as many FPGAs ({sparse} vs {dense})"
+    );
+}
+
+#[test]
+fn transformer_long_sequences_favor_fpga_attention() {
+    // Fig 8's driver: at seq=16384 the FPGA (linear) must beat the GPU's
+    // dense quadratic attention per §V models — so DYPE's perf schedule
+    // should involve FPGAs at long sequences on a fast interconnect.
+    let sys = SystemSpec::paper_testbed(Interconnect::Cxl3);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let t_fpga = gt.ideal_kernel_time(
+        &dype::workload::KernelKind::WindowAttn { seq: 16384, window: 512, heads: 8, dim: 64 },
+        DeviceType::Fpga,
+    );
+    let t_gpu = gt.ideal_kernel_time(
+        &dype::workload::KernelKind::WindowAttn { seq: 16384, window: 512, heads: 8, dim: 64 },
+        DeviceType::Gpu,
+    );
+    assert!(t_fpga < t_gpu, "SWAT must win at long seq: {t_fpga} vs {t_gpu}");
+}
+
+#[test]
+fn coordinator_tracks_daily_drift_and_never_loses_to_static() {
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let reg = calibrate::calibrated_registry(&sys);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let mut coord = Coordinator::new(sys.clone(), &reg, Objective::Performance);
+    let mut first_plan = None;
+    let mut dyn_time = 0.0;
+    let mut stat_time = 0.0;
+    for edges in [4_000_000u64, 120_000_000, 15_000_000, 60_000_000] {
+        let ds = Dataset::new("TF", "traffic", 230_000, edges, 600, 0.2);
+        let wl = gnn::gcn_workload(&ds, 2, 128);
+        let sched = coord.process_batch(&wl).clone();
+        if first_plan.is_none() {
+            first_plan = Some(sched.plan());
+        }
+        let (thp_dyn, _) = measure_plan(&sys, &gt, &wl, &sched.plan(), 50);
+        let (thp_stat, _) = measure_plan(&sys, &gt, &wl, first_plan.as_ref().unwrap(), 50);
+        dyn_time += 1.0 / thp_dyn;
+        stat_time += 1.0 / thp_stat;
+    }
+    assert!(dyn_time <= stat_time * 1.001, "dynamic {dyn_time} vs static {stat_time}");
+}
+
+#[test]
+fn fleetrec_between_static_and_dype() {
+    // The §VI hierarchy: static ≤ FleetRec* ≤ DYPE (throughput, estimated
+    // on the same estimator that tuned all three).
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    for ds in Dataset::table1() {
+        let wl = gnn::gin_workload(&ds, 2, 128, 2);
+        let reference = gnn::gin_workload(&Dataset::ogbn_arxiv(), 2, 128, 2);
+        let static_plan =
+            baselines::tune_static_plan(&sys, &oracle, &reference, Objective::Performance);
+        let statik = baselines::apply_static_plan(&sys, &oracle, &wl, &static_plan);
+        let fleet = baselines::fleetrec(&sys, &oracle, &wl, Objective::Performance).unwrap();
+        let dype = DpScheduler::new(&sys, &oracle).schedule(&wl, Objective::Performance);
+        assert!(fleet.throughput() >= statik.throughput() * (1.0 - 1e-9), "{}", ds.code);
+        assert!(dype.throughput() >= fleet.throughput() * (1.0 - 1e-9), "{}", ds.code);
+    }
+}
+
+#[test]
+fn transformer_scheduling_scales_to_paper_depth() {
+    // The 32-layer model (160 kernels) must schedule quickly and validly.
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let wl = transformer::paper_transformer(4096, 512);
+    let t0 = std::time::Instant::now();
+    let s = DpScheduler::new(&sys, &oracle).schedule(&wl, Objective::Performance);
+    let dt = t0.elapsed();
+    s.validate(wl.len(), sys.n_fpga, sys.n_gpu).unwrap();
+    assert!(dt.as_secs_f64() < 30.0, "DP too slow for serving-path rescheduling: {dt:?}");
+}

@@ -1,0 +1,242 @@
+//! Property-based tests for the scheduler core.
+//!
+//! The offline build has no proptest crate; these are seeded randomized
+//! property sweeps over the in-tree SplitMix64 generator (DESIGN.md
+//! §Substitutions) — deterministic, many-case, invariant-asserting.
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::devices::{DeviceType, GroundTruth};
+use dype::perfmodel::OracleModels;
+use dype::scheduler::{DpScheduler, ExhaustiveScheduler};
+use dype::util::Rng;
+use dype::workload::{KernelKind, Workload};
+
+/// Random workload chain of 1..=6 kernels with GNN/transformer-like
+/// characteristics.
+fn random_workload(rng: &mut Rng) -> Workload {
+    let n = rng.gen_range_usize(1, 7);
+    let kinds: Vec<(String, KernelKind)> = (0..n)
+        .map(|i| {
+            let kind = match rng.gen_range_usize(0, 3) {
+                0 => {
+                    let m = rng.log_uniform(1e4, 2e6) as u64;
+                    let density = rng.log_uniform(1e-6, 1e-3);
+                    KernelKind::SpMM {
+                        m,
+                        k: m,
+                        n: rng.log_uniform(16.0, 512.0) as u64,
+                        nnz: ((m as f64 * m as f64 * density) as u64).max(m),
+                    }
+                }
+                1 => KernelKind::Gemm {
+                    m: rng.log_uniform(1e4, 2e6) as u64,
+                    k: rng.log_uniform(16.0, 1024.0) as u64,
+                    n: rng.log_uniform(16.0, 1024.0) as u64,
+                },
+                _ => {
+                    let seq = rng.log_uniform(1024.0, 8192.0) as u64;
+                    KernelKind::WindowAttn {
+                        seq,
+                        window: (rng.log_uniform(256.0, 2048.0) as u64).min(seq),
+                        heads: 8,
+                        dim: 64,
+                    }
+                }
+            };
+            (format!("k{i}"), kind)
+        })
+        .collect();
+    Workload::new("prop", kinds)
+}
+
+fn random_system(rng: &mut Rng) -> SystemSpec {
+    let ic = [Interconnect::Pcie4, Interconnect::Pcie5, Interconnect::Cxl3]
+        [rng.gen_range_usize(0, 3)];
+    let mut sys = SystemSpec::paper_testbed(ic);
+    sys.n_fpga = rng.gen_range_usize(0, 4);
+    sys.n_gpu = rng.gen_range_usize(0, 3);
+    if sys.n_fpga == 0 && sys.n_gpu == 0 {
+        sys.n_gpu = 1;
+    }
+    sys
+}
+
+/// Every schedule the DP emits is structurally valid, for every objective,
+/// across random workloads × systems.
+#[test]
+fn prop_dp_schedules_always_valid() {
+    let mut rng = Rng::seed_from_u64(0xA11CE);
+    for case in 0..150 {
+        let wl = random_workload(&mut rng);
+        let sys = random_system(&mut rng);
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let oracle = OracleModels { gt: &gt };
+        let sched = DpScheduler::new(&sys, &oracle);
+        for obj in Objective::paper_modes() {
+            let s = sched.schedule(&wl, obj);
+            s.validate(wl.len(), sys.n_fpga, sys.n_gpu).unwrap_or_else(|e| {
+                panic!("case {case} ({}F{}G, {} kernels): {e}", sys.n_fpga, sys.n_gpu, wl.len())
+            });
+        }
+    }
+}
+
+/// Perf mode dominates energy mode on throughput; energy mode dominates
+/// perf mode on energy; balanced sits within its floor.
+#[test]
+fn prop_objective_ordering() {
+    let mut rng = Rng::seed_from_u64(0xB0B);
+    for _ in 0..100 {
+        let wl = random_workload(&mut rng);
+        let sys = random_system(&mut rng);
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let oracle = OracleModels { gt: &gt };
+        let sched = DpScheduler::new(&sys, &oracle);
+        let p = sched.schedule(&wl, Objective::Performance);
+        let e = sched.schedule(&wl, Objective::Energy);
+        let b = sched.schedule(&wl, Objective::balanced());
+        assert!(p.throughput() >= e.throughput() * (1.0 - 1e-9));
+        assert!(e.energy_per_inf <= p.energy_per_inf * (1.0 + 1e-9));
+        assert!(b.throughput() >= 0.7 * p.throughput() * (1.0 - 1e-6));
+        assert!(b.energy_per_inf <= p.energy_per_inf * (1.0 + 1e-9));
+    }
+}
+
+/// DP vs exhaustive enumeration on small instances: the DP must land on
+/// (or within a hair of) the true optimum of the identical design space.
+#[test]
+fn prop_dp_near_exhaustive_optimum() {
+    let mut rng = Rng::seed_from_u64(0xC0DE);
+    let mut exact = 0usize;
+    let mut total = 0usize;
+    for _ in 0..60 {
+        let wl = random_workload(&mut rng);
+        if wl.len() > 5 {
+            continue; // keep enumeration tractable
+        }
+        let sys = random_system(&mut rng);
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let oracle = OracleModels { gt: &gt };
+        let dp = DpScheduler::new(&sys, &oracle).schedule(&wl, Objective::Performance);
+        let ex = ExhaustiveScheduler::new(&sys, &oracle)
+            .best(&wl, Objective::Performance)
+            .unwrap();
+        total += 1;
+        assert!(
+            dp.period <= ex.period * 1.05,
+            "DP {} ({}) far from optimum {} ({})",
+            dp.period,
+            dp.mnemonic(),
+            ex.period,
+            ex.mnemonic()
+        );
+        if dp.period <= ex.period * (1.0 + 1e-9) {
+            exact += 1;
+        }
+    }
+    // The DP's per-state greediness is provably lossy only in contrived
+    // tie-structures; random instances should be solved exactly nearly
+    // always.
+    assert!(exact * 10 >= total * 9, "DP exact on only {exact}/{total} instances");
+}
+
+/// Adding devices never reduces the best achievable throughput.
+#[test]
+fn prop_monotone_in_resources() {
+    let mut rng = Rng::seed_from_u64(0xD00D);
+    for _ in 0..60 {
+        let wl = random_workload(&mut rng);
+        let mut small = random_system(&mut rng);
+        small.n_fpga = small.n_fpga.min(2);
+        small.n_gpu = small.n_gpu.clamp(1, 2);
+        let mut big = small.clone();
+        big.n_fpga += 1;
+        big.n_gpu += 1;
+        let gt_s = GroundTruth::new(small.gpu.clone(), small.fpga.clone(), small.comm_model());
+        let gt_b = GroundTruth::new(big.gpu.clone(), big.fpga.clone(), big.comm_model());
+        let thp_s = DpScheduler::new(&small, &OracleModels { gt: &gt_s })
+            .schedule(&wl, Objective::Performance)
+            .throughput();
+        let thp_b = DpScheduler::new(&big, &OracleModels { gt: &gt_b })
+            .schedule(&wl, Objective::Performance)
+            .throughput();
+        assert!(thp_b >= thp_s * (1.0 - 1e-9), "{thp_b} < {thp_s}");
+    }
+}
+
+/// Type pins are always honored when feasible.
+#[test]
+fn prop_type_pins_honored() {
+    let mut rng = Rng::seed_from_u64(0xF1A6);
+    let mut feasible = 0;
+    for _ in 0..80 {
+        let wl = random_workload(&mut rng);
+        let sys = random_system(&mut rng);
+        if sys.n_fpga == 0 || sys.n_gpu == 0 {
+            continue;
+        }
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let oracle = OracleModels { gt: &gt };
+        let pin = dype::scheduler::baselines::natural_type_pin();
+        let sched = DpScheduler::new(&sys, &oracle)
+            .with_type_pin(pin.clone())
+            .try_schedule(&wl, Objective::Performance);
+        if let Some(s) = sched {
+            feasible += 1;
+            for st in &s.stages {
+                for k in st.first..=st.last {
+                    if let Some(&want) = pin.get(wl.kernels[k].kind.tag()) {
+                        assert_eq!(st.dev, want, "pin violated in {}", s.mnemonic());
+                    }
+                }
+            }
+        }
+    }
+    assert!(feasible > 10, "pinning should be feasible in a fair share of cases");
+}
+
+/// The DP's reported period and energy always match a from-scratch
+/// re-evaluation of its own plan (internal consistency of the
+/// incremental bookkeeping).
+#[test]
+fn prop_dp_bookkeeping_consistent() {
+    let mut rng = Rng::seed_from_u64(0x5EED);
+    for _ in 0..80 {
+        let wl = random_workload(&mut rng);
+        let sys = random_system(&mut rng);
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let oracle = OracleModels { gt: &gt };
+        let sched = DpScheduler::new(&sys, &oracle);
+        let s = sched.schedule(&wl, Objective::Energy);
+        let re = dype::scheduler::evaluate_plan(&wl, &s.plan(), &oracle, &sched.comm, &sched.power);
+        assert!(
+            (re.period - s.period).abs() <= 1e-9 * s.period,
+            "period drift: dp {} vs re-eval {}",
+            s.period,
+            re.period
+        );
+        assert!(
+            (re.energy_per_inf - s.energy_per_inf).abs() <= 1e-6 * s.energy_per_inf,
+            "energy drift: dp {} vs re-eval {}",
+            s.energy_per_inf,
+            re.energy_per_inf
+        );
+    }
+}
+
+/// FPGA-pinned stages never run on systems without FPGAs — i.e. the DP
+/// never fabricates devices.
+#[test]
+fn prop_no_device_fabrication() {
+    let mut rng = Rng::seed_from_u64(0xFAB);
+    for _ in 0..40 {
+        let wl = random_workload(&mut rng);
+        let mut sys = random_system(&mut rng);
+        sys.n_fpga = 0;
+        sys.n_gpu = sys.n_gpu.max(1);
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let oracle = OracleModels { gt: &gt };
+        let s = DpScheduler::new(&sys, &oracle).schedule(&wl, Objective::Performance);
+        assert!(s.stages.iter().all(|st| st.dev == DeviceType::Gpu));
+    }
+}
