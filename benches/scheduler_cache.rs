@@ -1,0 +1,75 @@
+//! Schedule-cache bench (DESIGN.md §Perf + Experiment index): quantifies
+//! what the cache buys on the serving path — a reschedule on
+//! previously-seen drift becomes a plan re-timing instead of a full
+//! Algorithm-1 run.
+//!
+//! Measures, per workload depth (4-kernel GCN, 40-kernel service
+//! transformer, 160-kernel paper transformer):
+//!   * `dp_cold`   — full DP (tables + selection + rebuild), the miss path;
+//!   * `cache_hit` — key build + lookup + `evaluate_plan` re-timing;
+//! then replays the canonical two-stream drift scenario and reports the
+//! end-to-end hit rate the serving layer sees.
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::devices::GroundTruth;
+use dype::perfmodel::OracleModels;
+use dype::scheduler::{
+    cache::CacheKey, evaluate_plan, system_fingerprint, DpScheduler, PowerTable, ScheduleCache,
+};
+use dype::util::bench::{bench, fmt_time, header};
+use dype::workload::{gnn, transformer, Dataset, Workload};
+
+fn main() {
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let oracle = OracleModels { gt: &gt };
+
+    println!("{}", header());
+
+    let cases: Vec<(&str, Workload, usize)> = vec![
+        ("gcn_4_kernels", gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128), 50),
+        ("transformer_40_kernels", transformer::transformer_workload(4096, 1024, 8), 20),
+        ("transformer_160_kernels", transformer::paper_transformer(4096, 512), 10),
+    ];
+
+    for (name, wl, iters) in &cases {
+        let sched = DpScheduler::new(&sys, &oracle);
+        let cold = bench(&format!("dp_cold/{name}"), 2, *iters, || {
+            std::hint::black_box(sched.schedule(wl, Objective::Performance));
+        });
+        println!("{}", cold.report());
+
+        // Warm a cache with this workload's bucket, then time the hit path.
+        let fp = system_fingerprint(&sys);
+        let mut cache = ScheduleCache::new(8);
+        let plan = sched.schedule(wl, Objective::Performance).plan();
+        cache.insert(CacheKey::new(fp, wl, Objective::Performance), plan);
+        let power = PowerTable::new(sys.gpu.clone(), sys.fpga.clone());
+        let comm = sys.comm_model();
+        let hit = bench(&format!("cache_hit/{name}"), 2, *iters, || {
+            let key = CacheKey::new(fp, wl, Objective::Performance);
+            let plan = cache.lookup(&key).expect("warmed entry");
+            std::hint::black_box(evaluate_plan(wl, &plan, &oracle, &comm, &power));
+        });
+        println!("{}", hit.report());
+        println!(
+            "  -> hit path is {:.0}x cheaper ({} vs {})\n",
+            cold.median / hit.median.max(1e-12),
+            fmt_time(cold.median),
+            fmt_time(hit.median)
+        );
+    }
+
+    // End-to-end: the canonical two-stream recurring-drift scenario.
+    let streams = dype::experiments::multi_stream_scenario(3, 6, 42);
+    let report = dype::experiments::run_multi_stream(&sys, &streams);
+    println!(
+        "multi-stream drift replay: {} requests, {} DP runs avoided of {} reschedule \
+         decisions (cache: {})",
+        report.total_completed,
+        report.cache.hits,
+        report.cache.lookups(),
+        report.cache
+    );
+    assert!(report.cache.hit_rate() > 0.5, "cache must absorb recurring drift");
+}

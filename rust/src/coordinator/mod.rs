@@ -11,12 +11,27 @@
 //! current schedule, and a reschedule policy (hysteresis threshold so tiny
 //! drifts don't thrash the pipeline — remapping devices costs a drain +
 //! reload in a real deployment).
+//!
+//! Optionally it consults a [`crate::scheduler::ScheduleCache`]: when attached (see
+//! [`Coordinator::with_cache`]), recurring drift — input characteristics
+//! quantizing to a previously-scheduled bucket — re-times the memoized
+//! plan instead of re-running Algorithm 1, turning the reschedule
+//! decision from a DP run into an O(stages) evaluation. The cache can be
+//! shared by several coordinators ([`multi`]'s per-stream coordinators do
+//! exactly that).
 
+pub mod multi;
 pub mod server;
+
+pub use multi::{partition_system, MultiStreamReport, MultiStreamServer, StreamReport, StreamSpec};
+pub use server::{generate_trace, Request, ServeReport, Server};
 
 use crate::config::{Objective, SystemSpec};
 use crate::perfmodel::PerfEstimator;
-use crate::scheduler::{evaluate_plan, DpScheduler, PowerTable, Schedule};
+use crate::scheduler::{
+    cache::CacheKey, evaluate_plan, system_fingerprint, CacheStats, DpScheduler, PowerTable,
+    Schedule, SharedScheduleCache,
+};
 use crate::workload::Workload;
 
 /// One rescheduling decision, for observability and the examples' logs.
@@ -40,10 +55,15 @@ pub struct Coordinator<'a, E: PerfEstimator> {
     current: Option<Schedule>,
     batches_seen: usize,
     events: Vec<RescheduleEvent>,
+    /// Optional schedule memoization (possibly shared across streams).
+    cache: Option<SharedScheduleCache>,
+    /// Fingerprint of `sys`, precomputed for cache keys.
+    sys_fp: u64,
 }
 
 impl<'a, E: PerfEstimator> Coordinator<'a, E> {
     pub fn new(sys: SystemSpec, est: &'a E, objective: Objective) -> Self {
+        let sys_fp = system_fingerprint(&sys);
         Coordinator {
             sys,
             est,
@@ -52,7 +72,60 @@ impl<'a, E: PerfEstimator> Coordinator<'a, E> {
             current: None,
             batches_seen: 0,
             events: Vec::new(),
+            cache: None,
+            sys_fp,
         }
+    }
+
+    /// Attach a schedule cache: repeat drift into a previously-seen
+    /// quantized characteristic bucket reuses the memoized plan
+    /// (re-timed for the observed inputs) instead of re-running the DP.
+    pub fn with_cache(mut self, cache: SharedScheduleCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Cache counters, when a cache is attached. Shared caches report the
+    /// combined counters of every coordinator using them.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.lock().unwrap().stats())
+    }
+
+    /// Produce the best-known schedule for `wl`: a cache hit re-times the
+    /// memoized plan under the current estimator; a miss runs Algorithm 1
+    /// and memoizes its structure.
+    ///
+    /// Constrained objectives need care: a plan that satisfied its
+    /// constraint when memoized can violate it after intra-bucket drift.
+    /// A `QoS` hit whose re-timed throughput no longer clears the absolute
+    /// floor is demoted to a miss (the DP re-runs and the entry is
+    /// refreshed). `Balanced`'s floor is *relative* to the
+    /// max-over-design-space throughput, which only the DP tables know —
+    /// it cannot be re-validated from a single re-timed plan, so Balanced
+    /// coordinators bypass the cache entirely.
+    fn candidate_schedule(&mut self, wl: &Workload) -> Schedule {
+        let cacheable = !matches!(self.objective, Objective::Balanced { .. });
+        let Some(cache) = self.cache.as_ref().filter(|_| cacheable) else {
+            return DpScheduler::new(&self.sys, self.est).schedule(wl, self.objective);
+        };
+        let key = CacheKey::new(self.sys_fp, wl, self.objective);
+        let hit = cache.lock().unwrap().lookup(&key);
+        if let Some(plan) = hit {
+            let power = PowerTable::new(self.sys.gpu.clone(), self.sys.fpga.clone());
+            let retimed = evaluate_plan(wl, &plan, self.est, &self.sys.comm_model(), &power);
+            let still_valid = match self.objective {
+                Objective::QoS { min_throughput } => {
+                    retimed.throughput() >= min_throughput * (1.0 - 1e-9)
+                }
+                _ => true,
+            };
+            if still_valid {
+                return retimed;
+            }
+        }
+        let sched = DpScheduler::new(&self.sys, self.est).schedule(wl, self.objective);
+        cache.lock().unwrap().insert(key, sched.plan());
+        sched
     }
 
     /// Observe the characteristics of the next input batch and return the
@@ -60,7 +133,7 @@ impl<'a, E: PerfEstimator> Coordinator<'a, E> {
     /// the hysteresis threshold.
     pub fn process_batch(&mut self, wl: &Workload) -> &Schedule {
         self.batches_seen += 1;
-        let candidate = DpScheduler::new(&self.sys, self.est).schedule(wl, self.objective);
+        let candidate = self.candidate_schedule(wl);
 
         let swap = match &self.current {
             None => true,
@@ -161,6 +234,48 @@ mod tests {
             assert!(!c.reschedule_events().is_empty());
             assert!(c.reschedule_events()[0].estimated_gain > 0.05);
         }
+    }
+
+    #[test]
+    fn cached_coordinator_hits_on_recurring_drift() {
+        use crate::scheduler::ScheduleCache;
+        let (s, g) = setup();
+        let oracle = OracleModels { gt: &g };
+        let cache = ScheduleCache::shared(16);
+        let mut c = Coordinator::new(s, &oracle, Objective::Performance).with_cache(cache);
+        let dense = gnn::gcn_workload(&Dataset::synthetic1(), 2, 128);
+        let sparse = gnn::gcn_workload(&Dataset::synthetic4(), 2, 128);
+        // Two regimes, revisited repeatedly: only the first visit of each
+        // regime runs the DP.
+        for _ in 0..4 {
+            c.process_batch(&dense);
+            c.process_batch(&sparse);
+        }
+        let st = c.cache_stats().unwrap();
+        assert_eq!(st.misses, 2, "one DP per distinct regime");
+        assert_eq!(st.hits, 6);
+        assert!(st.hit_rate() > 0.5);
+    }
+
+    #[test]
+    fn cached_and_uncached_coordinators_agree_on_first_schedule() {
+        use crate::scheduler::ScheduleCache;
+        let (s, g) = setup();
+        let oracle = OracleModels { gt: &g };
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let mut plain = Coordinator::new(s.clone(), &oracle, Objective::Performance);
+        let mut cached = Coordinator::new(s, &oracle, Objective::Performance)
+            .with_cache(ScheduleCache::shared(4));
+        assert_eq!(
+            plain.process_batch(&wl).mnemonic(),
+            cached.process_batch(&wl).mnemonic()
+        );
+        // Re-processing the same batch is a hit and yields the same plan.
+        assert_eq!(
+            plain.process_batch(&wl).mnemonic(),
+            cached.process_batch(&wl).mnemonic()
+        );
+        assert_eq!(cached.cache_stats().unwrap().hits, 1);
     }
 
     #[test]

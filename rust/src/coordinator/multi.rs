@@ -1,0 +1,354 @@
+//! Multi-stream serving: several concurrent request streams — each with
+//! its own workload family, arrival process, and drifting input
+//! characteristics — share one heterogeneous device pool (DESIGN.md
+//! §Serving).
+//!
+//! The paper's serving story is a single stream of continuous inferences;
+//! a deployment at the ROADMAP's "millions of users" scale multiplexes
+//! *many*. This module adds the three pieces that requires:
+//!
+//! 1. **Device partitioning** — [`partition_system`] splits the
+//!    [`SystemSpec`] inventory across the active streams in proportion to
+//!    their offered FLOP rate (largest-remainder apportionment per device
+//!    type, with a fix-up guaranteeing every stream at least one device —
+//!    the spatial-multiplexing analogue of fair-share scheduling, and the
+//!    reason no stream can starve: each owns hardware that makes
+//!    progress).
+//! 2. **Per-stream admission queues** — each stream runs the FIFO
+//!    admission/batching loop of [`super::server::serve_trace`] against
+//!    its own partition, with its own [`Coordinator`] applying the
+//!    reschedule-hysteresis policy to its own drift.
+//! 3. **A shared schedule cache** — all per-stream coordinators memoize
+//!    into one [`crate::scheduler::ScheduleCache`]; keys embed each
+//!    partition's fingerprint, so streams never collide but recurring
+//!    drift within a stream (and identical twin streams on identical
+//!    partitions) turn reschedules into cache hits. The combined hit
+//!    rate is reported in [`MultiStreamReport`].
+//!
+//! Because partitions are disjoint, streams do not contend for devices
+//! and the simulation can serve them one at a time without changing any
+//! result; wall-clock quantities in the report treat the streams as
+//! concurrent (makespan = max over streams, throughput aggregated).
+
+use crate::config::{Objective, SystemSpec};
+use crate::devices::GroundTruth;
+use crate::perfmodel::PerfEstimator;
+use crate::scheduler::{CacheStats, ScheduleCache, SharedScheduleCache};
+
+use super::server::{serve_trace, Request, ServeReport};
+use super::Coordinator;
+
+/// One request stream: a named trace with its own design objective.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    pub name: String,
+    pub objective: Objective,
+    /// Arrival-ordered requests (see [`super::server::generate_trace`]).
+    pub trace: Vec<Request>,
+}
+
+impl StreamSpec {
+    pub fn new(name: impl Into<String>, objective: Objective, trace: Vec<Request>) -> StreamSpec {
+        assert!(!trace.is_empty(), "empty stream trace");
+        StreamSpec { name: name.into(), objective, trace }
+    }
+
+    /// The trace's arrival span, floored at one second for degenerate
+    /// traces (a single request, or an instantaneous burst): dividing by
+    /// a near-zero span would report an astronomically inflated rate and
+    /// invert the demand-proportional partitioning.
+    fn span(&self) -> f64 {
+        (self.trace.last().unwrap().arrival - self.trace[0].arrival).max(1.0)
+    }
+
+    /// Offered request rate (req/s) over the trace's arrival span.
+    pub fn offered_rate(&self) -> f64 {
+        self.trace.len() as f64 / self.span()
+    }
+
+    /// Offered compute load (FLOP/s) — the demand signal the device
+    /// partitioner apportions by.
+    pub fn demand(&self) -> f64 {
+        let flops: f64 = self.trace.iter().map(|r| r.workload.total_flops()).sum();
+        flops / self.span()
+    }
+}
+
+/// Largest-remainder apportionment of `total` identical devices over
+/// normalized `weights` (Σ = 1). Conserves `total` exactly.
+fn apportion(total: usize, weights: &[f64]) -> Vec<usize> {
+    let quotas: Vec<f64> = weights.iter().map(|w| w * total as f64).collect();
+    let mut alloc: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let mut remainder = total - alloc.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for &i in &order {
+        if remainder == 0 {
+            break;
+        }
+        alloc[i] += 1;
+        remainder -= 1;
+    }
+    alloc
+}
+
+/// Split a device pool across `demands.len()` active streams,
+/// demand-proportionally per device type, guaranteeing every stream at
+/// least one device (progress ⇒ no starvation). Panics when there are
+/// more streams than devices — spatial multiplexing cannot serve that;
+/// time-slicing a partition is an open ROADMAP item.
+pub fn partition_system(sys: &SystemSpec, demands: &[f64]) -> Vec<SystemSpec> {
+    let k = demands.len();
+    assert!(k >= 1, "no streams");
+    assert!(
+        sys.n_fpga + sys.n_gpu >= k,
+        "more streams ({k}) than devices ({})",
+        sys.n_fpga + sys.n_gpu
+    );
+    let total: f64 = demands.iter().sum();
+    let weights: Vec<f64> = if total > 0.0 {
+        demands.iter().map(|d| d / total).collect()
+    } else {
+        vec![1.0 / k as f64; k]
+    };
+    let mut fpgas = apportion(sys.n_fpga, &weights);
+    let mut gpus = apportion(sys.n_gpu, &weights);
+
+    // Fix-up: a low-demand stream can be apportioned zero devices; donate
+    // one from the richest stream (preserving the donor's progress).
+    loop {
+        let Some(poor) = (0..k).find(|&i| fpgas[i] + gpus[i] == 0) else { break };
+        let rich = (0..k)
+            .max_by_key(|&i| fpgas[i] + gpus[i])
+            .expect("non-empty");
+        assert!(fpgas[rich] + gpus[rich] > 1, "inventory ≥ streams ⇒ a donor exists");
+        if fpgas[rich] >= gpus[rich] {
+            fpgas[rich] -= 1;
+            fpgas[poor] += 1;
+        } else {
+            gpus[rich] -= 1;
+            gpus[poor] += 1;
+        }
+    }
+
+    (0..k)
+        .map(|i| SystemSpec { n_fpga: fpgas[i], n_gpu: gpus[i], ..sys.clone() })
+        .collect()
+}
+
+/// One stream's outcome: its device share and its serving statistics.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub name: String,
+    /// Devices granted by the partitioner, `"2F1G"` style.
+    pub partition: String,
+    pub report: ServeReport,
+}
+
+/// The multi-stream run's combined outcome.
+#[derive(Debug, Clone)]
+pub struct MultiStreamReport {
+    pub streams: Vec<StreamReport>,
+    /// Combined schedule-cache counters across every stream.
+    pub cache: CacheStats,
+    /// Wall-clock of the concurrent run: the slowest stream's makespan.
+    pub makespan: f64,
+    pub total_completed: usize,
+    /// Completed inferences per second of concurrent wall-clock.
+    pub aggregate_throughput: f64,
+    /// Jain fairness index over per-stream service ratios
+    /// (achieved/offered rate): 1.0 = perfectly even, → 1/n as one
+    /// stream monopolizes the pool.
+    pub fairness: f64,
+}
+
+/// Serving front-end for several concurrent streams over one device pool.
+pub struct MultiStreamServer<'a, E: PerfEstimator> {
+    sys: SystemSpec,
+    est: &'a E,
+    cache: SharedScheduleCache,
+}
+
+impl<'a, E: PerfEstimator> MultiStreamServer<'a, E> {
+    /// A server over `sys` with a default 64-entry shared schedule cache.
+    pub fn new(sys: SystemSpec, est: &'a E) -> Self {
+        Self::with_cache(sys, est, ScheduleCache::shared(64))
+    }
+
+    /// A server sharing an externally-owned cache (e.g. to persist hit
+    /// statistics across successive `serve` calls).
+    pub fn with_cache(sys: SystemSpec, est: &'a E, cache: SharedScheduleCache) -> Self {
+        MultiStreamServer { sys, est, cache }
+    }
+
+    /// Handle to the shared cache (e.g. for reporting after a run).
+    pub fn cache(&self) -> SharedScheduleCache {
+        self.cache.clone()
+    }
+
+    /// Partition the pool by stream demand, then serve every stream's
+    /// trace to completion on its partition.
+    pub fn serve(&mut self, streams: &[StreamSpec]) -> MultiStreamReport {
+        assert!(!streams.is_empty(), "no streams");
+        let cache_before = self.cache.lock().unwrap().stats();
+        let demands: Vec<f64> = streams.iter().map(StreamSpec::demand).collect();
+        let parts = partition_system(&self.sys, &demands);
+
+        let mut out: Vec<StreamReport> = Vec::with_capacity(streams.len());
+        for (spec, part) in streams.iter().zip(&parts) {
+            let gt = GroundTruth::new(part.gpu.clone(), part.fpga.clone(), part.comm_model());
+            let mut coord = Coordinator::new(part.clone(), self.est, spec.objective)
+                .with_cache(self.cache.clone());
+            let report = serve_trace(&mut coord, part, &gt, &spec.trace);
+            out.push(StreamReport {
+                name: spec.name.clone(),
+                partition: format!("{}F{}G", part.n_fpga, part.n_gpu),
+                report,
+            });
+        }
+
+        let makespan = out.iter().map(|s| s.report.makespan).fold(0.0, f64::max);
+        let total_completed: usize = out.iter().map(|s| s.report.completed).sum();
+        let ratios: Vec<f64> = out
+            .iter()
+            .zip(streams)
+            .map(|(s, spec)| s.report.throughput / spec.offered_rate().max(1e-9))
+            .collect();
+        let fairness = jain_index(&ratios);
+        let cache = self.cache.lock().unwrap().stats().since(&cache_before);
+        MultiStreamReport {
+            streams: out,
+            cache,
+            makespan,
+            total_completed,
+            aggregate_throughput: total_completed as f64 / makespan.max(1e-12),
+            fairness,
+        }
+    }
+}
+
+/// Jain's fairness index `(Σx)² / (n·Σx²)` over non-negative rates.
+fn jain_index(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 0.0;
+    }
+    sum * sum / (n * sq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::Interconnect;
+    use crate::perfmodel::OracleModels;
+    use crate::workload::{gnn, transformer, Dataset, Workload};
+
+    fn sys() -> SystemSpec {
+        SystemSpec::paper_testbed(Interconnect::Pcie4) // 3F + 2G
+    }
+
+    fn gcn(edges: u64) -> Workload {
+        gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, edges, 200, 0.2), 2, 128)
+    }
+
+    #[test]
+    fn partition_conserves_inventory_and_guarantees_progress() {
+        let s = sys();
+        for demands in [
+            vec![1.0, 1.0],
+            vec![10.0, 1.0],
+            vec![1.0, 0.0],
+            vec![5.0, 3.0, 1.0],
+            vec![1.0, 1.0, 1.0, 1.0, 1.0],
+        ] {
+            let parts = partition_system(&s, &demands);
+            assert_eq!(parts.len(), demands.len());
+            assert_eq!(parts.iter().map(|p| p.n_fpga).sum::<usize>(), s.n_fpga);
+            assert_eq!(parts.iter().map(|p| p.n_gpu).sum::<usize>(), s.n_gpu);
+            for p in &parts {
+                assert!(p.n_fpga + p.n_gpu >= 1, "a stream got no devices: {demands:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn heavier_demand_gets_more_devices() {
+        let parts = partition_system(&sys(), &[9.0, 1.0]);
+        assert!(parts[0].n_fpga + parts[0].n_gpu > parts[1].n_fpga + parts[1].n_gpu);
+    }
+
+    #[test]
+    #[should_panic(expected = "more streams")]
+    fn rejects_more_streams_than_devices() {
+        partition_system(&sys(), &[1.0; 6]);
+    }
+
+    #[test]
+    fn apportion_is_exact() {
+        assert_eq!(apportion(5, &[0.5, 0.5]).iter().sum::<usize>(), 5);
+        assert_eq!(apportion(3, &[0.9, 0.05, 0.05]).iter().sum::<usize>(), 3);
+        assert_eq!(apportion(0, &[1.0]), vec![0]);
+    }
+
+    #[test]
+    fn two_streams_serve_to_completion_without_starvation() {
+        let s = sys();
+        let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let est = OracleModels { gt: &gt };
+        let gcn_trace = super::super::server::generate_trace(
+            &[(gcn(2_000_000), 12), (gcn(150_000_000), 12), (gcn(2_000_000), 12)],
+            15.0,
+            11,
+        );
+        let tf_trace = super::super::server::generate_trace(
+            &[
+                (transformer::transformer_workload(2048, 512, 4), 10),
+                (transformer::transformer_workload(8192, 512, 4), 10),
+                (transformer::transformer_workload(2048, 512, 4), 10),
+            ],
+            10.0,
+            13,
+        );
+        let streams = vec![
+            StreamSpec::new("gcn-traffic", Objective::Performance, gcn_trace),
+            StreamSpec::new("transformer", Objective::Performance, tf_trace),
+        ];
+        let mut server = MultiStreamServer::new(s, &est);
+        let r = server.serve(&streams);
+
+        assert_eq!(r.total_completed, 66, "every request of every stream completes");
+        for sr in &r.streams {
+            assert!(sr.report.p50_latency <= sr.report.p99_latency);
+            assert!(sr.report.p99_latency.is_finite());
+        }
+        // Recurring drift (phase 3 revisits phase 1's bucket) + intra-phase
+        // repeats ⇒ the shared cache absorbs most reschedule decisions.
+        assert!(r.cache.hit_rate() > 0.5, "hit rate {}", r.cache.hit_rate());
+        assert!(r.fairness > 0.5, "fairness {}", r.fairness);
+        assert!(r.makespan > 0.0 && r.aggregate_throughput > 0.0);
+    }
+
+    #[test]
+    fn identical_twin_streams_share_cached_schedules() {
+        let s = sys();
+        let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let est = OracleModels { gt: &gt };
+        let trace = super::super::server::generate_trace(&[(gcn(2_000_000), 10)], 10.0, 7);
+        let streams = vec![
+            StreamSpec::new("a", Objective::Performance, trace.clone()),
+            StreamSpec::new("b", Objective::Performance, trace),
+        ];
+        let mut server = MultiStreamServer::new(s, &est);
+        let r = server.serve(&streams);
+        // Equal demand ⇒ twin partitions differ (3F2G split unevenly), but
+        // each stream still only misses on its own first request bucket.
+        assert!(r.cache.misses <= 2, "misses {}", r.cache.misses);
+        assert_eq!(r.total_completed, 20);
+    }
+}

@@ -12,8 +12,9 @@
 
 use crate::config::{Objective, SystemSpec};
 use crate::devices::GroundTruth;
+use crate::metrics::LatencySummary;
 use crate::perfmodel::{OracleModels, PerfEstimator};
-use crate::scheduler::{evaluate_plan, PowerTable, Schedule};
+use crate::scheduler::{evaluate_plan, CacheStats, PowerTable, Schedule};
 use crate::util::Rng;
 use crate::workload::Workload;
 
@@ -45,7 +46,8 @@ impl Completion {
     }
 }
 
-/// Serving statistics over a run.
+/// Serving statistics over a run (one stream's view in multi-stream
+/// serving — see [`super::MultiStreamReport`]).
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub completed: usize,
@@ -53,12 +55,16 @@ pub struct ServeReport {
     pub throughput: f64,
     pub mean_latency: f64,
     pub p50_latency: f64,
+    pub p90_latency: f64,
     pub p99_latency: f64,
     pub max_queue_depth: usize,
     pub reschedules: usize,
     /// Total pipeline drain time paid for reschedules (s).
     pub reschedule_downtime: f64,
     pub energy: f64,
+    /// Schedule-cache counters attributable to this run (all-zero when the
+    /// serving coordinator has no cache attached).
+    pub cache: CacheStats,
 }
 
 /// Cost of swapping schedules: the pipeline drains and the new mapping's
@@ -79,83 +85,110 @@ impl<'a, E: PerfEstimator> Server<'a, E> {
         Server { coordinator: Coordinator::new(sys.clone(), est, objective), sys, gt }
     }
 
-    /// Serve a pre-generated request trace to completion. Requests are
-    /// admitted FIFO; the pipeline completes one inference per period
-    /// (steady-state model); characteristic drift between consecutive
-    /// requests triggers coordinator rescheduling (paying a drain cost).
+    /// Attach a schedule cache to the serving coordinator (see
+    /// [`Coordinator::with_cache`]); the resulting [`ServeReport`] then
+    /// carries the run's hit/miss counters.
+    pub fn with_cache(mut self, cache: crate::scheduler::SharedScheduleCache) -> Self {
+        self.coordinator = self.coordinator.with_cache(cache);
+        self
+    }
+
+    /// Serve a pre-generated request trace to completion (see
+    /// [`serve_trace`] for the service model).
     pub fn serve(&mut self, trace: &[Request]) -> ServeReport {
-        assert!(!trace.is_empty());
-        let power = PowerTable::new(self.sys.gpu.clone(), self.sys.fpga.clone());
-        let comm = self.sys.comm_model();
-        let oracle = OracleModels { gt: &self.gt };
+        serve_trace(&mut self.coordinator, &self.sys, &self.gt, trace)
+    }
+}
 
-        let mut clock = 0.0f64;
-        let mut completions: Vec<Completion> = Vec::with_capacity(trace.len());
-        let mut queue: std::collections::VecDeque<&Request> = Default::default();
-        let mut next_arrival = 0usize;
-        let mut current_sig = String::new();
-        let mut measured: Option<Schedule> = None;
-        let mut reschedules = 0usize;
-        let mut downtime = 0.0f64;
-        let mut max_queue = 0usize;
-        let mut energy = 0.0f64;
+/// The serving loop shared by [`Server`] (one stream) and
+/// [`super::MultiStreamServer`] (one call per stream partition).
+///
+/// Requests are admitted FIFO from the stream's queue; the pipeline
+/// completes one inference per period (steady-state model);
+/// characteristic drift between consecutive requests triggers coordinator
+/// rescheduling (paying a drain cost). Latency percentiles are computed
+/// with [`crate::metrics::LatencySummary`], and the report carries the
+/// schedule-cache counters incurred by this trace alone.
+pub fn serve_trace<E: PerfEstimator>(
+    coordinator: &mut Coordinator<'_, E>,
+    sys: &SystemSpec,
+    gt: &GroundTruth,
+    trace: &[Request],
+) -> ServeReport {
+    assert!(!trace.is_empty());
+    let power = PowerTable::new(sys.gpu.clone(), sys.fpga.clone());
+    let comm = sys.comm_model();
+    let oracle = OracleModels { gt };
+    let cache_before = coordinator.cache_stats().unwrap_or_default();
 
-        while completions.len() < trace.len() {
-            // Admit all requests that have arrived by `clock`.
-            while next_arrival < trace.len() && trace[next_arrival].arrival <= clock {
-                queue.push_back(&trace[next_arrival]);
-                next_arrival += 1;
-            }
-            max_queue = max_queue.max(queue.len());
+    let mut clock = 0.0f64;
+    let mut completions: Vec<Completion> = Vec::with_capacity(trace.len());
+    let mut queue: std::collections::VecDeque<&Request> = Default::default();
+    let mut next_arrival = 0usize;
+    let mut current_sig = String::new();
+    let mut measured: Option<Schedule> = None;
+    let mut reschedules = 0usize;
+    let mut downtime = 0.0f64;
+    let mut max_queue = 0usize;
+    let mut energy = 0.0f64;
 
-            let Some(req) = queue.pop_front() else {
-                // Idle until the next arrival.
-                clock = trace[next_arrival].arrival;
-                continue;
-            };
-
-            // Data-aware scheduling: feed the observed characteristics to
-            // the coordinator; it reschedules only past its hysteresis.
-            let sig = format!("{:?}", req.workload.kernels.first().map(|k| k.kind));
-            let events_before = self.coordinator.reschedule_events().len();
-            let sched = self.coordinator.process_batch(&req.workload).clone();
-            if sig != current_sig {
-                current_sig = sig;
-                // Re-measure the (possibly new) schedule on ground truth.
-                measured =
-                    Some(evaluate_plan(&req.workload, &sched.plan(), &oracle, &comm, &power));
-            }
-            if self.coordinator.reschedule_events().len() > events_before {
-                reschedules += 1;
-                downtime += RESCHEDULE_DRAIN_COST;
-                clock += RESCHEDULE_DRAIN_COST;
-            }
-            let m = measured.as_ref().unwrap();
-
-            // Steady-state service: one inference per pipeline period.
-            let start = clock.max(req.arrival);
-            let finish = start + m.period.max(1e-12) + m.latency() - m.period; // queue + fill
-            clock = start + m.period; // next admission slot
-            energy += m.energy_per_inf;
-            completions.push(Completion { id: req.id, arrival: req.arrival, start, finish });
+    while completions.len() < trace.len() {
+        // Admit all requests that have arrived by `clock`.
+        while next_arrival < trace.len() && trace[next_arrival].arrival <= clock {
+            queue.push_back(&trace[next_arrival]);
+            next_arrival += 1;
         }
+        max_queue = max_queue.max(queue.len());
 
-        let makespan = completions.iter().map(|c| c.finish).fold(0.0, f64::max);
-        let mut lats: Vec<f64> = completions.iter().map(Completion::latency).collect();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| lats[((lats.len() as f64 - 1.0) * p) as usize];
-        ServeReport {
-            completed: completions.len(),
-            makespan,
-            throughput: completions.len() as f64 / makespan,
-            mean_latency: lats.iter().sum::<f64>() / lats.len() as f64,
-            p50_latency: pct(0.5),
-            p99_latency: pct(0.99),
-            max_queue_depth: max_queue,
-            reschedules,
-            reschedule_downtime: downtime,
-            energy,
+        let Some(req) = queue.pop_front() else {
+            // Idle until the next arrival.
+            clock = trace[next_arrival].arrival;
+            continue;
+        };
+
+        // Data-aware scheduling: feed the observed characteristics to
+        // the coordinator; it reschedules only past its hysteresis.
+        let sig: String =
+            req.workload.kernels.iter().map(|k| format!("{:?};", k.kind)).collect();
+        let events_before = coordinator.reschedule_events().len();
+        let sched = coordinator.process_batch(&req.workload).clone();
+        let rescheduled = coordinator.reschedule_events().len() > events_before;
+        if sig != current_sig || rescheduled || measured.is_none() {
+            current_sig = sig;
+            // Re-measure the (possibly new) schedule on ground truth.
+            measured = Some(evaluate_plan(&req.workload, &sched.plan(), &oracle, &comm, &power));
         }
+        if rescheduled {
+            reschedules += 1;
+            downtime += RESCHEDULE_DRAIN_COST;
+            clock += RESCHEDULE_DRAIN_COST;
+        }
+        let m = measured.as_ref().unwrap();
+
+        // Steady-state service: one inference per pipeline period.
+        let start = clock.max(req.arrival);
+        let finish = start + m.period.max(1e-12) + m.latency() - m.period; // queue + fill
+        clock = start + m.period; // next admission slot
+        energy += m.energy_per_inf;
+        completions.push(Completion { id: req.id, arrival: req.arrival, start, finish });
+    }
+
+    let makespan = completions.iter().map(|c| c.finish).fold(0.0, f64::max);
+    let lats = LatencySummary::from_unsorted(completions.iter().map(Completion::latency).collect());
+    let cache_after = coordinator.cache_stats().unwrap_or_default();
+    ServeReport {
+        completed: completions.len(),
+        makespan,
+        throughput: completions.len() as f64 / makespan,
+        mean_latency: lats.mean,
+        p50_latency: lats.p50,
+        p90_latency: lats.p90,
+        p99_latency: lats.p99,
+        max_queue_depth: max_queue,
+        reschedules,
+        reschedule_downtime: downtime,
+        energy,
+        cache: cache_after.since(&cache_before),
     }
 }
 
@@ -235,6 +268,24 @@ mod tests {
         assert!(report.reschedules >= 1, "the drift should trigger a reschedule");
         assert!(report.reschedules <= 4, "hysteresis must bound thrash: {}", report.reschedules);
         assert!(report.reschedule_downtime < report.makespan * 0.5);
+    }
+
+    #[test]
+    fn cached_server_hits_on_recurring_drift() {
+        use crate::scheduler::ScheduleCache;
+        let s = sys();
+        let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let oracle = OracleModels { gt: &gt };
+        let mut server =
+            Server::new(s, &oracle, Objective::Performance).with_cache(ScheduleCache::shared(8));
+        // Day-cycle drift repeated twice: the second cycle re-hits the
+        // first cycle's buckets, and within a phase every request hits.
+        let day: Vec<(Workload, usize)> =
+            [2u64, 150, 8, 2, 150, 8].iter().map(|m| (wl(m * 1_000_000), 5)).collect();
+        let report = server.serve(&generate_trace(&day, 20.0, 5));
+        assert_eq!(report.completed, 30);
+        assert!(report.cache.hit_rate() > 0.5, "hit rate {}", report.cache.hit_rate());
+        assert!(report.cache.misses <= 3, "one DP per distinct regime");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //!   theoretical-additive) and DYPE's three objective modes.
 
 use crate::config::{Interconnect, Objective, SystemSpec};
+use crate::coordinator::{generate_trace, MultiStreamReport, MultiStreamServer, StreamSpec};
 use crate::devices::GroundTruth;
 use crate::perfmodel::{calibrate, ModelRegistry, OracleModels, PerfEstimator};
 use crate::pipeline::PipelineSim;
@@ -177,6 +178,58 @@ pub fn run_case<E: PerfEstimator>(case: &Case, est: &E, reference_wl: &Workload)
     }
 }
 
+/// The canonical multi-stream serving scenario (DESIGN.md §Serving),
+/// shared by `examples/multi_stream_serving.rs`,
+/// `benches/scheduler_cache.rs`, and the multi-stream integration tests:
+///
+/// * **gcn-traffic** — a traffic-forecast GCN over a 1M-intersection road
+///   network whose interaction-graph edge count follows a day cycle
+///   (night → rush hour → evening), repeated `cycles` times so drift
+///   *recurs*;
+/// * **swin-transformer** — an 8-layer sliding-window transformer service
+///   cycling through its sequence-length regimes.
+///
+/// Each phase contributes `per_phase` requests. Recurrence is what the
+/// schedule cache monetizes: the number of distinct quantized regimes is
+/// fixed (5 GCN buckets + 3 transformer buckets), so the DP-miss count
+/// stays constant while hits grow with `cycles × per_phase`.
+pub fn multi_stream_scenario(cycles: usize, per_phase: usize, seed: u64) -> Vec<StreamSpec> {
+    assert!(cycles >= 1 && per_phase >= 1);
+    let day_edges: [u64; 6] =
+        [2_000_000, 20_000_000, 150_000_000, 50_000_000, 150_000_000, 8_000_000];
+    let mut gcn_phases = Vec::new();
+    for _ in 0..cycles {
+        for &edges in &day_edges {
+            let ds = Dataset::new("TF", "traffic", 1_000_000, edges, 200, 0.2);
+            gcn_phases.push((gnn::gcn_workload(&ds, 2, 128), per_phase));
+        }
+    }
+    let gcn_trace = generate_trace(&gcn_phases, 40.0, seed);
+
+    let regimes: [(u64, u64); 4] = [(2048, 512), (4096, 1024), (8192, 1024), (2048, 512)];
+    let mut tf_phases = Vec::new();
+    for _ in 0..cycles {
+        for &(seq, win) in &regimes {
+            tf_phases.push((transformer::transformer_workload(seq, win, 8), per_phase));
+        }
+    }
+    let tf_trace = generate_trace(&tf_phases, 20.0, seed + 1);
+
+    vec![
+        StreamSpec::new("gcn-traffic", Objective::Performance, gcn_trace),
+        StreamSpec::new("swin-transformer", Objective::Performance, tf_trace),
+    ]
+}
+
+/// Serve `streams` on `sys` with the ground-truth oracle as `f_perf`
+/// (the example/bench/test entry point for multi-stream serving).
+pub fn run_multi_stream(sys: &SystemSpec, streams: &[StreamSpec]) -> MultiStreamReport {
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let mut server = MultiStreamServer::new(sys.clone(), &oracle);
+    server.serve(streams)
+}
+
 /// Reference workload for static-plan tuning: same model family on the
 /// paper's reference configuration (ogbn-arxiv for GNNs; the mid-grid
 /// point for transformers).
@@ -199,6 +252,19 @@ mod tests {
         assert_eq!(gnn_cases().len(), 36); // 2 × 6 × 3
         assert_eq!(table3_cases().len(), 42); // + 6 reduced-system
         assert_eq!(transformer_cases().len(), 51); // 17 × 3
+    }
+
+    #[test]
+    fn multi_stream_scenario_recurring_drift_hits_cache() {
+        let streams = multi_stream_scenario(2, 4, 9);
+        assert_eq!(streams.len(), 2);
+        assert_eq!(streams[0].trace.len(), 2 * 6 * 4);
+        assert_eq!(streams[1].trace.len(), 2 * 4 * 4);
+        let r = run_multi_stream(&SystemSpec::paper_testbed(Interconnect::Pcie4), &streams);
+        assert_eq!(r.total_completed, 48 + 32);
+        // 5 + 3 distinct quantized regimes → ≤ 8 DP runs out of 80 lookups.
+        assert!(r.cache.misses <= 8, "misses {}", r.cache.misses);
+        assert!(r.cache.hit_rate() > 0.5, "hit rate {}", r.cache.hit_rate());
     }
 
     #[test]

@@ -8,8 +8,12 @@
 //!   stages and allocates heterogeneous devices (GPUs/FPGAs) per stage,
 //!   driven by data-aware kernel performance models ([`perfmodel`]) over a
 //!   simulated heterogeneous testbed ([`devices`]); plus the streaming
-//!   pipeline executor ([`pipeline`]) and the serving coordinator
-//!   ([`coordinator`]) that reschedules when input characteristics drift.
+//!   pipeline executor ([`pipeline`]) and the serving layer
+//!   ([`coordinator`]): drift-aware rescheduling with hysteresis, a
+//!   quantized-feature schedule cache ([`scheduler::ScheduleCache`]) that
+//!   turns reschedules on recurring drift into cache hits, and a
+//!   multi-stream server that partitions the device pool across
+//!   concurrent request streams ([`coordinator::MultiStreamServer`]).
 //! * **L2/L1 (build time, `python/`)** — the workloads' actual compute
 //!   (GCN / GIN / sliding-window transformer layers composed from Pallas
 //!   kernels), AOT-lowered to HLO text artifacts executed by [`runtime`]
@@ -32,11 +36,49 @@ pub mod util;
 pub mod workload;
 
 /// Convenience re-exports for examples and downstream users.
+///
+/// Scheduling one workload end to end:
+///
+/// ```
+/// use dype::prelude::*;
+///
+/// let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+/// let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+/// let est = OracleModels { gt: &gt };
+/// let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+/// let sched = DpScheduler::new(&sys, &est).schedule(&wl, Objective::Performance);
+/// assert!(sched.validate(wl.len(), sys.n_fpga, sys.n_gpu).is_ok());
+/// assert!(sched.throughput() > 0.0);
+/// ```
+///
+/// Serving a drifting request stream with a schedule cache attached —
+/// recurring drift re-hits memoized plans instead of re-running the DP:
+///
+/// ```
+/// use dype::prelude::*;
+///
+/// let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+/// let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+/// let est = OracleModels { gt: &gt };
+/// let night = gnn::gcn_workload(&Dataset::synthetic2(), 2, 128);
+/// let rush = gnn::gcn_workload(&Dataset::synthetic1(), 2, 128);
+/// let trace = generate_trace(&[(night.clone(), 5), (rush, 5), (night, 5)], 20.0, 1);
+///
+/// let mut server = Server::new(sys, &est, Objective::Performance)
+///     .with_cache(ScheduleCache::shared(16));
+/// let report = server.serve(&trace);
+/// assert_eq!(report.completed, 15);
+/// assert!(report.p50_latency <= report.p99_latency);
+/// assert!(report.cache.hit_rate() > 0.5, "recurring drift is served from cache");
+/// ```
 pub mod prelude {
     pub use crate::config::{Interconnect, Objective, SystemSpec};
+    pub use crate::coordinator::{
+        generate_trace, Coordinator, MultiStreamServer, Server, StreamSpec,
+    };
     pub use crate::devices::{DeviceType, GroundTruth};
-    pub use crate::perfmodel::{calibrate, ModelRegistry};
+    pub use crate::perfmodel::{calibrate, ModelRegistry, OracleModels};
     pub use crate::pipeline::sim::PipelineSim;
-    pub use crate::scheduler::{baselines, DpScheduler, Schedule, Stage};
+    pub use crate::scheduler::{baselines, CacheStats, DpScheduler, Schedule, ScheduleCache, Stage};
     pub use crate::workload::{gnn, transformer, Dataset, KernelDesc, KernelKind, Workload};
 }

@@ -1,5 +1,6 @@
-//! Reporting helpers: aligned console tables, ratio statistics, and the
-//! geometric/arithmetic means the paper's Table IV aggregates with.
+//! Reporting helpers: aligned console tables, ratio statistics, latency
+//! percentiles for the serving reports, and the geometric/arithmetic
+//! means the paper's Table IV aggregates with.
 
 /// Arithmetic mean (the paper averages improvement ratios arithmetically).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -15,6 +16,45 @@ pub fn geomean(xs: &[f64]) -> f64 {
         return f64::NAN;
     }
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// `p`-th quantile (`0.0..=1.0`) of an ascending-sorted slice, by the
+/// nearest-rank method the serving reports use (`p=0.5` → median).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    assert!((0.0..=1.0).contains(&p), "quantile {p} outside [0, 1]");
+    sorted[((sorted.len() as f64 - 1.0) * p).round() as usize]
+}
+
+/// Latency distribution summary — the per-stream numbers a serving
+/// deployment watches (p50/p90/p99 plus mean and max), in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a sample of latencies (any order; consumed for sorting).
+    pub fn from_unsorted(mut xs: Vec<f64>) -> LatencySummary {
+        assert!(!xs.is_empty(), "empty latency sample");
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySummary {
+            p50: percentile(&xs, 0.50),
+            p90: percentile(&xs, 0.90),
+            p99: percentile(&xs, 0.99),
+            mean: xs.iter().sum::<f64>() / xs.len() as f64,
+            max: *xs.last().unwrap(),
+        }
+    }
+}
+
+/// Format a fraction as a percentage (`0.732` → `73.2%`).
+pub fn fmt_percent(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
 }
 
 /// Simple fixed-width console table writer for the bench harnesses.
@@ -95,5 +135,18 @@ mod tests {
     #[test]
     fn ratio_format_matches_paper_style() {
         assert_eq!(fmt_ratio(1.534), "1.53x");
+        assert_eq!(fmt_percent(0.7321), "73.2%");
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.5), 51.0); // round(99·0.5)=50 → xs[50]
+        let s = LatencySummary::from_unsorted(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
     }
 }

@@ -21,6 +21,55 @@ pub fn model_key(kind: &KernelKind, dev: DeviceType) -> (&'static str, DeviceTyp
     (kind.tag(), dev)
 }
 
+/// Octave (log₂) bucket of a dimension — the shape quantizer behind the
+/// schedule cache. Two values land in the same bucket iff they are within
+/// a factor of two of the same power of two, which is far finer than the
+/// granularity at which Algorithm 1 changes its mind about a schedule.
+pub fn shape_bucket(x: u64) -> u32 {
+    // floor(log2(max(x, 1))): 0→0, 1→0, 2..3→1, 4..7→2, …
+    63 - x.max(1).leading_zeros()
+}
+
+/// Quarter-decade bucket of a density/sparsity value in (0, 1].
+pub fn density_bucket(d: f64) -> i32 {
+    if !(d > 0.0) {
+        return i32::MIN;
+    }
+    // floor(4·log10(d)): quarter-decade resolution — S1 (2.3e-3) and S2
+    // (2.8e-4) land ~4 buckets apart; a ±30% drift stays in one bucket.
+    (4.0 * d.log10()).floor() as i32
+}
+
+/// The quantized data-characteristic signature of one kernel — the unit
+/// the [`crate::scheduler::ScheduleCache`] keys on. Everything that feeds
+/// the §V feature builders above is represented, but coarsened: exact
+/// shapes map to octave buckets and densities to quarter-decades, so
+/// recurring drift (e.g. rush-hour traffic revisiting yesterday's edge
+/// count ±20%) re-hits the cached schedule instead of re-running the DP.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelBucket {
+    /// Kernel family (`spmm`/`gemm`/`winattn`).
+    pub tag: &'static str,
+    /// Octave buckets of the family's shape dimensions.
+    pub dims: [u32; 4],
+    /// Quarter-decade bucket of the operand density (sparsity signature).
+    pub density: i32,
+}
+
+/// Quantize a kernel's data characteristics into its cache bucket.
+pub fn kernel_bucket(kind: &KernelKind) -> KernelBucket {
+    let dims = match *kind {
+        KernelKind::SpMM { m, k, n, nnz } => {
+            [shape_bucket(m), shape_bucket(k), shape_bucket(n), shape_bucket(nnz)]
+        }
+        KernelKind::Gemm { m, k, n } => [shape_bucket(m), shape_bucket(k), shape_bucket(n), 0],
+        KernelKind::WindowAttn { seq, window, heads, dim } => {
+            [shape_bucket(seq), shape_bucket(window), shape_bucket(heads), shape_bucket(dim)]
+        }
+    };
+    KernelBucket { tag: kind.tag(), dims, density: density_bucket(kind.density()) }
+}
+
 /// Build the feature vector for `kind` on `dev`.
 pub fn features(kind: &KernelKind, dev: DeviceType, fpga: &FpgaConfig) -> Vec<f64> {
     match (kind, dev) {
@@ -119,6 +168,38 @@ mod tests {
         let f = features(&k, DeviceType::Fpga, &FPGA());
         let expect = (4096.0 * 201.0 + 904.0) / 421e6;
         assert!((f[0] - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shape_buckets_are_octaves() {
+        assert_eq!(shape_bucket(0), 0);
+        assert_eq!(shape_bucket(1), 0);
+        assert_eq!(shape_bucket(2), 1);
+        assert_eq!(shape_bucket(3), 1);
+        assert_eq!(shape_bucket(4), 2);
+        assert_eq!(shape_bucket(1 << 20), 20);
+        assert_eq!(shape_bucket((1 << 21) - 1), 20);
+    }
+
+    #[test]
+    fn density_buckets_quarter_decades() {
+        assert_eq!(density_bucket(1.0), 0);
+        // ±30% drift around a density stays within one bucket step.
+        assert!((density_bucket(1e-3) - density_bucket(1.3e-3)).abs() <= 1);
+        // An order of magnitude moves 4 buckets.
+        assert_eq!(density_bucket(1e-3) - density_bucket(1e-2), -4);
+        assert_eq!(density_bucket(0.0), i32::MIN);
+    }
+
+    #[test]
+    fn kernel_buckets_separate_families_and_scales() {
+        let a = KernelKind::SpMM { m: 1_000_000, k: 1_000_000, n: 128, nnz: 2_000_000 };
+        let drifted = KernelKind::SpMM { m: 1_000_000, k: 1_000_000, n: 128, nnz: 2_050_000 };
+        let rush = KernelKind::SpMM { m: 1_000_000, k: 1_000_000, n: 128, nnz: 150_000_000 };
+        assert_eq!(kernel_bucket(&a), kernel_bucket(&drifted), "small drift: same bucket");
+        assert_ne!(kernel_bucket(&a), kernel_bucket(&rush), "75x drift: new bucket");
+        let g = KernelKind::Gemm { m: 1_000_000, k: 128, n: 128 };
+        assert_ne!(kernel_bucket(&a).tag, kernel_bucket(&g).tag);
     }
 
     #[test]

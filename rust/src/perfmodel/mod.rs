@@ -12,6 +12,8 @@ use crate::devices::{CommModel, DeviceType, FpgaConfig};
 use crate::workload::KernelKind;
 use linreg::LinReg;
 
+pub use features::{kernel_bucket, KernelBucket};
+
 /// Parallel-efficiency loss per extra device — the scheduler-side mirror
 /// of `devices::ground_truth::MULTI_DEV_ALPHA` (the framework profiles the
 /// scaling law once at install time; per-kernel noise remains unknown).

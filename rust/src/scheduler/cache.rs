@@ -1,0 +1,380 @@
+//! Schedule cache — memoized Algorithm-1 results keyed by quantized
+//! workload characteristics (DESIGN.md §Perf).
+//!
+//! Rescheduling sits on the serving path: every time the coordinator sees
+//! drifted input characteristics it runs the full DP, which is the
+//! dominant latency of a reschedule (milliseconds for deep workloads —
+//! see `benches/scheduler_cache.rs`). But drift *recurs*: rush-hour
+//! traffic looks like yesterday's rush hour, a sliding-window service
+//! cycles through the same few sequence-length regimes. The cache
+//! exploits that by memoizing the *structure* of past DP decisions —
+//! the [`StagePlan`] vector — keyed by
+//! [`crate::perfmodel::features::kernel_bucket`]'s quantized
+//! sparsity/shape buckets, the objective, and a fingerprint of the
+//! [`SystemSpec`].
+//!
+//! On a hit the caller re-times the cached plan under the current
+//! estimator ([`crate::scheduler::evaluate_plan`], O(stages·kernels))
+//! instead of re-running the DP (O(|wl|²·F·G·(F+G))). Timings therefore
+//! always reflect the *actual* observed characteristics; only the
+//! grouping/allocation decision is reused. Because the key contains every
+//! kernel's family tag in order, a cached plan is always structurally
+//! valid for the workload that hits it.
+//!
+//! Capacity is bounded with LRU eviction, and keys embed the system
+//! fingerprint, so changing the device inventory (or handing a stream a
+//! different partition of it) can never resurrect a stale plan.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{Objective, SystemSpec};
+use crate::perfmodel::{kernel_bucket, KernelBucket};
+use crate::workload::Workload;
+
+use super::pipeline_def::StagePlan;
+
+/// A schedule-cache key: system fingerprint × objective × the quantized
+/// per-kernel characteristic buckets, in chain order.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    sys_fp: u64,
+    obj_fp: u64,
+    kernels: Vec<KernelBucket>,
+}
+
+impl CacheKey {
+    /// Build the key for scheduling `wl` under `objective` on the system
+    /// identified by `sys_fp` (see [`system_fingerprint`]).
+    pub fn new(sys_fp: u64, wl: &Workload, objective: Objective) -> CacheKey {
+        CacheKey {
+            sys_fp,
+            obj_fp: objective_fingerprint(objective),
+            kernels: wl.kernels.iter().map(|k| kernel_bucket(&k.kind)).collect(),
+        }
+    }
+}
+
+/// FNV-1a over a byte stream — the in-tree stand-in for a hashing crate.
+fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Fingerprint of everything about a [`SystemSpec`] that can change a
+/// schedule: inventory, interconnect generation, and every device
+/// parameter. Two specs with equal fingerprints produce identical DP
+/// inputs, so cached plans transfer between them.
+pub fn system_fingerprint(sys: &SystemSpec) -> u64 {
+    let mut bytes: Vec<u8> = Vec::with_capacity(200);
+    bytes.extend((sys.n_fpga as u64).to_le_bytes());
+    bytes.extend((sys.n_gpu as u64).to_le_bytes());
+    bytes.push(match sys.interconnect {
+        crate::devices::Interconnect::Pcie4 => 0,
+        crate::devices::Interconnect::Pcie5 => 1,
+        crate::devices::Interconnect::Cxl3 => 2,
+    });
+    let g = &sys.gpu;
+    for v in [
+        g.peak_flops,
+        g.mem_bw,
+        g.launch_overhead,
+        g.dynamic_power,
+        g.static_power,
+        g.transfer_power,
+        g.pcie_bw,
+    ] {
+        bytes.extend(v.to_bits().to_le_bytes());
+    }
+    let f = &sys.fpga;
+    for v in [
+        f.spmm_freq,
+        f.spmm_macs,
+        f.attn_freq,
+        f.attn_t_pipeline,
+        f.attn_t_init,
+        f.gemm_peak_flops,
+        f.mem_bw,
+        f.launch_overhead,
+        f.spmm_dynamic_power,
+        f.attn_dynamic_power,
+        f.static_power,
+        f.transfer_power,
+        f.pcie_bw,
+    ] {
+        bytes.extend(v.to_bits().to_le_bytes());
+    }
+    fnv1a(bytes)
+}
+
+/// Fingerprint of an [`Objective`], including its numeric parameters.
+pub fn objective_fingerprint(obj: Objective) -> u64 {
+    let (disc, param) = match obj {
+        Objective::Performance => (0u8, 0u64),
+        Objective::Energy => (1, 0),
+        Objective::Balanced { min_throughput_frac } => (2, min_throughput_frac.to_bits()),
+        Objective::QoS { min_throughput } => (3, min_throughput.to_bits()),
+    };
+    fnv1a(std::iter::once(disc).chain(param.to_le_bytes()))
+}
+
+/// Running hit/miss/eviction counters, cheap to copy into reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries dropped by explicit invalidation ([`ScheduleCache::clear`]).
+    pub invalidations: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction over all lookups so far (0.0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// Counter-wise difference vs an earlier snapshot (per-stream
+    /// attribution in the multi-stream server).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
+            invalidations: self.invalidations - earlier.invalidations,
+        }
+    }
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/{} hits ({:.1}%), {} evictions",
+            self.hits,
+            self.lookups(),
+            self.hit_rate() * 100.0,
+            self.evictions
+        )
+    }
+}
+
+/// The memoization store: quantized key → frozen [`StagePlan`] vector,
+/// LRU-bounded. See the module docs for the retiming contract.
+#[derive(Debug)]
+pub struct ScheduleCache {
+    capacity: usize,
+    entries: HashMap<CacheKey, Vec<StagePlan>>,
+    /// Recency order, most recent at the back. Touched on hit and insert.
+    lru: VecDeque<CacheKey>,
+    stats: CacheStats,
+}
+
+/// Thread-shared handle used by coordinators serving concurrent streams.
+pub type SharedScheduleCache = Arc<Mutex<ScheduleCache>>;
+
+impl ScheduleCache {
+    /// A cache holding at most `capacity` distinct quantized schedules.
+    pub fn new(capacity: usize) -> ScheduleCache {
+        assert!(capacity >= 1, "zero-capacity cache");
+        ScheduleCache {
+            capacity,
+            entries: HashMap::new(),
+            lru: VecDeque::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// A shareable cache for multi-stream serving.
+    pub fn shared(capacity: usize) -> SharedScheduleCache {
+        Arc::new(Mutex::new(ScheduleCache::new(capacity)))
+    }
+
+    /// Look up the plan for `key`, counting a hit or miss.
+    pub fn lookup(&mut self, key: &CacheKey) -> Option<Vec<StagePlan>> {
+        let hit = self.entries.get(key).cloned();
+        match hit {
+            Some(plan) => {
+                self.stats.hits += 1;
+                self.touch(key);
+                Some(plan)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Memoize a freshly-computed plan, evicting the least-recently-used
+    /// entry when full.
+    pub fn insert(&mut self, key: CacheKey, plan: Vec<StagePlan>) {
+        if self.entries.insert(key.clone(), plan).is_none() {
+            self.lru.push_back(key);
+        } else {
+            self.touch(&key);
+        }
+        while self.entries.len() > self.capacity {
+            if let Some(old) = self.lru.pop_front() {
+                self.entries.remove(&old);
+                self.stats.evictions += 1;
+            }
+        }
+    }
+
+    fn touch(&mut self, key: &CacheKey) {
+        if let Some(pos) = self.lru.iter().position(|k| k == key) {
+            let k = self.lru.remove(pos).unwrap();
+            self.lru.push_back(k);
+        }
+    }
+
+    /// Drop every entry (e.g. after a device-parameter recalibration whose
+    /// fingerprint the caller does not thread through keys).
+    pub fn clear(&mut self) {
+        self.stats.invalidations += self.entries.len() as u64;
+        self.entries.clear();
+        self.lru.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{DeviceType, Interconnect};
+    use crate::workload::{gnn, Dataset};
+
+    fn plan() -> Vec<StagePlan> {
+        vec![StagePlan { first: 0, last: 3, dev: DeviceType::Gpu, n: 1 }]
+    }
+
+    fn sys() -> SystemSpec {
+        SystemSpec::paper_testbed(Interconnect::Pcie4)
+    }
+
+    #[test]
+    fn hit_within_bucket_miss_across_boundary() {
+        let s = sys();
+        let fp = system_fingerprint(&s);
+        let mut cache = ScheduleCache::new(8);
+
+        let base = gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 2_000_000, 200, 0.2), 2, 128);
+        let drift = gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 2_040_000, 200, 0.2), 2, 128);
+        let rush = gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 150_000_000, 200, 0.2), 2, 128);
+
+        let k_base = CacheKey::new(fp, &base, Objective::Performance);
+        assert!(cache.lookup(&k_base).is_none());
+        cache.insert(k_base, plan());
+
+        // ~2% drift quantizes to the same key → hit.
+        let k_drift = CacheKey::new(fp, &drift, Objective::Performance);
+        assert!(cache.lookup(&k_drift).is_some());
+
+        // 75× drift crosses bucket boundaries → miss.
+        let k_rush = CacheKey::new(fp, &rush, Objective::Performance);
+        assert!(cache.lookup(&k_rush).is_none());
+
+        // Same characteristics, different objective → miss.
+        let k_energy = CacheKey::new(fp, &drift, Objective::Energy);
+        assert!(cache.lookup(&k_energy).is_none());
+
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses), (1, 3));
+        assert!((st.hit_rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn system_change_invalidates_by_fingerprint() {
+        let a = sys();
+        let mut b = sys();
+        b.n_gpu = 1; // shrink the inventory
+        let mut c = sys();
+        c.gpu.peak_flops *= 2.0; // same inventory, different silicon
+
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let mut cache = ScheduleCache::new(8);
+        cache.insert(CacheKey::new(system_fingerprint(&a), &wl, Objective::Performance), plan());
+
+        for other in [&b, &c] {
+            let k = CacheKey::new(system_fingerprint(other), &wl, Objective::Performance);
+            assert!(cache.lookup(&k).is_none(), "changed SystemSpec must miss");
+        }
+        let k_same = CacheKey::new(system_fingerprint(&a), &wl, Objective::Performance);
+        assert!(cache.lookup(&k_same).is_some());
+    }
+
+    #[test]
+    fn lru_eviction_keeps_recent_entries() {
+        let s = sys();
+        let fp = system_fingerprint(&s);
+        let mut cache = ScheduleCache::new(2);
+        let wls: Vec<_> = [1u64, 9, 70]
+            .iter()
+            .map(|m| {
+                gnn::gcn_workload(
+                    &Dataset::new("T", "t", 1_000_000, m * 1_000_000, 200, 0.2),
+                    2,
+                    128,
+                )
+            })
+            .collect();
+        let keys: Vec<_> =
+            wls.iter().map(|w| CacheKey::new(fp, w, Objective::Performance)).collect();
+        cache.insert(keys[0].clone(), plan());
+        cache.insert(keys[1].clone(), plan());
+        assert!(cache.lookup(&keys[0]).is_some()); // refresh 0 → 1 is LRU
+        cache.insert(keys[2].clone(), plan());
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(&keys[1]).is_none(), "LRU entry evicted");
+        assert!(cache.lookup(&keys[0]).is_some());
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn clear_counts_invalidations() {
+        let s = sys();
+        let fp = system_fingerprint(&s);
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let mut cache = ScheduleCache::new(4);
+        cache.insert(CacheKey::new(fp, &wl, Objective::Performance), plan());
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().invalidations, 1);
+    }
+
+    #[test]
+    fn objective_fingerprints_distinguish_parameters() {
+        assert_ne!(
+            objective_fingerprint(Objective::Balanced { min_throughput_frac: 0.7 }),
+            objective_fingerprint(Objective::Balanced { min_throughput_frac: 0.9 }),
+        );
+        assert_ne!(
+            objective_fingerprint(Objective::Performance),
+            objective_fingerprint(Objective::Energy),
+        );
+    }
+}

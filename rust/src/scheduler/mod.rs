@@ -3,6 +3,7 @@
 //! Pareto analysis, and the exhaustive optimality reference.
 
 pub mod baselines;
+pub mod cache;
 pub mod dp;
 pub mod energy;
 pub mod evaluate;
@@ -10,6 +11,7 @@ pub mod oracle;
 pub mod pareto;
 pub mod pipeline_def;
 
+pub use cache::{system_fingerprint, CacheKey, CacheStats, ScheduleCache, SharedScheduleCache};
 pub use dp::{DpScheduler, DpTables, FinalState, TableKind};
 pub use energy::PowerTable;
 pub use evaluate::evaluate_plan;

@@ -1,0 +1,205 @@
+//! Integration tests for multi-stream serving and the schedule cache:
+//! coordinator reschedule hysteresis, cache hit/miss behaviour across
+//! quantized-feature boundaries, invalidation on `SystemSpec` changes,
+//! and starvation-freedom with ≥2 concurrent streams under recurring
+//! drift (the ISSUE-1 acceptance scenario).
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::coordinator::{partition_system, Coordinator, MultiStreamServer, StreamSpec};
+use dype::coordinator::server::generate_trace;
+use dype::devices::GroundTruth;
+use dype::experiments::{multi_stream_scenario, run_multi_stream};
+use dype::perfmodel::OracleModels;
+use dype::scheduler::{cache::CacheKey, system_fingerprint, ScheduleCache};
+use dype::workload::{gnn, Dataset, Workload};
+
+fn sys() -> SystemSpec {
+    SystemSpec::paper_testbed(Interconnect::Pcie4)
+}
+
+fn traffic(edges: u64) -> Workload {
+    gnn::gcn_workload(&Dataset::new("TF", "traffic", 1_000_000, edges, 200, 0.2), 2, 128)
+}
+
+// ---- acceptance scenario ----------------------------------------------
+
+#[test]
+fn two_streams_with_recurring_drift_hit_cache_and_never_starve() {
+    let streams = multi_stream_scenario(2, 5, 7);
+    assert!(streams.len() >= 2, "acceptance requires ≥ 2 concurrent streams");
+    let report = run_multi_stream(&sys(), &streams);
+
+    // No starvation: every request of every stream completes.
+    let offered: usize = streams.iter().map(|s| s.trace.len()).sum();
+    assert_eq!(report.total_completed, offered);
+    for (sr, spec) in report.streams.iter().zip(&streams) {
+        assert_eq!(sr.report.completed, spec.trace.len(), "{} starved", sr.name);
+        // Per-stream latency percentiles are present and ordered.
+        assert!(sr.report.p50_latency > 0.0);
+        assert!(sr.report.p50_latency <= sr.report.p90_latency);
+        assert!(sr.report.p90_latency <= sr.report.p99_latency);
+        assert!(sr.report.p99_latency.is_finite());
+    }
+
+    // Recurring drift is served from the cache: hit rate > 50%.
+    assert!(
+        report.cache.hit_rate() > 0.5,
+        "hit rate {:.2} on repeated workload characteristics",
+        report.cache.hit_rate()
+    );
+    assert!(report.fairness > 0.4, "fairness index {:.3}", report.fairness);
+}
+
+#[test]
+fn every_stream_gets_devices_and_the_pool_is_conserved() {
+    let s = sys();
+    let streams = multi_stream_scenario(1, 3, 21);
+    let demands: Vec<f64> = streams.iter().map(StreamSpec::demand).collect();
+    let parts = partition_system(&s, &demands);
+    assert_eq!(parts.iter().map(|p| p.n_fpga).sum::<usize>(), s.n_fpga);
+    assert_eq!(parts.iter().map(|p| p.n_gpu).sum::<usize>(), s.n_gpu);
+    for p in &parts {
+        assert!(p.n_fpga + p.n_gpu >= 1);
+    }
+}
+
+// ---- reschedule hysteresis --------------------------------------------
+
+#[test]
+fn hysteresis_bounds_reschedules_under_oscillating_drift() {
+    let s = sys();
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let night = traffic(2_000_000);
+    let rush = traffic(150_000_000);
+
+    // An infinite threshold never swaps after the first schedule…
+    let mut frozen = Coordinator::new(s.clone(), &oracle, Objective::Performance);
+    frozen.reschedule_threshold = f64::INFINITY;
+    // …a zero threshold chases every profitable drift.
+    let mut eager = Coordinator::new(s.clone(), &oracle, Objective::Performance);
+    eager.reschedule_threshold = 0.0;
+    // The default threshold sits between the two.
+    let mut default = Coordinator::new(s, &oracle, Objective::Performance);
+
+    for _ in 0..5 {
+        for wl in [&night, &rush] {
+            frozen.process_batch(wl);
+            eager.process_batch(wl);
+            default.process_batch(wl);
+        }
+    }
+    assert_eq!(frozen.reschedule_events().len(), 0);
+    assert!(
+        eager.reschedule_events().len() >= default.reschedule_events().len(),
+        "eager {} < default {}",
+        eager.reschedule_events().len(),
+        default.reschedule_events().len()
+    );
+    for e in default.reschedule_events() {
+        assert!(e.estimated_gain > 0.05, "swap below hysteresis: {}", e.estimated_gain);
+    }
+}
+
+#[test]
+fn cached_coordinator_applies_the_same_hysteresis() {
+    let s = sys();
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let cache = ScheduleCache::shared(16);
+    let mut plain = Coordinator::new(s.clone(), &oracle, Objective::Performance);
+    let mut cached =
+        Coordinator::new(s, &oracle, Objective::Performance).with_cache(cache);
+    for _ in 0..4 {
+        for edges in [2_000_000u64, 150_000_000] {
+            let wl = traffic(edges);
+            plain.process_batch(&wl);
+            cached.process_batch(&wl);
+        }
+    }
+    assert_eq!(
+        plain.reschedule_events().len(),
+        cached.reschedule_events().len(),
+        "memoization must not change the reschedule policy"
+    );
+}
+
+// ---- schedule cache ----------------------------------------------------
+
+#[test]
+fn cache_hits_inside_bucket_misses_across_boundary() {
+    let s = sys();
+    let fp = system_fingerprint(&s);
+    let mut cache = ScheduleCache::new(8);
+    let base = traffic(2_000_000);
+    let drift = traffic(2_080_000); // +4%: same octave/density buckets
+    let surge = traffic(150_000_000); // 75×: crosses bucket boundaries
+
+    let k = CacheKey::new(fp, &base, Objective::Performance);
+    assert!(cache.lookup(&k).is_none());
+    cache.insert(
+        k,
+        vec![dype::scheduler::StagePlan {
+            first: 0,
+            last: base.len() - 1,
+            dev: dype::devices::DeviceType::Gpu,
+            n: 1,
+        }],
+    );
+    assert!(cache.lookup(&CacheKey::new(fp, &drift, Objective::Performance)).is_some());
+    assert!(cache.lookup(&CacheKey::new(fp, &surge, Objective::Performance)).is_none());
+}
+
+#[test]
+fn cache_invalidated_when_system_spec_changes() {
+    let a = sys();
+    let mut shrunk = sys();
+    shrunk.n_fpga = 1;
+    let mut retuned = sys();
+    retuned.fpga.spmm_freq *= 1.5;
+
+    let gt = GroundTruth::new(a.gpu.clone(), a.fpga.clone(), a.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let cache = ScheduleCache::shared(16);
+    let wl = traffic(2_000_000);
+
+    let mut c1 = Coordinator::new(a, &oracle, Objective::Performance).with_cache(cache.clone());
+    c1.process_batch(&wl); // miss + insert
+    c1.process_batch(&wl); // hit
+    assert_eq!(c1.cache_stats().unwrap().hits, 1);
+
+    // A coordinator over a *different* system sharing the same cache must
+    // not reuse the stale plan: its fingerprint scopes the key space.
+    for other in [shrunk, retuned] {
+        let g = GroundTruth::new(other.gpu.clone(), other.fpga.clone(), other.comm_model());
+        let o = OracleModels { gt: &g };
+        let before = cache.lock().unwrap().stats().misses;
+        let mut c2 =
+            Coordinator::new(other, &o, Objective::Performance).with_cache(cache.clone());
+        c2.process_batch(&wl);
+        assert_eq!(cache.lock().unwrap().stats().misses, before + 1);
+    }
+}
+
+#[test]
+fn single_and_multi_stream_servers_agree_on_cache_semantics() {
+    // A lone stream served through the multi-stream front-end behaves like
+    // the single-stream Server: same completions, same miss count.
+    let s = sys();
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let phases = vec![(traffic(2_000_000), 8), (traffic(150_000_000), 8), (traffic(2_000_000), 8)];
+    let trace = generate_trace(&phases, 20.0, 3);
+
+    let mut single = dype::coordinator::Server::new(s.clone(), &oracle, Objective::Performance)
+        .with_cache(ScheduleCache::shared(8));
+    let sr = single.serve(&trace);
+
+    let streams = vec![StreamSpec::new("solo", Objective::Performance, trace)];
+    let mut multi = MultiStreamServer::new(s, &oracle);
+    let mr = multi.serve(&streams);
+
+    assert_eq!(sr.completed, mr.total_completed);
+    assert_eq!(sr.cache.misses, mr.cache.misses);
+    assert!(sr.cache.hit_rate() > 0.5 && mr.cache.hit_rate() > 0.5);
+}
