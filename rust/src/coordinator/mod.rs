@@ -24,7 +24,7 @@ pub mod multi;
 pub mod server;
 
 pub use multi::{partition_system, MultiStreamReport, MultiStreamServer, StreamReport, StreamSpec};
-pub use server::{generate_trace, Request, ServeReport, Server};
+pub use server::{generate_trace, serve_trace, Completion, Request, ServeReport, Server};
 
 use crate::config::{Objective, SystemSpec};
 use crate::perfmodel::PerfEstimator;
@@ -89,6 +89,21 @@ impl<'a, E: PerfEstimator> Coordinator<'a, E> {
     /// combined counters of every coordinator using them.
     pub fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| c.lock().unwrap().stats())
+    }
+
+    /// Move this coordinator onto a different device inventory — the
+    /// serving engine calls this when a lease migration hands the stream
+    /// a new partition. The current schedule is dropped (it may allocate
+    /// devices the new partition does not have), so the next
+    /// [`Coordinator::process_batch`] schedules afresh — *without*
+    /// logging a reschedule event, because the migration drain is charged
+    /// separately by the engine. Reschedule history, hysteresis setting,
+    /// and the attached cache are preserved; cache keys re-scope
+    /// automatically through the new system fingerprint.
+    pub fn retarget(&mut self, sys: SystemSpec) {
+        self.sys_fp = system_fingerprint(&sys);
+        self.sys = sys;
+        self.current = None;
     }
 
     /// Produce the best-known schedule for `wl`: a cache hit re-times the
@@ -276,6 +291,26 @@ mod tests {
             cached.process_batch(&wl).mnemonic()
         );
         assert_eq!(cached.cache_stats().unwrap().hits, 1);
+    }
+
+    #[test]
+    fn retarget_reschedules_fresh_without_logging_an_event() {
+        let (s, g) = setup();
+        let oracle = OracleModels { gt: &g };
+        let mut c = Coordinator::new(s.clone(), &oracle, Objective::Performance);
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        c.process_batch(&wl);
+        assert!(c.current_schedule().is_some());
+
+        let shrunk = SystemSpec { n_fpga: 1, n_gpu: 1, ..s };
+        c.retarget(shrunk.clone());
+        assert!(c.current_schedule().is_none(), "migration drops the stale schedule");
+        let sched = c.process_batch(&wl).clone();
+        assert!(
+            sched.validate(wl.len(), shrunk.n_fpga, shrunk.n_gpu).is_ok(),
+            "fresh schedule must fit the new inventory"
+        );
+        assert!(c.reschedule_events().is_empty(), "migration is not a reschedule event");
     }
 
     #[test]

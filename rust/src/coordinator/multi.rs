@@ -5,38 +5,37 @@
 //!
 //! The paper's serving story is a single stream of continuous inferences;
 //! a deployment at the ROADMAP's "millions of users" scale multiplexes
-//! *many*. This module adds the three pieces that requires:
+//! *many*. Since PR 2 the heavy lifting lives in the
+//! [`crate::engine`] subsystem: [`MultiStreamServer::serve`] is a thin
+//! front-end over [`crate::engine::ServingEngine`], which
 //!
-//! 1. **Device partitioning** — [`partition_system`] splits the
-//!    [`SystemSpec`] inventory across the active streams in proportion to
-//!    their offered FLOP rate (largest-remainder apportionment per device
-//!    type, with a fix-up guaranteeing every stream at least one device —
-//!    the spatial-multiplexing analogue of fair-share scheduling, and the
-//!    reason no stream can starve: each owns hardware that makes
-//!    progress).
-//! 2. **Per-stream admission queues** — each stream runs the FIFO
-//!    admission/batching loop of [`super::server::serve_trace`] against
-//!    its own partition, with its own [`Coordinator`] applying the
-//!    reschedule-hysteresis policy to its own drift.
-//! 3. **A shared schedule cache** — all per-stream coordinators memoize
-//!    into one [`crate::scheduler::ScheduleCache`]; keys embed each
-//!    partition's fingerprint, so streams never collide but recurring
-//!    drift within a stream (and identical twin streams on identical
-//!    partitions) turn reschedules into cache hits. The combined hit
-//!    rate is reported in [`MultiStreamReport`].
+//! 1. **leases** the [`SystemSpec`] inventory to the active streams
+//!    demand-proportionally ([`crate::engine::lease`]) — exclusive
+//!    partitions when devices suffice, weighted-round-robin time slices
+//!    when streams outnumber devices (no request is ever rejected);
+//! 2. drains every stream's FIFO admission queue through **one global
+//!    event heap** ([`crate::engine::events`]), each stream's
+//!    [`Coordinator`] applying the reschedule-hysteresis policy to its
+//!    own drift;
+//! 3. memoizes every coordinator into one shared
+//!    [`crate::scheduler::ScheduleCache`] — keys embed each partition's
+//!    fingerprint, so streams never collide but recurring drift turns
+//!    reschedules into cache hits;
+//! 4. optionally **re-partitions online** ([`crate::engine::repartition`])
+//!    when observed demand drifts away from the leases in force — opt in
+//!    via [`MultiStreamServer::with_engine_config`].
 //!
-//! Because partitions are disjoint, streams do not contend for devices
-//! and the simulation can serve them one at a time without changing any
-//! result; wall-clock quantities in the report treat the streams as
-//! concurrent (makespan = max over streams, throughput aggregated).
+//! This module keeps the stream vocabulary ([`StreamSpec`]) and the
+//! report types ([`StreamReport`], [`MultiStreamReport`]), plus the
+//! strict spatial partitioner [`partition_system`] for callers that want
+//! exclusive device ownership or nothing.
 
 use crate::config::{Objective, SystemSpec};
-use crate::devices::GroundTruth;
+use crate::engine::{lease, EngineConfig, EngineMetrics, OverSubscribed, ServingEngine};
 use crate::perfmodel::PerfEstimator;
 use crate::scheduler::{CacheStats, ScheduleCache, SharedScheduleCache};
 
-use super::server::{serve_trace, Request, ServeReport};
-use super::Coordinator;
+use super::server::{Request, ServeReport};
 
 /// One request stream: a named trace with its own design objective.
 #[derive(Debug, Clone)]
@@ -66,85 +65,41 @@ impl StreamSpec {
         self.trace.len() as f64 / self.span()
     }
 
-    /// Offered compute load (FLOP/s) — the demand signal the device
-    /// partitioner apportions by.
+    /// Offered compute load (FLOP/s) — the demand signal the lease
+    /// assignment apportions by (and the demand tracker's initial
+    /// estimate when online re-partitioning is enabled).
     pub fn demand(&self) -> f64 {
         let flops: f64 = self.trace.iter().map(|r| r.workload.total_flops()).sum();
         flops / self.span()
     }
 }
 
-/// Largest-remainder apportionment of `total` identical devices over
-/// normalized `weights` (Σ = 1). Conserves `total` exactly.
-fn apportion(total: usize, weights: &[f64]) -> Vec<usize> {
-    let quotas: Vec<f64> = weights.iter().map(|w| w * total as f64).collect();
-    let mut alloc: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
-    let mut remainder = total - alloc.iter().sum::<usize>();
-    let mut order: Vec<usize> = (0..weights.len()).collect();
-    order.sort_by(|&a, &b| {
-        let fa = quotas[a] - quotas[a].floor();
-        let fb = quotas[b] - quotas[b].floor();
-        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
-    });
-    for &i in &order {
-        if remainder == 0 {
-            break;
-        }
-        alloc[i] += 1;
-        remainder -= 1;
-    }
-    alloc
-}
-
 /// Split a device pool across `demands.len()` active streams,
 /// demand-proportionally per device type, guaranteeing every stream at
-/// least one device (progress ⇒ no starvation). Panics when there are
-/// more streams than devices — spatial multiplexing cannot serve that;
-/// time-slicing a partition is an open ROADMAP item.
-pub fn partition_system(sys: &SystemSpec, demands: &[f64]) -> Vec<SystemSpec> {
+/// least one device (progress ⇒ no starvation). Errs when there are more
+/// streams than devices — spatial multiplexing cannot serve that; the
+/// serving engine answers the same situation with time-sliced leases
+/// ([`crate::engine::lease::assign`]), which is what
+/// [`MultiStreamServer::serve`] uses.
+pub fn partition_system(
+    sys: &SystemSpec,
+    demands: &[f64],
+) -> Result<Vec<SystemSpec>, OverSubscribed> {
     let k = demands.len();
     assert!(k >= 1, "no streams");
-    assert!(
-        sys.n_fpga + sys.n_gpu >= k,
-        "more streams ({k}) than devices ({})",
-        sys.n_fpga + sys.n_gpu
-    );
-    let total: f64 = demands.iter().sum();
-    let weights: Vec<f64> = if total > 0.0 {
-        demands.iter().map(|d| d / total).collect()
-    } else {
-        vec![1.0 / k as f64; k]
-    };
-    let mut fpgas = apportion(sys.n_fpga, &weights);
-    let mut gpus = apportion(sys.n_gpu, &weights);
-
-    // Fix-up: a low-demand stream can be apportioned zero devices; donate
-    // one from the richest stream (preserving the donor's progress).
-    loop {
-        let Some(poor) = (0..k).find(|&i| fpgas[i] + gpus[i] == 0) else { break };
-        let rich = (0..k)
-            .max_by_key(|&i| fpgas[i] + gpus[i])
-            .expect("non-empty");
-        assert!(fpgas[rich] + gpus[rich] > 1, "inventory ≥ streams ⇒ a donor exists");
-        if fpgas[rich] >= gpus[rich] {
-            fpgas[rich] -= 1;
-            fpgas[poor] += 1;
-        } else {
-            gpus[rich] -= 1;
-            gpus[poor] += 1;
-        }
+    let devices = sys.n_fpga + sys.n_gpu;
+    if devices < k {
+        return Err(OverSubscribed { streams: k, devices });
     }
-
-    (0..k)
-        .map(|i| SystemSpec { n_fpga: fpgas[i], n_gpu: gpus[i], ..sys.clone() })
-        .collect()
+    Ok(lease::split_pool(sys, demands))
 }
 
-/// One stream's outcome: its device share and its serving statistics.
+/// One stream's outcome: its device lease and its serving statistics.
 #[derive(Debug, Clone)]
 pub struct StreamReport {
     pub name: String,
-    /// Devices granted by the partitioner, `"2F1G"` style.
+    /// Devices leased by the engine, `"2F1G"` style; time-sliced leases
+    /// carry their share, e.g. `"1F1G@33%"`.
     pub partition: String,
     pub report: ServeReport,
 }
@@ -155,7 +110,8 @@ pub struct MultiStreamReport {
     pub streams: Vec<StreamReport>,
     /// Combined schedule-cache counters across every stream.
     pub cache: CacheStats,
-    /// Wall-clock of the concurrent run: the slowest stream's makespan.
+    /// Wall-clock of the concurrent run on the engine's global clock:
+    /// the slowest stream's makespan.
     pub makespan: f64,
     pub total_completed: usize,
     /// Completed inferences per second of concurrent wall-clock.
@@ -164,13 +120,19 @@ pub struct MultiStreamReport {
     /// (achieved/offered rate): 1.0 = perfectly even, → 1/n as one
     /// stream monopolizes the pool.
     pub fairness: f64,
+    /// Event/lease/migration counters from the serving engine.
+    pub engine: EngineMetrics,
 }
 
 /// Serving front-end for several concurrent streams over one device pool.
+/// A thin wrapper over [`ServingEngine`] that owns the pool, the
+/// estimator, the shared schedule cache, and the engine configuration
+/// across successive `serve` calls.
 pub struct MultiStreamServer<'a, E: PerfEstimator> {
     sys: SystemSpec,
     est: &'a E,
     cache: SharedScheduleCache,
+    cfg: EngineConfig,
 }
 
 impl<'a, E: PerfEstimator> MultiStreamServer<'a, E> {
@@ -180,9 +142,17 @@ impl<'a, E: PerfEstimator> MultiStreamServer<'a, E> {
     }
 
     /// A server sharing an externally-owned cache (e.g. to persist hit
-    /// statistics across successive `serve` calls).
+    /// statistics across successive `serve` calls, or one prewarmed via
+    /// [`ScheduleCache::load_from`]).
     pub fn with_cache(sys: SystemSpec, est: &'a E, cache: SharedScheduleCache) -> Self {
-        MultiStreamServer { sys, est, cache }
+        MultiStreamServer { sys, est, cache, cfg: EngineConfig::default() }
+    }
+
+    /// Override the engine configuration — e.g. [`EngineConfig::adaptive`]
+    /// to enable online lease re-partitioning.
+    pub fn with_engine_config(mut self, cfg: EngineConfig) -> Self {
+        self.cfg = cfg;
+        self
     }
 
     /// Handle to the shared cache (e.g. for reporting after a run).
@@ -190,62 +160,20 @@ impl<'a, E: PerfEstimator> MultiStreamServer<'a, E> {
         self.cache.clone()
     }
 
-    /// Partition the pool by stream demand, then serve every stream's
-    /// trace to completion on its partition.
+    /// Lease the pool by stream demand, then serve every stream's trace
+    /// to completion through the global event loop.
     pub fn serve(&mut self, streams: &[StreamSpec]) -> MultiStreamReport {
-        assert!(!streams.is_empty(), "no streams");
-        let cache_before = self.cache.lock().unwrap().stats();
-        let demands: Vec<f64> = streams.iter().map(StreamSpec::demand).collect();
-        let parts = partition_system(&self.sys, &demands);
-
-        let mut out: Vec<StreamReport> = Vec::with_capacity(streams.len());
-        for (spec, part) in streams.iter().zip(&parts) {
-            let gt = GroundTruth::new(part.gpu.clone(), part.fpga.clone(), part.comm_model());
-            let mut coord = Coordinator::new(part.clone(), self.est, spec.objective)
-                .with_cache(self.cache.clone());
-            let report = serve_trace(&mut coord, part, &gt, &spec.trace);
-            out.push(StreamReport {
-                name: spec.name.clone(),
-                partition: format!("{}F{}G", part.n_fpga, part.n_gpu),
-                report,
-            });
-        }
-
-        let makespan = out.iter().map(|s| s.report.makespan).fold(0.0, f64::max);
-        let total_completed: usize = out.iter().map(|s| s.report.completed).sum();
-        let ratios: Vec<f64> = out
-            .iter()
-            .zip(streams)
-            .map(|(s, spec)| s.report.throughput / spec.offered_rate().max(1e-9))
-            .collect();
-        let fairness = jain_index(&ratios);
-        let cache = self.cache.lock().unwrap().stats().since(&cache_before);
-        MultiStreamReport {
-            streams: out,
-            cache,
-            makespan,
-            total_completed,
-            aggregate_throughput: total_completed as f64 / makespan.max(1e-12),
-            fairness,
-        }
+        ServingEngine::new(self.sys.clone(), self.est)
+            .with_cache(self.cache.clone())
+            .with_config(self.cfg.clone())
+            .serve(streams)
     }
-}
-
-/// Jain's fairness index `(Σx)² / (n·Σx²)` over non-negative rates.
-fn jain_index(xs: &[f64]) -> f64 {
-    let n = xs.len() as f64;
-    let sum: f64 = xs.iter().sum();
-    let sq: f64 = xs.iter().map(|x| x * x).sum();
-    if sq <= 0.0 {
-        return 0.0;
-    }
-    sum * sum / (n * sq)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::devices::Interconnect;
+    use crate::devices::{GroundTruth, Interconnect};
     use crate::perfmodel::OracleModels;
     use crate::workload::{gnn, transformer, Dataset, Workload};
 
@@ -267,7 +195,7 @@ mod tests {
             vec![5.0, 3.0, 1.0],
             vec![1.0, 1.0, 1.0, 1.0, 1.0],
         ] {
-            let parts = partition_system(&s, &demands);
+            let parts = partition_system(&s, &demands).expect("enough devices");
             assert_eq!(parts.len(), demands.len());
             assert_eq!(parts.iter().map(|p| p.n_fpga).sum::<usize>(), s.n_fpga);
             assert_eq!(parts.iter().map(|p| p.n_gpu).sum::<usize>(), s.n_gpu);
@@ -279,21 +207,42 @@ mod tests {
 
     #[test]
     fn heavier_demand_gets_more_devices() {
-        let parts = partition_system(&sys(), &[9.0, 1.0]);
+        let parts = partition_system(&sys(), &[9.0, 1.0]).unwrap();
         assert!(parts[0].n_fpga + parts[0].n_gpu > parts[1].n_fpga + parts[1].n_gpu);
     }
 
     #[test]
-    #[should_panic(expected = "more streams")]
-    fn rejects_more_streams_than_devices() {
-        partition_system(&sys(), &[1.0; 6]);
+    fn oversubscription_is_an_error_not_a_panic() {
+        let err = partition_system(&sys(), &[1.0; 6]).unwrap_err();
+        assert_eq!(err, OverSubscribed { streams: 6, devices: 5 });
+        assert!(err.to_string().contains("time-sliced leases"));
     }
 
     #[test]
-    fn apportion_is_exact() {
-        assert_eq!(apportion(5, &[0.5, 0.5]).iter().sum::<usize>(), 5);
-        assert_eq!(apportion(3, &[0.9, 0.05, 0.05]).iter().sum::<usize>(), 3);
-        assert_eq!(apportion(0, &[1.0]), vec![0]);
+    fn eight_streams_on_three_devices_all_make_progress() {
+        // The old `partition_system` panicked here; the engine's
+        // time-sliced leases serve it by construction.
+        let s = SystemSpec::reduced_testbed(Interconnect::Pcie4); // 2F + 1G
+        let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let est = OracleModels { gt: &gt };
+        let streams: Vec<StreamSpec> = (0..8u64)
+            .map(|i| {
+                let trace = super::super::server::generate_trace(
+                    &[(gcn(2_000_000), 5)],
+                    8.0,
+                    50 + i,
+                );
+                StreamSpec::new(format!("stream-{i}"), Objective::Performance, trace)
+            })
+            .collect();
+        let mut server = MultiStreamServer::new(s, &est);
+        let r = server.serve(&streams);
+        assert_eq!(r.total_completed, 40, "no stream may starve");
+        assert!(r.fairness > 0.0, "fairness {}", r.fairness);
+        for sr in &r.streams {
+            assert_eq!(sr.report.completed, 5, "{} starved", sr.name);
+            assert!(sr.report.p50_latency <= sr.report.p99_latency);
+        }
     }
 
     #[test]
@@ -332,6 +281,11 @@ mod tests {
         assert!(r.cache.hit_rate() > 0.5, "hit rate {}", r.cache.hit_rate());
         assert!(r.fairness > 0.5, "fairness {}", r.fairness);
         assert!(r.makespan > 0.0 && r.aggregate_throughput > 0.0);
+        // Static default: the engine ran, but no leases moved.
+        assert_eq!(r.engine.lease_migrations, 0);
+        // Every request pops an arrival plus (except each stream's final
+        // slot, still in the heap when the run drains) a completion.
+        assert!(r.engine.events_processed >= 2 * 66 - 2, "events {}", r.engine.events_processed);
     }
 
     #[test]

@@ -9,12 +9,16 @@
 //! coordinator reschedules whenever the observed input characteristics
 //! drift. Latency percentiles, queue depths, and reschedule downtime are
 //! tracked — the metrics a deployment actually watches.
+//!
+//! Execution is delegated to the global event-heap engine
+//! ([`crate::engine`]): [`serve_trace`] is the engine's single-stream
+//! special case (one lane, exclusive full-share lease), so single- and
+//! multi-stream serving share one event loop.
 
 use crate::config::{Objective, SystemSpec};
 use crate::devices::GroundTruth;
-use crate::metrics::LatencySummary;
-use crate::perfmodel::{OracleModels, PerfEstimator};
-use crate::scheduler::{evaluate_plan, CacheStats, PowerTable, Schedule};
+use crate::perfmodel::PerfEstimator;
+use crate::scheduler::CacheStats;
 use crate::util::Rng;
 use crate::workload::Workload;
 
@@ -50,6 +54,10 @@ impl Completion {
 /// serving — see [`super::MultiStreamReport`]).
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Per-request completion records, in service order (the raw data
+    /// behind the percentiles; also what the engine-equivalence property
+    /// tests compare).
+    pub completions: Vec<Completion>,
     pub completed: usize,
     pub makespan: f64,
     pub throughput: f64,
@@ -69,7 +77,9 @@ pub struct ServeReport {
 
 /// Cost of swapping schedules: the pipeline drains and the new mapping's
 /// static data is (re)loaded. Modeled as a fixed drain + weight-reload.
-const RESCHEDULE_DRAIN_COST: f64 = 50e-3;
+/// Public because the engine charges it inside its dispatch path and the
+/// equivalence tests reproduce the legacy accounting against it.
+pub const RESCHEDULE_DRAIN_COST: f64 = 50e-3;
 
 /// The streaming server: admission queue + coordinator + simulated
 /// pipeline execution.
@@ -101,13 +111,18 @@ impl<'a, E: PerfEstimator> Server<'a, E> {
 }
 
 /// The serving loop shared by [`Server`] (one stream) and
-/// [`super::MultiStreamServer`] (one call per stream partition).
+/// [`super::MultiStreamServer`] (one lane per stream): since PR 2 this is
+/// the *single-stream special case* of the engine's event loop
+/// ([`crate::engine`]) — one lane holding an exclusive full-share lease
+/// on `sys`, so there is exactly one event loop in the codebase.
 ///
-/// Requests are admitted FIFO from the stream's queue; the pipeline
-/// completes one inference per period (steady-state model);
-/// characteristic drift between consecutive requests triggers coordinator
-/// rescheduling (paying a drain cost). Latency percentiles are computed
-/// with [`crate::metrics::LatencySummary`], and the report carries the
+/// Service model (unchanged from the legacy synchronous loop, and
+/// verified equivalent by the property tests in `rust/tests/engine.rs`):
+/// requests are admitted FIFO; the pipeline completes one inference per
+/// period (steady-state); characteristic drift between consecutive
+/// requests triggers coordinator rescheduling, paying
+/// [`RESCHEDULE_DRAIN_COST`]. Latency percentiles are computed with
+/// [`crate::metrics::LatencySummary`], and the report carries the
 /// schedule-cache counters incurred by this trace alone.
 pub fn serve_trace<E: PerfEstimator>(
     coordinator: &mut Coordinator<'_, E>,
@@ -115,81 +130,7 @@ pub fn serve_trace<E: PerfEstimator>(
     gt: &GroundTruth,
     trace: &[Request],
 ) -> ServeReport {
-    assert!(!trace.is_empty());
-    let power = PowerTable::new(sys.gpu.clone(), sys.fpga.clone());
-    let comm = sys.comm_model();
-    let oracle = OracleModels { gt };
-    let cache_before = coordinator.cache_stats().unwrap_or_default();
-
-    let mut clock = 0.0f64;
-    let mut completions: Vec<Completion> = Vec::with_capacity(trace.len());
-    let mut queue: std::collections::VecDeque<&Request> = Default::default();
-    let mut next_arrival = 0usize;
-    let mut current_sig = String::new();
-    let mut measured: Option<Schedule> = None;
-    let mut reschedules = 0usize;
-    let mut downtime = 0.0f64;
-    let mut max_queue = 0usize;
-    let mut energy = 0.0f64;
-
-    while completions.len() < trace.len() {
-        // Admit all requests that have arrived by `clock`.
-        while next_arrival < trace.len() && trace[next_arrival].arrival <= clock {
-            queue.push_back(&trace[next_arrival]);
-            next_arrival += 1;
-        }
-        max_queue = max_queue.max(queue.len());
-
-        let Some(req) = queue.pop_front() else {
-            // Idle until the next arrival.
-            clock = trace[next_arrival].arrival;
-            continue;
-        };
-
-        // Data-aware scheduling: feed the observed characteristics to
-        // the coordinator; it reschedules only past its hysteresis.
-        let sig: String =
-            req.workload.kernels.iter().map(|k| format!("{:?};", k.kind)).collect();
-        let events_before = coordinator.reschedule_events().len();
-        let sched = coordinator.process_batch(&req.workload).clone();
-        let rescheduled = coordinator.reschedule_events().len() > events_before;
-        if sig != current_sig || rescheduled || measured.is_none() {
-            current_sig = sig;
-            // Re-measure the (possibly new) schedule on ground truth.
-            measured = Some(evaluate_plan(&req.workload, &sched.plan(), &oracle, &comm, &power));
-        }
-        if rescheduled {
-            reschedules += 1;
-            downtime += RESCHEDULE_DRAIN_COST;
-            clock += RESCHEDULE_DRAIN_COST;
-        }
-        let m = measured.as_ref().unwrap();
-
-        // Steady-state service: one inference per pipeline period.
-        let start = clock.max(req.arrival);
-        let finish = start + m.period.max(1e-12) + m.latency() - m.period; // queue + fill
-        clock = start + m.period; // next admission slot
-        energy += m.energy_per_inf;
-        completions.push(Completion { id: req.id, arrival: req.arrival, start, finish });
-    }
-
-    let makespan = completions.iter().map(|c| c.finish).fold(0.0, f64::max);
-    let lats = LatencySummary::from_unsorted(completions.iter().map(Completion::latency).collect());
-    let cache_after = coordinator.cache_stats().unwrap_or_default();
-    ServeReport {
-        completed: completions.len(),
-        makespan,
-        throughput: completions.len() as f64 / makespan,
-        mean_latency: lats.mean,
-        p50_latency: lats.p50,
-        p90_latency: lats.p90,
-        p99_latency: lats.p99,
-        max_queue_depth: max_queue,
-        reschedules,
-        reschedule_downtime: downtime,
-        energy,
-        cache: cache_after.since(&cache_before),
-    }
+    crate::engine::run_single(coordinator, sys, gt, trace)
 }
 
 /// Deterministic Poisson-ish request trace: exponential inter-arrivals at

@@ -1,0 +1,163 @@
+//! The event heap — the engine's single source of time.
+//!
+//! Every cause of state change in the serving engine is an [`Event`] on
+//! one global clock: a request arriving, a batch's admission slot
+//! completing, a device lease reaching the end of its term, or a
+//! demand-sampling tick. The queue is a binary min-heap ordered by
+//! `(time, push sequence)`, so simultaneous events resolve in push order
+//! — deterministically, with no dependence on hash state or thread
+//! interleaving. Arrivals are pushed before any run-time event, which
+//! reproduces the legacy loop's "admit everything that has arrived by
+//! `clock`, then dispatch" semantics at equal timestamps.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happened. Stream/request indices refer to the engine's lane and
+/// trace vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A request entered a stream's admission queue.
+    RequestArrival { stream: usize, index: usize },
+    /// A stream's in-flight admission slot finished; its lease can accept
+    /// the next request.
+    BatchComplete { stream: usize, request: usize },
+    /// A device-lease term ended: the lease manager re-validates the
+    /// apportionment and either renews every lease or migrates.
+    LeaseExpiry,
+    /// Demand-sampling tick: fold each stream's completed-FLOP window
+    /// into its EWMA demand estimate.
+    RepartitionTick,
+}
+
+/// A timestamped event. `seq` is the queue's push counter — the
+/// deterministic tie-breaker for equal timestamps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Global-clock timestamp (s). Always finite.
+    pub time: f64,
+    /// Push order, unique per queue.
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    /// Reversed so `BinaryHeap` (a max-heap) pops the *earliest* event;
+    /// equal times pop in push order.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of pending events plus the push/pop counters the engine
+/// reports as overhead metrics.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+    processed: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `kind` at `time`. Times must be finite; they need not be
+    /// monotone with respect to previous pushes (the heap orders them),
+    /// but the engine never schedules into the past.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        assert!(time.is_finite(), "non-finite event time {time}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { time, seq, kind });
+    }
+
+    /// Pop the earliest event (ties in push order).
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop();
+        if ev.is_some() {
+            self.processed += 1;
+        }
+        ev
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Events popped so far (the engine's per-event overhead denominator).
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::LeaseExpiry);
+        q.push(0.5, EventKind::RequestArrival { stream: 0, index: 0 });
+        q.push(1.0, EventKind::BatchComplete { stream: 0, request: 0 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(times, vec![0.5, 1.0, 2.0]);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn equal_times_pop_in_push_order() {
+        let mut q = EventQueue::new();
+        for i in 0..5 {
+            q.push(1.0, EventKind::RequestArrival { stream: 0, index: i });
+        }
+        q.push(1.0, EventKind::BatchComplete { stream: 0, request: 9 });
+        let mut kinds = Vec::new();
+        while let Some(e) = q.pop() {
+            kinds.push(e.kind);
+        }
+        for (i, k) in kinds.iter().take(5).enumerate() {
+            assert_eq!(*k, EventKind::RequestArrival { stream: 0, index: i });
+        }
+        assert_eq!(kinds[5], EventKind::BatchComplete { stream: 0, request: 9 });
+    }
+
+    #[test]
+    fn interleaved_pushes_stay_deterministic() {
+        // Push order is the tie-breaker even when pushes interleave pops.
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::RepartitionTick);
+        q.push(0.0, EventKind::RequestArrival { stream: 0, index: 0 });
+        assert_eq!(
+            q.pop().unwrap().kind,
+            EventKind::RequestArrival { stream: 0, index: 0 }
+        );
+        q.push(1.0, EventKind::LeaseExpiry);
+        assert_eq!(q.pop().unwrap().kind, EventKind::RepartitionTick);
+        assert_eq!(q.pop().unwrap().kind, EventKind::LeaseExpiry);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn rejects_non_finite_times() {
+        EventQueue::new().push(f64::NAN, EventKind::RepartitionTick);
+    }
+}

@@ -1,0 +1,289 @@
+//! Device leases: the pool-sharing layer under the serving engine.
+//!
+//! PR 1's `partition_system` handed every stream an *exclusive* slice of
+//! the [`SystemSpec`] inventory and panicked when streams outnumbered
+//! devices. Leases generalize that: the pool is split into at most
+//! `min(streams, devices)` partitions, and each partition is **leased**
+//! to one or more streams. A partition with several tenants is
+//! time-sliced by weighted round-robin — tenant `i` holds the partition
+//! for a fraction `share_i` of every lease term, so its effective service
+//! period stretches by `1/share_i` while every tenant keeps making
+//! progress. With at least as many devices as streams every group is a
+//! singleton with `share = 1`, and the assignment degenerates to exactly
+//! the spatial partitioning of PR 1 — which is what keeps the engine
+//! bit-compatible with the legacy per-stream accounting in that regime.
+//!
+//! Grouping (oversubscribed case) is longest-processing-time greedy:
+//! streams are placed heaviest-demand-first onto the group with the
+//! least total demand, with deterministic ties (member count, then group
+//! index), so twin runs produce identical leases.
+
+use crate::config::SystemSpec;
+
+/// Spatial partitioning cannot give every stream a whole device.
+/// (The engine answers this case with time-sliced leases instead; the
+/// error survives for callers of the strict
+/// [`crate::coordinator::partition_system`].)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverSubscribed {
+    pub streams: usize,
+    pub devices: usize,
+}
+
+impl std::fmt::Display for OverSubscribed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "more streams ({}) than devices ({}): spatial partitioning infeasible, \
+             time-sliced leases required",
+            self.streams, self.devices
+        )
+    }
+}
+
+impl std::error::Error for OverSubscribed {}
+
+/// Largest-remainder apportionment of `total` identical devices over
+/// normalized `weights` (Σ = 1). Conserves `total` exactly.
+pub(crate) fn apportion(total: usize, weights: &[f64]) -> Vec<usize> {
+    let quotas: Vec<f64> = weights.iter().map(|w| w * total as f64).collect();
+    let mut alloc: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let mut remainder = total - alloc.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = quotas[a] - quotas[a].floor();
+        let fb = quotas[b] - quotas[b].floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for &i in &order {
+        if remainder == 0 {
+            break;
+        }
+        alloc[i] += 1;
+        remainder -= 1;
+    }
+    alloc
+}
+
+/// Split a device pool over `demands.len()` partitions,
+/// demand-proportionally per device type, guaranteeing every partition at
+/// least one device. Requires `demands.len() <= devices` (the caller —
+/// [`assign`] or [`crate::coordinator::partition_system`] — enforces it).
+pub(crate) fn split_pool(sys: &SystemSpec, demands: &[f64]) -> Vec<SystemSpec> {
+    let k = demands.len();
+    assert!(k >= 1, "no partitions requested");
+    assert!(
+        sys.n_fpga + sys.n_gpu >= k,
+        "split_pool needs inventory >= partitions ({k})"
+    );
+    let total: f64 = demands.iter().sum();
+    let weights: Vec<f64> = if total > 0.0 {
+        demands.iter().map(|d| d / total).collect()
+    } else {
+        vec![1.0 / k as f64; k]
+    };
+    let mut fpgas = apportion(sys.n_fpga, &weights);
+    let mut gpus = apportion(sys.n_gpu, &weights);
+
+    // Fix-up: a low-demand partition can be apportioned zero devices;
+    // donate one from the richest (preserving the donor's progress).
+    loop {
+        let Some(poor) = (0..k).find(|&i| fpgas[i] + gpus[i] == 0) else { break };
+        let rich = (0..k)
+            .max_by_key(|&i| fpgas[i] + gpus[i])
+            .expect("non-empty");
+        assert!(fpgas[rich] + gpus[rich] > 1, "inventory >= partitions => a donor exists");
+        if fpgas[rich] >= gpus[rich] {
+            fpgas[rich] -= 1;
+            fpgas[poor] += 1;
+        } else {
+            gpus[rich] -= 1;
+            gpus[poor] += 1;
+        }
+    }
+
+    (0..k)
+        .map(|i| SystemSpec { n_fpga: fpgas[i], n_gpu: gpus[i], ..sys.clone() })
+        .collect()
+}
+
+/// A full lease table: which partition each stream holds and what
+/// fraction of its term the stream owns.
+#[derive(Debug, Clone)]
+pub struct LeaseAssignment {
+    /// The disjoint device partitions (inventory is conserved).
+    pub partitions: Vec<SystemSpec>,
+    /// Stream indices leasing each partition.
+    pub members: Vec<Vec<usize>>,
+    /// Stream index → partition index.
+    pub part_of: Vec<usize>,
+    /// Stream index → time share of its partition, in (0, 1]. Exactly
+    /// 1.0 for a sole tenant.
+    pub share: Vec<f64>,
+}
+
+impl LeaseAssignment {
+    pub fn n_streams(&self) -> usize {
+        self.part_of.len()
+    }
+
+    /// The partition and time share stream `i` holds.
+    pub fn lease_of(&self, i: usize) -> (&SystemSpec, f64) {
+        (&self.partitions[self.part_of[i]], self.share[i])
+    }
+
+    /// Stream `i`'s fraction of the whole pool: its time share of its
+    /// partition, weighted by the partition's fraction of the device
+    /// inventory. Sums to 1 over all streams. This is the quantity the
+    /// re-partitioning hysteresis compares.
+    pub fn pool_share(&self, i: usize, sys: &SystemSpec) -> f64 {
+        let part = &self.partitions[self.part_of[i]];
+        let d = (sys.n_fpga + sys.n_gpu) as f64;
+        self.share[i] * (part.n_fpga + part.n_gpu) as f64 / d
+    }
+}
+
+/// Lease the pool to `demands.len()` streams. Never fails for a non-empty
+/// pool: with enough devices every stream gets an exclusive partition
+/// (identical to [`crate::coordinator::partition_system`]); otherwise
+/// streams are grouped onto `devices` partitions and time-sliced by
+/// demand weight.
+pub fn assign(sys: &SystemSpec, demands: &[f64]) -> LeaseAssignment {
+    let k = demands.len();
+    assert!(k >= 1, "no streams");
+    let d = sys.n_fpga + sys.n_gpu;
+    assert!(d >= 1, "no devices in the pool");
+
+    let g = k.min(d);
+    let (members, part_of) = if k <= d {
+        // Exclusive leases, one partition per stream in stream order.
+        ((0..k).map(|i| vec![i]).collect::<Vec<_>>(), (0..k).collect::<Vec<_>>())
+    } else {
+        // Oversubscribed: LPT-greedy grouping, heaviest stream first onto
+        // the least-loaded group (ties: fewer members, then lower index).
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| demands[b].partial_cmp(&demands[a]).unwrap().then(a.cmp(&b)));
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); g];
+        let mut load = vec![0.0f64; g];
+        let mut part_of = vec![0usize; k];
+        for &s in &order {
+            let gi = (0..g)
+                .min_by(|&x, &y| {
+                    load[x]
+                        .partial_cmp(&load[y])
+                        .unwrap()
+                        .then(members[x].len().cmp(&members[y].len()))
+                        .then(x.cmp(&y))
+                })
+                .expect("g >= 1");
+            members[gi].push(s);
+            load[gi] += demands[s];
+            part_of[s] = gi;
+        }
+        (members, part_of)
+    };
+
+    let group_demand: Vec<f64> =
+        members.iter().map(|m| m.iter().map(|&s| demands[s]).sum()).collect();
+    let partitions = split_pool(sys, &group_demand);
+    let share: Vec<f64> = (0..k)
+        .map(|s| {
+            let gd = group_demand[part_of[s]];
+            if gd > 0.0 {
+                demands[s] / gd
+            } else {
+                1.0 / members[part_of[s]].len() as f64
+            }
+        })
+        .collect();
+
+    LeaseAssignment { partitions, members, part_of, share }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::Interconnect;
+
+    fn sys() -> SystemSpec {
+        SystemSpec::paper_testbed(Interconnect::Pcie4) // 3F + 2G
+    }
+
+    #[test]
+    fn exclusive_leases_match_spatial_partitioning() {
+        let s = sys();
+        for demands in [vec![1.0, 1.0], vec![10.0, 1.0], vec![5.0, 3.0, 1.0]] {
+            let a = assign(&s, &demands);
+            let parts = split_pool(&s, &demands);
+            assert_eq!(a.partitions.len(), demands.len());
+            for (i, p) in parts.iter().enumerate() {
+                let (lease, share) = a.lease_of(i);
+                assert_eq!((lease.n_fpga, lease.n_gpu), (p.n_fpga, p.n_gpu));
+                assert_eq!(share, 1.0, "sole tenant holds the full term");
+            }
+        }
+    }
+
+    #[test]
+    fn oversubscribed_pool_is_time_sliced_not_rejected() {
+        let s = sys(); // 5 devices
+        let demands = vec![1.0; 8];
+        let a = assign(&s, &demands);
+        assert_eq!(a.partitions.len(), 5, "one partition per device at most");
+        assert_eq!(a.partitions.iter().map(|p| p.n_fpga).sum::<usize>(), s.n_fpga);
+        assert_eq!(a.partitions.iter().map(|p| p.n_gpu).sum::<usize>(), s.n_gpu);
+        for i in 0..8 {
+            let (lease, share) = a.lease_of(i);
+            assert!(lease.n_fpga + lease.n_gpu >= 1, "every lease holds hardware");
+            assert!(share > 0.0 && share <= 1.0);
+        }
+        // Per-partition shares are a partition of the term.
+        for (g, m) in a.members.iter().enumerate() {
+            assert!(!m.is_empty(), "partition {g} has no tenants");
+            let total: f64 = m.iter().map(|&i| a.share[i]).sum();
+            assert!((total - 1.0).abs() < 1e-9, "shares sum to {total}");
+        }
+        // Pool shares partition the whole pool.
+        let total: f64 = (0..8).map(|i| a.pool_share(i, &s)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heavier_stream_gets_larger_pool_share() {
+        let s = sys();
+        let a = assign(&s, &[9.0, 1.0]);
+        assert!(a.pool_share(0, &s) > a.pool_share(1, &s));
+        // Oversubscribed too: 6 streams, one dominant.
+        let demands = vec![10.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let b = assign(&s, &demands);
+        for i in 1..6 {
+            assert!(b.pool_share(0, &s) >= b.pool_share(i, &s), "stream 0 vs {i}");
+        }
+    }
+
+    #[test]
+    fn grouping_is_deterministic() {
+        let s = SystemSpec { n_fpga: 2, n_gpu: 1, ..sys() };
+        let demands = vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let a = assign(&s, &demands);
+        let b = assign(&s, &demands);
+        assert_eq!(a.part_of, b.part_of);
+        assert_eq!(a.share, b.share);
+    }
+
+    #[test]
+    fn zero_demand_streams_share_equally() {
+        let s = SystemSpec { n_fpga: 1, n_gpu: 0, ..sys() };
+        let a = assign(&s, &[0.0, 0.0, 0.0]);
+        for i in 0..3 {
+            assert!((a.share[i] - 1.0 / 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn apportion_is_exact() {
+        assert_eq!(apportion(5, &[0.5, 0.5]).iter().sum::<usize>(), 5);
+        assert_eq!(apportion(3, &[0.9, 0.05, 0.05]).iter().sum::<usize>(), 3);
+        assert_eq!(apportion(0, &[1.0]), vec![0]);
+    }
+}

@@ -1,0 +1,670 @@
+//! The event-heap serving engine — one global clock for every stream.
+//!
+//! PR 1's serving layer ran one synchronous discrete-event loop *per
+//! stream* and pinned device partitions for the whole call, so
+//! "concurrency" was an accounting convention and a pool with fewer
+//! devices than streams was simply rejected. This subsystem replaces
+//! that with a single engine in the style of runtime schedulers such as
+//! DS3 (Mack et al.) and hardware task-queue managers (HTS):
+//!
+//! * **[`events`]** — every state change ([`EventKind::RequestArrival`],
+//!   [`EventKind::BatchComplete`], [`EventKind::LeaseExpiry`],
+//!   [`EventKind::RepartitionTick`]) is an entry in one binary-heap
+//!   [`EventQueue`] ordered by a global clock with deterministic
+//!   tie-breaking.
+//! * **[`lease`]** — devices are *leased*, not owned: with enough
+//!   devices every stream gets an exclusive partition (bit-compatible
+//!   with the legacy spatial partitioning); when streams outnumber
+//!   devices a partition is time-sliced over its tenants by weighted
+//!   round-robin, so the engine serves arbitrarily many streams.
+//! * **[`repartition`]** — per-stream demand is tracked online (EWMA
+//!   over completed FLOPs) and leases migrate between streams when the
+//!   apportionment shifts past a hysteresis threshold, paying an
+//!   explicit drain cost — the inter-stream analogue of the
+//!   coordinator's intra-stream reschedule policy.
+//!
+//! The driver ([`ServingEngine`]) feeds each stream's
+//! [`Coordinator`] (schedule cache included) and emits the
+//! existing [`MultiStreamReport`] plus [`EngineMetrics`].
+//! [`crate::coordinator::server::serve_trace`] is the single-stream
+//! special case of the same loop — there is exactly one event loop in
+//! the codebase.
+
+pub mod events;
+pub mod lease;
+pub mod repartition;
+
+pub use events::{Event, EventKind, EventQueue};
+pub use lease::{LeaseAssignment, OverSubscribed};
+pub use repartition::{DemandTracker, RepartitionPolicy};
+
+use std::collections::VecDeque;
+
+use crate::config::SystemSpec;
+use crate::coordinator::multi::{MultiStreamReport, StreamReport, StreamSpec};
+use crate::coordinator::server::{Completion, Request, ServeReport, RESCHEDULE_DRAIN_COST};
+use crate::coordinator::Coordinator;
+use crate::devices::{CommModel, GroundTruth};
+use crate::metrics::{jain_index, LatencySummary};
+use crate::perfmodel::{OracleModels, PerfEstimator};
+use crate::scheduler::{evaluate_plan, CacheStats, PowerTable, Schedule, ScheduleCache, SharedScheduleCache};
+
+use repartition::share_shift;
+
+/// Engine-wide knobs. The default is the PR-1-compatible mode: static
+/// leases for the whole run (re-partitioning off), so
+/// [`crate::coordinator::MultiStreamServer::serve`] keeps its historical
+/// semantics; opt into adaptivity with [`EngineConfig::adaptive`].
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Online re-partitioning policy; `None` freezes the initial leases.
+    pub repartition: Option<RepartitionPolicy>,
+    /// Drain cost (s of lease time) charged to a stream whose device
+    /// inventory changes in a migration: the old pipeline drains and the
+    /// new partition's static data loads. Deliberately above the
+    /// intra-stream [`RESCHEDULE_DRAIN_COST`] — moving hardware is more
+    /// disruptive than remapping on fixed hardware.
+    pub migration_drain: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { repartition: None, migration_drain: 80e-3 }
+    }
+}
+
+impl EngineConfig {
+    /// Static leases + demand-adaptive migration with the default policy.
+    pub fn adaptive() -> EngineConfig {
+        EngineConfig { repartition: Some(RepartitionPolicy::default()), ..Default::default() }
+    }
+}
+
+/// What the engine did beyond serving requests — the observability the
+/// per-stream reports cannot carry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineMetrics {
+    /// Events popped from the heap (arrivals + completions + ticks).
+    pub events_processed: u64,
+    /// Lease-expiry evaluations that changed the lease table.
+    pub repartitions: usize,
+    /// Streams whose device inventory changed across all repartitions.
+    pub lease_migrations: usize,
+    /// Migrations that disturbed a stream with queued or in-flight work.
+    pub preemptions: usize,
+    /// Streams that started on a time-sliced (share < 1) lease.
+    pub time_sliced_streams: usize,
+    /// Per-stream lease occupancy over the run's wall clock — measured on
+    /// the one global clock, so streams are directly comparable (no
+    /// per-stream clock skew).
+    pub utilization: Vec<f64>,
+}
+
+impl std::fmt::Display for EngineMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} events, {} repartitions, {} lease migrations, {} preemptions, \
+             {} time-sliced streams",
+            self.events_processed,
+            self.repartitions,
+            self.lease_migrations,
+            self.preemptions,
+            self.time_sliced_streams
+        )
+    }
+}
+
+/// One stream's runtime state inside the engine: its lease, its
+/// measurement apparatus, its admission queue, and its counters.
+struct Lane<'c, 'a, E: PerfEstimator> {
+    coord: &'c mut Coordinator<'a, E>,
+    part: SystemSpec,
+    share: f64,
+    gt: GroundTruth,
+    power: PowerTable,
+    comm: CommModel,
+    queue: VecDeque<usize>,
+    busy: bool,
+    sig: String,
+    measured: Option<Schedule>,
+    completions: Vec<Completion>,
+    reschedules: usize,
+    downtime: f64,
+    energy: f64,
+    max_queue: usize,
+    busy_time: f64,
+    /// Migration drain owed before the next admission (lease seconds).
+    pending_drain: f64,
+    /// FLOPs of the batch currently in flight, credited to the demand
+    /// window when its [`EventKind::BatchComplete`] fires.
+    inflight_flops: f64,
+    /// FLOPs *completed* since the last demand-sampling tick.
+    flops_window: f64,
+    cache: CacheStats,
+}
+
+/// A lane's final accounting, lifted into the public report types.
+struct LaneOutcome {
+    partition: String,
+    busy_time: f64,
+    report: ServeReport,
+}
+
+impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
+    /// A lane whose ground truth is derived from its partition (the
+    /// multi-stream path — matches the legacy per-partition harness).
+    fn new(coord: &'c mut Coordinator<'a, E>, part: SystemSpec, share: f64) -> Self {
+        let gt = GroundTruth::new(part.gpu.clone(), part.fpga.clone(), part.comm_model());
+        Lane::with_ground_truth(coord, part, share, gt)
+    }
+
+    /// A lane measuring against a caller-supplied ground truth (the
+    /// single-stream path, where the harness may carry degree skew).
+    fn with_ground_truth(
+        coord: &'c mut Coordinator<'a, E>,
+        part: SystemSpec,
+        share: f64,
+        gt: GroundTruth,
+    ) -> Self {
+        let power = PowerTable::new(part.gpu.clone(), part.fpga.clone());
+        let comm = part.comm_model();
+        Lane {
+            coord,
+            part,
+            share,
+            gt,
+            power,
+            comm,
+            queue: VecDeque::new(),
+            busy: false,
+            sig: String::new(),
+            measured: None,
+            completions: Vec::new(),
+            reschedules: 0,
+            downtime: 0.0,
+            energy: 0.0,
+            max_queue: 0,
+            busy_time: 0.0,
+            pending_drain: 0.0,
+            inflight_flops: 0.0,
+            flops_window: 0.0,
+            cache: CacheStats::default(),
+        }
+    }
+
+    /// Admit the front request at global time `now`: consult the
+    /// coordinator (data-aware reschedule behind its hysteresis),
+    /// re-measure on ground truth when the schedule or signature changed,
+    /// pay any drain, occupy the lease for one admission slot, and
+    /// schedule the [`EventKind::BatchComplete`].
+    fn dispatch(&mut self, trace: &[Request], stream: usize, now: f64, q: &mut EventQueue) {
+        debug_assert!(!self.busy, "dispatch on a busy lane");
+        let idx = self.queue.pop_front().expect("dispatch on an empty queue");
+        let req = &trace[idx];
+        let share = self.share;
+
+        // Data-aware scheduling: feed the observed characteristics to the
+        // coordinator; it reschedules only past its hysteresis.
+        let sig: String =
+            req.workload.kernels.iter().map(|k| format!("{:?};", k.kind)).collect();
+        let cache_before = self.coord.cache_stats().unwrap_or_default();
+        let events_before = self.coord.reschedule_events().len();
+        let sched = self.coord.process_batch(&req.workload).clone();
+        let rescheduled = self.coord.reschedule_events().len() > events_before;
+        let cache_after = self.coord.cache_stats().unwrap_or_default();
+        self.cache.accumulate(&cache_after.since(&cache_before));
+
+        if sig != self.sig || rescheduled || self.measured.is_none() {
+            self.sig = sig;
+            // Re-measure the (possibly new) schedule on ground truth.
+            let timed = {
+                let oracle = OracleModels { gt: &self.gt };
+                evaluate_plan(&req.workload, &sched.plan(), &oracle, &self.comm, &self.power)
+            };
+            self.measured = Some(timed);
+        }
+
+        let mut start = now;
+        if rescheduled {
+            self.reschedules += 1;
+            let drain = RESCHEDULE_DRAIN_COST / share;
+            self.downtime += drain;
+            start += drain;
+        }
+        if self.pending_drain > 0.0 {
+            let drain = self.pending_drain / share;
+            self.pending_drain = 0.0;
+            self.downtime += drain;
+            start += drain;
+        }
+
+        let (period, latency, energy) = {
+            let m = self.measured.as_ref().expect("measured above");
+            (m.period, m.latency(), m.energy_per_inf)
+        };
+        // Weighted round-robin time slicing: a tenant holding `share` of
+        // its partition's term sees every slot stretched by 1/share. A
+        // sole tenant (share = 1) reproduces the legacy steady-state
+        // accounting bit for bit.
+        let eff_period = period / share;
+        let slot_end = start + eff_period;
+        let finish = start + eff_period.max(1e-12) + latency - period; // queue + fill
+        self.energy += energy;
+        // Demand is tracked over *completed* FLOPs: remember the batch's
+        // work and credit it when BatchComplete fires, so a long-running
+        // batch is not front-loaded into the dispatch-time window.
+        self.inflight_flops = req.workload.total_flops();
+        self.busy = true;
+        self.busy_time += slot_end - now;
+        self.completions.push(Completion { id: req.id, arrival: req.arrival, start, finish });
+        q.push(slot_end, EventKind::BatchComplete { stream, request: req.id });
+    }
+
+    /// Move this lane onto a new device partition: retarget the
+    /// coordinator (its cache keys re-scope via the system fingerprint),
+    /// rebuild the measurement harness, and owe the migration drain.
+    fn migrate(&mut self, part: SystemSpec, drain: f64) {
+        self.coord.retarget(part.clone());
+        self.gt = GroundTruth::new(part.gpu.clone(), part.fpga.clone(), part.comm_model());
+        self.power = PowerTable::new(part.gpu.clone(), part.fpga.clone());
+        self.comm = part.comm_model();
+        self.measured = None;
+        self.sig.clear();
+        self.pending_drain += drain;
+        self.part = part;
+    }
+
+    fn into_outcome(self) -> LaneOutcome {
+        let completed = self.completions.len();
+        let makespan = self.completions.iter().map(|c| c.finish).fold(0.0, f64::max);
+        let lats = LatencySummary::from_unsorted(
+            self.completions.iter().map(Completion::latency).collect(),
+        );
+        let partition = if self.share < 1.0 {
+            format!("{}F{}G@{:.0}%", self.part.n_fpga, self.part.n_gpu, self.share * 100.0)
+        } else {
+            format!("{}F{}G", self.part.n_fpga, self.part.n_gpu)
+        };
+        LaneOutcome {
+            partition,
+            busy_time: self.busy_time,
+            report: ServeReport {
+                completed,
+                makespan,
+                throughput: completed as f64 / makespan,
+                mean_latency: lats.mean,
+                p50_latency: lats.p50,
+                p90_latency: lats.p90,
+                p99_latency: lats.p99,
+                max_queue_depth: self.max_queue,
+                reschedules: self.reschedules,
+                reschedule_downtime: self.downtime,
+                energy: self.energy,
+                cache: self.cache,
+                completions: self.completions,
+            },
+        }
+    }
+}
+
+/// The one event loop. Drains every trace through its lane on a single
+/// global clock; with a re-partitioning policy, also samples demand and
+/// migrates leases. Returns the engine metrics (utilization left empty —
+/// the caller normalizes by its makespan).
+fn run_event_loop<E: PerfEstimator>(
+    pool: &SystemSpec,
+    traces: &[&[Request]],
+    lanes: &mut [Lane<'_, '_, E>],
+    initial_demands: &[f64],
+    cfg: &EngineConfig,
+) -> EngineMetrics {
+    assert_eq!(traces.len(), lanes.len());
+    let mut q = EventQueue::new();
+    let mut remaining = 0usize;
+    for (s, trace) in traces.iter().enumerate() {
+        assert!(!trace.is_empty(), "empty stream trace");
+        remaining += trace.len();
+        for (i, req) in trace.iter().enumerate() {
+            q.push(req.arrival, EventKind::RequestArrival { stream: s, index: i });
+        }
+    }
+
+    let mut metrics = EngineMetrics {
+        time_sliced_streams: lanes.iter().filter(|l| l.share < 1.0).count(),
+        ..EngineMetrics::default()
+    };
+
+    let mut tracker = cfg.repartition.as_ref().map(|pol| {
+        // A non-positive interval would re-push its own event at the same
+        // timestamp forever and starve every later event — reject it.
+        assert!(
+            pol.sample_interval > 0.0 && pol.sample_interval.is_finite(),
+            "non-positive sample_interval {}",
+            pol.sample_interval
+        );
+        assert!(
+            pol.lease_term > 0.0 && pol.lease_term.is_finite(),
+            "non-positive lease_term {}",
+            pol.lease_term
+        );
+        assert!(pol.hysteresis >= 0.0, "negative hysteresis {}", pol.hysteresis);
+        q.push(pol.sample_interval, EventKind::RepartitionTick);
+        q.push(pol.lease_term, EventKind::LeaseExpiry);
+        DemandTracker::new(initial_demands, pol.ewma_alpha)
+    });
+
+    while remaining > 0 {
+        let ev = q.pop().expect("pending requests imply pending events");
+        let now = ev.time;
+        match ev.kind {
+            EventKind::RequestArrival { stream, index } => {
+                let lane = &mut lanes[stream];
+                lane.queue.push_back(index);
+                lane.max_queue = lane.max_queue.max(lane.queue.len());
+                if !lane.busy {
+                    lane.dispatch(traces[stream], stream, now, &mut q);
+                    remaining -= 1;
+                }
+            }
+            EventKind::BatchComplete { stream, .. } => {
+                let lane = &mut lanes[stream];
+                lane.busy = false;
+                lane.flops_window += lane.inflight_flops;
+                lane.inflight_flops = 0.0;
+                if !lane.queue.is_empty() {
+                    lane.dispatch(traces[stream], stream, now, &mut q);
+                    remaining -= 1;
+                }
+            }
+            EventKind::RepartitionTick => {
+                if let (Some(pol), Some(tr)) = (cfg.repartition.as_ref(), tracker.as_mut()) {
+                    let windows: Vec<f64> =
+                        lanes.iter_mut().map(|l| std::mem::take(&mut l.flops_window)).collect();
+                    tr.tick(now, &windows);
+                    q.push(now + pol.sample_interval, EventKind::RepartitionTick);
+                }
+            }
+            EventKind::LeaseExpiry => {
+                if let (Some(pol), Some(tr)) = (cfg.repartition.as_ref(), tracker.as_ref()) {
+                    maybe_migrate(pool, traces, lanes, tr, pol, cfg, &mut metrics);
+                    q.push(now + pol.lease_term, EventKind::LeaseExpiry);
+                }
+            }
+        }
+    }
+    metrics.events_processed = q.processed();
+    metrics
+}
+
+/// Lease-expiry handler: rebuild the lease table from the observed EWMA
+/// demands of the still-active streams; migrate only when the pool-share
+/// apportionment shifted past the policy's hysteresis.
+fn maybe_migrate<E: PerfEstimator>(
+    pool: &SystemSpec,
+    traces: &[&[Request]],
+    lanes: &mut [Lane<'_, '_, E>],
+    tracker: &DemandTracker,
+    pol: &RepartitionPolicy,
+    cfg: &EngineConfig,
+    metrics: &mut EngineMetrics,
+) {
+    let active: Vec<usize> = (0..lanes.len())
+        .filter(|&i| lanes[i].completions.len() < traces[i].len())
+        .collect();
+    if active.len() < 2 {
+        return; // nothing to rebalance against
+    }
+    let demands: Vec<f64> = active.iter().map(|&i| tracker.rate(i)).collect();
+    let desired = lease::assign(pool, &demands);
+    let d_total = (pool.n_fpga + pool.n_gpu) as f64;
+    let current: Vec<f64> = active
+        .iter()
+        .map(|&i| {
+            let l = &lanes[i];
+            l.share * (l.part.n_fpga + l.part.n_gpu) as f64 / d_total
+        })
+        .collect();
+    let next: Vec<f64> = (0..active.len()).map(|l| desired.pool_share(l, pool)).collect();
+    if share_shift(&current, &next) <= pol.hysteresis {
+        return; // renewal: the table in force is still close enough
+    }
+    metrics.repartitions += 1;
+    for (l, &s) in active.iter().enumerate() {
+        let part = desired.partitions[desired.part_of[l]].clone();
+        let share = desired.share[l];
+        let lane = &mut lanes[s];
+        if (part.n_fpga, part.n_gpu) != (lane.part.n_fpga, lane.part.n_gpu) {
+            metrics.lease_migrations += 1;
+            if lane.busy || !lane.queue.is_empty() {
+                metrics.preemptions += 1;
+            }
+            lane.migrate(part, cfg.migration_drain);
+        } else {
+            lane.part = part;
+        }
+        lane.share = share;
+    }
+}
+
+/// Single-stream entry point backing
+/// [`crate::coordinator::server::serve_trace`]: one lane, an exclusive
+/// full-pool lease, the caller's coordinator and ground truth.
+pub(crate) fn run_single<E: PerfEstimator>(
+    coordinator: &mut Coordinator<'_, E>,
+    sys: &SystemSpec,
+    gt: &GroundTruth,
+    trace: &[Request],
+) -> ServeReport {
+    assert!(!trace.is_empty());
+    let cfg = EngineConfig::default();
+    let mut lanes = vec![Lane::with_ground_truth(coordinator, sys.clone(), 1.0, gt.clone())];
+    let traces: [&[Request]; 1] = [trace];
+    run_event_loop(sys, &traces, &mut lanes, &[0.0], &cfg);
+    lanes.pop().expect("one lane").into_outcome().report
+}
+
+/// The serving-engine driver: leases the pool to the streams, builds one
+/// cached [`Coordinator`] per stream, and drains every trace through the
+/// global event loop.
+pub struct ServingEngine<'a, E: PerfEstimator> {
+    sys: SystemSpec,
+    est: &'a E,
+    cache: SharedScheduleCache,
+    cfg: EngineConfig,
+}
+
+impl<'a, E: PerfEstimator> ServingEngine<'a, E> {
+    /// An engine over `sys` with a default 64-entry shared schedule cache
+    /// and static leases (see [`EngineConfig`]).
+    pub fn new(sys: SystemSpec, est: &'a E) -> Self {
+        ServingEngine {
+            sys,
+            est,
+            cache: ScheduleCache::shared(64),
+            cfg: EngineConfig::default(),
+        }
+    }
+
+    /// Share an externally-owned schedule cache (e.g. one prewarmed via
+    /// [`ScheduleCache::load_from`]).
+    pub fn with_cache(mut self, cache: SharedScheduleCache) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    pub fn with_config(mut self, cfg: EngineConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Handle to the shared cache (e.g. for persistence after a run).
+    pub fn cache(&self) -> SharedScheduleCache {
+        self.cache.clone()
+    }
+
+    /// Serve every stream's trace to completion on one global clock.
+    pub fn serve(&mut self, streams: &[StreamSpec]) -> MultiStreamReport {
+        assert!(!streams.is_empty(), "no streams");
+        let cache_before = self.cache.lock().unwrap().stats();
+        let demands: Vec<f64> = streams.iter().map(StreamSpec::demand).collect();
+        let assignment = lease::assign(&self.sys, &demands);
+
+        let mut coords: Vec<Coordinator<'a, E>> = streams
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let (part, _) = assignment.lease_of(i);
+                Coordinator::new(part.clone(), self.est, spec.objective)
+                    .with_cache(self.cache.clone())
+            })
+            .collect();
+        let mut lanes: Vec<Lane<'_, 'a, E>> = coords
+            .iter_mut()
+            .enumerate()
+            .map(|(i, coord)| {
+                let (part, share) = assignment.lease_of(i);
+                Lane::new(coord, part.clone(), share)
+            })
+            .collect();
+        let traces: Vec<&[Request]> = streams.iter().map(|s| s.trace.as_slice()).collect();
+
+        let mut metrics = run_event_loop(&self.sys, &traces, &mut lanes, &demands, &self.cfg);
+
+        let outcomes: Vec<LaneOutcome> = lanes.into_iter().map(Lane::into_outcome).collect();
+        let makespan = outcomes.iter().map(|o| o.report.makespan).fold(0.0, f64::max);
+        metrics.utilization =
+            outcomes.iter().map(|o| o.busy_time / makespan.max(1e-12)).collect();
+
+        let total_completed: usize = outcomes.iter().map(|o| o.report.completed).sum();
+        let ratios: Vec<f64> = outcomes
+            .iter()
+            .zip(streams)
+            .map(|(o, spec)| o.report.throughput / spec.offered_rate().max(1e-9))
+            .collect();
+        let fairness = jain_index(&ratios);
+        let streams_out: Vec<StreamReport> = outcomes
+            .into_iter()
+            .zip(streams)
+            .map(|(o, spec)| StreamReport {
+                name: spec.name.clone(),
+                partition: o.partition,
+                report: o.report,
+            })
+            .collect();
+        let cache = self.cache.lock().unwrap().stats().since(&cache_before);
+        MultiStreamReport {
+            streams: streams_out,
+            cache,
+            makespan,
+            total_completed,
+            aggregate_throughput: total_completed as f64 / makespan.max(1e-12),
+            fairness,
+            engine: metrics,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Interconnect, Objective};
+    use crate::coordinator::server::generate_trace;
+    use crate::perfmodel::OracleModels;
+    use crate::workload::{gnn, Dataset, Workload};
+
+    fn sys() -> SystemSpec {
+        SystemSpec::paper_testbed(Interconnect::Pcie4) // 3F + 2G
+    }
+
+    fn gcn(edges: u64) -> Workload {
+        gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, edges, 200, 0.2), 2, 128)
+    }
+
+    // Oversubscription (more streams than devices) is covered by the
+    // lease-level unit tests (`lease::tests`), the positive satellite
+    // test in `coordinator::multi`, and the acceptance test in
+    // `rust/tests/engine.rs` — not duplicated here.
+
+    #[test]
+    #[should_panic(expected = "sample_interval")]
+    fn rejects_non_positive_repartition_intervals() {
+        // A zero interval would re-push its own tick at the same
+        // timestamp forever; the engine must refuse it up front.
+        let s = sys();
+        let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let est = OracleModels { gt: &gt };
+        let streams = vec![StreamSpec::new(
+            "a",
+            Objective::Performance,
+            generate_trace(&[(gcn(2_000_000), 2)], 10.0, 5),
+        )];
+        let cfg = EngineConfig {
+            repartition: Some(RepartitionPolicy {
+                sample_interval: 0.0,
+                lease_term: 1.0,
+                ewma_alpha: 0.5,
+                hysteresis: 0.1,
+            }),
+            ..EngineConfig::default()
+        };
+        ServingEngine::new(s, &est).with_config(cfg).serve(&streams);
+    }
+
+    #[test]
+    fn static_leases_never_migrate() {
+        let s = sys();
+        let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let est = OracleModels { gt: &gt };
+        let streams = vec![
+            StreamSpec::new("a", Objective::Performance, generate_trace(&[(gcn(2_000_000), 8)], 20.0, 1)),
+            StreamSpec::new("b", Objective::Performance, generate_trace(&[(gcn(150_000_000), 8)], 20.0, 2)),
+        ];
+        let mut engine = ServingEngine::new(s, &est);
+        let r = engine.serve(&streams);
+        assert_eq!(r.engine.lease_migrations, 0);
+        assert_eq!(r.engine.repartitions, 0);
+        assert_eq!(r.engine.utilization.len(), 2);
+        for u in &r.engine.utilization {
+            assert!(*u > 0.0 && *u <= 1.0 + 1e-9, "utilization {u}");
+        }
+    }
+
+    #[test]
+    fn phase_reversed_demand_skew_migrates_leases() {
+        // Both streams offer the same *total* demand, so the initial
+        // leases split the pool evenly — but stream a is heavy in the
+        // first half and light in the second, b the mirror image. The
+        // demand tracker must notice and migrate devices at least once.
+        let s = sys();
+        let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let est = OracleModels { gt: &gt };
+        let heavy = gcn(150_000_000);
+        let light = gcn(2_000_000);
+        let a = generate_trace(&[(heavy.clone(), 10), (light.clone(), 10)], 10.0, 3);
+        let b = generate_trace(&[(light, 10), (heavy, 10)], 10.0, 4);
+        let streams = vec![
+            StreamSpec::new("a", Objective::Performance, a),
+            StreamSpec::new("b", Objective::Performance, b),
+        ];
+        let cfg = EngineConfig {
+            repartition: Some(RepartitionPolicy {
+                sample_interval: 0.05,
+                lease_term: 0.1,
+                ewma_alpha: 0.6,
+                hysteresis: 0.05,
+            }),
+            ..EngineConfig::default()
+        };
+        let mut engine = ServingEngine::new(s, &est).with_config(cfg);
+        let r = engine.serve(&streams);
+        assert_eq!(r.total_completed, 40, "migration must not lose requests");
+        assert!(
+            r.engine.lease_migrations >= 1,
+            "skewed demand must migrate at least one lease: {}",
+            r.engine
+        );
+        assert!(r.engine.repartitions >= 1);
+        assert!(r.fairness > 0.0);
+    }
+}

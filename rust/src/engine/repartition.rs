@@ -1,0 +1,148 @@
+//! Online re-partitioning: demand tracking and the migration policy.
+//!
+//! The intra-stream reschedule policy (hysteresis over estimated gain,
+//! `coordinator`) has an inter-stream analogue: the *lease table* itself
+//! can become stale when one stream's observed load drifts away from the
+//! offered-rate estimate its lease was sized on. The engine tracks each
+//! stream's completed-FLOP rate with an EWMA, and at every lease expiry
+//! compares the lease table it *would* build from the observed rates
+//! against the one in force. When the pool-share apportionment has
+//! shifted past a hysteresis threshold (total-variation distance), the
+//! leases migrate — and every stream whose device inventory changed pays
+//! an explicit drain cost before its next admission, mirroring the
+//! intra-stream reschedule drain.
+
+/// Knobs of the online re-partitioning policy. `None` in
+/// [`super::EngineConfig`] disables re-partitioning entirely (static
+/// leases for the whole run — the PR-1-compatible mode).
+#[derive(Debug, Clone)]
+pub struct RepartitionPolicy {
+    /// Interval between demand-sampling ticks (s): each tick folds the
+    /// completed-FLOP window into the EWMA.
+    pub sample_interval: f64,
+    /// Lease term (s): how often expiry re-validates the apportionment.
+    pub lease_term: f64,
+    /// EWMA smoothing weight on the newest sample, in (0, 1].
+    pub ewma_alpha: f64,
+    /// Minimum total-variation shift of the pool-share vector before a
+    /// migration is worth its drain cost.
+    pub hysteresis: f64,
+}
+
+impl Default for RepartitionPolicy {
+    fn default() -> Self {
+        RepartitionPolicy {
+            sample_interval: 0.5,
+            lease_term: 2.0,
+            ewma_alpha: 0.4,
+            hysteresis: 0.15,
+        }
+    }
+}
+
+impl RepartitionPolicy {
+    /// A policy that reacts within roughly `horizon` seconds: samples at
+    /// `horizon/8`, re-validates leases at `horizon/4`.
+    pub fn reactive(horizon: f64) -> RepartitionPolicy {
+        assert!(horizon > 0.0 && horizon.is_finite());
+        RepartitionPolicy {
+            sample_interval: horizon / 8.0,
+            lease_term: horizon / 4.0,
+            ewma_alpha: 0.5,
+            hysteresis: 0.1,
+        }
+    }
+}
+
+/// Per-stream EWMA of observed demand (completed FLOP/s), seeded with
+/// the offered-rate estimate the initial leases were sized on.
+#[derive(Debug, Clone)]
+pub struct DemandTracker {
+    alpha: f64,
+    rates: Vec<f64>,
+    last_tick: f64,
+}
+
+impl DemandTracker {
+    pub fn new(initial_rates: &[f64], alpha: f64) -> DemandTracker {
+        assert!(alpha > 0.0 && alpha <= 1.0, "EWMA alpha {alpha} outside (0, 1]");
+        DemandTracker { alpha, rates: initial_rates.to_vec(), last_tick: 0.0 }
+    }
+
+    /// Fold one sampling window into the EWMAs. `windows[i]` is the FLOPs
+    /// stream `i` completed since the previous tick; `now` is the tick's
+    /// global-clock time. No-op for a zero-length window.
+    pub fn tick(&mut self, now: f64, windows: &[f64]) {
+        assert_eq!(windows.len(), self.rates.len());
+        let dt = now - self.last_tick;
+        if dt <= 0.0 {
+            return;
+        }
+        for (rate, w) in self.rates.iter_mut().zip(windows) {
+            *rate = self.alpha * (w / dt) + (1.0 - self.alpha) * *rate;
+        }
+        self.last_tick = now;
+    }
+
+    /// The current demand estimate for stream `i` (FLOP/s).
+    pub fn rate(&self, i: usize) -> f64 {
+        self.rates[i]
+    }
+
+    pub fn rates(&self) -> &[f64] {
+        &self.rates
+    }
+}
+
+/// Total-variation distance between two pool-share vectors (each
+/// non-negative, typically summing to ≤ 1): `½·Σ|aᵢ − bᵢ|`, in [0, 1].
+pub fn share_shift(current: &[f64], desired: &[f64]) -> f64 {
+    assert_eq!(current.len(), desired.len());
+    0.5 * current.iter().zip(desired).map(|(a, b)| (a - b).abs()).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges_to_observed_rate() {
+        let mut t = DemandTracker::new(&[100.0], 0.5);
+        // Stream actually completes 10 FLOP/s over repeated 1s windows.
+        for k in 1..=12 {
+            t.tick(k as f64, &[10.0]);
+        }
+        assert!((t.rate(0) - 10.0).abs() < 0.1, "rate {}", t.rate(0));
+    }
+
+    #[test]
+    fn idle_stream_demand_decays() {
+        let mut t = DemandTracker::new(&[1e9, 1e9], 0.4);
+        for k in 1..=20 {
+            t.tick(k as f64, &[1e9, 0.0]);
+        }
+        assert!(t.rate(1) < t.rate(0) * 1e-3, "idle stream must decay");
+    }
+
+    #[test]
+    fn zero_dt_tick_is_a_noop() {
+        let mut t = DemandTracker::new(&[5.0], 0.5);
+        t.tick(0.0, &[1e12]);
+        assert_eq!(t.rate(0), 5.0);
+    }
+
+    #[test]
+    fn share_shift_is_total_variation() {
+        assert_eq!(share_shift(&[0.5, 0.5], &[0.5, 0.5]), 0.0);
+        assert!((share_shift(&[1.0, 0.0], &[0.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((share_shift(&[0.6, 0.4], &[0.4, 0.6]) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reactive_policy_scales_with_horizon() {
+        let p = RepartitionPolicy::reactive(8.0);
+        assert_eq!(p.sample_interval, 1.0);
+        assert_eq!(p.lease_term, 2.0);
+        assert!(p.lease_term > p.sample_interval);
+    }
+}

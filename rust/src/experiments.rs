@@ -10,6 +10,7 @@
 use crate::config::{Interconnect, Objective, SystemSpec};
 use crate::coordinator::{generate_trace, MultiStreamReport, MultiStreamServer, StreamSpec};
 use crate::devices::GroundTruth;
+use crate::engine::EngineConfig;
 use crate::perfmodel::{calibrate, ModelRegistry, OracleModels, PerfEstimator};
 use crate::pipeline::PipelineSim;
 use crate::scheduler::{baselines, evaluate_plan, DpScheduler, PowerTable, StagePlan};
@@ -223,11 +224,46 @@ pub fn multi_stream_scenario(cycles: usize, per_phase: usize, seed: u64) -> Vec<
 
 /// Serve `streams` on `sys` with the ground-truth oracle as `f_perf`
 /// (the example/bench/test entry point for multi-stream serving).
+/// Engine defaults apply: static leases, no online re-partitioning.
 pub fn run_multi_stream(sys: &SystemSpec, streams: &[StreamSpec]) -> MultiStreamReport {
+    run_multi_stream_with(sys, streams, EngineConfig::default())
+}
+
+/// [`run_multi_stream`] with an explicit engine configuration — e.g.
+/// [`EngineConfig::adaptive`] to let device leases migrate with observed
+/// demand.
+pub fn run_multi_stream_with(
+    sys: &SystemSpec,
+    streams: &[StreamSpec],
+    cfg: EngineConfig,
+) -> MultiStreamReport {
     let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
     let oracle = OracleModels { gt: &gt };
-    let mut server = MultiStreamServer::new(sys.clone(), &oracle);
+    let mut server = MultiStreamServer::new(sys.clone(), &oracle).with_engine_config(cfg);
     server.serve(streams)
+}
+
+/// A demand-skew stress scenario for online re-partitioning: two streams
+/// with (near-)equal *total* offered demand but phase-reversed load —
+/// `front-loaded` is heavy in its first half and light in its second,
+/// `back-loaded` the mirror image. Any static lease sized on the offered
+/// totals is therefore wrong in *both* halves; an adaptive engine should
+/// migrate devices toward the currently-heavy stream. Used by
+/// `benches/engine_repartition.rs` and the engine acceptance tests.
+pub fn skewed_pair_scenario(per_phase: usize, seed: u64) -> Vec<StreamSpec> {
+    assert!(per_phase >= 1);
+    let traffic = |edges: u64| {
+        let ds = Dataset::new("TF", "traffic", 1_000_000, edges, 200, 0.2);
+        gnn::gcn_workload(&ds, 2, 128)
+    };
+    let heavy = traffic(150_000_000);
+    let light = traffic(2_000_000);
+    let a = generate_trace(&[(heavy.clone(), per_phase), (light.clone(), per_phase)], 10.0, seed);
+    let b = generate_trace(&[(light, per_phase), (heavy, per_phase)], 10.0, seed + 1);
+    vec![
+        StreamSpec::new("front-loaded", Objective::Performance, a),
+        StreamSpec::new("back-loaded", Objective::Performance, b),
+    ]
 }
 
 /// Reference workload for static-plan tuning: same model family on the
@@ -265,6 +301,25 @@ mod tests {
         // 5 + 3 distinct quantized regimes → ≤ 8 DP runs out of 80 lookups.
         assert!(r.cache.misses <= 8, "misses {}", r.cache.misses);
         assert!(r.cache.hit_rate() > 0.5, "hit rate {}", r.cache.hit_rate());
+    }
+
+    #[test]
+    fn skewed_pair_offers_balanced_totals_with_reversed_phases() {
+        let streams = skewed_pair_scenario(5, 11);
+        assert_eq!(streams.len(), 2);
+        let (d0, d1) = (streams[0].demand(), streams[1].demand());
+        // Totals are near-equal (deterministic traces; spans differ only
+        // by arrival jitter), so the *initial* lease split is even — the
+        // skew only shows up online, which is the point of the scenario.
+        assert!(d0 / d1 < 2.0 && d1 / d0 < 2.0, "offered totals {d0} vs {d1}");
+        // Per-half demand is wildly uneven: heavy phase ≈ 75× light.
+        let half = |s: &StreamSpec, first: bool| -> f64 {
+            let n = s.trace.len() / 2;
+            let slice = if first { &s.trace[..n] } else { &s.trace[n..] };
+            slice.iter().map(|r| r.workload.total_flops()).sum()
+        };
+        assert!(half(&streams[0], true) > 10.0 * half(&streams[0], false));
+        assert!(half(&streams[1], false) > 10.0 * half(&streams[1], true));
     }
 
     #[test]

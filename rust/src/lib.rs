@@ -10,10 +10,15 @@
 //!   simulated heterogeneous testbed ([`devices`]); plus the streaming
 //!   pipeline executor ([`pipeline`]) and the serving layer
 //!   ([`coordinator`]): drift-aware rescheduling with hysteresis, a
-//!   quantized-feature schedule cache ([`scheduler::ScheduleCache`]) that
-//!   turns reschedules on recurring drift into cache hits, and a
-//!   multi-stream server that partitions the device pool across
-//!   concurrent request streams ([`coordinator::MultiStreamServer`]).
+//!   quantized-feature schedule cache ([`scheduler::ScheduleCache`],
+//!   persistable across restarts) that turns reschedules on recurring
+//!   drift into cache hits, and the event-heap serving engine
+//!   ([`engine`]): one global discrete-event clock for every concurrent
+//!   request stream, devices handed out as time-sliced *leases*
+//!   (arbitrarily many streams per pool) and re-leased online when
+//!   observed demand drifts past a hysteresis —
+//!   [`coordinator::MultiStreamServer`] and the single-stream
+//!   [`coordinator::Server`] are both front-ends over it.
 //! * **L2/L1 (build time, `python/`)** — the workloads' actual compute
 //!   (GCN / GIN / sliding-window transformer layers composed from Pallas
 //!   kernels), AOT-lowered to HLO text artifacts executed by [`runtime`]
@@ -26,6 +31,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod devices;
+pub mod engine;
 pub mod experiments;
 pub mod metrics;
 pub mod perfmodel;
@@ -71,12 +77,36 @@ pub mod workload;
 /// assert!(report.p50_latency <= report.p99_latency);
 /// assert!(report.cache.hit_rate() > 0.5, "recurring drift is served from cache");
 /// ```
+///
+/// Serving more streams than devices — the engine time-slices device
+/// leases instead of rejecting the overflow:
+///
+/// ```
+/// use dype::prelude::*;
+///
+/// let sys = SystemSpec::reduced_testbed(Interconnect::Pcie4); // 2F + 1G
+/// let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+/// let est = OracleModels { gt: &gt };
+/// let wl = gnn::gcn_workload(&Dataset::synthetic2(), 2, 128);
+/// let streams: Vec<StreamSpec> = (0..4u64)
+///     .map(|i| {
+///         let trace = generate_trace(&[(wl.clone(), 4)], 10.0, i);
+///         StreamSpec::new(format!("s{i}"), Objective::Performance, trace)
+///     })
+///     .collect();
+/// let mut engine = ServingEngine::new(sys, &est);
+/// let report = engine.serve(&streams);
+/// assert_eq!(report.total_completed, 16, "no stream starves on a small pool");
+/// assert!(report.fairness > 0.0);
+/// assert!(report.engine.time_sliced_streams >= 1);
+/// ```
 pub mod prelude {
     pub use crate::config::{Interconnect, Objective, SystemSpec};
     pub use crate::coordinator::{
         generate_trace, Coordinator, MultiStreamServer, Server, StreamSpec,
     };
     pub use crate::devices::{DeviceType, GroundTruth};
+    pub use crate::engine::{EngineConfig, RepartitionPolicy, ServingEngine};
     pub use crate::perfmodel::{calibrate, ModelRegistry, OracleModels};
     pub use crate::pipeline::sim::PipelineSim;
     pub use crate::scheduler::{baselines, CacheStats, DpScheduler, Schedule, ScheduleCache, Stage};

@@ -105,6 +105,19 @@ pub fn fmt_ratio(x: f64) -> String {
     format!("{x:.2}x")
 }
 
+/// Jain's fairness index `(Σx)² / (n·Σx²)` over non-negative rates:
+/// 1.0 = perfectly even, → 1/n as one participant monopolizes. Used by
+/// the serving engine over per-stream achieved/offered service ratios.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        return 0.0;
+    }
+    sum * sum / (n * sq)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +149,14 @@ mod tests {
     fn ratio_format_matches_paper_style() {
         assert_eq!(fmt_ratio(1.534), "1.53x");
         assert_eq!(fmt_percent(0.7321), "73.2%");
+    }
+
+    #[test]
+    fn jain_index_bounds() {
+        assert!((jain_index(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        let skew = jain_index(&[1.0, 0.0, 0.0]);
+        assert!((skew - 1.0 / 3.0).abs() < 1e-12, "monopolist → 1/n, got {skew}");
+        assert_eq!(jain_index(&[0.0, 0.0]), 0.0, "degenerate sample");
     }
 
     #[test]

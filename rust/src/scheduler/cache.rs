@@ -24,13 +24,21 @@
 //! Capacity is bounded with LRU eviction, and keys embed the system
 //! fingerprint, so changing the device inventory (or handing a stream a
 //! different partition of it) can never resurrect a stale plan.
+//!
+//! The cache also persists: [`ScheduleCache::save_to`] /
+//! [`ScheduleCache::load_from`] serialize the entries (and their recency
+//! order) through `util/json`, so a restarted server warm-starts past
+//! the cold DP storm instead of re-solving every regime it already knew.
 
 use std::collections::{HashMap, VecDeque};
+use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use crate::config::{Objective, SystemSpec};
+use crate::devices::DeviceType;
 use crate::perfmodel::{kernel_bucket, KernelBucket};
-use crate::workload::Workload;
+use crate::util::json::Json;
+use crate::workload::{KernelKind, Workload};
 
 use super::pipeline_def::StagePlan;
 
@@ -156,6 +164,16 @@ impl CacheStats {
             invalidations: self.invalidations - earlier.invalidations,
         }
     }
+
+    /// Counter-wise sum with `delta`. The serving engine attributes
+    /// shared-cache traffic per stream by accumulating per-dispatch
+    /// [`CacheStats::since`] diffs through this.
+    pub fn accumulate(&mut self, delta: &CacheStats) {
+        self.hits += delta.hits;
+        self.misses += delta.misses;
+        self.evictions += delta.evictions;
+        self.invalidations += delta.invalidations;
+    }
 }
 
 impl std::fmt::Display for CacheStats {
@@ -260,6 +278,150 @@ impl ScheduleCache {
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
+
+    /// Persist every entry to `path` as JSON, least-recently-used first,
+    /// so [`ScheduleCache::load_from`] rebuilds both the entries *and*
+    /// the eviction order. Counters are not persisted — a restarted
+    /// server starts its statistics fresh; what it skips is the
+    /// cold-start DP storm, because every previously-seen quantized
+    /// regime re-hits its memoized plan.
+    pub fn save_to(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut out = String::with_capacity(64 + self.entries.len() * 256);
+        out.push_str("{\"version\":1,\"entries\":[");
+        for (n, key) in self.lru.iter().enumerate() {
+            if n > 0 {
+                out.push(',');
+            }
+            let plan = self.entries.get(key).expect("lru tracks entries");
+            out.push_str(&format!(
+                "{{\"sys\":\"{:016x}\",\"obj\":\"{:016x}\",\"kernels\":[",
+                key.sys_fp, key.obj_fp
+            ));
+            for (i, kb) in key.kernels.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"tag\":\"{}\",\"dims\":[{},{},{},{}],\"density\":{}}}",
+                    kb.tag, kb.dims[0], kb.dims[1], kb.dims[2], kb.dims[3], kb.density
+                ));
+            }
+            out.push_str("],\"plan\":[");
+            for (i, sp) in plan.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"first\":{},\"last\":{},\"dev\":\"{}\",\"n\":{}}}",
+                    sp.first,
+                    sp.last,
+                    sp.dev.letter(),
+                    sp.n
+                ));
+            }
+            out.push_str("]}");
+        }
+        out.push_str("]}");
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// Rebuild a cache from a [`ScheduleCache::save_to`] file. Entries
+    /// are re-inserted in saved order (LRU first), so recency carries
+    /// over; if `capacity` is smaller than the saved entry count, the
+    /// least-recent overflow is evicted exactly as live inserts would.
+    /// Strict: any malformed entry fails the whole load (a corrupt warm
+    /// file should be noticed, not half-used).
+    pub fn load_from(path: impl AsRef<Path>, capacity: usize) -> anyhow::Result<ScheduleCache> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = crate::util::json::parse(&text)?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("cache file missing version"))?;
+        anyhow::ensure!(version == 1, "unsupported cache-file version {version}");
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("cache file missing entries array"))?;
+        let mut cache = ScheduleCache::new(capacity);
+        for (n, e) in entries.iter().enumerate() {
+            let (key, plan) =
+                parse_entry(e).map_err(|msg| anyhow::anyhow!("cache entry {n}: {msg}"))?;
+            cache.insert(key, plan);
+        }
+        // Warmup bookkeeping is not serving traffic.
+        cache.stats = CacheStats::default();
+        Ok(cache)
+    }
+}
+
+/// Parse one persisted cache entry. Returns a human-readable reason on
+/// any shape violation; the caller wraps it with the entry index.
+fn parse_entry(e: &Json) -> Result<(CacheKey, Vec<StagePlan>), String> {
+    let sys_fp = fingerprint_field(e, "sys")?;
+    let obj_fp = fingerprint_field(e, "obj")?;
+
+    let kernels_json = e.get("kernels").and_then(Json::as_arr).ok_or("missing kernels")?;
+    let mut kernels = Vec::with_capacity(kernels_json.len());
+    for k in kernels_json {
+        let tag_str = k.get("tag").and_then(Json::as_str).ok_or("missing kernel tag")?;
+        let tag = static_tag(tag_str).ok_or_else(|| format!("unknown kernel tag {tag_str:?}"))?;
+        let dims_json = k.get("dims").and_then(Json::as_arr).ok_or("missing dims")?;
+        if dims_json.len() != 4 {
+            return Err(format!("dims must have 4 elements, got {}", dims_json.len()));
+        }
+        let mut dims = [0u32; 4];
+        for (i, d) in dims_json.iter().enumerate() {
+            dims[i] = d.as_u64().ok_or("bad dim")? as u32;
+        }
+        let density = k.get("density").and_then(Json::as_f64).ok_or("missing density")? as i32;
+        kernels.push(KernelBucket { tag, dims, density });
+    }
+
+    let plan_json = e.get("plan").and_then(Json::as_arr).ok_or("missing plan")?;
+    if plan_json.is_empty() {
+        return Err("empty plan".into());
+    }
+    let mut plan = Vec::with_capacity(plan_json.len());
+    for sp in plan_json {
+        let first = sp.get("first").and_then(Json::as_u64).ok_or("bad first")? as usize;
+        let last = sp.get("last").and_then(Json::as_u64).ok_or("bad last")? as usize;
+        let n = sp.get("n").and_then(Json::as_u64).ok_or("bad n")? as usize;
+        let dev = match sp.get("dev").and_then(Json::as_str) {
+            Some("G") => DeviceType::Gpu,
+            Some("F") => DeviceType::Fpga,
+            other => return Err(format!("bad device letter {other:?}")),
+        };
+        if n == 0 || last < first {
+            return Err(format!("malformed stage plan {first}..{last} × {n}"));
+        }
+        plan.push(StagePlan { first, last, dev, n });
+    }
+    // Structural sanity mirrors `Schedule::validate`: contiguous coverage
+    // from kernel 0 (total kernel count is only known at hit time).
+    if plan[0].first != 0 {
+        return Err("plan must start at kernel 0".into());
+    }
+    for w in plan.windows(2) {
+        if w[1].first != w[0].last + 1 {
+            return Err(format!("gap/overlap between stages {}..{}", w[0].last, w[1].first));
+        }
+    }
+    Ok((CacheKey { sys_fp, obj_fp, kernels }, plan))
+}
+
+fn fingerprint_field(e: &Json, name: &str) -> Result<u64, String> {
+    let s = e.get(name).and_then(Json::as_str).ok_or_else(|| format!("missing {name}"))?;
+    u64::from_str_radix(s, 16).map_err(|_| format!("bad {name} fingerprint {s:?}"))
+}
+
+/// Re-intern a persisted kernel-family tag as the `'static` string the
+/// live [`KernelBucket`]s carry, so loaded keys hash/compare identically.
+/// The vocabulary is [`KernelKind::ALL_TAGS`] — adding a kernel family
+/// there keeps persisted caches loadable automatically.
+fn static_tag(s: &str) -> Option<&'static str> {
+    KernelKind::ALL_TAGS.into_iter().find(|t| *t == s)
 }
 
 #[cfg(test)]
@@ -364,6 +526,97 @@ mod tests {
         cache.clear();
         assert!(cache.is_empty());
         assert_eq!(cache.stats().invalidations, 1);
+    }
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dype_cache_{tag}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn persistence_round_trips_entries_and_recency() {
+        let s = sys();
+        let fp = system_fingerprint(&s);
+        let mut cache = ScheduleCache::new(8);
+        let wls: Vec<_> = [2u64, 20, 150]
+            .iter()
+            .map(|m| {
+                gnn::gcn_workload(
+                    &Dataset::new("T", "t", 1_000_000, m * 1_000_000, 200, 0.2),
+                    2,
+                    128,
+                )
+            })
+            .collect();
+        let keys: Vec<_> =
+            wls.iter().map(|w| CacheKey::new(fp, w, Objective::Performance)).collect();
+        for k in &keys {
+            cache.insert(k.clone(), plan());
+        }
+        cache.lookup(&keys[0]); // refresh 0 → LRU order is 1, 2, 0
+
+        let path = temp_path("roundtrip");
+        cache.save_to(&path).unwrap();
+        let mut loaded = ScheduleCache::load_from(&path, 2).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        // Capacity 2 < 3 saved entries: the least-recent entry (key 1)
+        // was evicted during load, recency carried over.
+        assert_eq!(loaded.len(), 2);
+        assert!(loaded.lookup(&keys[1]).is_none(), "LRU entry evicted on load");
+        assert_eq!(loaded.lookup(&keys[2]).unwrap(), plan());
+        assert_eq!(loaded.lookup(&keys[0]).unwrap(), plan());
+    }
+
+    #[test]
+    fn loaded_cache_counts_stats_fresh() {
+        let s = sys();
+        let fp = system_fingerprint(&s);
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let key = CacheKey::new(fp, &wl, Objective::Performance);
+        let mut cache = ScheduleCache::new(4);
+        cache.lookup(&key); // a miss, just to dirty the counters
+        cache.insert(key.clone(), plan());
+
+        let path = temp_path("stats");
+        cache.save_to(&path).unwrap();
+        let mut loaded = ScheduleCache::load_from(&path, 4).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(loaded.stats(), CacheStats::default(), "warmup is not traffic");
+        assert!(loaded.lookup(&key).is_some(), "warm entry hits immediately");
+        assert_eq!(loaded.stats().hits, 1);
+        assert_eq!(loaded.stats().misses, 0, "no cold-start DP for a known regime");
+    }
+
+    #[test]
+    fn load_rejects_malformed_files() {
+        let path = temp_path("garbage");
+        for bad in [
+            "not json at all",
+            "{\"entries\":[]}",                                      // missing version
+            "{\"version\":2,\"entries\":[]}",                        // future version
+            "{\"version\":1,\"entries\":[{\"sys\":\"zz\"}]}",        // bad fingerprint
+            // Unknown kernel family must not be half-imported.
+            "{\"version\":1,\"entries\":[{\"sys\":\"00\",\"obj\":\"00\",\
+             \"kernels\":[{\"tag\":\"conv\",\"dims\":[1,1,1,1],\"density\":0}],\
+             \"plan\":[{\"first\":0,\"last\":0,\"dev\":\"G\",\"n\":1}]}]}",
+            // Plan with a gap.
+            "{\"version\":1,\"entries\":[{\"sys\":\"00\",\"obj\":\"00\",\
+             \"kernels\":[{\"tag\":\"gemm\",\"dims\":[1,1,1,0],\"density\":0}],\
+             \"plan\":[{\"first\":0,\"last\":0,\"dev\":\"G\",\"n\":1},\
+                       {\"first\":2,\"last\":3,\"dev\":\"F\",\"n\":1}]}]}",
+        ] {
+            std::fs::write(&path, bad).unwrap();
+            assert!(ScheduleCache::load_from(&path, 8).is_err(), "accepted: {bad}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn accumulate_sums_counters() {
+        let mut a = CacheStats { hits: 1, misses: 2, evictions: 0, invalidations: 0 };
+        a.accumulate(&CacheStats { hits: 3, misses: 1, evictions: 2, invalidations: 1 });
+        assert_eq!(a, CacheStats { hits: 4, misses: 3, evictions: 2, invalidations: 1 });
     }
 
     #[test]

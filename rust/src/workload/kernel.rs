@@ -118,6 +118,13 @@ impl KernelKind {
             KernelKind::WindowAttn { .. } => "winattn",
         }
     }
+
+    /// Every tag [`KernelKind::tag`] can return — the single vocabulary
+    /// consumers re-interning persisted tags (schedule-cache
+    /// `load_from`) match against. Keep in lockstep with `tag` when
+    /// adding a kernel family (`tag_vocabulary_is_exhaustive` guards the
+    /// pairing).
+    pub const ALL_TAGS: [&'static str; 3] = ["spmm", "gemm", "winattn"];
 }
 
 /// One kernel instance in a workload chain.
@@ -178,6 +185,22 @@ impl Workload {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tag_vocabulary_is_exhaustive() {
+        // One witness per variant: every tag() value must appear in
+        // ALL_TAGS (and vice versa), so persisted caches written with a
+        // new kernel family cannot silently become unloadable.
+        let witnesses = [
+            KernelKind::SpMM { m: 1, k: 1, n: 1, nnz: 1 },
+            KernelKind::Gemm { m: 1, k: 1, n: 1 },
+            KernelKind::WindowAttn { seq: 1, window: 1, heads: 1, dim: 1 },
+        ];
+        assert_eq!(witnesses.len(), KernelKind::ALL_TAGS.len());
+        for w in &witnesses {
+            assert!(KernelKind::ALL_TAGS.contains(&w.tag()), "missing tag {}", w.tag());
+        }
+    }
 
     #[test]
     fn spmm_flops_match_paper_formula() {

@@ -1,0 +1,235 @@
+//! Engine acceptance tests (ISSUE 2):
+//!
+//! * **Equivalence property** — a single-stream trace run through the
+//!   event-heap engine (`serve_trace` is now its single-stream special
+//!   case) must produce *identical* completions, latencies, reschedule
+//!   counts, downtime, and energy to the legacy synchronous
+//!   discrete-event accounting, which is re-implemented here as an
+//!   independent reference. Checked over seeded random traces, cached
+//!   and uncached.
+//! * **Oversubscription** — more streams than devices completes with a
+//!   nonzero Jain fairness index (time-sliced leases, no panic).
+//! * **Online re-partitioning** — the demand-skewed two-stream scenario
+//!   must migrate at least one device lease, while the static default
+//!   migrates none.
+
+use dype::config::{Interconnect, Objective, SystemSpec};
+use dype::coordinator::server::{generate_trace, serve_trace, RESCHEDULE_DRAIN_COST};
+use dype::coordinator::{Completion, Coordinator, Request};
+use dype::devices::GroundTruth;
+use dype::engine::{EngineConfig, RepartitionPolicy, ServingEngine};
+use dype::experiments::{run_multi_stream, run_multi_stream_with, skewed_pair_scenario};
+use dype::perfmodel::{OracleModels, PerfEstimator};
+use dype::scheduler::{evaluate_plan, PowerTable, Schedule, ScheduleCache};
+use dype::util::Rng;
+use dype::workload::{gnn, transformer, Dataset, Workload};
+
+fn sys() -> SystemSpec {
+    SystemSpec::paper_testbed(Interconnect::Pcie4)
+}
+
+fn gcn(edges: u64) -> Workload {
+    gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, edges, 200, 0.2), 2, 128)
+}
+
+/// The legacy pre-engine accounting, verbatim: one synchronous loop,
+/// FIFO admission, one inference per pipeline period, drain cost on
+/// reschedule. The engine must reproduce this exactly for a sole tenant.
+struct LegacyOutcome {
+    completions: Vec<Completion>,
+    reschedules: usize,
+    downtime: f64,
+    max_queue: usize,
+    energy: f64,
+}
+
+fn legacy_serve<E: PerfEstimator>(
+    coordinator: &mut Coordinator<'_, E>,
+    sys: &SystemSpec,
+    gt: &GroundTruth,
+    trace: &[Request],
+) -> LegacyOutcome {
+    assert!(!trace.is_empty());
+    let power = PowerTable::new(sys.gpu.clone(), sys.fpga.clone());
+    let comm = sys.comm_model();
+    let oracle = OracleModels { gt };
+
+    let mut clock = 0.0f64;
+    let mut completions: Vec<Completion> = Vec::with_capacity(trace.len());
+    let mut queue: std::collections::VecDeque<&Request> = Default::default();
+    let mut next_arrival = 0usize;
+    let mut current_sig = String::new();
+    let mut measured: Option<Schedule> = None;
+    let mut reschedules = 0usize;
+    let mut downtime = 0.0f64;
+    let mut max_queue = 0usize;
+    let mut energy = 0.0f64;
+
+    while completions.len() < trace.len() {
+        while next_arrival < trace.len() && trace[next_arrival].arrival <= clock {
+            queue.push_back(&trace[next_arrival]);
+            next_arrival += 1;
+        }
+        max_queue = max_queue.max(queue.len());
+
+        let Some(req) = queue.pop_front() else {
+            clock = trace[next_arrival].arrival;
+            continue;
+        };
+
+        let sig: String =
+            req.workload.kernels.iter().map(|k| format!("{:?};", k.kind)).collect();
+        let events_before = coordinator.reschedule_events().len();
+        let sched = coordinator.process_batch(&req.workload).clone();
+        let rescheduled = coordinator.reschedule_events().len() > events_before;
+        if sig != current_sig || rescheduled || measured.is_none() {
+            current_sig = sig;
+            measured = Some(evaluate_plan(&req.workload, &sched.plan(), &oracle, &comm, &power));
+        }
+        if rescheduled {
+            reschedules += 1;
+            downtime += RESCHEDULE_DRAIN_COST;
+            clock += RESCHEDULE_DRAIN_COST;
+        }
+        let m = measured.as_ref().unwrap();
+
+        let start = clock.max(req.arrival);
+        let finish = start + m.period.max(1e-12) + m.latency() - m.period;
+        clock = start + m.period;
+        energy += m.energy_per_inf;
+        completions.push(Completion { id: req.id, arrival: req.arrival, start, finish });
+    }
+
+    LegacyOutcome { completions, reschedules, downtime, max_queue, energy }
+}
+
+/// A seeded random trace over a palette of drifting workloads.
+fn random_trace(seed: u64) -> Vec<Request> {
+    let palette: Vec<Workload> = vec![
+        gcn(2_000_000),
+        gcn(20_000_000),
+        gcn(150_000_000),
+        transformer::transformer_workload(2048, 512, 4),
+        transformer::transformer_workload(8192, 512, 4),
+    ];
+    let mut rng = Rng::seed_from_u64(0xE4E4 ^ seed);
+    let n_phases = rng.gen_range_usize(2, 6);
+    let phases: Vec<(Workload, usize)> = (0..n_phases)
+        .map(|_| {
+            let wl = palette[rng.gen_range_usize(0, palette.len())].clone();
+            (wl, rng.gen_range_usize(2, 8))
+        })
+        .collect();
+    let rate = [5.0, 20.0, 120.0][rng.gen_range_usize(0, 3)];
+    generate_trace(&phases, rate, seed)
+}
+
+fn assert_equivalent(seed: u64, cached: bool) {
+    let s = sys();
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let trace = random_trace(seed);
+
+    let mut legacy_coord = Coordinator::new(s.clone(), &oracle, Objective::Performance);
+    let mut engine_coord = Coordinator::new(s.clone(), &oracle, Objective::Performance);
+    if cached {
+        legacy_coord = legacy_coord.with_cache(ScheduleCache::shared(16));
+        engine_coord = engine_coord.with_cache(ScheduleCache::shared(16));
+    }
+
+    let legacy = legacy_serve(&mut legacy_coord, &s, &gt, &trace);
+    let report = serve_trace(&mut engine_coord, &s, &gt, &trace);
+
+    let ctx = format!("seed {seed}, cached {cached}");
+    assert_eq!(report.completed, trace.len(), "{ctx}");
+    assert_eq!(report.completions.len(), legacy.completions.len(), "{ctx}");
+    for (a, b) in report.completions.iter().zip(&legacy.completions) {
+        assert_eq!(a.id, b.id, "service order diverged ({ctx})");
+        assert_eq!(a.arrival, b.arrival, "{ctx}");
+        assert!((a.start - b.start).abs() < 1e-9, "start {} vs {} ({ctx})", a.start, b.start);
+        assert!(
+            (a.finish - b.finish).abs() < 1e-9,
+            "finish {} vs {} ({ctx})",
+            a.finish,
+            b.finish
+        );
+    }
+    assert_eq!(report.reschedules, legacy.reschedules, "{ctx}");
+    assert!(
+        (report.reschedule_downtime - legacy.downtime).abs() < 1e-9,
+        "downtime {} vs {} ({ctx})",
+        report.reschedule_downtime,
+        legacy.downtime
+    );
+    assert_eq!(report.max_queue_depth, legacy.max_queue, "{ctx}");
+    let tol = legacy.energy.abs() * 1e-9 + 1e-12;
+    assert!(
+        (report.energy - legacy.energy).abs() < tol,
+        "energy {} vs {} ({ctx})",
+        report.energy,
+        legacy.energy
+    );
+}
+
+#[test]
+fn engine_matches_legacy_accounting_on_random_traces() {
+    for seed in 0..5 {
+        assert_equivalent(seed, false);
+    }
+}
+
+#[test]
+fn engine_matches_legacy_accounting_with_schedule_cache() {
+    for seed in 5..8 {
+        assert_equivalent(seed, true);
+    }
+}
+
+#[test]
+fn oversubscribed_pool_serves_with_nonzero_fairness() {
+    let s = SystemSpec::reduced_testbed(Interconnect::Pcie4); // 2F + 1G
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let est = OracleModels { gt: &gt };
+    let streams: Vec<dype::coordinator::StreamSpec> = (0..8u64)
+        .map(|i| {
+            let trace = generate_trace(&[(gcn(2_000_000), 5)], 8.0, 200 + i);
+            dype::coordinator::StreamSpec::new(
+                format!("tenant-{i}"),
+                Objective::Performance,
+                trace,
+            )
+        })
+        .collect();
+    let mut engine = ServingEngine::new(s, &est);
+    let r = engine.serve(&streams);
+    assert_eq!(r.total_completed, 40, "8 streams on 3 devices all make progress");
+    assert!(r.fairness > 0.0, "fairness {}", r.fairness);
+    assert!(r.engine.time_sliced_streams >= 5);
+    for sr in &r.streams {
+        assert!(sr.report.completed == 5, "{} starved", sr.name);
+    }
+}
+
+#[test]
+fn skewed_demand_migrates_leases_static_does_not() {
+    let s = sys();
+    let streams = skewed_pair_scenario(12, 21);
+
+    let adaptive_cfg = EngineConfig {
+        repartition: Some(RepartitionPolicy::reactive(1.0)),
+        ..EngineConfig::default()
+    };
+    let adaptive = run_multi_stream_with(&s, &streams, adaptive_cfg);
+    assert_eq!(adaptive.total_completed, 48, "migration must not lose requests");
+    assert!(
+        adaptive.engine.lease_migrations >= 1,
+        "phase-reversed demand skew must migrate at least one lease: {}",
+        adaptive.engine
+    );
+    assert!(adaptive.engine.repartitions >= 1);
+    assert!(adaptive.fairness > 0.0);
+
+    let statik = run_multi_stream(&s, &streams);
+    assert_eq!(statik.engine.lease_migrations, 0, "static default never migrates");
+    assert_eq!(statik.total_completed, 48);
+}

@@ -55,12 +55,43 @@ fn every_stream_gets_devices_and_the_pool_is_conserved() {
     let s = sys();
     let streams = multi_stream_scenario(1, 3, 21);
     let demands: Vec<f64> = streams.iter().map(StreamSpec::demand).collect();
-    let parts = partition_system(&s, &demands);
+    let parts = partition_system(&s, &demands).expect("2 streams on 5 devices");
     assert_eq!(parts.iter().map(|p| p.n_fpga).sum::<usize>(), s.n_fpga);
     assert_eq!(parts.iter().map(|p| p.n_gpu).sum::<usize>(), s.n_gpu);
     for p in &parts {
         assert!(p.n_fpga + p.n_gpu >= 1);
     }
+}
+
+// ---- schedule-cache persistence (warm restart) -------------------------
+
+#[test]
+fn persisted_cache_warm_starts_a_restarted_server() {
+    let s = sys();
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let streams = multi_stream_scenario(2, 4, 33);
+    let path = std::env::temp_dir().join(format!("dype_warm_{}.json", std::process::id()));
+
+    // First server lifetime: cold start pays the DP storm, then persists.
+    let cold_cache = ScheduleCache::shared(64);
+    let mut server =
+        MultiStreamServer::with_cache(s.clone(), &oracle, cold_cache.clone());
+    let cold = server.serve(&streams);
+    assert!(cold.cache.misses >= 1, "cold start must run the DP at least once");
+    cold_cache.lock().unwrap().save_to(&path).unwrap();
+
+    // "Restart": a fresh server, fresh coordinators, loaded cache.
+    let loaded = ScheduleCache::load_from(&path, 64).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.len(), cold_cache.lock().unwrap().len());
+    let warm_cache = std::sync::Arc::new(std::sync::Mutex::new(loaded));
+    let mut restarted = MultiStreamServer::with_cache(s, &oracle, warm_cache);
+    let warm = restarted.serve(&streams);
+
+    assert_eq!(warm.total_completed, cold.total_completed);
+    assert_eq!(warm.cache.misses, 0, "restart skips the cold-start DP storm");
+    assert!(warm.cache.hits > 0);
 }
 
 // ---- reschedule hysteresis --------------------------------------------
