@@ -59,7 +59,10 @@ fn ablate_p2p() {
         ]);
     }
     print!("{}", t.render());
-    println!("\nmean P2P gain: {:.2}x — P2P matters exactly where pipelines span device types\n", mean(&gains));
+    println!(
+        "\nmean P2P gain: {:.2}x — P2P matters exactly where pipelines span device types\n",
+        mean(&gains)
+    );
     assert!(mean(&gains) >= 1.0, "P2P can never hurt");
 }
 
@@ -126,9 +129,7 @@ fn ablate_balanced_floor() {
     let mut t = Table::new(&["floor", "schedule", "thp (frac of max)", "J/inf"]);
     let mut last_energy = f64::INFINITY;
     for frac in [1.0, 0.9, 0.7, 0.5, 0.3, 0.0] {
-        let fs = tables
-            .select(Objective::Balanced { min_throughput_frac: frac })
-            .unwrap();
+        let fs = tables.select(Objective::Balanced { min_throughput_frac: frac }).unwrap();
         let s = tables.reconstruct(&fs);
         t.row(vec![
             format!("{:.0}%", frac * 100.0),

@@ -1,0 +1,102 @@
+//! Energy/SLO serving bench (DESIGN.md §Energy & SLOs): what a joule
+//! budget costs and buys on the three-class serving scenario.
+//!
+//! Two points on the serving throughput-vs-joules frontier:
+//!
+//!   * `unbudgeted` — the latency-only engine (static leases, no
+//!     metering): fastest, hungriest;
+//!   * `budgeted`   — the same streams under a power cap at 30% of the
+//!     unbudgeted run's average draw, with SLO-weighted adaptive leases:
+//!     below-priority admissions defer at window exhaustion, the
+//!     latency-critical stream keeps its service level.
+//!
+//! Also times the budgeted serve end to end (the full dispatch +
+//! ledger + controller path) and records it to the CI perf trajectory
+//! via `DYPE_BENCH_JSON` (see `util::bench::record_json`).
+
+use std::time::Instant;
+
+use dype::config::{Interconnect, SystemSpec};
+use dype::coordinator::MultiStreamReport;
+use dype::experiments::{
+    energy_slo_config, energy_slo_scenario, run_multi_stream, run_multi_stream_with,
+};
+use dype::metrics::{fmt_percent, Table};
+use dype::util::bench::{bench, record_json};
+
+fn row(t: &mut Table, mode: &str, r: &MultiStreamReport, wall: f64) {
+    t.row(vec![
+        mode.to_string(),
+        format!("{:.2}s", r.makespan),
+        format!("{:.1}", r.aggregate_throughput),
+        format!("{:.1}", r.total_energy),
+        format!("{:.3}", r.throughput_per_joule),
+        format!("{}", r.engine.deferrals),
+        fmt_percent(r.streams[0].report.slo_attainment),
+        format!("{:.1}ms", wall * 1e3),
+    ]);
+}
+
+fn main() {
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let streams = energy_slo_scenario(6, 55);
+    let offered: usize = streams.iter().map(|s| s.trace.len()).sum();
+    println!(
+        "three-class energy/SLO scenario: {} requests over {}F+{}G\n",
+        offered, sys.n_fpga, sys.n_gpu
+    );
+
+    let t0 = Instant::now();
+    let unbudgeted = run_multi_stream(&sys, &streams);
+    let unbudgeted_wall = t0.elapsed().as_secs_f64();
+    let avg_watts = unbudgeted.total_energy / unbudgeted.makespan;
+    let cfg = energy_slo_config(0.3 * avg_watts);
+
+    let t1 = Instant::now();
+    let budgeted = run_multi_stream_with(&sys, &streams, cfg.clone());
+    let budgeted_wall = t1.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&[
+        "mode",
+        "makespan",
+        "thp(inf/s)",
+        "joules",
+        "inf/J",
+        "deferrals",
+        "crit-slo",
+        "wall",
+    ]);
+    row(&mut t, "unbudgeted", &unbudgeted, unbudgeted_wall);
+    row(&mut t, "budgeted-30%", &budgeted, budgeted_wall);
+    print!("{}", t.render());
+
+    println!(
+        "\nbudget: cap {:.0} W, {} windows, {:.1} J charged; \
+         critical stream deferrals {} (must stay 0), engine: {}",
+        0.3 * avg_watts,
+        budgeted.engine.budget_windows,
+        budgeted.engine.joules_charged(),
+        budgeted.streams[0].report.deferrals,
+        budgeted.engine,
+    );
+
+    // Host-side cost of the full budgeted dispatch path, for the CI
+    // perf trajectory (short-iteration smoke, not a stable benchmark).
+    let serve = bench("energy_slo/budgeted_serve", 1, 5, || {
+        std::hint::black_box(run_multi_stream_with(&sys, &streams, cfg.clone()));
+    });
+    println!("\n{}", serve.report());
+    let events = budgeted.engine.events_processed.max(1) as f64;
+    record_json(&[
+        ("energy_slo/budgeted_serve".to_string(), serve.median),
+        ("energy_slo/budgeted_per_event".to_string(), serve.median / events),
+    ]);
+
+    assert_eq!(unbudgeted.total_completed, offered, "unbudgeted run lost requests");
+    assert_eq!(budgeted.total_completed, offered, "budgeted run lost requests");
+    assert!(budgeted.engine.deferrals >= 1, "a 30% power cap must defer something");
+    assert_eq!(
+        budgeted.streams[0].report.deferrals, 0,
+        "the highest-priority stream is never deferred"
+    );
+}

@@ -20,7 +20,7 @@ use dype::coordinator::MultiStreamReport;
 use dype::engine::{EngineConfig, RepartitionPolicy};
 use dype::experiments::{run_multi_stream, run_multi_stream_with, skewed_pair_scenario};
 use dype::metrics::Table;
-use dype::util::bench::fmt_time;
+use dype::util::bench::{fmt_time, record_json};
 
 fn row(t: &mut Table, mode: &str, r: &MultiStreamReport, wall: f64) {
     let events = r.engine.events_processed.max(1);
@@ -86,4 +86,17 @@ fn main() {
         adaptive.engine.lease_migrations >= 1,
         "the skew must trigger at least one lease migration"
     );
+
+    // CI perf trajectory (see util::bench::record_json): host wall time
+    // per processed event, static vs adaptive.
+    record_json(&[
+        (
+            "engine_repartition/static_per_event".to_string(),
+            static_wall / statik.engine.events_processed.max(1) as f64,
+        ),
+        (
+            "engine_repartition/adaptive_per_event".to_string(),
+            adaptive_wall / adaptive.engine.events_processed.max(1) as f64,
+        ),
+    ]);
 }

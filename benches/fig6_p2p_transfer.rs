@@ -46,10 +46,7 @@ fn main() {
     let at_1mb = speedups.iter().find(|(b, _)| *b == 1e6).unwrap().1;
     let at_1kb = speedups[0].1;
     assert!(at_1kb > at_1mb, "small transfers must benefit most");
-    assert!(
-        (1.6..2.6).contains(&at_1mb),
-        "Fig 6: speedup at 1MB should be ~2x, got {at_1mb:.2}"
-    );
+    assert!((1.6..2.6).contains(&at_1mb), "Fig 6: speedup at 1MB should be ~2x, got {at_1mb:.2}");
     println!(
         "\nshape check OK: {:.1}x at 1KB declining to {:.2}x at 1MB (paper: ~2x at 1MB)",
         at_1kb, at_1mb

@@ -95,5 +95,8 @@ fn main() {
         "GIN-S3 DYPE/static gain per interconnect (PCIe4, PCIe5, CXL3): {:.2}x {:.2}x {:.2}x",
         dype_gain_s3[0], dype_gain_s3[1], dype_gain_s3[2]
     );
-    assert!(fleet_vs_static_wins * 3 >= fleet_vs_static_total * 2, "FleetRec should mostly match/beat static");
+    assert!(
+        fleet_vs_static_wins * 3 >= fleet_vs_static_total * 2,
+        "FleetRec should mostly match/beat static"
+    );
 }

@@ -16,7 +16,7 @@ use dype::perfmodel::OracleModels;
 use dype::scheduler::{
     cache::CacheKey, evaluate_plan, system_fingerprint, DpScheduler, PowerTable, ScheduleCache,
 };
-use dype::util::bench::{bench, fmt_time, header};
+use dype::util::bench::{bench, fmt_time, header, record_json};
 use dype::workload::{gnn, transformer, Dataset, Workload};
 
 fn main() {
@@ -58,6 +58,10 @@ fn main() {
             fmt_time(cold.median),
             fmt_time(hit.median)
         );
+        record_json(&[
+            (format!("scheduler_cache/dp_cold/{name}"), cold.median),
+            (format!("scheduler_cache/cache_hit/{name}"), hit.median),
+        ]);
     }
 
     // End-to-end: the canonical two-stream recurring-drift scenario.

@@ -39,9 +39,7 @@ fn main() {
 
     let tf = transformer::paper_transformer(4096, 512);
     let s = bench("dp_schedule/transformer_160_kernels", 1, 10, || {
-        std::hint::black_box(
-            DpScheduler::new(&sys, &oracle).schedule(&tf, Objective::Performance),
-        );
+        std::hint::black_box(DpScheduler::new(&sys, &oracle).schedule(&tf, Objective::Performance));
     });
     println!("{}", s.report());
 

@@ -106,10 +106,7 @@ fn main() {
         eopt_eng_vs_gpu > bal_eng_vs_gpu,
         "energy-opt must push efficiency further: {eopt_eng_vs_gpu:.2} vs {bal_eng_vs_gpu:.2}"
     );
-    assert!(
-        eopt_eng_vs_fleet >= eopt_thp_vs_fleet,
-        "energy-opt trades throughput for efficiency"
-    );
+    assert!(eopt_eng_vs_fleet >= eopt_thp_vs_fleet, "energy-opt trades throughput for efficiency");
     println!(
         "\nshape check OK: perf-opt {:.2}x thp vs FleetRec* (paper 1.53x), {:.2}x thp vs GPU-only (paper 1.44x), balanced {:.2}x / energy-opt {:.2}x eng vs GPU-only (paper 1.77x / 1.86x)",
         perf_vs_fleet, perf_vs_gpu, bal_eng_vs_gpu, eopt_eng_vs_gpu

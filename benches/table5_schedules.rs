@@ -32,8 +32,12 @@ fn main() {
                 let est = regs.get(ic);
                 let sched = DpScheduler::new(&sys, est);
                 // Static/FleetRec reference choices for the match count.
-                let static_plan =
-                    baselines::tune_static_plan(&sys, est, &reference_workload(&wl), Objective::Performance);
+                let static_plan = baselines::tune_static_plan(
+                    &sys,
+                    est,
+                    &reference_workload(&wl),
+                    Objective::Performance,
+                );
                 let static_mn: String =
                     static_plan.iter().map(|p| format!("{}{}", p.n, p.dev.letter())).collect();
                 let fleet_mn = baselines::fleetrec(&sys, est, &wl, Objective::Performance)

@@ -46,7 +46,9 @@ fn main() -> anyhow::Result<()> {
     let plan: Vec<StagePlan> = if auto.stages.len() >= 2 {
         auto.plan()
     } else {
-        println!("(auto schedule is single-stage on this tiny graph; forcing 2 stages for the demo)");
+        println!(
+            "(auto schedule is single-stage on this tiny graph; forcing 2 stages for the demo)"
+        );
         let mut p = auto.plan();
         let s = p[0];
         p.clear();
@@ -76,13 +78,15 @@ fn main() -> anyhow::Result<()> {
             },
             KernelBinding {
                 artifact: "gemm".into(),
-                args: vec![ArgSource::Dynamic, ArgSource::Static(HostTensor::f32(theta, &[128, 128]))],
+                args: vec![
+                    ArgSource::Dynamic,
+                    ArgSource::Static(HostTensor::f32(theta, &[128, 128])),
+                ],
             },
         ]
     };
     // Kernel bindings indexed by workload kernel id (SpMM1,GeMM1,SpMM2,GeMM2).
-    let per_kernel: Vec<KernelBinding> =
-        bind(0).into_iter().chain(bind(1)).collect();
+    let per_kernel: Vec<KernelBinding> = bind(0).into_iter().chain(bind(1)).collect();
 
     let stages: Vec<StageSpec> = plan
         .iter()
@@ -123,19 +127,10 @@ fn main() -> anyhow::Result<()> {
     let mut rt = Runtime::new(&dir)?;
     let mut worst = 0f32;
     for (i, x) in inputs.iter().enumerate().take(3) {
-        let y1 = rt.execute(
-            "spmm",
-            &[blocks_t.clone(), indices_t.clone(), x.clone()],
-        )?;
-        let h1 = rt.execute(
-            "gemm",
-            &[y1, HostTensor::f32(theta1.clone(), &[128, 128])],
-        )?;
+        let y1 = rt.execute("spmm", &[blocks_t.clone(), indices_t.clone(), x.clone()])?;
+        let h1 = rt.execute("gemm", &[y1, HostTensor::f32(theta1.clone(), &[128, 128])])?;
         let y2 = rt.execute("spmm", &[blocks_t.clone(), indices_t.clone(), h1])?;
-        let expect = rt.execute(
-            "gemm",
-            &[y2, HostTensor::f32(theta2.clone(), &[128, 128])],
-        )?;
+        let expect = rt.execute("gemm", &[y2, HostTensor::f32(theta2.clone(), &[128, 128])])?;
         let got = report.outputs[i].as_f32()?;
         let want = expect.as_f32()?;
         for (a, b) in got.iter().zip(want) {

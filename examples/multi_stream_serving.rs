@@ -10,10 +10,14 @@
 //! Algorithm-1 run. With `--cache <path>` the cache is loaded before the
 //! run and saved after it, so a *restarted* server skips the cold-start
 //! DP storm entirely; `--adaptive` lets the engine migrate leases when
-//! observed demand drifts from the offered estimate.
+//! observed demand drifts from the offered estimate; `--energy-slo`
+//! swaps in the three-class energy/SLO scenario (DESIGN.md §Energy &
+//! SLOs) under a joule budget at 30% of the unbudgeted run's average
+//! draw, showing budget exhaustion defer below-priority streams while
+//! the p99 feedback controller re-weights the leases.
 //!
 //! Run: `cargo run --release --example multi_stream_serving -- \
-//!       [cycles] [--cache schedules.json] [--adaptive]`
+//!       [cycles] [--cache schedules.json] [--adaptive] [--energy-slo]`
 
 use std::sync::{Arc, Mutex};
 
@@ -21,7 +25,9 @@ use dype::config::{Interconnect, SystemSpec};
 use dype::coordinator::MultiStreamServer;
 use dype::devices::GroundTruth;
 use dype::engine::EngineConfig;
-use dype::experiments::multi_stream_scenario;
+use dype::experiments::{
+    energy_slo_config, energy_slo_scenario, multi_stream_scenario, run_multi_stream,
+};
 use dype::metrics::{fmt_percent, Table};
 use dype::perfmodel::OracleModels;
 use dype::scheduler::ScheduleCache;
@@ -30,20 +36,29 @@ fn main() {
     let mut cycles = 3usize;
     let mut cache_path: Option<String> = None;
     let mut adaptive = false;
+    let mut energy_slo = false;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
             "--cache" => cache_path = Some(args.next().expect("--cache needs a path")),
             "--adaptive" => adaptive = true,
+            "--energy-slo" => energy_slo = true,
             other => cycles = other.parse().expect("cycles must be a number"),
         }
     }
 
     let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
-    println!(
-        "system: {}F + {}G over {} — serving 2 concurrent streams, {cycles} drift cycles each\n",
-        sys.n_fpga, sys.n_gpu, sys.interconnect
-    );
+    if energy_slo {
+        println!(
+            "system: {}F + {}G over {} — three QoS classes under an energy budget\n",
+            sys.n_fpga, sys.n_gpu, sys.interconnect
+        );
+    } else {
+        println!(
+            "system: {}F + {}G over {} — serving 2 concurrent streams, {cycles} drift cycles each\n",
+            sys.n_fpga, sys.n_gpu, sys.interconnect
+        );
+    }
 
     // Warm start: a persisted cache turns the whole cold-start DP storm
     // into hits (one file read; every known regime re-times its plan).
@@ -60,20 +75,47 @@ fn main() {
         None => ScheduleCache::shared(64),
     };
 
-    let streams = multi_stream_scenario(cycles, 6, 42);
+    let streams = if energy_slo {
+        energy_slo_scenario(6, 42)
+    } else {
+        multi_stream_scenario(cycles, 6, 42)
+    };
     for s in &streams {
         println!(
-            "stream {:<18} {:>4} requests, offered {:>6.1} req/s, demand {:>8.1} GFLOP/s",
+            "stream {:<22} {:>4} requests, offered {:>6.1} req/s, demand {:>8.1} GFLOP/s, \
+             priority {:.0}{}",
             s.name,
             s.trace.len(),
             s.offered_rate(),
-            s.demand() * 1e-9
+            s.demand() * 1e-9,
+            s.slo.priority,
+            match s.slo.p99_target {
+                Some(t) => format!(", p99 target {:.0}ms", t * 1e3),
+                None => String::new(),
+            }
         );
     }
 
     let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
     let est = OracleModels { gt: &gt };
-    let cfg = if adaptive { EngineConfig::adaptive() } else { EngineConfig::default() };
+    let cfg = if energy_slo {
+        // Self-calibrating cap: 30% of the average draw an unbudgeted run
+        // of the same scenario sustains, so exhaustion is guaranteed.
+        let probe = run_multi_stream(&sys, &streams);
+        let avg_watts = probe.total_energy / probe.makespan;
+        println!(
+            "\nunbudgeted probe: {:.1} J over {:.2}s ({:.0} W avg) — capping at {:.0} W",
+            probe.total_energy,
+            probe.makespan,
+            avg_watts,
+            0.3 * avg_watts
+        );
+        energy_slo_config(0.3 * avg_watts)
+    } else if adaptive {
+        EngineConfig::adaptive()
+    } else {
+        EngineConfig::default()
+    };
     let mut server =
         MultiStreamServer::with_cache(sys, &est, cache.clone()).with_engine_config(cfg);
     let report = server.serve(&streams);
@@ -85,8 +127,10 @@ fn main() {
         "done",
         "thp(req/s)",
         "p50(ms)",
-        "p90(ms)",
         "p99(ms)",
+        "energy(J)",
+        "slo",
+        "defer",
         "resched",
         "cache",
         "util",
@@ -99,8 +143,10 @@ fn main() {
             format!("{}", r.completed),
             format!("{:.1}", r.throughput),
             format!("{:.2}", r.p50_latency * 1e3),
-            format!("{:.2}", r.p90_latency * 1e3),
             format!("{:.2}", r.p99_latency * 1e3),
+            format!("{:.1}", r.energy),
+            fmt_percent(r.slo_attainment),
+            format!("{}", r.deferrals),
             format!("{}", r.reschedules),
             fmt_percent(r.cache.hit_rate()),
             fmt_percent(report.engine.utilization[i]),
@@ -112,6 +158,13 @@ fn main() {
         "\ncombined: {} inferences in {:.2}s ({:.1} inf/s aggregate), fairness {:.3}",
         report.total_completed, report.makespan, report.aggregate_throughput, report.fairness
     );
+    println!(
+        "energy: {:.1} J modeled ({:.3} inf/J); budget: {} windows, {:.1} J charged",
+        report.total_energy,
+        report.throughput_per_joule,
+        report.engine.budget_windows,
+        report.engine.joules_charged()
+    );
     println!("schedule cache: {}", report.cache);
     println!("engine: {}", report.engine);
 
@@ -120,11 +173,23 @@ fn main() {
         println!("saved {} cached schedules to {p}", cache.lock().unwrap().len());
     }
 
-    // The acceptance bar: recurring drift across ≥2 concurrent streams
-    // must be absorbed by the cache, not re-solved by the DP. (Adaptive
-    // mode re-scopes cache keys on every migration, so the bar applies
-    // to the static default.)
-    if !adaptive {
+    // The acceptance bars. Default scenario: recurring drift across ≥2
+    // concurrent streams must be absorbed by the cache, not re-solved by
+    // the DP (adaptive mode re-scopes cache keys on every migration, so
+    // that bar applies to the static default). Energy/SLO scenario: the
+    // 30% power cap must defer below-priority work — and never the
+    // highest-priority stream.
+    if energy_slo {
+        assert!(
+            report.engine.deferrals >= 1,
+            "a 30% power cap must exhaust some window and defer work"
+        );
+        assert_eq!(
+            report.streams[0].report.deferrals,
+            0,
+            "the highest-priority stream is never deferred"
+        );
+    } else if !adaptive {
         assert!(
             report.cache.hit_rate() > 0.5,
             "expected >50% schedule-cache hits, got {}",
@@ -136,5 +201,9 @@ fn main() {
         streams.iter().map(|s| s.trace.len()).sum::<usize>(),
         "no request may starve"
     );
-    println!("OK — recurring drift served from the schedule cache.");
+    if energy_slo {
+        println!("OK — budget exhaustion deferred only below-priority streams.");
+    } else {
+        println!("OK — recurring drift served from the schedule cache.");
+    }
 }

@@ -54,8 +54,7 @@ fn main() {
         }
         // Ground-truth measurement of both policies on this phase's data.
         let dyn_meas = evaluate_plan(&wl, &sched.plan(), &oracle, &comm, &power);
-        let stat_meas =
-            evaluate_plan(&wl, first_plan.as_ref().unwrap(), &oracle, &comm, &power);
+        let stat_meas = evaluate_plan(&wl, first_plan.as_ref().unwrap(), &oracle, &comm, &power);
         dynamic_total += BATCH / dyn_meas.throughput();
         static_total += BATCH / stat_meas.throughput();
         println!(

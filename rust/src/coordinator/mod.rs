@@ -281,15 +281,9 @@ mod tests {
         let mut plain = Coordinator::new(s.clone(), &oracle, Objective::Performance);
         let mut cached = Coordinator::new(s, &oracle, Objective::Performance)
             .with_cache(ScheduleCache::shared(4));
-        assert_eq!(
-            plain.process_batch(&wl).mnemonic(),
-            cached.process_batch(&wl).mnemonic()
-        );
+        assert_eq!(plain.process_batch(&wl).mnemonic(), cached.process_batch(&wl).mnemonic());
         // Re-processing the same batch is a hit and yields the same plan.
-        assert_eq!(
-            plain.process_batch(&wl).mnemonic(),
-            cached.process_batch(&wl).mnemonic()
-        );
+        assert_eq!(plain.process_batch(&wl).mnemonic(), cached.process_batch(&wl).mnemonic());
         assert_eq!(cached.cache_stats().unwrap().hits, 1);
     }
 

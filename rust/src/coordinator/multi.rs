@@ -23,7 +23,12 @@
 //!    reschedules into cache hits;
 //! 4. optionally **re-partitions online** ([`crate::engine::repartition`])
 //!    when observed demand drifts away from the leases in force — opt in
-//!    via [`MultiStreamServer::with_engine_config`].
+//!    via [`MultiStreamServer::with_engine_config`];
+//! 5. optionally serves **multi-objective**: a per-window joule budget
+//!    ([`crate::engine::budget`]) defers below-priority admissions when
+//!    the `f_eng` account runs dry, and per-stream p99 targets
+//!    ([`crate::engine::slo`]) feed back into the lease weights — both
+//!    opt-in, both inert for default [`StreamSlo`]s and `None` budgets.
 //!
 //! This module keeps the stream vocabulary ([`StreamSpec`]) and the
 //! report types ([`StreamReport`], [`MultiStreamReport`]), plus the
@@ -31,25 +36,36 @@
 //! exclusive device ownership or nothing.
 
 use crate::config::{Objective, SystemSpec};
-use crate::engine::{lease, EngineConfig, EngineMetrics, OverSubscribed, ServingEngine};
+use crate::engine::{lease, EngineConfig, EngineMetrics, OverSubscribed, ServingEngine, StreamSlo};
 use crate::perfmodel::PerfEstimator;
 use crate::scheduler::{CacheStats, ScheduleCache, SharedScheduleCache};
 
 use super::server::{Request, ServeReport};
 
-/// One request stream: a named trace with its own design objective.
+/// One request stream: a named trace with its own design objective and
+/// service-level objective.
 #[derive(Debug, Clone)]
 pub struct StreamSpec {
     pub name: String,
     pub objective: Objective,
     /// Arrival-ordered requests (see [`super::server::generate_trace`]).
     pub trace: Vec<Request>,
+    /// Latency target + QoS priority ([`StreamSlo`]). Defaults to
+    /// best-effort at unit priority, which leaves every engine decision
+    /// exactly as demand-proportional serving made it.
+    pub slo: StreamSlo,
 }
 
 impl StreamSpec {
     pub fn new(name: impl Into<String>, objective: Objective, trace: Vec<Request>) -> StreamSpec {
         assert!(!trace.is_empty(), "empty stream trace");
-        StreamSpec { name: name.into(), objective, trace }
+        StreamSpec { name: name.into(), objective, trace, slo: StreamSlo::default() }
+    }
+
+    /// Attach a service-level objective (p99 target and/or priority).
+    pub fn with_slo(mut self, slo: StreamSlo) -> StreamSpec {
+        self.slo = slo;
+        self
     }
 
     /// The trace's arrival span, floored at one second for degenerate
@@ -120,7 +136,14 @@ pub struct MultiStreamReport {
     /// (achieved/offered rate): 1.0 = perfectly even, → 1/n as one
     /// stream monopolizes the pool.
     pub fairness: f64,
-    /// Event/lease/migration counters from the serving engine.
+    /// Summed modeled energy across every stream (J) — with
+    /// [`MultiStreamReport::throughput_per_joule`], one point on the
+    /// serving throughput-vs-joules frontier.
+    pub total_energy: f64,
+    /// Completed inferences per modeled joule (the Pareto ordinate the
+    /// energy-budget sweeps plot).
+    pub throughput_per_joule: f64,
+    /// Event/lease/migration/budget counters from the serving engine.
     pub engine: EngineMetrics,
 }
 

@@ -69,7 +69,15 @@ pub struct ServeReport {
     pub reschedules: usize,
     /// Total pipeline drain time paid for reschedules (s).
     pub reschedule_downtime: f64,
+    /// Total modeled energy of this stream's batches (J) — the per-stream
+    /// `f_eng` account, what the engine's budget windows were charged.
     pub energy: f64,
+    /// Fraction of completions meeting the stream's p99 SLO target
+    /// ([`crate::metrics::attainment`]); 1.0 when no target is set.
+    pub slo_attainment: f64,
+    /// Admissions the engine's energy budget denied this stream (one per
+    /// denial decision; 0 without a budget).
+    pub deferrals: usize,
     /// Schedule-cache counters attributable to this run (all-zero when the
     /// serving coordinator has no cache attached).
     pub cache: CacheStats,

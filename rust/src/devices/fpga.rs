@@ -89,9 +89,12 @@ mod tests {
     #[test]
     fn fpga_attention_linear_in_seq_and_window() {
         let m = model();
-        let base = m.kernel_time(&KernelKind::WindowAttn { seq: 2048, window: 512, heads: 8, dim: 64 });
-        let seq2 = m.kernel_time(&KernelKind::WindowAttn { seq: 4096, window: 512, heads: 8, dim: 64 });
-        let win2 = m.kernel_time(&KernelKind::WindowAttn { seq: 2048, window: 1024, heads: 8, dim: 64 });
+        let base =
+            m.kernel_time(&KernelKind::WindowAttn { seq: 2048, window: 512, heads: 8, dim: 64 });
+        let seq2 =
+            m.kernel_time(&KernelKind::WindowAttn { seq: 4096, window: 512, heads: 8, dim: 64 });
+        let win2 =
+            m.kernel_time(&KernelKind::WindowAttn { seq: 2048, window: 1024, heads: 8, dim: 64 });
         assert!((seq2 / base - 2.0).abs() < 0.05);
         assert!((win2 / base - 2.0).abs() < 0.05);
     }
@@ -131,10 +134,7 @@ mod tests {
         let e_fpga = 3.0 * 55.0 * three_f;
         let e_gpu = 300.0 * t_gpu;
         let eff_gain = e_gpu / e_fpga;
-        assert!(
-            eff_gain > 1.2,
-            "FPGA energy-efficiency advantage missing: {eff_gain}"
-        );
+        assert!(eff_gain > 1.2, "FPGA energy-efficiency advantage missing: {eff_gain}");
     }
 
     /// Low-sparsity graphs flip the preference to the GPU (Table V: GCN-S1

@@ -126,8 +126,10 @@ mod tests {
     #[test]
     fn window_attention_is_quadratic_in_seq() {
         let m = model();
-        let t1 = m.kernel_time(&KernelKind::WindowAttn { seq: 2048, window: 512, heads: 8, dim: 64 });
-        let t2 = m.kernel_time(&KernelKind::WindowAttn { seq: 8192, window: 512, heads: 8, dim: 64 });
+        let t1 =
+            m.kernel_time(&KernelKind::WindowAttn { seq: 2048, window: 512, heads: 8, dim: 64 });
+        let t2 =
+            m.kernel_time(&KernelKind::WindowAttn { seq: 8192, window: 512, heads: 8, dim: 64 });
         // 4× seq ⇒ ~16× time (dense execution ignores the window).
         assert!(t2 / t1 > 8.0, "expected quadratic growth, got {}", t2 / t1);
     }
@@ -135,8 +137,10 @@ mod tests {
     #[test]
     fn window_size_does_not_change_gpu_time() {
         let m = model();
-        let a = m.kernel_time(&KernelKind::WindowAttn { seq: 4096, window: 512, heads: 8, dim: 64 });
-        let b = m.kernel_time(&KernelKind::WindowAttn { seq: 4096, window: 4096, heads: 8, dim: 64 });
+        let a =
+            m.kernel_time(&KernelKind::WindowAttn { seq: 4096, window: 512, heads: 8, dim: 64 });
+        let b =
+            m.kernel_time(&KernelKind::WindowAttn { seq: 4096, window: 4096, heads: 8, dim: 64 });
         assert_eq!(a, b, "GPU runs dense attention regardless of window");
     }
 

@@ -140,7 +140,8 @@ impl CommModel {
             return 0.0;
         }
         match (src, dst) {
-            (Endpoint::Host, Endpoint::Devices(ty, n)) | (Endpoint::Devices(ty, n), Endpoint::Host) => {
+            (Endpoint::Host, Endpoint::Devices(ty, n))
+            | (Endpoint::Devices(ty, n), Endpoint::Host) => {
                 bytes / self.aggregate_bw(ty, n) + self.oh_p2p()
             }
             // Note: consecutive pipeline stages always occupy *distinct*

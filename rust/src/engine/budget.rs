@@ -1,0 +1,172 @@
+//! Energy-budgeted admission — the `f_eng` account threaded into the
+//! engine's dispatch path.
+//!
+//! DyPe's design space is multi-objective: energy is a first-class
+//! constraint, not a post-hoc report. The engine therefore meters the
+//! *modeled* energy of every admitted batch (the same
+//! [`crate::scheduler::energy`] `f_eng` account the DP optimizes —
+//! `Schedule::energy_per_inf` as re-timed on ground truth) against a
+//! per-window joule budget:
+//!
+//! * Time is cut into fixed windows of [`EnergyBudget::window`] seconds;
+//!   each window opens with [`EnergyBudget::joules_per_window`] joules.
+//! * Every dispatch charges its batch's modeled energy to the open
+//!   window. Budgets are enforced at admission granularity — a batch is
+//!   never split — so among the *deferrable* classes a window overdraws
+//!   by at most its final admitted batch. The highest pending priority
+//!   class is exempt (work-conserving, see below) and keeps charging an
+//!   exhausted window, so the cap bounds everything below it, not the
+//!   top class itself. There is no debt carry-over; the next window
+//!   opens with a full refill.
+//! * Once the window is exhausted, a stream may only dispatch if no
+//!   *unfinished* stream has strictly higher
+//!   [`super::slo::StreamSlo::priority`] (QoS-style: the top class is
+//!   work-conserving, everything below it is deferred). Deferred work
+//!   resumes at the next [`super::EventKind::BudgetWindowTick`],
+//!   highest-priority-first.
+//!
+//! Because the highest-priority pending stream is never deferred, the
+//! event loop always makes progress — even a zero-joule budget serves
+//! every stream eventually, in strict priority order (the property the
+//! acceptance tests pin down). Streams of *equal* priority are never
+//! deferred against each other: deferral discriminates only strictly
+//! lower priorities.
+
+/// Per-window joule budget for the serving engine. `None` in
+/// [`super::EngineConfig`] disables energy metering entirely (the
+/// latency-only mode, bit-identical to the pre-budget engine).
+#[derive(Debug, Clone)]
+pub struct EnergyBudget {
+    /// Joules available per window. Zero is legal and means "defer
+    /// everything below the highest pending priority".
+    pub joules_per_window: f64,
+    /// Window length (s).
+    pub window: f64,
+}
+
+impl EnergyBudget {
+    pub fn new(joules_per_window: f64, window: f64) -> EnergyBudget {
+        assert!(
+            joules_per_window >= 0.0 && joules_per_window.is_finite(),
+            "negative or non-finite joule budget {joules_per_window}"
+        );
+        assert!(window > 0.0 && window.is_finite(), "non-positive budget window {window}");
+        EnergyBudget { joules_per_window, window }
+    }
+
+    /// A budget expressed as a sustained power cap: `cap_watts` joules
+    /// per second, metered in `window`-second windows. Pair with
+    /// [`crate::scheduler::PowerTable::pool_power_cap`] to derive the cap
+    /// from the device inventory's worst-case draw.
+    pub fn from_power_cap(cap_watts: f64, window: f64) -> EnergyBudget {
+        assert!(cap_watts >= 0.0 && cap_watts.is_finite(), "bad power cap {cap_watts}");
+        EnergyBudget::new(cap_watts * window, window)
+    }
+}
+
+/// Run-time account of one serve call: how many joules the open window
+/// has left and what every closed window was charged. Total charged
+/// energy equals the sum of per-batch model energies — each batch is
+/// charged exactly once, at its (possibly deferred) dispatch.
+#[derive(Debug)]
+pub(crate) struct BudgetLedger {
+    budget: EnergyBudget,
+    remaining: f64,
+    charged_in_window: f64,
+    /// Joules charged per closed window, in window order.
+    window_joules: Vec<f64>,
+}
+
+impl BudgetLedger {
+    pub(crate) fn new(budget: EnergyBudget) -> BudgetLedger {
+        // Re-validate here too: the config struct has public fields, so a
+        // caller can bypass `EnergyBudget::new`.
+        assert!(
+            budget.joules_per_window >= 0.0 && budget.joules_per_window.is_finite(),
+            "negative or non-finite joule budget {}",
+            budget.joules_per_window
+        );
+        assert!(
+            budget.window > 0.0 && budget.window.is_finite(),
+            "non-positive budget window {}",
+            budget.window
+        );
+        let remaining = budget.joules_per_window;
+        BudgetLedger { budget, remaining, charged_in_window: 0.0, window_joules: Vec::new() }
+    }
+
+    pub(crate) fn window(&self) -> f64 {
+        self.budget.window
+    }
+
+    /// Whether the open window has no joules left (admissions beyond
+    /// this point are deferrable).
+    pub(crate) fn exhausted(&self) -> bool {
+        self.remaining <= 0.0
+    }
+
+    /// Charge one batch's modeled energy to the open window.
+    pub(crate) fn charge(&mut self, joules: f64) {
+        debug_assert!(joules >= 0.0 && joules.is_finite(), "bad charge {joules}");
+        self.remaining -= joules;
+        self.charged_in_window += joules;
+    }
+
+    /// Close the open window and refill the budget (no debt carry-over).
+    pub(crate) fn roll_window(&mut self) {
+        self.window_joules.push(self.charged_in_window);
+        self.charged_in_window = 0.0;
+        self.remaining = self.budget.joules_per_window;
+    }
+
+    /// Close the trailing partial window and return the per-window
+    /// charge record; its sum is the run's total charged energy.
+    pub(crate) fn into_window_joules(mut self) -> Vec<f64> {
+        self.window_joules.push(self.charged_in_window);
+        self.window_joules
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_charges_each_joule_exactly_once() {
+        let mut l = BudgetLedger::new(EnergyBudget::new(10.0, 1.0));
+        l.charge(4.0);
+        l.charge(8.0); // overdraw by the final admitted batch is legal
+        assert!(l.exhausted());
+        l.roll_window();
+        assert!(!l.exhausted(), "refill restores the full budget");
+        l.charge(3.0);
+        let windows = l.into_window_joules();
+        assert_eq!(windows, vec![12.0, 3.0]);
+        assert!((windows.iter().sum::<f64>() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_budget_is_exhausted_from_the_start() {
+        let l = BudgetLedger::new(EnergyBudget::new(0.0, 0.5));
+        assert!(l.exhausted());
+    }
+
+    #[test]
+    fn power_cap_scales_with_window() {
+        let b = EnergyBudget::from_power_cap(200.0, 0.5);
+        assert!((b.joules_per_window - 100.0).abs() < 1e-12);
+        assert_eq!(b.window, 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive budget window")]
+    fn rejects_zero_window() {
+        EnergyBudget::new(1.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative or non-finite joule budget")]
+    fn rejects_negative_budget() {
+        EnergyBudget::new(-1.0, 1.0);
+    }
+}

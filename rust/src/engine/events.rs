@@ -2,8 +2,9 @@
 //!
 //! Every cause of state change in the serving engine is an [`Event`] on
 //! one global clock: a request arriving, a batch's admission slot
-//! completing, a device lease reaching the end of its term, or a
-//! demand-sampling tick. The queue is a binary min-heap ordered by
+//! completing, a device lease reaching the end of its term, a
+//! demand-sampling tick, or an energy-budget window boundary. The queue
+//! is a binary min-heap ordered by
 //! `(time, push sequence)`, so simultaneous events resolve in push order
 //! — deterministically, with no dependence on hash state or thread
 //! interleaving. Arrivals are pushed before any run-time event, which
@@ -28,6 +29,11 @@ pub enum EventKind {
     /// Demand-sampling tick: fold each stream's completed-FLOP window
     /// into its EWMA demand estimate.
     RepartitionTick,
+    /// An energy-budget window ended: the ledger closes the window's
+    /// `f_eng` account, refills the joule budget, and admissions deferred
+    /// by budget exhaustion resume highest-priority-first
+    /// (see [`crate::engine::budget`]).
+    BudgetWindowTick,
 }
 
 /// A timestamped event. `seq` is the queue's push counter — the
@@ -159,5 +165,18 @@ mod tests {
     #[should_panic(expected = "non-finite")]
     fn rejects_non_finite_times() {
         EventQueue::new().push(f64::NAN, EventKind::RepartitionTick);
+    }
+
+    #[test]
+    fn budget_ticks_order_with_the_rest_of_the_heap() {
+        // A window boundary coinciding with an arrival resolves in push
+        // order like any other tie — budget refills never jump the queue.
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::RequestArrival { stream: 0, index: 0 });
+        q.push(1.0, EventKind::BudgetWindowTick);
+        q.push(0.5, EventKind::BudgetWindowTick);
+        assert_eq!(q.pop().unwrap().kind, EventKind::BudgetWindowTick);
+        assert_eq!(q.pop().unwrap().kind, EventKind::RequestArrival { stream: 0, index: 0 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::BudgetWindowTick);
     }
 }

@@ -17,6 +17,12 @@
 //! streams are placed heaviest-demand-first onto the group with the
 //! least total demand, with deterministic ties (member count, then group
 //! index), so twin runs produce identical leases.
+//!
+//! The `demands` vector [`assign`] apportions by need not be raw FLOP
+//! rates: the engine passes *SLO-weighted* demands (offered or observed
+//! rate × the [`super::slo::SloController`] weight), so both the device
+//! split and the intra-group time shares follow SLO pressure and QoS
+//! priority, not offered load alone.
 
 use crate::config::SystemSpec;
 
@@ -72,10 +78,7 @@ pub(crate) fn apportion(total: usize, weights: &[f64]) -> Vec<usize> {
 pub(crate) fn split_pool(sys: &SystemSpec, demands: &[f64]) -> Vec<SystemSpec> {
     let k = demands.len();
     assert!(k >= 1, "no partitions requested");
-    assert!(
-        sys.n_fpga + sys.n_gpu >= k,
-        "split_pool needs inventory >= partitions ({k})"
-    );
+    assert!(sys.n_fpga + sys.n_gpu >= k, "split_pool needs inventory >= partitions ({k})");
     let total: f64 = demands.iter().sum();
     let weights: Vec<f64> = if total > 0.0 {
         demands.iter().map(|d| d / total).collect()
@@ -89,9 +92,7 @@ pub(crate) fn split_pool(sys: &SystemSpec, demands: &[f64]) -> Vec<SystemSpec> {
     // donate one from the richest (preserving the donor's progress).
     loop {
         let Some(poor) = (0..k).find(|&i| fpgas[i] + gpus[i] == 0) else { break };
-        let rich = (0..k)
-            .max_by_key(|&i| fpgas[i] + gpus[i])
-            .expect("non-empty");
+        let rich = (0..k).max_by_key(|&i| fpgas[i] + gpus[i]).expect("non-empty");
         assert!(fpgas[rich] + gpus[rich] > 1, "inventory >= partitions => a donor exists");
         if fpgas[rich] >= gpus[rich] {
             fpgas[rich] -= 1;

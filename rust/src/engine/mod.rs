@@ -22,6 +22,16 @@
 //!   apportionment shifts past a hysteresis threshold, paying an
 //!   explicit drain cost — the inter-stream analogue of the
 //!   coordinator's intra-stream reschedule policy.
+//! * **[`budget`]** — the `f_eng` account at admission time: every
+//!   dispatch charges its batch's modeled energy against a per-window
+//!   joule budget, and when the window is exhausted strictly
+//!   lower-priority streams are deferred to the next
+//!   [`EventKind::BudgetWindowTick`] (QoS-style, highest-priority-first).
+//! * **[`slo`]** — per-stream p99 targets close the loop on
+//!   partitioning: a feedback controller scales each stream's lease
+//!   weight by its observed-vs-target p99, so SLO pressure — not offered
+//!   FLOP rate alone — decides both exclusive partitions and
+//!   oversubscribed time-slice shares.
 //!
 //! The driver ([`ServingEngine`]) feeds each stream's
 //! [`Coordinator`] (schedule cache included) and emits the
@@ -30,13 +40,17 @@
 //! special case of the same loop — there is exactly one event loop in
 //! the codebase.
 
+pub mod budget;
 pub mod events;
 pub mod lease;
 pub mod repartition;
+pub mod slo;
 
+pub use budget::EnergyBudget;
 pub use events::{Event, EventKind, EventQueue};
 pub use lease::{LeaseAssignment, OverSubscribed};
 pub use repartition::{DemandTracker, RepartitionPolicy};
+pub use slo::{SloController, StreamSlo};
 
 use std::collections::VecDeque;
 
@@ -47,8 +61,11 @@ use crate::coordinator::Coordinator;
 use crate::devices::{CommModel, GroundTruth};
 use crate::metrics::{jain_index, LatencySummary};
 use crate::perfmodel::{OracleModels, PerfEstimator};
-use crate::scheduler::{evaluate_plan, CacheStats, PowerTable, Schedule, ScheduleCache, SharedScheduleCache};
+use crate::scheduler::{
+    evaluate_plan, CacheStats, PowerTable, Schedule, ScheduleCache, SharedScheduleCache,
+};
 
+use budget::BudgetLedger;
 use repartition::share_shift;
 
 /// Engine-wide knobs. The default is the PR-1-compatible mode: static
@@ -65,11 +82,23 @@ pub struct EngineConfig {
     /// intra-stream [`RESCHEDULE_DRAIN_COST`] — moving hardware is more
     /// disruptive than remapping on fixed hardware.
     pub migration_drain: f64,
+    /// Per-window joule budget for admissions ([`budget`]); `None`
+    /// disables energy metering (the historical latency-only mode).
+    pub energy_budget: Option<EnergyBudget>,
+    /// Feedback from observed-vs-target p99 to lease weight ([`slo`]).
+    /// Always applied, but the identity for default [`StreamSlo`]s, so
+    /// SLO pressure is opt-in per stream.
+    pub slo: SloController,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { repartition: None, migration_drain: 80e-3 }
+        EngineConfig {
+            repartition: None,
+            migration_drain: 80e-3,
+            energy_budget: None,
+            slo: SloController::default(),
+        }
     }
 }
 
@@ -77,6 +106,11 @@ impl EngineConfig {
     /// Static leases + demand-adaptive migration with the default policy.
     pub fn adaptive() -> EngineConfig {
         EngineConfig { repartition: Some(RepartitionPolicy::default()), ..Default::default() }
+    }
+
+    /// The default config with a per-window joule budget attached.
+    pub fn budgeted(b: EnergyBudget) -> EngineConfig {
+        EngineConfig { energy_budget: Some(b), ..Default::default() }
     }
 }
 
@@ -98,6 +132,32 @@ pub struct EngineMetrics {
     /// the one global clock, so streams are directly comparable (no
     /// per-stream clock skew).
     pub utilization: Vec<f64>,
+    /// Admissions deferred by energy-budget exhaustion, summed over
+    /// every denial decision (a stream deferred across several window
+    /// boundaries counts once per denial). Zero without a budget.
+    pub deferrals: usize,
+    /// Energy-budget windows the run touched (including the trailing
+    /// partial window). Zero without a budget.
+    pub budget_windows: usize,
+    /// Joules charged to the `f_eng` account per budget window, in
+    /// window order; sums to the total modeled energy of every
+    /// dispatched batch (each batch is charged exactly once). Empty
+    /// without a budget.
+    pub window_joules: Vec<f64>,
+    /// Each stream's fraction of the device pool (time share × device
+    /// fraction) under the last lease it held — the end state the SLO
+    /// controller and re-partitioner steered toward. A finished stream
+    /// keeps reporting the lease it ended on even after its devices were
+    /// handed back, so the entries need not sum to 1. Empty for the
+    /// single-stream path.
+    pub final_pool_share: Vec<f64>,
+}
+
+impl EngineMetrics {
+    /// Total joules charged against the energy budget (0 without one).
+    pub fn joules_charged(&self) -> f64 {
+        self.window_joules.iter().sum()
+    }
 }
 
 impl std::fmt::Display for EngineMetrics {
@@ -105,12 +165,13 @@ impl std::fmt::Display for EngineMetrics {
         write!(
             f,
             "{} events, {} repartitions, {} lease migrations, {} preemptions, \
-             {} time-sliced streams",
+             {} time-sliced streams, {} budget deferrals",
             self.events_processed,
             self.repartitions,
             self.lease_migrations,
             self.preemptions,
-            self.time_sliced_streams
+            self.time_sliced_streams,
+            self.deferrals
         )
     }
 }
@@ -142,6 +203,13 @@ struct Lane<'c, 'a, E: PerfEstimator> {
     /// FLOPs *completed* since the last demand-sampling tick.
     flops_window: f64,
     cache: CacheStats,
+    /// The stream's service-level objective (target + QoS priority).
+    slo: StreamSlo,
+    /// Whether the lane is waiting out an exhausted energy-budget window
+    /// (idle with queued work it was denied admission for).
+    deferred: bool,
+    /// Admission denials the energy budget charged this lane.
+    deferrals: usize,
 }
 
 /// A lane's final accounting, lifted into the public report types.
@@ -154,9 +222,16 @@ struct LaneOutcome {
 impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
     /// A lane whose ground truth is derived from its partition (the
     /// multi-stream path — matches the legacy per-partition harness).
-    fn new(coord: &'c mut Coordinator<'a, E>, part: SystemSpec, share: f64) -> Self {
+    fn new(
+        coord: &'c mut Coordinator<'a, E>,
+        part: SystemSpec,
+        share: f64,
+        slo: StreamSlo,
+    ) -> Self {
         let gt = GroundTruth::new(part.gpu.clone(), part.fpga.clone(), part.comm_model());
-        Lane::with_ground_truth(coord, part, share, gt)
+        let mut lane = Lane::with_ground_truth(coord, part, share, gt);
+        lane.slo = slo;
+        lane
     }
 
     /// A lane measuring against a caller-supplied ground truth (the
@@ -190,15 +265,35 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
             inflight_flops: 0.0,
             flops_window: 0.0,
             cache: CacheStats::default(),
+            slo: StreamSlo::default(),
+            deferred: false,
+            deferrals: 0,
         }
+    }
+
+    /// The tail latency observed so far (`None` before any completion) —
+    /// what the SLO controller feeds back into lease weight.
+    fn observed_p99(&self) -> Option<f64> {
+        let lats: Vec<f64> = self.completions.iter().map(Completion::latency).collect();
+        slo::observed_p99(&lats)
+    }
+
+    /// This lane's fraction of the whole pool under its current lease —
+    /// the same quantity as [`lease::LeaseAssignment::pool_share`], kept
+    /// in sync with it (the hysteresis compares the two directly).
+    fn pool_share(&self, pool: &SystemSpec) -> f64 {
+        let d = (pool.n_fpga + pool.n_gpu) as f64;
+        self.share * (self.part.n_fpga + self.part.n_gpu) as f64 / d
     }
 
     /// Admit the front request at global time `now`: consult the
     /// coordinator (data-aware reschedule behind its hysteresis),
     /// re-measure on ground truth when the schedule or signature changed,
     /// pay any drain, occupy the lease for one admission slot, and
-    /// schedule the [`EventKind::BatchComplete`].
-    fn dispatch(&mut self, trace: &[Request], stream: usize, now: f64, q: &mut EventQueue) {
+    /// schedule the [`EventKind::BatchComplete`]. Returns the batch's
+    /// modeled energy (J) so the caller can charge the `f_eng` budget —
+    /// exactly once per batch, at its (possibly deferred) dispatch.
+    fn dispatch(&mut self, trace: &[Request], stream: usize, now: f64, q: &mut EventQueue) -> f64 {
         debug_assert!(!self.busy, "dispatch on a busy lane");
         let idx = self.queue.pop_front().expect("dispatch on an empty queue");
         let req = &trace[idx];
@@ -206,8 +301,7 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
 
         // Data-aware scheduling: feed the observed characteristics to the
         // coordinator; it reschedules only past its hysteresis.
-        let sig: String =
-            req.workload.kernels.iter().map(|k| format!("{:?};", k.kind)).collect();
+        let sig: String = req.workload.kernels.iter().map(|k| format!("{:?};", k.kind)).collect();
         let cache_before = self.coord.cache_stats().unwrap_or_default();
         let events_before = self.coord.reschedule_events().len();
         let sched = self.coord.process_batch(&req.workload).clone();
@@ -259,6 +353,7 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
         self.busy_time += slot_end - now;
         self.completions.push(Completion { id: req.id, arrival: req.arrival, start, finish });
         q.push(slot_end, EventKind::BatchComplete { stream, request: req.id });
+        energy
     }
 
     /// Move this lane onto a new device partition: retarget the
@@ -278,9 +373,12 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
     fn into_outcome(self) -> LaneOutcome {
         let completed = self.completions.len();
         let makespan = self.completions.iter().map(|c| c.finish).fold(0.0, f64::max);
-        let lats = LatencySummary::from_unsorted(
-            self.completions.iter().map(Completion::latency).collect(),
-        );
+        let raw_lats: Vec<f64> = self.completions.iter().map(Completion::latency).collect();
+        let slo_attainment = match self.slo.p99_target {
+            Some(target) => crate::metrics::attainment(&raw_lats, target),
+            None => 1.0,
+        };
+        let lats = LatencySummary::from_unsorted(raw_lats);
         let partition = if self.share < 1.0 {
             format!("{}F{}G@{:.0}%", self.part.n_fpga, self.part.n_gpu, self.share * 100.0)
         } else {
@@ -301,6 +399,8 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
                 reschedules: self.reschedules,
                 reschedule_downtime: self.downtime,
                 energy: self.energy,
+                slo_attainment,
+                deferrals: self.deferrals,
                 cache: self.cache,
                 completions: self.completions,
             },
@@ -308,10 +408,57 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
     }
 }
 
+/// Whether the energy budget admits a dispatch for `stream` right now:
+/// always, while the open window has joules left; once exhausted, only
+/// when no *unfinished* stream (one that has not yet dispatched its whole
+/// trace) holds strictly higher priority. The top pending class is
+/// work-conserving, so the loop always makes progress — even a zero-joule
+/// budget serves everything eventually, in priority order.
+fn admission_allowed<E: PerfEstimator>(
+    ledger: &Option<BudgetLedger>,
+    lanes: &[Lane<'_, '_, E>],
+    traces: &[&[Request]],
+    stream: usize,
+) -> bool {
+    let Some(led) = ledger else { return true };
+    if !led.exhausted() {
+        return true;
+    }
+    let p = lanes[stream].slo.priority;
+    lanes.iter().zip(traces).all(|(l, t)| l.completions.len() >= t.len() || l.slo.priority <= p)
+}
+
+/// Admit the front of `stream`'s queue if the energy budget allows it
+/// (charging the ledger), or mark the lane deferred — the one admission
+/// path shared by the arrival, completion, and window-tick handlers.
+fn try_admit<E: PerfEstimator>(
+    stream: usize,
+    now: f64,
+    lanes: &mut [Lane<'_, '_, E>],
+    traces: &[&[Request]],
+    ledger: &mut Option<BudgetLedger>,
+    q: &mut EventQueue,
+    remaining: &mut usize,
+) {
+    if admission_allowed(&*ledger, lanes, traces, stream) {
+        lanes[stream].deferred = false;
+        let joules = lanes[stream].dispatch(traces[stream], stream, now, q);
+        if let Some(led) = ledger.as_mut() {
+            led.charge(joules);
+        }
+        *remaining -= 1;
+    } else {
+        lanes[stream].deferred = true;
+        lanes[stream].deferrals += 1;
+    }
+}
+
 /// The one event loop. Drains every trace through its lane on a single
 /// global clock; with a re-partitioning policy, also samples demand and
-/// migrates leases. Returns the engine metrics (utilization left empty —
-/// the caller normalizes by its makespan).
+/// migrates leases; with an energy budget, also meters the `f_eng`
+/// account and defers below-priority admissions across window
+/// boundaries. Returns the engine metrics (utilization and final pool
+/// shares left empty — the caller fills them in).
 fn run_event_loop<E: PerfEstimator>(
     pool: &SystemSpec,
     traces: &[&[Request]],
@@ -354,6 +501,11 @@ fn run_event_loop<E: PerfEstimator>(
         DemandTracker::new(initial_demands, pol.ewma_alpha)
     });
 
+    let mut ledger = cfg.energy_budget.clone().map(|b| {
+        q.push(b.window, EventKind::BudgetWindowTick);
+        BudgetLedger::new(b)
+    });
+
     while remaining > 0 {
         let ev = q.pop().expect("pending requests imply pending events");
         let now = ev.time;
@@ -362,9 +514,8 @@ fn run_event_loop<E: PerfEstimator>(
                 let lane = &mut lanes[stream];
                 lane.queue.push_back(index);
                 lane.max_queue = lane.max_queue.max(lane.queue.len());
-                if !lane.busy {
-                    lane.dispatch(traces[stream], stream, now, &mut q);
-                    remaining -= 1;
+                if !lanes[stream].busy {
+                    try_admit(stream, now, lanes, traces, &mut ledger, &mut q, &mut remaining);
                 }
             }
             EventKind::BatchComplete { stream, .. } => {
@@ -372,9 +523,8 @@ fn run_event_loop<E: PerfEstimator>(
                 lane.busy = false;
                 lane.flops_window += lane.inflight_flops;
                 lane.inflight_flops = 0.0;
-                if !lane.queue.is_empty() {
-                    lane.dispatch(traces[stream], stream, now, &mut q);
-                    remaining -= 1;
+                if !lanes[stream].queue.is_empty() {
+                    try_admit(stream, now, lanes, traces, &mut ledger, &mut q, &mut remaining);
                 }
             }
             EventKind::RepartitionTick => {
@@ -386,45 +536,81 @@ fn run_event_loop<E: PerfEstimator>(
                 }
             }
             EventKind::LeaseExpiry => {
-                if let (Some(pol), Some(tr)) = (cfg.repartition.as_ref(), tracker.as_ref()) {
-                    maybe_migrate(pool, traces, lanes, tr, pol, cfg, &mut metrics);
+                if let Some(tr) = tracker.as_ref() {
+                    maybe_migrate(pool, traces, lanes, tr, cfg, &mut metrics);
+                    let pol = cfg.repartition.as_ref().expect("tracker implies a policy");
                     q.push(now + pol.lease_term, EventKind::LeaseExpiry);
+                }
+            }
+            EventKind::BudgetWindowTick => {
+                let Some(window) = ledger.as_mut().map(|led| {
+                    led.roll_window();
+                    led.window()
+                }) else {
+                    continue; // ticks are only ever scheduled with a ledger
+                };
+                // Resume deferred lanes highest-priority-first (ties in
+                // stream order) until the refilled window objects again.
+                let mut order: Vec<usize> = (0..lanes.len())
+                    .filter(|&i| lanes[i].deferred && !lanes[i].busy && !lanes[i].queue.is_empty())
+                    .collect();
+                order.sort_by(|&a, &b| {
+                    let (pa, pb) = (lanes[a].slo.priority, lanes[b].slo.priority);
+                    pb.partial_cmp(&pa).expect("finite priorities").then(a.cmp(&b))
+                });
+                for s in order {
+                    try_admit(s, now, lanes, traces, &mut ledger, &mut q, &mut remaining);
+                }
+                if remaining > 0 {
+                    q.push(now + window, EventKind::BudgetWindowTick);
                 }
             }
         }
     }
+    if let Some(led) = ledger {
+        metrics.window_joules = led.into_window_joules();
+        metrics.budget_windows = metrics.window_joules.len();
+    }
+    metrics.deferrals = lanes.iter().map(|l| l.deferrals).sum();
     metrics.events_processed = q.processed();
     metrics
 }
 
 /// Lease-expiry handler: rebuild the lease table from the observed EWMA
-/// demands of the still-active streams; migrate only when the pool-share
-/// apportionment shifted past the policy's hysteresis.
+/// demands of the still-active streams — each scaled by the SLO
+/// controller's p99-pressure weight, so a stream missing its target bids
+/// for more of the pool than its raw FLOP rate alone — and migrate only
+/// when the pool-share apportionment shifted past the policy's
+/// hysteresis. A *finished* stream drops out of the apportionment
+/// entirely, so its devices return to the survivors (down to a sole
+/// survivor inheriting the whole pool).
 fn maybe_migrate<E: PerfEstimator>(
     pool: &SystemSpec,
     traces: &[&[Request]],
     lanes: &mut [Lane<'_, '_, E>],
     tracker: &DemandTracker,
-    pol: &RepartitionPolicy,
     cfg: &EngineConfig,
     metrics: &mut EngineMetrics,
 ) {
+    let pol = cfg.repartition.as_ref().expect("maybe_migrate requires a policy");
     let active: Vec<usize> = (0..lanes.len())
         .filter(|&i| lanes[i].completions.len() < traces[i].len())
         .collect();
-    if active.len() < 2 {
-        return; // nothing to rebalance against
+    if active.is_empty() {
+        return; // the run is draining its final in-flight slots
     }
-    let demands: Vec<f64> = active.iter().map(|&i| tracker.rate(i)).collect();
-    let desired = lease::assign(pool, &demands);
-    let d_total = (pool.n_fpga + pool.n_gpu) as f64;
-    let current: Vec<f64> = active
+    let demands: Vec<f64> = active
         .iter()
         .map(|&i| {
             let l = &lanes[i];
-            l.share * (l.part.n_fpga + l.part.n_gpu) as f64 / d_total
+            // Only targeted lanes pay for the p99 observation (a sort of
+            // the completion history); the controller ignores it otherwise.
+            let p99 = if l.slo.p99_target.is_some() { l.observed_p99() } else { None };
+            tracker.rate(i) * cfg.slo.weight(&l.slo, p99)
         })
         .collect();
+    let desired = lease::assign(pool, &demands);
+    let current: Vec<f64> = active.iter().map(|&i| lanes[i].pool_share(pool)).collect();
     let next: Vec<f64> = (0..active.len()).map(|l| desired.pool_share(l, pool)).collect();
     if share_shift(&current, &next) <= pol.hysteresis {
         return; // renewal: the table in force is still close enough
@@ -506,9 +692,24 @@ impl<'a, E: PerfEstimator> ServingEngine<'a, E> {
     /// Serve every stream's trace to completion on one global clock.
     pub fn serve(&mut self, streams: &[StreamSpec]) -> MultiStreamReport {
         assert!(!streams.is_empty(), "no streams");
+        for s in streams {
+            // SLO fields are public: catch a struct-literal NaN priority
+            // here, before it can wedge the budget deferral ordering.
+            s.slo.validate();
+        }
         let cache_before = self.cache.lock().unwrap().stats();
         let demands: Vec<f64> = streams.iter().map(StreamSpec::demand).collect();
-        let assignment = lease::assign(&self.sys, &demands);
+        // Initial leases weigh offered demand by SLO priority (no p99
+        // observations exist yet); with default SLOs the weights are all
+        // 1 and this is exactly the demand-proportional split. The
+        // demand *tracker* is seeded with the raw FLOP rates — the SLO
+        // weight is re-applied at every re-lease, never compounded.
+        let weighted: Vec<f64> = streams
+            .iter()
+            .zip(&demands)
+            .map(|(s, d)| d * self.cfg.slo.weight(&s.slo, None))
+            .collect();
+        let assignment = lease::assign(&self.sys, &weighted);
 
         let mut coords: Vec<Coordinator<'a, E>> = streams
             .iter()
@@ -524,17 +725,17 @@ impl<'a, E: PerfEstimator> ServingEngine<'a, E> {
             .enumerate()
             .map(|(i, coord)| {
                 let (part, share) = assignment.lease_of(i);
-                Lane::new(coord, part.clone(), share)
+                Lane::new(coord, part.clone(), share, streams[i].slo.clone())
             })
             .collect();
         let traces: Vec<&[Request]> = streams.iter().map(|s| s.trace.as_slice()).collect();
 
         let mut metrics = run_event_loop(&self.sys, &traces, &mut lanes, &demands, &self.cfg);
+        metrics.final_pool_share = lanes.iter().map(|l| l.pool_share(&self.sys)).collect();
 
         let outcomes: Vec<LaneOutcome> = lanes.into_iter().map(Lane::into_outcome).collect();
         let makespan = outcomes.iter().map(|o| o.report.makespan).fold(0.0, f64::max);
-        metrics.utilization =
-            outcomes.iter().map(|o| o.busy_time / makespan.max(1e-12)).collect();
+        metrics.utilization = outcomes.iter().map(|o| o.busy_time / makespan.max(1e-12)).collect();
 
         let total_completed: usize = outcomes.iter().map(|o| o.report.completed).sum();
         let ratios: Vec<f64> = outcomes
@@ -552,6 +753,7 @@ impl<'a, E: PerfEstimator> ServingEngine<'a, E> {
                 report: o.report,
             })
             .collect();
+        let total_energy: f64 = streams_out.iter().map(|s| s.report.energy).sum();
         let cache = self.cache.lock().unwrap().stats().since(&cache_before);
         MultiStreamReport {
             streams: streams_out,
@@ -560,6 +762,8 @@ impl<'a, E: PerfEstimator> ServingEngine<'a, E> {
             total_completed,
             aggregate_throughput: total_completed as f64 / makespan.max(1e-12),
             fairness,
+            total_energy,
+            throughput_per_joule: total_completed as f64 / total_energy.max(1e-12),
             engine: metrics,
         }
     }
@@ -617,8 +821,16 @@ mod tests {
         let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
         let est = OracleModels { gt: &gt };
         let streams = vec![
-            StreamSpec::new("a", Objective::Performance, generate_trace(&[(gcn(2_000_000), 8)], 20.0, 1)),
-            StreamSpec::new("b", Objective::Performance, generate_trace(&[(gcn(150_000_000), 8)], 20.0, 2)),
+            StreamSpec::new(
+                "a",
+                Objective::Performance,
+                generate_trace(&[(gcn(2_000_000), 8)], 20.0, 1),
+            ),
+            StreamSpec::new(
+                "b",
+                Objective::Performance,
+                generate_trace(&[(gcn(150_000_000), 8)], 20.0, 2),
+            ),
         ];
         let mut engine = ServingEngine::new(s, &est);
         let r = engine.serve(&streams);

@@ -11,6 +11,12 @@
 //! leases migrate — and every stream whose device inventory changed pays
 //! an explicit drain cost before its next admission, mirroring the
 //! intra-stream reschedule drain.
+//!
+//! The rates this module tracks are scaled by the SLO controller's
+//! p99-pressure weights before they reach [`super::lease::assign`]
+//! (see [`super::slo`]), and a stream that has dispatched its whole
+//! trace drops out of the apportionment so its devices return to the
+//! survivors — lease re-validation continues down to a sole survivor.
 
 /// Knobs of the online re-partitioning policy. `None` in
 /// [`super::EngineConfig`] disables re-partitioning entirely (static

@@ -1,0 +1,191 @@
+//! Per-stream service-level objectives and the feedback controller that
+//! turns p99 misses into device-lease weight.
+//!
+//! PR 1 partitioned the pool on offered FLOP rate alone; a deployment
+//! cares about *latency targets* per stream, not just demand. Each
+//! [`crate::coordinator::StreamSpec`] now carries a [`StreamSlo`]:
+//!
+//! * `p99_target` — the stream's tail-latency SLO (s), if any;
+//! * `priority` — the QoS class the energy-budget deferral orders by
+//!   ([`super::budget`]), and a static multiplier on lease weight.
+//!
+//! The [`SloController`] closes the loop: at every lease re-validation
+//! the engine computes each stream's observed p99 (from its completions,
+//! via [`crate::metrics::percentile`]) and scales its demand estimate by
+//!
+//! ```text
+//! wᵢ = priorityᵢ · clamp((p99ᵢ_observed / p99ᵢ_target)^gain,
+//!                        1/max_boost, max_boost)
+//! ```
+//!
+//! so a stream missing its target bids for more of the pool and a stream
+//! comfortably beating it cedes slack — replacing pure demand shares for
+//! both exclusive partitions and oversubscribed time-slice groups
+//! (weights flow through [`super::lease::assign`], whose intra-group
+//! time shares follow the same weighted demands). With default SLOs
+//! (no target, priority 1) every weight is exactly 1 and the engine is
+//! bit-identical to the demand-only partitioning.
+
+use crate::metrics::percentile;
+
+/// One stream's service-level objective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSlo {
+    /// Tail-latency target (s): the stream wants `p99 <= p99_target`.
+    /// `None` means best-effort (no latency feedback).
+    pub p99_target: Option<f64>,
+    /// QoS priority, higher is more important. Strictly lower-priority
+    /// streams are deferred first when the energy budget is exhausted,
+    /// and lease weight scales linearly with priority.
+    pub priority: f64,
+}
+
+impl Default for StreamSlo {
+    /// Best-effort, unit priority — the weight-neutral SLO every legacy
+    /// scenario implicitly ran with.
+    fn default() -> Self {
+        StreamSlo { p99_target: None, priority: 1.0 }
+    }
+}
+
+impl StreamSlo {
+    pub fn new(p99_target: Option<f64>, priority: f64) -> StreamSlo {
+        let slo = StreamSlo { p99_target, priority };
+        slo.validate();
+        slo
+    }
+
+    /// Re-check the constructor invariants. The engine calls this on
+    /// every stream at serve time because the fields are public — an
+    /// instance built by struct literal can smuggle a NaN priority past
+    /// [`StreamSlo::new`], and NaN comparisons would wedge the budget
+    /// deferral ordering (mirrors the re-validation in
+    /// [`super::budget::BudgetLedger`]).
+    pub fn validate(&self) {
+        if let Some(t) = self.p99_target {
+            assert!(t > 0.0 && t.is_finite(), "non-positive p99 target {t}");
+        }
+        assert!(
+            self.priority > 0.0 && self.priority.is_finite(),
+            "non-positive priority {}",
+            self.priority
+        );
+    }
+
+    /// A latency-SLO'd stream: p99 target in seconds, with a priority.
+    pub fn target(p99_target: f64, priority: f64) -> StreamSlo {
+        StreamSlo::new(Some(p99_target), priority)
+    }
+
+    /// No latency target, just a QoS priority.
+    pub fn best_effort(priority: f64) -> StreamSlo {
+        StreamSlo::new(None, priority)
+    }
+}
+
+/// Proportional feedback from observed-vs-target p99 to lease weight.
+/// Always present in [`super::EngineConfig`]; with default [`StreamSlo`]s
+/// it is the identity (weight = demand), so it is opt-in per stream, not
+/// per engine.
+#[derive(Debug, Clone)]
+pub struct SloController {
+    /// Exponent on the observed/target p99 ratio. 1.0 = proportional.
+    pub gain: f64,
+    /// Clamp on the pressure term: weights stay within
+    /// `[priority/max_boost, priority·max_boost]` so one violating
+    /// stream cannot starve the rest of the pool.
+    pub max_boost: f64,
+}
+
+impl Default for SloController {
+    fn default() -> Self {
+        SloController { gain: 1.0, max_boost: 4.0 }
+    }
+}
+
+impl SloController {
+    /// The lease weight multiplier for one stream: its priority times the
+    /// clamped SLO pressure. Streams without a target, or without enough
+    /// completions to observe a p99, weigh in at exactly `priority`.
+    pub fn weight(&self, slo: &StreamSlo, observed_p99: Option<f64>) -> f64 {
+        assert!(self.gain > 0.0 && self.gain.is_finite(), "non-positive gain {}", self.gain);
+        assert!(self.max_boost >= 1.0, "max_boost {} below 1", self.max_boost);
+        let pressure = match (slo.p99_target, observed_p99) {
+            (Some(target), Some(p99)) => {
+                (p99 / target).powf(self.gain).clamp(1.0 / self.max_boost, self.max_boost)
+            }
+            _ => 1.0,
+        };
+        slo.priority * pressure
+    }
+}
+
+/// Observed p99 of a latency sample (any order), `None` when empty —
+/// the controller's measurement side.
+pub fn observed_p99(latencies: &[f64]) -> Option<f64> {
+    if latencies.is_empty() {
+        return None;
+    }
+    let mut xs = latencies.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Some(percentile(&xs, 0.99))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_slo_is_weight_neutral() {
+        let c = SloController::default();
+        assert_eq!(c.weight(&StreamSlo::default(), None), 1.0);
+        assert_eq!(c.weight(&StreamSlo::default(), Some(10.0)), 1.0, "no target, no feedback");
+        assert_eq!(c.weight(&StreamSlo::target(0.1, 1.0), None), 1.0, "no sample, no feedback");
+    }
+
+    #[test]
+    fn violating_stream_gains_weight_meeting_stream_cedes_it() {
+        let c = SloController::default();
+        let slo = StreamSlo::target(0.100, 1.0);
+        let missing = c.weight(&slo, Some(0.200)); // 2x over target
+        let meeting = c.weight(&slo, Some(0.050)); // 2x under target
+        assert!((missing - 2.0).abs() < 1e-12, "missing {missing}");
+        assert!((meeting - 0.5).abs() < 1e-12, "meeting {meeting}");
+    }
+
+    #[test]
+    fn pressure_is_clamped_and_priority_scales() {
+        let c = SloController::default();
+        let slo = StreamSlo::target(1e-6, 3.0);
+        let w = c.weight(&slo, Some(10.0)); // 1e7x over target
+        assert!((w - 3.0 * 4.0).abs() < 1e-12, "boost must clamp at max_boost: {w}");
+        let floor = c.weight(&StreamSlo::target(1e6, 2.0), Some(1e-3));
+        assert!((floor - 2.0 / 4.0).abs() < 1e-12, "cede clamps at 1/max_boost: {floor}");
+    }
+
+    #[test]
+    fn observed_p99_is_the_tail_not_the_median() {
+        assert_eq!(observed_p99(&[]), None);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(observed_p99(&xs), Some(99.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive priority")]
+    fn rejects_zero_priority() {
+        StreamSlo::best_effort(0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive priority")]
+    fn validate_catches_struct_literal_nan_priority() {
+        // The fields are public; the engine re-validates at serve time.
+        StreamSlo { p99_target: None, priority: f64::NAN }.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive p99 target")]
+    fn rejects_zero_target() {
+        StreamSlo::target(0.0, 1.0);
+    }
+}

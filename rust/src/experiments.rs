@@ -10,7 +10,7 @@
 use crate::config::{Interconnect, Objective, SystemSpec};
 use crate::coordinator::{generate_trace, MultiStreamReport, MultiStreamServer, StreamSpec};
 use crate::devices::GroundTruth;
-use crate::engine::EngineConfig;
+use crate::engine::{EnergyBudget, EngineConfig, RepartitionPolicy, StreamSlo};
 use crate::perfmodel::{calibrate, ModelRegistry, OracleModels, PerfEstimator};
 use crate::pipeline::PipelineSim;
 use crate::scheduler::{baselines, evaluate_plan, DpScheduler, PowerTable, StagePlan};
@@ -266,6 +266,57 @@ pub fn skewed_pair_scenario(per_phase: usize, seed: u64) -> Vec<StreamSpec> {
     ]
 }
 
+/// The canonical **energy/SLO** serving scenario (DESIGN.md §Energy &
+/// SLOs): three streams with distinct QoS classes on one pool, built to
+/// exercise both halves of multi-objective serving —
+///
+/// * **latency-critical** — light traffic-forecast batches with a tight
+///   p99 target and the highest priority; never deferred, and the SLO
+///   controller bids lease weight on its behalf when the target slips;
+/// * **bulk-analytics** — heavy batches, mid priority, no latency
+///   target: the stream an exhausted joule window defers first among
+///   the demand bulk;
+/// * **background-embeddings** — medium batches at the lowest priority,
+///   deferred before anything else.
+///
+/// Pair with [`energy_slo_config`] (or any [`EngineConfig`] carrying an
+/// [`EnergyBudget`]) to see budget exhaustion defer strictly
+/// below-priority work; serve it unbudgeted for the baseline point of
+/// the throughput-vs-joules frontier.
+pub fn energy_slo_scenario(per_phase: usize, seed: u64) -> Vec<StreamSpec> {
+    assert!(per_phase >= 1);
+    let traffic = |edges: u64| {
+        let ds = Dataset::new("TF", "traffic", 1_000_000, edges, 200, 0.2);
+        gnn::gcn_workload(&ds, 2, 128)
+    };
+    let critical = generate_trace(&[(traffic(2_000_000), 5 * per_phase)], 25.0, seed);
+    let bulk = generate_trace(&[(traffic(150_000_000), 2 * per_phase)], 5.0, seed + 1);
+    let background = generate_trace(&[(traffic(20_000_000), 3 * per_phase)], 12.0, seed + 2);
+    vec![
+        StreamSpec::new("latency-critical", Objective::Performance, critical)
+            .with_slo(StreamSlo::target(0.100, 3.0)),
+        StreamSpec::new("bulk-analytics", Objective::Performance, bulk)
+            .with_slo(StreamSlo::best_effort(2.0)),
+        StreamSpec::new("background-embeddings", Objective::Performance, background)
+            .with_slo(StreamSlo::best_effort(1.0)),
+    ]
+}
+
+/// The engine configuration [`energy_slo_scenario`] is meant to run
+/// under: a joule budget of `cap_watts` sustained power in 0.25 s
+/// windows, plus a reactive re-partitioning policy so the SLO
+/// controller's weights actually reach the lease table. Derive
+/// `cap_watts` from the pool's worst case
+/// ([`crate::scheduler::PowerTable::pool_power_cap`]) or from a measured
+/// baseline run's average draw (`total_energy / makespan`).
+pub fn energy_slo_config(cap_watts: f64) -> EngineConfig {
+    EngineConfig {
+        repartition: Some(RepartitionPolicy::reactive(2.0)),
+        energy_budget: Some(EnergyBudget::from_power_cap(cap_watts, 0.25)),
+        ..EngineConfig::default()
+    }
+}
+
 /// Reference workload for static-plan tuning: same model family on the
 /// paper's reference configuration (ogbn-arxiv for GNNs; the mid-grid
 /// point for transformers).
@@ -320,6 +371,23 @@ mod tests {
         };
         assert!(half(&streams[0], true) > 10.0 * half(&streams[0], false));
         assert!(half(&streams[1], false) > 10.0 * half(&streams[1], true));
+    }
+
+    #[test]
+    fn energy_slo_scenario_orders_qos_classes() {
+        let streams = energy_slo_scenario(4, 17);
+        assert_eq!(streams.len(), 3);
+        assert!(
+            streams[0].slo.priority > streams[1].slo.priority
+                && streams[1].slo.priority > streams[2].slo.priority,
+            "priorities must be strictly ordered for deferral to discriminate"
+        );
+        assert!(streams[0].slo.p99_target.is_some(), "the critical stream carries a target");
+        assert!(streams[1].slo.p99_target.is_none() && streams[2].slo.p99_target.is_none());
+        let cfg = energy_slo_config(250.0);
+        let budget = cfg.energy_budget.expect("budgeted config");
+        assert!((budget.joules_per_window - 250.0 * 0.25).abs() < 1e-9);
+        assert!(cfg.repartition.is_some(), "SLO weights need lease re-validation to act");
     }
 
     #[test]

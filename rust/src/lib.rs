@@ -106,7 +106,9 @@ pub mod prelude {
         generate_trace, Coordinator, MultiStreamServer, Server, StreamSpec,
     };
     pub use crate::devices::{DeviceType, GroundTruth};
-    pub use crate::engine::{EngineConfig, RepartitionPolicy, ServingEngine};
+    pub use crate::engine::{
+        EnergyBudget, EngineConfig, RepartitionPolicy, ServingEngine, SloController, StreamSlo,
+    };
     pub use crate::perfmodel::{calibrate, ModelRegistry, OracleModels};
     pub use crate::pipeline::sim::PipelineSim;
     pub use crate::scheduler::{baselines, CacheStats, DpScheduler, Schedule, ScheduleCache, Stage};

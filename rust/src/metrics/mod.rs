@@ -57,6 +57,16 @@ pub fn fmt_percent(x: f64) -> String {
     format!("{:.1}%", x * 100.0)
 }
 
+/// SLO attainment: the fraction of `latencies` at or under `target`.
+/// The per-stream number the serving reports carry next to the
+/// percentiles (1.0 = every request met the target).
+pub fn attainment(latencies: &[f64], target: f64) -> f64 {
+    if latencies.is_empty() {
+        return 1.0;
+    }
+    latencies.iter().filter(|&&l| l <= target).count() as f64 / latencies.len() as f64
+}
+
 /// Simple fixed-width console table writer for the bench harnesses.
 pub struct Table {
     header: Vec<String>,
@@ -149,6 +159,14 @@ mod tests {
     fn ratio_format_matches_paper_style() {
         assert_eq!(fmt_ratio(1.534), "1.53x");
         assert_eq!(fmt_percent(0.7321), "73.2%");
+    }
+
+    #[test]
+    fn attainment_is_a_fraction_of_met_latencies() {
+        assert_eq!(attainment(&[], 0.1), 1.0, "vacuous attainment");
+        assert_eq!(attainment(&[0.05, 0.1, 0.2, 0.4], 0.1), 0.5);
+        assert_eq!(attainment(&[0.05, 0.06], 0.1), 1.0);
+        assert_eq!(attainment(&[0.5, 0.6], 0.1), 0.0);
     }
 
     #[test]

@@ -63,8 +63,7 @@ fn fit_family(
     profiles: &[KernelKind],
     dev: DeviceType,
 ) -> LinReg {
-    let xs: Vec<Vec<f64>> =
-        profiles.iter().map(|k| features(k, dev, &sys.fpga)).collect();
+    let xs: Vec<Vec<f64>> = profiles.iter().map(|k| features(k, dev, &sys.fpga)).collect();
     let ys: Vec<f64> = profiles.iter().map(|k| gt.kernel_time(k, dev, 1)).collect();
     LinReg::fit_relative(&xs, &ys, RIDGE).expect("calibration fit failed")
 }

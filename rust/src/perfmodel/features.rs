@@ -94,8 +94,7 @@ pub fn features(kind: &KernelKind, dev: DeviceType, fpga: &FpgaConfig) -> Vec<f6
         (KernelKind::SpMM { m, n, nnz, .. }, DeviceType::Fpga) => {
             // §V: the architectural formula as the main regressor, scaling
             // factor C and intercept fitted.
-            let cycles =
-                (*nnz as f64 + 13.0 * *m as f64) * *n as f64 / fpga.spmm_macs;
+            let cycles = (*nnz as f64 + 13.0 * *m as f64) * *n as f64 / fpga.spmm_macs;
             vec![cycles / fpga.spmm_freq, 1.0]
         }
         (KernelKind::Gemm { m, k, n }, DeviceType::Gpu) => {
@@ -156,10 +155,7 @@ mod tests {
         // §V: GPU runs dense attention — the window must not appear.
         let a = KernelKind::WindowAttn { seq: 4096, window: 512, heads: 8, dim: 64 };
         let b = KernelKind::WindowAttn { seq: 4096, window: 2048, heads: 8, dim: 64 };
-        assert_eq!(
-            features(&a, DeviceType::Gpu, &FPGA()),
-            features(&b, DeviceType::Gpu, &FPGA())
-        );
+        assert_eq!(features(&a, DeviceType::Gpu, &FPGA()), features(&b, DeviceType::Gpu, &FPGA()));
     }
 
     #[test]

@@ -144,9 +144,7 @@ mod tests {
     #[test]
     fn recovers_exact_linear_relation() {
         // y = 3 x0 - 2 x1 + 0.5
-        let xs: Vec<Vec<f64>> = (0..50)
-            .map(|i| vec![i as f64, (i * i % 17) as f64, 1.0])
-            .collect();
+        let xs: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64, (i * i % 17) as f64, 1.0]).collect();
         let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x[0] - 2.0 * x[1] + 0.5).collect();
         let m = LinReg::fit(&xs, &ys, 1e-12).unwrap();
         assert!((m.weights[0] - 3.0).abs() < 1e-6);

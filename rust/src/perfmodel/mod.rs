@@ -142,7 +142,11 @@ mod tests {
         reg.insert(
             "gemm",
             DeviceType::Gpu,
-            LinReg { weights: vec![0.0; 6].into_iter().chain([1e-3]).collect(), rmse: 0.0, r2: 1.0 },
+            LinReg {
+                weights: vec![0.0; 6].into_iter().chain([1e-3]).collect(),
+                rmse: 0.0,
+                r2: 1.0,
+            },
         );
         let k = KernelKind::Gemm { m: 128, k: 128, n: 128 };
         let t1 = reg.stage_time(&[k], DeviceType::Gpu, 1);

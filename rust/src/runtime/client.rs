@@ -91,10 +91,7 @@ impl Runtime {
         )
         .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
         self.exes.insert(name.to_string(), exe);
         Ok(())
     }

@@ -26,13 +26,23 @@ use super::evaluate::evaluate_plan;
 use super::pipeline_def::{Schedule, StagePlan};
 
 /// DP on a GPU-only installation of the same system.
-pub fn gpu_only<E: PerfEstimator>(sys: &SystemSpec, est: &E, wl: &Workload, obj: Objective) -> Schedule {
+pub fn gpu_only<E: PerfEstimator>(
+    sys: &SystemSpec,
+    est: &E,
+    wl: &Workload,
+    obj: Objective,
+) -> Schedule {
     let s = SystemSpec { n_fpga: 0, ..sys.clone() };
     DpScheduler::new(&s, est).schedule(wl, obj)
 }
 
 /// DP on an FPGA-only installation of the same system.
-pub fn fpga_only<E: PerfEstimator>(sys: &SystemSpec, est: &E, wl: &Workload, obj: Objective) -> Schedule {
+pub fn fpga_only<E: PerfEstimator>(
+    sys: &SystemSpec,
+    est: &E,
+    wl: &Workload,
+    obj: Objective,
+) -> Schedule {
     let s = SystemSpec { n_gpu: 0, ..sys.clone() };
     DpScheduler::new(&s, est).schedule(wl, obj)
 }
@@ -170,9 +180,7 @@ mod tests {
         let (s, g) = setup();
         let oracle = OracleModels { gt: &g };
         let wl = gnn::gin_workload(&Dataset::ogbn_products(), 2, 128, 2);
-        let dype = DpScheduler::new(&s, &oracle)
-            .schedule(&wl, Objective::Performance)
-            .throughput();
+        let dype = DpScheduler::new(&s, &oracle).schedule(&wl, Objective::Performance).throughput();
         let fr = fleetrec(&s, &oracle, &wl, Objective::Performance).unwrap().throughput();
         assert!(dype >= fr * (1.0 - 1e-9), "constrained space cannot win: {dype} vs {fr}");
     }

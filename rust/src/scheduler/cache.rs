@@ -444,9 +444,12 @@ mod tests {
         let fp = system_fingerprint(&s);
         let mut cache = ScheduleCache::new(8);
 
-        let base = gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 2_000_000, 200, 0.2), 2, 128);
-        let drift = gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 2_040_000, 200, 0.2), 2, 128);
-        let rush = gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 150_000_000, 200, 0.2), 2, 128);
+        let base =
+            gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 2_000_000, 200, 0.2), 2, 128);
+        let drift =
+            gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 2_040_000, 200, 0.2), 2, 128);
+        let rush =
+            gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 150_000_000, 200, 0.2), 2, 128);
 
         let k_base = CacheKey::new(fp, &base, Objective::Performance);
         assert!(cache.lookup(&k_base).is_none());

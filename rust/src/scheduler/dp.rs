@@ -174,10 +174,7 @@ impl DpTables {
             if i == 0 {
                 break;
             }
-            let e = self
-                .entry(fs.table, i, f, g)
-                .as_ref()
-                .expect("broken parent chain");
+            let e = self.entry(fs.table, i, f, g).as_ref().expect("broken parent chain");
             let mut st = e.last.clone();
             st.comm_out_time = pending_comm_out;
             stages.push(st);
@@ -458,10 +455,7 @@ impl<'a, E: PerfEstimator> DpScheduler<'a, E> {
             };
             // Lines 22–23: new pipeline bottleneck.
             let prev_last_total = parent.last.total_time() + t_comm_src;
-            let bottleneck = parent
-                .bottleneck
-                .max(prev_last_total)
-                .max(new_stage.total_time());
+            let bottleneck = parent.bottleneck.max(prev_last_total).max(new_stage.total_time());
 
             // Energy account (f_eng, lines 29–30).
             let prev_xfer_energy = if first == 0 {

@@ -55,6 +55,27 @@ impl PowerTable {
             DeviceType::Fpga => self.fpga.static_power,
         }
     }
+
+    /// Worst-case peak draw of `dev` (W): static plus its hungriest
+    /// dynamic state.
+    pub fn peak_power(&self, dev: DeviceType) -> f64 {
+        match dev {
+            DeviceType::Gpu => self.gpu.static_power + self.gpu.dynamic_power,
+            DeviceType::Fpga => {
+                self.fpga.static_power
+                    + self.fpga.spmm_dynamic_power.max(self.fpga.attn_dynamic_power)
+            }
+        }
+    }
+
+    /// Worst-case draw of a device pool (W): every device executing its
+    /// hungriest kernel simultaneously. This is the `f_eng` figure an
+    /// [`crate::engine::EnergyBudget`] power cap is naturally expressed
+    /// against (e.g. "cap the pool at 40% of peak").
+    pub fn pool_power_cap(&self, n_fpga: usize, n_gpu: usize) -> f64 {
+        n_fpga as f64 * self.peak_power(DeviceType::Fpga)
+            + n_gpu as f64 * self.peak_power(DeviceType::Gpu)
+    }
 }
 
 /// Activity energy of one stage (everything except the static-power term):
@@ -68,10 +89,7 @@ pub fn stage_activity_energy(
     comm_in: f64,
     comm_out: f64,
 ) -> f64 {
-    let exec: f64 = kernel_times
-        .iter()
-        .map(|(kind, t)| power.dynamic_power(kind, dev) * t)
-        .sum();
+    let exec: f64 = kernel_times.iter().map(|(kind, t)| power.dynamic_power(kind, dev) * t).sum();
     n as f64 * (exec + power.transfer_power(dev) * (comm_in + comm_out))
 }
 
@@ -108,5 +126,15 @@ mod tests {
         let p = table();
         let e = stage_activity_energy(&p, DeviceType::Fpga, 1, &[], 1e-3, 2e-3);
         assert!((e - 30.0 * 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_power_cap_sums_peak_draws() {
+        let p = table();
+        // GPU: 300 dyn + 45 static; FPGA: max(55, 50.2) dyn + 19.5 static.
+        assert!((p.peak_power(DeviceType::Gpu) - 345.0).abs() < 1e-12);
+        assert!((p.peak_power(DeviceType::Fpga) - 74.5).abs() < 1e-12);
+        assert!((p.pool_power_cap(3, 2) - (3.0 * 74.5 + 2.0 * 345.0)).abs() < 1e-12);
+        assert_eq!(p.pool_power_cap(0, 0), 0.0);
     }
 }

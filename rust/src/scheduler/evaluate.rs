@@ -95,10 +95,7 @@ mod tests {
         let dp_out = sched.schedule(&wl, Objective::Performance);
         let re = evaluate_plan(&wl, &dp_out.plan(), &oracle, &sched.comm, &sched.power);
         assert!((re.period - dp_out.period).abs() < 1e-9 * dp_out.period);
-        assert!(
-            (re.energy_per_inf - dp_out.energy_per_inf).abs()
-                < 1e-6 * dp_out.energy_per_inf
-        );
+        assert!((re.energy_per_inf - dp_out.energy_per_inf).abs() < 1e-6 * dp_out.energy_per_inf);
         assert_eq!(re.mnemonic(), dp_out.mnemonic());
     }
 

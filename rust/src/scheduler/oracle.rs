@@ -87,10 +87,7 @@ impl<'a, E: PerfEstimator> ExhaustiveScheduler<'a, E> {
                     .unwrap()
             }),
             Objective::Balanced { .. } | Objective::QoS { .. } => {
-                let max_thp = schedules
-                    .iter()
-                    .map(Schedule::throughput)
-                    .fold(0.0, f64::max);
+                let max_thp = schedules.iter().map(Schedule::throughput).fold(0.0, f64::max);
                 let floor = match objective {
                     Objective::Balanced { min_throughput_frac } => max_thp * min_throughput_frac,
                     Objective::QoS { min_throughput } => min_throughput.min(max_thp),
@@ -142,8 +139,7 @@ mod tests {
         let oracle = OracleModels { gt: &g };
         for ds in Dataset::table1() {
             for wl in [gnn::gcn_workload(&ds, 2, 128), gnn::gin_workload(&ds, 2, 128, 2)] {
-                let dp = DpScheduler::new(&s, &oracle)
-                    .schedule(&wl, Objective::Performance);
+                let dp = DpScheduler::new(&s, &oracle).schedule(&wl, Objective::Performance);
                 let ex = ExhaustiveScheduler::new(&s, &oracle)
                     .best(&wl, Objective::Performance)
                     .unwrap();
@@ -167,9 +163,7 @@ mod tests {
         for ds in [Dataset::ogbn_arxiv(), Dataset::synthetic2(), Dataset::synthetic4()] {
             let wl = gnn::gcn_workload(&ds, 2, 128);
             let dp = DpScheduler::new(&s, &oracle).schedule(&wl, Objective::Energy);
-            let ex = ExhaustiveScheduler::new(&s, &oracle)
-                .best(&wl, Objective::Energy)
-                .unwrap();
+            let ex = ExhaustiveScheduler::new(&s, &oracle).best(&wl, Objective::Energy).unwrap();
             assert!(
                 dp.energy_per_inf <= ex.energy_per_inf * 1.02,
                 "{}: DP {} vs exhaustive {}",

@@ -140,13 +140,9 @@ impl Schedule {
                 return Err(format!("non-positive exec time {:?}", s));
             }
         }
-        let bottleneck =
-            self.stages.iter().map(Stage::total_time).fold(0.0f64, f64::max);
+        let bottleneck = self.stages.iter().map(Stage::total_time).fold(0.0f64, f64::max);
         if (bottleneck - self.period).abs() > 1e-9 * bottleneck.max(1e-12) {
-            return Err(format!(
-                "period {} != bottleneck stage {}",
-                self.period, bottleneck
-            ));
+            return Err(format!("period {} != bottleneck stage {}", self.period, bottleneck));
         }
         Ok(())
     }

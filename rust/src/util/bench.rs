@@ -73,10 +73,30 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
 
 /// Standard bench-output header (align with `BenchStats::report`).
 pub fn header() -> String {
-    format!(
-        "{:<42} {:>10} {:>10} {:>10}   {:>8}",
-        "benchmark", "median", "min", "mean", "stddev"
-    )
+    format!("{:<42} {:>10} {:>10} {:>10}   {:>8}", "benchmark", "median", "min", "mean", "stddev")
+}
+
+/// Append `(name, median seconds)` entries to the perf-trajectory file
+/// named by the `DYPE_BENCH_JSON` env var, one JSON object per line
+/// (`{"bench": ..., "median_ns": ...}`). No-op when the variable is
+/// unset, so bench binaries stay silent outside the CI `bench-smoke`
+/// job, which concatenates the lines from every bench it runs into the
+/// `BENCH_serving.json` artifact. Names are code-supplied identifiers
+/// (no escaping is performed).
+pub fn record_json(entries: &[(String, f64)]) {
+    let Ok(path) = std::env::var("DYPE_BENCH_JSON") else {
+        return;
+    };
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .unwrap_or_else(|e| panic!("DYPE_BENCH_JSON={path}: {e}"));
+    for (name, secs) in entries {
+        writeln!(f, "{{\"bench\":\"{}\",\"median_ns\":{:.1}}}", name, secs * 1e9)
+            .unwrap_or_else(|e| panic!("DYPE_BENCH_JSON={path}: {e}"));
+    }
 }
 
 #[cfg(test)]

@@ -12,13 +12,30 @@
 //! * **Online re-partitioning** — the demand-skewed two-stream scenario
 //!   must migrate at least one device lease, while the static default
 //!   migrates none.
+//!
+//! Plus the multi-objective acceptance suite (ISSUE 3):
+//!
+//! * **Budget opt-in** — a generous joule budget with uniform SLOs must
+//!   reproduce the unbudgeted run's completions exactly.
+//! * **Deferral ordering** — a zero-budget window defers everything
+//!   except the highest-priority stream.
+//! * **`f_eng` conservation** — joules charged across budget windows
+//!   equal the summed per-batch model energy (no double-charging across
+//!   deferrals).
+//! * **SLO feedback** — a p99-violating stream gains lease weight over
+//!   an identical-demand peer.
+//! * **Re-lease on completion** — a finished stream's devices return to
+//!   the pool, down to a sole survivor holding everything.
 
 use dype::config::{Interconnect, Objective, SystemSpec};
 use dype::coordinator::server::{generate_trace, serve_trace, RESCHEDULE_DRAIN_COST};
-use dype::coordinator::{Completion, Coordinator, Request};
+use dype::coordinator::{Completion, Coordinator, Request, StreamSpec};
 use dype::devices::GroundTruth;
-use dype::engine::{EngineConfig, RepartitionPolicy, ServingEngine};
-use dype::experiments::{run_multi_stream, run_multi_stream_with, skewed_pair_scenario};
+use dype::engine::{EnergyBudget, EngineConfig, RepartitionPolicy, ServingEngine, StreamSlo};
+use dype::experiments::{
+    energy_slo_config, energy_slo_scenario, multi_stream_scenario, run_multi_stream,
+    run_multi_stream_with, skewed_pair_scenario,
+};
 use dype::perfmodel::{OracleModels, PerfEstimator};
 use dype::scheduler::{evaluate_plan, PowerTable, Schedule, ScheduleCache};
 use dype::util::Rng;
@@ -77,8 +94,7 @@ fn legacy_serve<E: PerfEstimator>(
             continue;
         };
 
-        let sig: String =
-            req.workload.kernels.iter().map(|k| format!("{:?};", k.kind)).collect();
+        let sig: String = req.workload.kernels.iter().map(|k| format!("{:?};", k.kind)).collect();
         let events_before = coordinator.reschedule_events().len();
         let sched = coordinator.process_batch(&req.workload).clone();
         let rescheduled = coordinator.reschedule_events().len() > events_before;
@@ -147,12 +163,7 @@ fn assert_equivalent(seed: u64, cached: bool) {
         assert_eq!(a.id, b.id, "service order diverged ({ctx})");
         assert_eq!(a.arrival, b.arrival, "{ctx}");
         assert!((a.start - b.start).abs() < 1e-9, "start {} vs {} ({ctx})", a.start, b.start);
-        assert!(
-            (a.finish - b.finish).abs() < 1e-9,
-            "finish {} vs {} ({ctx})",
-            a.finish,
-            b.finish
-        );
+        assert!((a.finish - b.finish).abs() < 1e-9, "finish {} vs {} ({ctx})", a.finish, b.finish);
     }
     assert_eq!(report.reschedules, legacy.reschedules, "{ctx}");
     assert!(
@@ -193,11 +204,7 @@ fn oversubscribed_pool_serves_with_nonzero_fairness() {
     let streams: Vec<dype::coordinator::StreamSpec> = (0..8u64)
         .map(|i| {
             let trace = generate_trace(&[(gcn(2_000_000), 5)], 8.0, 200 + i);
-            dype::coordinator::StreamSpec::new(
-                format!("tenant-{i}"),
-                Objective::Performance,
-                trace,
-            )
+            dype::coordinator::StreamSpec::new(format!("tenant-{i}"), Objective::Performance, trace)
         })
         .collect();
     let mut engine = ServingEngine::new(s, &est);
@@ -232,4 +239,215 @@ fn skewed_demand_migrates_leases_static_does_not() {
     let statik = run_multi_stream(&s, &streams);
     assert_eq!(statik.engine.lease_migrations, 0, "static default never migrates");
     assert_eq!(statik.total_completed, 48);
+}
+
+// ---- energy budget + SLO acceptance (ISSUE 3) -------------------------
+
+#[test]
+fn generous_budget_and_uniform_slos_change_nothing() {
+    // The budget/SLO path is strictly opt-in: with joules to spare and
+    // default SLOs, every serving number of the PR-1/PR-2 scenario must
+    // be bit-identical to the unbudgeted engine (the extra events on the
+    // heap are budget ticks only — they never touch a lane).
+    let s = sys();
+    let streams = multi_stream_scenario(2, 4, 9);
+    let base = run_multi_stream(&s, &streams);
+    let cfg = EngineConfig::budgeted(EnergyBudget::new(1e12, 0.5));
+    let budgeted = run_multi_stream_with(&s, &streams, cfg);
+
+    assert_eq!(budgeted.total_completed, base.total_completed);
+    assert_eq!(budgeted.makespan, base.makespan);
+    assert_eq!(budgeted.fairness, base.fairness);
+    for (b, a) in budgeted.streams.iter().zip(&base.streams) {
+        assert_eq!(b.partition, a.partition);
+        assert_eq!(b.report.completions.len(), a.report.completions.len());
+        for (cb, ca) in b.report.completions.iter().zip(&a.report.completions) {
+            assert_eq!(cb.id, ca.id);
+            assert_eq!(cb.start, ca.start, "{}: starts diverged", b.name);
+            assert_eq!(cb.finish, ca.finish, "{}: finishes diverged", b.name);
+        }
+        assert_eq!(b.report.reschedules, a.report.reschedules);
+        assert_eq!(b.report.energy, a.report.energy);
+        assert_eq!(b.report.deferrals, 0, "a generous budget never defers");
+        assert_eq!(b.report.slo_attainment, 1.0, "no target means vacuous attainment");
+    }
+    assert_eq!(budgeted.engine.deferrals, 0);
+    assert!(budgeted.engine.budget_windows >= 1, "the ledger must have opened a window");
+    let charged = budgeted.engine.joules_charged();
+    let tol = budgeted.total_energy.abs() * 1e-9 + 1e-12;
+    assert!(
+        (charged - budgeted.total_energy).abs() < tol,
+        "charged {charged} vs modeled {}",
+        budgeted.total_energy
+    );
+    assert!(budgeted.throughput_per_joule > 0.0);
+}
+
+#[test]
+fn zero_budget_window_defers_everything_below_top_priority() {
+    // With zero joules per window nothing is affordable, so only the
+    // highest-priority unfinished stream may dispatch: the low-priority
+    // stream must not start a single batch until the high-priority
+    // stream has dispatched its entire trace.
+    let s = sys();
+    let lo_trace = generate_trace(&[(gcn(2_000_000), 10)], 20.0, 61);
+    let hi_trace = generate_trace(&[(gcn(2_000_000), 10)], 20.0, 62);
+    let streams = vec![
+        StreamSpec::new("lo", Objective::Performance, lo_trace)
+            .with_slo(StreamSlo::best_effort(1.0)),
+        StreamSpec::new("hi", Objective::Performance, hi_trace)
+            .with_slo(StreamSlo::best_effort(2.0)),
+    ];
+    let cfg = EngineConfig::budgeted(EnergyBudget::new(0.0, 0.05));
+    let r = run_multi_stream_with(&s, &streams, cfg);
+
+    assert_eq!(r.total_completed, 20, "deferral must not starve anyone forever");
+    let lo = &r.streams[0].report;
+    let hi = &r.streams[1].report;
+    assert_eq!(hi.deferrals, 0, "the top class is never deferred");
+    assert!(lo.deferrals >= 1, "zero budget must defer the low class");
+    assert!(r.engine.deferrals >= 1);
+    let hi_last_start = hi.completions.iter().map(|c| c.start).fold(f64::NEG_INFINITY, f64::max);
+    let lo_first_start = lo.completions.iter().map(|c| c.start).fold(f64::INFINITY, f64::min);
+    assert!(
+        lo_first_start >= hi_last_start,
+        "low-priority work started at {lo_first_start} before the high class \
+         finished dispatching at {hi_last_start}"
+    );
+}
+
+#[test]
+fn budget_charges_every_batch_exactly_once_across_deferrals() {
+    // f_eng conservation: run the canonical energy/SLO scenario under a
+    // budget tight enough to defer (30% of the unbudgeted run's average
+    // draw) and check the ledger — the joules charged across windows
+    // must equal the summed per-batch model energy, i.e. deferrals delay
+    // batches but never re-charge them; and only below-priority streams
+    // are ever deferred.
+    let s = sys();
+    let streams = energy_slo_scenario(4, 33);
+    let probe = run_multi_stream(&s, &streams);
+    let avg_watts = probe.total_energy / probe.makespan;
+    let r = run_multi_stream_with(&s, &streams, energy_slo_config(0.3 * avg_watts));
+
+    let offered: usize = streams.iter().map(|t| t.trace.len()).sum();
+    assert_eq!(r.total_completed, offered, "every deferred batch still completes");
+    assert!(r.engine.deferrals >= 1, "a 30% power cap must defer something");
+    assert_eq!(r.streams[0].report.deferrals, 0, "only below-priority streams may be deferred");
+    assert!(r.engine.budget_windows >= 2, "the run must span several windows");
+    let charged = r.engine.joules_charged();
+    let modeled: f64 = r.streams.iter().map(|sr| sr.report.energy).sum();
+    let tol = modeled.abs() * 1e-9 + 1e-12;
+    assert!(
+        (charged - modeled).abs() < tol,
+        "ledger charged {charged} J but the batches modeled {modeled} J"
+    );
+    assert_eq!(r.engine.window_joules.len(), r.engine.budget_windows);
+    assert!(r.engine.window_joules.iter().all(|j| *j >= 0.0));
+}
+
+#[test]
+fn slo_pressure_shifts_lease_weight_toward_the_violating_stream() {
+    // Two streams with identical demand: the initial lease split is
+    // even, and pure demand feedback keeps it even. Give stream `a` an
+    // unattainable p99 target and the SLO controller must bid devices
+    // toward it at re-lease time — the control run (same engine, no
+    // target) must not migrate at all, and `a` must serve faster than
+    // its own control-run self.
+    let s = sys();
+    let phases = [(gcn(2_000_000), 40)];
+    let a_trace = generate_trace(&phases, 20.0, 71);
+    let b_trace = generate_trace(&phases, 20.0, 72);
+    let with_target = vec![
+        StreamSpec::new("a", Objective::Performance, a_trace.clone())
+            .with_slo(StreamSlo::target(1e-3, 1.0)),
+        StreamSpec::new("b", Objective::Performance, b_trace.clone()),
+    ];
+    let control = vec![
+        StreamSpec::new("a", Objective::Performance, a_trace),
+        StreamSpec::new("b", Objective::Performance, b_trace),
+    ];
+    let cfg = EngineConfig {
+        repartition: Some(RepartitionPolicy::reactive(1.0)),
+        ..EngineConfig::default()
+    };
+
+    let slo_run = run_multi_stream_with(&s, &with_target, cfg.clone());
+    let control_run = run_multi_stream_with(&s, &control, cfg);
+
+    assert_eq!(
+        control_run.engine.lease_migrations,
+        0,
+        "balanced demand without SLO pressure must hold the even split"
+    );
+    assert!(
+        slo_run.engine.lease_migrations >= 1,
+        "the violated target must pull at least one lease: {}",
+        slo_run.engine
+    );
+    let (a_slo, a_ctl) = (&slo_run.streams[0].report, &control_run.streams[0].report);
+    assert!(
+        a_slo.mean_latency < a_ctl.mean_latency,
+        "extra devices must speed the violating stream: {} vs {}",
+        a_slo.mean_latency,
+        a_ctl.mean_latency
+    );
+    assert!(
+        (0.0..=1.0).contains(&a_slo.slo_attainment),
+        "attainment is a fraction: {}",
+        a_slo.slo_attainment
+    );
+    assert_eq!(slo_run.total_completed, 80);
+}
+
+#[test]
+fn finished_streams_return_their_devices_to_the_survivors() {
+    // Three staggered streams: `short` and `mid` drain quickly, `long`
+    // keeps serving heavy batches long after. Each completion must hand
+    // devices back — ending with the sole survivor holding the entire
+    // pool (the PR-2 engine stopped re-validating leases below two
+    // active streams and stranded the survivor on its slice).
+    let s = sys();
+    let streams = vec![
+        StreamSpec::new(
+            "short",
+            Objective::Performance,
+            generate_trace(&[(gcn(2_000_000), 6)], 15.0, 81),
+        ),
+        StreamSpec::new(
+            "mid",
+            Objective::Performance,
+            generate_trace(&[(gcn(2_000_000), 12)], 10.0, 82),
+        ),
+        StreamSpec::new(
+            "long",
+            Objective::Performance,
+            generate_trace(&[(gcn(150_000_000), 20)], 8.0, 83),
+        ),
+    ];
+    let cfg = EngineConfig {
+        repartition: Some(RepartitionPolicy {
+            sample_interval: 0.1,
+            lease_term: 0.2,
+            ewma_alpha: 0.5,
+            hysteresis: 0.02,
+        }),
+        ..EngineConfig::default()
+    };
+    let r = run_multi_stream_with(&s, &streams, cfg);
+
+    assert_eq!(r.total_completed, 38, "re-leasing must not lose requests");
+    assert!(
+        r.engine.lease_migrations >= 1,
+        "completions must trigger device hand-back: {}",
+        r.engine
+    );
+    let survivor = &r.streams[2];
+    assert_eq!(survivor.name, "long");
+    assert_eq!(survivor.partition, "3F2G", "the sole survivor must end up holding the whole pool");
+    assert!(
+        r.engine.final_pool_share[2] > 0.99,
+        "survivor pool share {}",
+        r.engine.final_pool_share[2]
+    );
 }

@@ -64,8 +64,7 @@ fn adversarially_biased_estimator_yields_valid_but_lopsided_schedules() {
 #[test]
 fn extreme_degree_skew_never_breaks_scheduling() {
     let s = sys();
-    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model())
-        .with_degree_skew(50.0);
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model()).with_degree_skew(50.0);
     let est = dype::perfmodel::OracleModels { gt: &gt };
     let wl = gnn::gcn_workload(&Dataset::ogbn_products(), 2, 128);
     let sched = DpScheduler::new(&s, &est).schedule(&wl, Objective::Performance);

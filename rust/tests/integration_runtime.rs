@@ -23,7 +23,10 @@ fn artifact_dir() -> Option<std::path::PathBuf> {
 fn manifest_covers_all_pipeline_kernels() {
     let Some(dir) = artifact_dir() else { return };
     let rt = Runtime::new(&dir).unwrap();
-    for name in ["spmm", "gemm", "gin_mlp", "window_attn", "gcn_layer", "gin_layer", "transformer_layer"] {
+    let kernels = [
+        "spmm", "gemm", "gin_mlp", "window_attn", "gcn_layer", "gin_layer", "transformer_layer",
+    ];
+    for name in kernels {
         assert!(rt.manifest().get(name).is_ok(), "artifact {name} missing");
     }
     assert_eq!(rt.manifest().graph_constant("V").unwrap(), 1024);
@@ -170,12 +173,8 @@ fn two_stage_pipeline_composes_kernels() {
 
     // Monolithic re-execution for comparison.
     let mut rt = Runtime::new(&dir).unwrap();
-    let y = rt
-        .execute("spmm", &[blocks, indices, HostTensor::f32(x, &[1024, 128])])
-        .unwrap();
-    let want = rt
-        .execute("gemm", &[y, HostTensor::f32(theta, &[128, 128])])
-        .unwrap();
+    let y = rt.execute("spmm", &[blocks, indices, HostTensor::f32(x, &[1024, 128])]).unwrap();
+    let want = rt.execute("gemm", &[y, HostTensor::f32(theta, &[128, 128])]).unwrap();
     let (got, want) = (report.outputs[0].as_f32().unwrap(), want.as_f32().unwrap());
     for (a, b) in got.iter().zip(want) {
         assert!((a - b).abs() < 1e-4);

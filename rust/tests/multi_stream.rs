@@ -75,8 +75,7 @@ fn persisted_cache_warm_starts_a_restarted_server() {
 
     // First server lifetime: cold start pays the DP storm, then persists.
     let cold_cache = ScheduleCache::shared(64);
-    let mut server =
-        MultiStreamServer::with_cache(s.clone(), &oracle, cold_cache.clone());
+    let mut server = MultiStreamServer::with_cache(s.clone(), &oracle, cold_cache.clone());
     let cold = server.serve(&streams);
     assert!(cold.cache.misses >= 1, "cold start must run the DP at least once");
     cold_cache.lock().unwrap().save_to(&path).unwrap();
@@ -139,8 +138,7 @@ fn cached_coordinator_applies_the_same_hysteresis() {
     let oracle = OracleModels { gt: &gt };
     let cache = ScheduleCache::shared(16);
     let mut plain = Coordinator::new(s.clone(), &oracle, Objective::Performance);
-    let mut cached =
-        Coordinator::new(s, &oracle, Objective::Performance).with_cache(cache);
+    let mut cached = Coordinator::new(s, &oracle, Objective::Performance).with_cache(cache);
     for _ in 0..4 {
         for edges in [2_000_000u64, 150_000_000] {
             let wl = traffic(edges);
@@ -205,8 +203,7 @@ fn cache_invalidated_when_system_spec_changes() {
         let g = GroundTruth::new(other.gpu.clone(), other.fpga.clone(), other.comm_model());
         let o = OracleModels { gt: &g };
         let before = cache.lock().unwrap().stats().misses;
-        let mut c2 =
-            Coordinator::new(other, &o, Objective::Performance).with_cache(cache.clone());
+        let mut c2 = Coordinator::new(other, &o, Objective::Performance).with_cache(cache.clone());
         c2.process_batch(&wl);
         assert_eq!(cache.lock().unwrap().stats().misses, before + 1);
     }

@@ -118,9 +118,7 @@ fn prop_dp_near_exhaustive_optimum() {
         let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
         let oracle = OracleModels { gt: &gt };
         let dp = DpScheduler::new(&sys, &oracle).schedule(&wl, Objective::Performance);
-        let ex = ExhaustiveScheduler::new(&sys, &oracle)
-            .best(&wl, Objective::Performance)
-            .unwrap();
+        let ex = ExhaustiveScheduler::new(&sys, &oracle).best(&wl, Objective::Performance).unwrap();
         total += 1;
         assert!(
             dp.period <= ex.period * 1.05,
