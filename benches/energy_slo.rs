@@ -3,7 +3,7 @@
 //!
 //! Two points on the serving throughput-vs-joules frontier:
 //!
-//!   * `unbudgeted` — the latency-only engine (static leases, no
+//!   * `unbudgeted` — the latency-only engine (adaptive default, no
 //!     metering): fastest, hungriest;
 //!   * `budgeted`   — the same streams under a power cap at 30% of the
 //!     unbudgeted run's average draw, with SLO-weighted adaptive leases:

@@ -1,24 +1,28 @@
 //! Serving-engine bench (DESIGN.md §Serving): per-event overhead of the
-//! event-heap loop, and what online lease re-partitioning buys over
-//! static leases on a demand-skewed two-stream scenario.
+//! event-heap loop, and what the adaptive default buys over frozen
+//! leases on a demand-skewed two-stream scenario — in both migration
+//! modes (drain vs mid-slot preemption).
 //!
 //! The scenario (`experiments::skewed_pair_scenario`) offers two streams
 //! with near-equal *total* demand but phase-reversed load, so the
 //! initial demand-proportional leases are wrong in both halves: static
 //! leases leave the currently-heavy stream under-provisioned, while the
-//! adaptive engine notices the observed-FLOP skew and migrates devices.
+//! adaptive engine notices the observed-FLOP skew, migrates devices, and
+//! prewarms the schedule cache for every prospective partition (so the
+//! migrations do not re-pay the DP for known regimes).
 //!
 //! Reported per mode: simulated makespan, aggregate throughput, Jain
-//! fairness, lease migrations, events processed, and host-side wall time
-//! per event (which includes coordinator DP/cache work on the dispatch
-//! path — the full per-event serving cost, not just heap bookkeeping).
+//! fairness, lease migrations (and mid-slot preemptions), prewarm hits,
+//! events processed, and host-side wall time per event (which includes
+//! coordinator DP/cache work on the dispatch path — the full per-event
+//! serving cost, not just heap bookkeeping).
 
 use std::time::Instant;
 
 use dype::config::{Interconnect, SystemSpec};
 use dype::coordinator::MultiStreamReport;
 use dype::engine::{EngineConfig, RepartitionPolicy};
-use dype::experiments::{run_multi_stream, run_multi_stream_with, skewed_pair_scenario};
+use dype::experiments::{run_multi_stream_static, run_multi_stream_with, skewed_pair_scenario};
 use dype::metrics::Table;
 use dype::util::bench::{fmt_time, record_json};
 
@@ -30,6 +34,8 @@ fn row(t: &mut Table, mode: &str, r: &MultiStreamReport, wall: f64) {
         format!("{:.1}", r.aggregate_throughput),
         format!("{:.3}", r.fairness),
         format!("{}", r.engine.lease_migrations),
+        format!("{}", r.engine.slot_preemptions),
+        format!("{}", r.engine.prewarm_hits),
         format!("{}", r.engine.events_processed),
         fmt_time(wall / events as f64),
     ]);
@@ -45,16 +51,24 @@ fn main() {
     );
 
     let t0 = Instant::now();
-    let statik = run_multi_stream(&sys, &streams);
+    let statik = run_multi_stream_static(&sys, &streams);
     let static_wall = t0.elapsed().as_secs_f64();
 
-    let cfg = EngineConfig {
+    let drain_cfg = EngineConfig {
         repartition: Some(RepartitionPolicy::reactive(1.0)),
         ..EngineConfig::default()
     };
     let t1 = Instant::now();
-    let adaptive = run_multi_stream_with(&sys, &streams, cfg);
+    let adaptive = run_multi_stream_with(&sys, &streams, drain_cfg);
     let adaptive_wall = t1.elapsed().as_secs_f64();
+
+    let preempt_cfg = EngineConfig {
+        repartition: Some(RepartitionPolicy::preemptive(1.0)),
+        ..EngineConfig::default()
+    };
+    let t2 = Instant::now();
+    let preempt = run_multi_stream_with(&sys, &streams, preempt_cfg);
+    let preempt_wall = t2.elapsed().as_secs_f64();
 
     let mut t = Table::new(&[
         "mode",
@@ -62,33 +76,45 @@ fn main() {
         "thp(inf/s)",
         "fairness",
         "migrations",
+        "mid-slot",
+        "prewarm",
         "events",
         "wall/event",
     ]);
     row(&mut t, "static-leases", &statik, static_wall);
-    row(&mut t, "online-repartition", &adaptive, adaptive_wall);
+    row(&mut t, "adaptive-drain", &adaptive, adaptive_wall);
+    row(&mut t, "adaptive-preempt", &preempt, preempt_wall);
     print!("{}", t.render());
 
     println!(
-        "\nre-partitioning: makespan {:.2}s -> {:.2}s ({:+.1}%), \
-         aggregate throughput {:.1} -> {:.1} inf/s, engine: {}",
+        "\nre-partitioning: makespan {:.2}s -> {:.2}s drain ({:+.1}%) / {:.2}s preempt \
+         ({:+.1}%); preempt refunded {:.1} ms of lease time and {:.2} J, engine: {}",
         statik.makespan,
         adaptive.makespan,
         (adaptive.makespan / statik.makespan - 1.0) * 100.0,
-        statik.aggregate_throughput,
-        adaptive.aggregate_throughput,
-        adaptive.engine,
+        preempt.makespan,
+        (preempt.makespan / statik.makespan - 1.0) * 100.0,
+        preempt.engine.slot_time_refunded * 1e3,
+        preempt.engine.joules_refunded,
+        preempt.engine,
     );
 
     assert_eq!(statik.total_completed, offered, "static run lost requests");
     assert_eq!(adaptive.total_completed, offered, "adaptive run lost requests");
+    assert_eq!(preempt.total_completed, offered, "preemptive run lost requests");
+    assert_eq!(statik.engine.lease_migrations, 0, "frozen leases must not move");
     assert!(
         adaptive.engine.lease_migrations >= 1,
         "the skew must trigger at least one lease migration"
     );
+    assert!(
+        preempt.engine.lease_migrations >= 1,
+        "the skew must trigger at least one preemptive migration"
+    );
 
     // CI perf trajectory (see util::bench::record_json): host wall time
-    // per processed event, static vs adaptive.
+    // per processed event per mode. Diffed against the tracked
+    // BENCH_serving.json baseline by the bench-smoke job.
     record_json(&[
         (
             "engine_repartition/static_per_event".to_string(),
@@ -97,6 +123,10 @@ fn main() {
         (
             "engine_repartition/adaptive_per_event".to_string(),
             adaptive_wall / adaptive.engine.events_processed.max(1) as f64,
+        ),
+        (
+            "engine_repartition/preempt_per_event".to_string(),
+            preempt_wall / preempt.engine.events_processed.max(1) as f64,
         ),
     ]);
 }

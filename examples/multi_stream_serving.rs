@@ -7,17 +7,20 @@
 //! coordinator reschedules on drift behind its hysteresis threshold, and
 //! all coordinators memoize into one schedule cache, so a reschedule on
 //! previously-seen drift is a cache hit (re-timed plan) instead of a full
-//! Algorithm-1 run. With `--cache <path>` the cache is loaded before the
-//! run and saved after it, so a *restarted* server skips the cold-start
-//! DP storm entirely; `--adaptive` lets the engine migrate leases when
-//! observed demand drifts from the offered estimate; `--energy-slo`
+//! Algorithm-1 run. Serving is **adaptive by default**: leases migrate
+//! when observed demand drifts from the offered estimate, and every
+//! migration prewarms the cache for the prospective partition so known
+//! regimes stay hits; `--static` freezes the initial leases (the
+//! historical default, the A/B baseline). With `--cache <path>` the
+//! cache is loaded before the run and saved after it, so a *restarted*
+//! server skips the cold-start DP storm entirely; `--energy-slo`
 //! swaps in the three-class energy/SLO scenario (DESIGN.md §Energy &
 //! SLOs) under a joule budget at 30% of the unbudgeted run's average
 //! draw, showing budget exhaustion defer below-priority streams while
 //! the p99 feedback controller re-weights the leases.
 //!
 //! Run: `cargo run --release --example multi_stream_serving -- \
-//!       [cycles] [--cache schedules.json] [--adaptive] [--energy-slo]`
+//!       [cycles] [--cache schedules.json] [--static] [--energy-slo]`
 
 use std::sync::{Arc, Mutex};
 
@@ -35,13 +38,16 @@ use dype::scheduler::ScheduleCache;
 fn main() {
     let mut cycles = 3usize;
     let mut cache_path: Option<String> = None;
-    let mut adaptive = false;
+    let mut statik = false;
     let mut energy_slo = false;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
             "--cache" => cache_path = Some(args.next().expect("--cache needs a path")),
-            "--adaptive" => adaptive = true,
+            "--static" => statik = true,
+            // Adaptive serving is the default now; the old opt-in flag is
+            // accepted (and redundant) so existing invocations keep working.
+            "--adaptive" => statik = false,
             "--energy-slo" => energy_slo = true,
             other => cycles = other.parse().expect("cycles must be a number"),
         }
@@ -111,10 +117,10 @@ fn main() {
             0.3 * avg_watts
         );
         energy_slo_config(0.3 * avg_watts)
-    } else if adaptive {
-        EngineConfig::adaptive()
+    } else if statik {
+        EngineConfig::static_leases()
     } else {
-        EngineConfig::default()
+        EngineConfig::default() // adaptive with prewarming
     };
     let mut server =
         MultiStreamServer::with_cache(sys, &est, cache.clone()).with_engine_config(cfg);
@@ -175,9 +181,10 @@ fn main() {
 
     // The acceptance bars. Default scenario: recurring drift across ≥2
     // concurrent streams must be absorbed by the cache, not re-solved by
-    // the DP (adaptive mode re-scopes cache keys on every migration, so
-    // that bar applies to the static default). Energy/SLO scenario: the
-    // 30% power cap must defer below-priority work — and never the
+    // the DP — and since the adaptive-by-default flip that bar holds for
+    // migrating runs too, because every migration prewarms the
+    // prospective partition's keys. Energy/SLO scenario: the 30% power
+    // cap must defer below-priority work — and never the
     // highest-priority stream.
     if energy_slo {
         assert!(
@@ -189,7 +196,7 @@ fn main() {
             0,
             "the highest-priority stream is never deferred"
         );
-    } else if !adaptive {
+    } else {
         assert!(
             report.cache.hit_rate() > 0.5,
             "expected >50% schedule-cache hits, got {}",

@@ -30,7 +30,7 @@ use crate::config::{Objective, SystemSpec};
 use crate::perfmodel::PerfEstimator;
 use crate::scheduler::{
     cache::CacheKey, evaluate_plan, system_fingerprint, CacheStats, DpScheduler, PowerTable,
-    Schedule, SharedScheduleCache,
+    PrewarmReport, Schedule, SharedScheduleCache,
 };
 use crate::workload::Workload;
 
@@ -98,12 +98,29 @@ impl<'a, E: PerfEstimator> Coordinator<'a, E> {
     /// [`Coordinator::process_batch`] schedules afresh — *without*
     /// logging a reschedule event, because the migration drain is charged
     /// separately by the engine. Reschedule history, hysteresis setting,
-    /// and the attached cache are preserved; cache keys re-scope
-    /// automatically through the new system fingerprint.
-    pub fn retarget(&mut self, sys: SystemSpec) {
+    /// and the attached cache are preserved; cache keys re-scope through
+    /// the new system fingerprint, and every regime memoized under the
+    /// old fingerprint is **prewarmed** onto the new one
+    /// ([`crate::scheduler::ScheduleCache::prewarm`]) so the first
+    /// post-migration admission of a known regime re-times a carried-over
+    /// plan instead of re-running Algorithm 1. Returns the prewarm
+    /// outcome (zero without a cache, or for the cache-bypassing
+    /// `Balanced` objective).
+    pub fn retarget(&mut self, sys: SystemSpec) -> PrewarmReport {
+        let old_fp = self.sys_fp;
         self.sys_fp = system_fingerprint(&sys);
         self.sys = sys;
         self.current = None;
+        let cacheable = !matches!(self.objective, Objective::Balanced { .. });
+        match self.cache.as_ref().filter(|_| cacheable) {
+            Some(cache) => cache.lock().unwrap().prewarm(
+                old_fp,
+                self.sys_fp,
+                self.sys.n_fpga,
+                self.sys.n_gpu,
+            ),
+            None => PrewarmReport::default(),
+        }
     }
 
     /// Produce the best-known schedule for `wl`: a cache hit re-times the
@@ -305,6 +322,32 @@ mod tests {
             "fresh schedule must fit the new inventory"
         );
         assert!(c.reschedule_events().is_empty(), "migration is not a reschedule event");
+    }
+
+    #[test]
+    fn retarget_prewarms_known_regimes_onto_the_new_inventory() {
+        use crate::scheduler::ScheduleCache;
+        let (s, g) = setup();
+        let oracle = OracleModels { gt: &g };
+        let mut c = Coordinator::new(s.clone(), &oracle, Objective::Performance)
+            .with_cache(ScheduleCache::shared(16));
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        c.process_batch(&wl); // miss: DP + memoize under the old fingerprint
+        assert_eq!(c.cache_stats().unwrap().misses, 1);
+
+        // Growing the inventory guarantees the old plan re-fits.
+        let grown = SystemSpec { n_fpga: s.n_fpga + 1, n_gpu: s.n_gpu + 1, ..s };
+        let prewarm = c.retarget(grown);
+        assert_eq!(prewarm.hits, 1, "the known regime must carry over");
+        assert_eq!(prewarm.misses, 0);
+
+        // First post-migration admission of the known regime: a hit, not
+        // a cold DP re-run.
+        let misses_before = c.cache_stats().unwrap().misses;
+        c.process_batch(&wl);
+        let st = c.cache_stats().unwrap();
+        assert_eq!(st.misses, misses_before, "prewarmed regime must not go cold");
+        assert_eq!(st.prewarm_hits, 1);
     }
 
     #[test]

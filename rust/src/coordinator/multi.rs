@@ -21,9 +21,15 @@
 //!    [`crate::scheduler::ScheduleCache`] — keys embed each partition's
 //!    fingerprint, so streams never collide but recurring drift turns
 //!    reschedules into cache hits;
-//! 4. optionally **re-partitions online** ([`crate::engine::repartition`])
-//!    when observed demand drifts away from the leases in force — opt in
-//!    via [`MultiStreamServer::with_engine_config`];
+//! 4. **re-partitions online by default**
+//!    ([`crate::engine::repartition`]) when observed demand drifts away
+//!    from the leases in force; every migration *prewarms* the schedule
+//!    cache for the prospective partition
+//!    ([`crate::scheduler::ScheduleCache::prewarm`]), so a migrated
+//!    stream's known regimes stay hits — freeze the leases with
+//!    [`crate::engine::EngineConfig::static_leases`] via
+//!    [`MultiStreamServer::with_engine_config`] to reproduce the
+//!    historical static numbers;
 //! 5. optionally serves **multi-objective**: a per-window joule budget
 //!    ([`crate::engine::budget`]) defers below-priority admissions when
 //!    the `f_eng` account runs dry, and per-stream p99 targets
@@ -171,8 +177,9 @@ impl<'a, E: PerfEstimator> MultiStreamServer<'a, E> {
         MultiStreamServer { sys, est, cache, cfg: EngineConfig::default() }
     }
 
-    /// Override the engine configuration — e.g. [`EngineConfig::adaptive`]
-    /// to enable online lease re-partitioning.
+    /// Override the engine configuration — e.g.
+    /// [`EngineConfig::static_leases`] to freeze the initial leases
+    /// (serving runs adaptive with cache prewarming by default).
     pub fn with_engine_config(mut self, cfg: EngineConfig) -> Self {
         self.cfg = cfg;
         self
@@ -300,12 +307,20 @@ mod tests {
             assert!(sr.report.p99_latency.is_finite());
         }
         // Recurring drift (phase 3 revisits phase 1's bucket) + intra-phase
-        // repeats ⇒ the shared cache absorbs most reschedule decisions.
+        // repeats ⇒ the shared cache absorbs most reschedule decisions —
+        // under the *adaptive default*, because migrations prewarm the
+        // prospective partition's keys. Only a regime's first sighting
+        // (≤ 8 of them) or the fallout of an unfittable prewarm (at most
+        // two DP re-runs each across migration chains) may run the DP.
         assert!(r.cache.hit_rate() > 0.5, "hit rate {}", r.cache.hit_rate());
+        assert!(
+            r.cache.misses <= 8 + 2 * r.engine.prewarm_misses,
+            "misses {} vs {} prewarm misses",
+            r.cache.misses,
+            r.engine.prewarm_misses
+        );
         assert!(r.fairness > 0.5, "fairness {}", r.fairness);
         assert!(r.makespan > 0.0 && r.aggregate_throughput > 0.0);
-        // Static default: the engine ran, but no leases moved.
-        assert_eq!(r.engine.lease_migrations, 0);
         // Every request pops an arrival plus (except each stream's final
         // slot, still in the heap when the run drains) a completion.
         assert!(r.engine.events_processed >= 2 * 66 - 2, "events {}", r.engine.events_processed);

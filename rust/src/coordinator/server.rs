@@ -122,7 +122,9 @@ impl<'a, E: PerfEstimator> Server<'a, E> {
 /// [`super::MultiStreamServer`] (one lane per stream): since PR 2 this is
 /// the *single-stream special case* of the engine's event loop
 /// ([`crate::engine`]) — one lane holding an exclusive full-share lease
-/// on `sys`, so there is exactly one event loop in the codebase.
+/// on `sys` (a sole tenant has nothing to re-partition, so this path
+/// runs the static-lease config), and there is exactly one event loop in
+/// the codebase.
 ///
 /// Service model (unchanged from the legacy synchronous loop, and
 /// verified equivalent by the property tests in `rust/tests/engine.rs`):

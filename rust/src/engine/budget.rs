@@ -16,8 +16,17 @@
 //!   by at most its final admitted batch. The highest pending priority
 //!   class is exempt (work-conserving, see below) and keeps charging an
 //!   exhausted window, so the cap bounds everything below it, not the
-//!   top class itself. There is no debt carry-over; the next window
-//!   opens with a full refill.
+//!   top class itself. The open window's balance **carries over**: an
+//!   overdraft is deducted from the next window's refill, and unused
+//!   joules bank — capped at one extra window's worth — so the long-run
+//!   cap holds over any horizon, not just per window (the highest
+//!   pending class stays exempt, so a carried debt never livelocks).
+//! * A mid-slot preemption ([`super::repartition::MigrationMode`])
+//!   **refunds** the unexecuted fraction of a cancelled batch's joules to
+//!   the window that was charged for it, so
+//!   `Σ window_joules == Σ charged − Σ refunded` holds exactly and no
+//!   window's record can go negative (a refund never exceeds what its
+//!   batch charged that window).
 //! * Once the window is exhausted, a stream may only dispatch if no
 //!   *unfinished* stream has strictly higher
 //!   [`super::slo::StreamSlo::priority`] (QoS-style: the top class is
@@ -65,16 +74,19 @@ impl EnergyBudget {
 }
 
 /// Run-time account of one serve call: how many joules the open window
-/// has left and what every closed window was charged. Total charged
-/// energy equals the sum of per-batch model energies — each batch is
-/// charged exactly once, at its (possibly deferred) dispatch.
+/// has left and what every closed window was (net) charged. Each batch
+/// is charged exactly once, at its (possibly deferred) dispatch, and
+/// refunded at most once, against the window that charged it — so the
+/// per-window record sums to `Σ charged − Σ refunded` exactly.
 #[derive(Debug)]
 pub(crate) struct BudgetLedger {
     budget: EnergyBudget,
     remaining: f64,
     charged_in_window: f64,
-    /// Joules charged per closed window, in window order.
+    /// Net joules charged per closed window, in window order.
     window_joules: Vec<f64>,
+    /// Total joules handed back by mid-slot preemptions.
+    refunded: f64,
 }
 
 impl BudgetLedger {
@@ -92,7 +104,13 @@ impl BudgetLedger {
             budget.window
         );
         let remaining = budget.joules_per_window;
-        BudgetLedger { budget, remaining, charged_in_window: 0.0, window_joules: Vec::new() }
+        BudgetLedger {
+            budget,
+            remaining,
+            charged_in_window: 0.0,
+            window_joules: Vec::new(),
+            refunded: 0.0,
+        }
     }
 
     pub(crate) fn window(&self) -> f64 {
@@ -105,22 +123,56 @@ impl BudgetLedger {
         self.remaining <= 0.0
     }
 
-    /// Charge one batch's modeled energy to the open window.
-    pub(crate) fn charge(&mut self, joules: f64) {
+    /// Charge one batch's modeled energy to the open window. Returns the
+    /// open window's index — the handle a later [`BudgetLedger::refund`]
+    /// must target so refunds land on the window that was charged.
+    pub(crate) fn charge(&mut self, joules: f64) -> usize {
         debug_assert!(joules >= 0.0 && joules.is_finite(), "bad charge {joules}");
         self.remaining -= joules;
         self.charged_in_window += joules;
+        self.window_joules.len()
     }
 
-    /// Close the open window and refill the budget (no debt carry-over).
+    /// Hand back part of a batch's charge (a mid-slot preemption's
+    /// unexecuted fraction). `window` is the index [`BudgetLedger::charge`]
+    /// returned for that batch: refunding the still-open window also
+    /// restores its admission headroom; a closed window only has its
+    /// record corrected (its joules were already "spent" as cap headroom
+    /// and cannot be re-granted to a later window).
+    pub(crate) fn refund(&mut self, window: usize, joules: f64) {
+        debug_assert!(joules >= 0.0 && joules.is_finite(), "bad refund {joules}");
+        self.refunded += joules;
+        if window == self.window_joules.len() {
+            self.charged_in_window -= joules;
+            self.remaining += joules;
+        } else {
+            self.window_joules[window] -= joules;
+            debug_assert!(
+                self.window_joules[window] >= -1e-9,
+                "refund pushed window {window} negative: {}",
+                self.window_joules[window]
+            );
+        }
+    }
+
+    /// Total joules handed back by preemption refunds so far.
+    pub(crate) fn refunded(&self) -> f64 {
+        self.refunded
+    }
+
+    /// Close the open window and refill the budget, carrying the balance
+    /// over: an overdraft (negative remainder) is deducted from the
+    /// refill, unused joules bank up to one extra window's worth.
     pub(crate) fn roll_window(&mut self) {
         self.window_joules.push(self.charged_in_window);
         self.charged_in_window = 0.0;
-        self.remaining = self.budget.joules_per_window;
+        let carry = self.remaining.min(self.budget.joules_per_window);
+        self.remaining = self.budget.joules_per_window + carry;
     }
 
-    /// Close the trailing partial window and return the per-window
-    /// charge record; its sum is the run's total charged energy.
+    /// Close the trailing partial window and return the per-window net
+    /// charge record; its sum is the run's total charged minus refunded
+    /// energy.
     pub(crate) fn into_window_joules(mut self) -> Vec<f64> {
         self.window_joules.push(self.charged_in_window);
         self.window_joules
@@ -138,7 +190,7 @@ mod tests {
         l.charge(8.0); // overdraw by the final admitted batch is legal
         assert!(l.exhausted());
         l.roll_window();
-        assert!(!l.exhausted(), "refill restores the full budget");
+        assert!(!l.exhausted(), "the refill re-opens the account");
         l.charge(3.0);
         let windows = l.into_window_joules();
         assert_eq!(windows, vec![12.0, 3.0]);
@@ -146,9 +198,57 @@ mod tests {
     }
 
     #[test]
+    fn overdraft_carries_into_the_next_refill() {
+        let mut l = BudgetLedger::new(EnergyBudget::new(10.0, 1.0));
+        l.charge(25.0); // 15 J of debt
+        l.roll_window();
+        // Refill 10 − debt 15 = still 5 J in the red.
+        assert!(l.exhausted(), "a carried overdraft keeps the window closed");
+        l.roll_window();
+        // Second refill clears the remaining debt: 10 − 5 = 5 J free.
+        assert!(!l.exhausted());
+        let windows = l.into_window_joules();
+        assert_eq!(windows, vec![25.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn unused_joules_bank_at_most_one_window() {
+        let mut l = BudgetLedger::new(EnergyBudget::new(10.0, 1.0));
+        l.roll_window(); // nothing charged: bank caps at one window
+        l.roll_window(); // still capped — banking is not unbounded
+        l.charge(19.0);
+        assert!(!l.exhausted(), "refill + one banked window covers 19 J");
+        l.charge(1.0);
+        assert!(l.exhausted(), "the 20 J ceiling (refill + bank cap) holds");
+    }
+
+    #[test]
+    fn refund_targets_the_charged_window() {
+        let mut l = BudgetLedger::new(EnergyBudget::new(10.0, 1.0));
+        let w0 = l.charge(9.0);
+        assert_eq!(w0, 0);
+        // Refund into the still-open window restores admission headroom.
+        l.refund(w0, 4.0);
+        assert!(!l.exhausted());
+        l.roll_window();
+        let w1 = l.charge(6.0);
+        l.roll_window();
+        // Refunding a closed window corrects its record only.
+        l.refund(w1, 2.0);
+        assert!((l.refunded() - 6.0).abs() < 1e-12);
+        let windows = l.into_window_joules();
+        assert_eq!(windows, vec![5.0, 4.0, 0.0]);
+        assert!(windows.iter().all(|j| *j >= 0.0), "refunds never push a window negative");
+        // Conservation: Σ windows == Σ charged − Σ refunded.
+        assert!((windows.iter().sum::<f64>() - (15.0 - 6.0)).abs() < 1e-12);
+    }
+
+    #[test]
     fn zero_budget_is_exhausted_from_the_start() {
-        let l = BudgetLedger::new(EnergyBudget::new(0.0, 0.5));
+        let mut l = BudgetLedger::new(EnergyBudget::new(0.0, 0.5));
         assert!(l.exhausted());
+        l.roll_window();
+        assert!(l.exhausted(), "a zero budget carries nothing to bank");
     }
 
     #[test]

@@ -21,8 +21,17 @@ pub enum EventKind {
     /// A request entered a stream's admission queue.
     RequestArrival { stream: usize, index: usize },
     /// A stream's in-flight admission slot finished; its lease can accept
-    /// the next request.
-    BatchComplete { stream: usize, request: usize },
+    /// the next request. `epoch` is the lane's dispatch generation at the
+    /// time the slot was scheduled: a mid-slot preemption bumps the
+    /// lane's generation, so the cancelled slot's completion pops as a
+    /// stale no-op instead of corrupting the lane (the same request may
+    /// legitimately be in flight again by then).
+    BatchComplete { stream: usize, epoch: u64 },
+    /// A lease migration cancelled the stream's in-flight slot mid-term
+    /// (see [`crate::engine::repartition::MigrationMode::Preempt`]): the
+    /// cancelled request is back at the front of its queue and the lane
+    /// should re-admit immediately on its new lease.
+    Preempt { stream: usize },
     /// A device-lease term ended: the lease manager re-validates the
     /// apportionment and either renews every lease or migrates.
     LeaseExpiry,
@@ -122,7 +131,7 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(2.0, EventKind::LeaseExpiry);
         q.push(0.5, EventKind::RequestArrival { stream: 0, index: 0 });
-        q.push(1.0, EventKind::BatchComplete { stream: 0, request: 0 });
+        q.push(1.0, EventKind::BatchComplete { stream: 0, epoch: 0 });
         let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
         assert_eq!(times, vec![0.5, 1.0, 2.0]);
         assert_eq!(q.processed(), 3);
@@ -134,7 +143,7 @@ mod tests {
         for i in 0..5 {
             q.push(1.0, EventKind::RequestArrival { stream: 0, index: i });
         }
-        q.push(1.0, EventKind::BatchComplete { stream: 0, request: 9 });
+        q.push(1.0, EventKind::BatchComplete { stream: 0, epoch: 9 });
         let mut kinds = Vec::new();
         while let Some(e) = q.pop() {
             kinds.push(e.kind);
@@ -142,7 +151,7 @@ mod tests {
         for (i, k) in kinds.iter().take(5).enumerate() {
             assert_eq!(*k, EventKind::RequestArrival { stream: 0, index: i });
         }
-        assert_eq!(kinds[5], EventKind::BatchComplete { stream: 0, request: 9 });
+        assert_eq!(kinds[5], EventKind::BatchComplete { stream: 0, epoch: 9 });
     }
 
     #[test]

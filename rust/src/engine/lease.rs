@@ -201,6 +201,31 @@ pub fn assign(sys: &SystemSpec, demands: &[f64]) -> LeaseAssignment {
     LeaseAssignment { partitions, members, part_of, share }
 }
 
+/// Hand a preempted slot's freed remainder to the migration's *other*
+/// incoming lease owners: a cancelled slot leaves its old devices idle
+/// until its would-have-been completion, and the streams inheriting
+/// hardware in the same repartition overlap their migration load with
+/// that idle window. All quantities are **wall-clock seconds** — the
+/// caller converts share-scaled `pending_drain` values out and back, and
+/// excludes the preempting lane itself (its own cancelled slot cannot
+/// subsidize its own move). `freed` is consumed against `drains` in
+/// order (the engine passes migrated lanes in stream order —
+/// deterministic, since device identity is not modeled below the
+/// partition level); each drain absorbs at most its own length. Returns
+/// the unconsumed remainder (idle time nobody could overlap with).
+pub fn hand_off_remainder(mut freed: f64, drains: &mut [f64]) -> f64 {
+    debug_assert!(freed >= 0.0 && freed.is_finite(), "bad freed remainder {freed}");
+    for d in drains.iter_mut() {
+        if freed <= 0.0 {
+            break;
+        }
+        let rebate = freed.min(*d);
+        *d -= rebate;
+        freed -= rebate;
+    }
+    freed
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,6 +304,24 @@ mod tests {
         for i in 0..3 {
             assert!((a.share[i] - 1.0 / 3.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn hand_off_consumes_drains_in_order_and_returns_the_rest() {
+        let mut drains = [0.05, 0.08, 0.02];
+        let rest = hand_off_remainder(0.10, &mut drains);
+        assert!((drains[0] - 0.0).abs() < 1e-12, "first drain fully rebated");
+        assert!((drains[1] - 0.03).abs() < 1e-12, "second partially rebated");
+        assert!((drains[2] - 0.02).abs() < 1e-12, "nothing left for the third");
+        assert!((rest - 0.0).abs() < 1e-12);
+
+        let mut small = [0.01];
+        let rest = hand_off_remainder(0.10, &mut small);
+        assert_eq!(small[0], 0.0);
+        assert!((rest - 0.09).abs() < 1e-12, "a drain absorbs at most its own length");
+
+        let mut none: [f64; 0] = [];
+        assert_eq!(hand_off_remainder(0.5, &mut none), 0.5, "no takers, full remainder back");
     }
 
     #[test]

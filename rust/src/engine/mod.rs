@@ -19,9 +19,14 @@
 //!   round-robin, so the engine serves arbitrarily many streams.
 //! * **[`repartition`]** — per-stream demand is tracked online (EWMA
 //!   over completed FLOPs) and leases migrate between streams when the
-//!   apportionment shifts past a hysteresis threshold, paying an
-//!   explicit drain cost — the inter-stream analogue of the
-//!   coordinator's intra-stream reschedule policy.
+//!   apportionment shifts past a hysteresis threshold — the inter-stream
+//!   analogue of the coordinator's intra-stream reschedule policy.
+//!   **On by default** since the adaptive-by-default flip: a migration
+//!   prewarms the schedule cache for the prospective partition (known
+//!   regimes re-time instead of re-running Algorithm 1) and, per
+//!   [`repartition::MigrationMode`], either drains the in-flight slot or
+//!   preempts it mid-term ([`EventKind::Preempt`]) with a partial refund
+//!   of its time and `f_eng` joules.
 //! * **[`budget`]** — the `f_eng` account at admission time: every
 //!   dispatch charges its batch's modeled energy against a per-window
 //!   joule budget, and when the window is exhausted strictly
@@ -49,7 +54,7 @@ pub mod slo;
 pub use budget::EnergyBudget;
 pub use events::{Event, EventKind, EventQueue};
 pub use lease::{LeaseAssignment, OverSubscribed};
-pub use repartition::{DemandTracker, RepartitionPolicy};
+pub use repartition::{DemandTracker, MigrationMode, RepartitionPolicy};
 pub use slo::{SloController, StreamSlo};
 
 use std::collections::VecDeque;
@@ -59,7 +64,7 @@ use crate::coordinator::multi::{MultiStreamReport, StreamReport, StreamSpec};
 use crate::coordinator::server::{Completion, Request, ServeReport, RESCHEDULE_DRAIN_COST};
 use crate::coordinator::Coordinator;
 use crate::devices::{CommModel, GroundTruth};
-use crate::metrics::{jain_index, LatencySummary};
+use crate::metrics::{jain_index, LatencySummary, P2Quantile};
 use crate::perfmodel::{OracleModels, PerfEstimator};
 use crate::scheduler::{
     evaluate_plan, CacheStats, PowerTable, Schedule, ScheduleCache, SharedScheduleCache,
@@ -68,10 +73,16 @@ use crate::scheduler::{
 use budget::BudgetLedger;
 use repartition::share_shift;
 
-/// Engine-wide knobs. The default is the PR-1-compatible mode: static
-/// leases for the whole run (re-partitioning off), so
-/// [`crate::coordinator::MultiStreamServer::serve`] keeps its historical
-/// semantics; opt into adaptivity with [`EngineConfig::adaptive`].
+/// Engine-wide knobs. The default is **adaptive**: online
+/// re-partitioning with the default [`RepartitionPolicy`] and
+/// migration-aware cache prewarming, so
+/// [`crate::coordinator::MultiStreamServer::serve`] lives the paper's
+/// dynamic-beats-static thesis out of the box — a migrated stream's
+/// known regimes stay warm ([`crate::scheduler::ScheduleCache::prewarm`]
+/// via [`Coordinator::retarget`]), which is what made the flip safe for
+/// the historical acceptance scenarios. Freeze the leases with
+/// [`EngineConfig::static_leases`] (the PR-1/PR-2 default) when
+/// reproducing the static numbers.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// Online re-partitioning policy; `None` freezes the initial leases.
@@ -94,7 +105,7 @@ pub struct EngineConfig {
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
-            repartition: None,
+            repartition: Some(RepartitionPolicy::default()),
             migration_drain: 80e-3,
             energy_budget: None,
             slo: SloController::default(),
@@ -103,12 +114,22 @@ impl Default for EngineConfig {
 }
 
 impl EngineConfig {
-    /// Static leases + demand-adaptive migration with the default policy.
+    /// Demand-adaptive migration with the default policy. Since the
+    /// adaptive-by-default flip this *is* [`EngineConfig::default`];
+    /// retained as the self-documenting spelling at call sites.
     pub fn adaptive() -> EngineConfig {
-        EngineConfig { repartition: Some(RepartitionPolicy::default()), ..Default::default() }
+        EngineConfig::default()
     }
 
-    /// The default config with a per-window joule budget attached.
+    /// Freeze the initial leases for the whole run — the historical
+    /// PR-1/PR-2 default, kept as the escape hatch for reproducing the
+    /// static acceptance numbers and for A/B-ing what adaptivity buys.
+    pub fn static_leases() -> EngineConfig {
+        EngineConfig { repartition: None, ..Default::default() }
+    }
+
+    /// The default (adaptive) config with a per-window joule budget
+    /// attached.
     pub fn budgeted(b: EnergyBudget) -> EngineConfig {
         EngineConfig { energy_budget: Some(b), ..Default::default() }
     }
@@ -126,6 +147,24 @@ pub struct EngineMetrics {
     pub lease_migrations: usize,
     /// Migrations that disturbed a stream with queued or in-flight work.
     pub preemptions: usize,
+    /// In-flight slots cancelled mid-term by a migration
+    /// ([`repartition::MigrationMode::Preempt`]) — a strict subset of
+    /// `preemptions`.
+    pub slot_preemptions: usize,
+    /// Unexecuted wall-clock slot time (s) refunded by mid-slot
+    /// preemptions and handed to the migration's *other* incoming lease
+    /// owners as drain rebates ([`lease::hand_off_remainder`]).
+    pub slot_time_refunded: f64,
+    /// Modeled `f_eng` joules refunded by mid-slot preemptions — also
+    /// credited back to the charging budget window when a budget is
+    /// attached, so `window_joules` sums to charged − refunded.
+    pub joules_refunded: f64,
+    /// Cached plans carried onto prospective partitions at migration time
+    /// ([`crate::scheduler::ScheduleCache::prewarm`]).
+    pub prewarm_hits: u64,
+    /// Plans a migration prewarm could not re-fit to the new inventory
+    /// (those regimes go cold and re-run the DP once).
+    pub prewarm_misses: u64,
     /// Streams that started on a time-sliced (share < 1) lease.
     pub time_sliced_streams: usize,
     /// Per-stream lease occupancy over the run's wall clock — measured on
@@ -139,10 +178,11 @@ pub struct EngineMetrics {
     /// Energy-budget windows the run touched (including the trailing
     /// partial window). Zero without a budget.
     pub budget_windows: usize,
-    /// Joules charged to the `f_eng` account per budget window, in
+    /// Net joules charged to the `f_eng` account per budget window, in
     /// window order; sums to the total modeled energy of every
-    /// dispatched batch (each batch is charged exactly once). Empty
-    /// without a budget.
+    /// dispatched batch minus preemption refunds (each batch is charged
+    /// exactly once and refunded at most once, against the window that
+    /// charged it — no entry can go negative). Empty without a budget.
     pub window_joules: Vec<f64>,
     /// Each stream's fraction of the device pool (time share × device
     /// fraction) under the last lease it held — the end state the SLO
@@ -154,7 +194,8 @@ pub struct EngineMetrics {
 }
 
 impl EngineMetrics {
-    /// Total joules charged against the energy budget (0 without one).
+    /// Net joules charged against the energy budget — charges minus
+    /// preemption refunds (0 without a budget).
     pub fn joules_charged(&self) -> f64 {
         self.window_joules.iter().sum()
     }
@@ -164,16 +205,39 @@ impl std::fmt::Display for EngineMetrics {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} events, {} repartitions, {} lease migrations, {} preemptions, \
-             {} time-sliced streams, {} budget deferrals",
+            "{} events, {} repartitions, {} lease migrations, {} preemptions \
+             ({} mid-slot), {}/{} prewarmed, {} time-sliced streams, {} budget deferrals",
             self.events_processed,
             self.repartitions,
             self.lease_migrations,
             self.preemptions,
+            self.slot_preemptions,
+            self.prewarm_hits,
+            self.prewarm_hits + self.prewarm_misses,
             self.time_sliced_streams,
             self.deferrals
         )
     }
+}
+
+/// The slot a lane currently occupies its lease with: everything a
+/// mid-slot preemption needs to cancel it — when it would end, what it
+/// cost, and which request it carries.
+#[derive(Debug, Clone, Copy)]
+struct InflightSlot {
+    /// Trace index of the dispatched request (requeued on preemption).
+    index: usize,
+    /// Share-stretched slot end on the global clock (s).
+    slot_end: f64,
+    /// The slot's share-stretched length (s) — the refund denominator.
+    eff_period: f64,
+    /// Modeled `f_eng` joules charged for the batch.
+    energy: f64,
+    /// FLOPs credited to the demand window at completion.
+    flops: f64,
+    /// Budget-window index the batch was charged to (`None` without a
+    /// ledger) — where a preemption refund must land.
+    charge_window: Option<usize>,
 }
 
 /// One stream's runtime state inside the engine: its lease, its
@@ -186,7 +250,11 @@ struct Lane<'c, 'a, E: PerfEstimator> {
     power: PowerTable,
     comm: CommModel,
     queue: VecDeque<usize>,
-    busy: bool,
+    /// The occupied admission slot, if any (`None` = lease idle).
+    inflight: Option<InflightSlot>,
+    /// Dispatch generation: bumped at every dispatch *and* preemption, so
+    /// a cancelled slot's [`EventKind::BatchComplete`] pops stale.
+    epoch: u64,
     sig: String,
     measured: Option<Schedule>,
     completions: Vec<Completion>,
@@ -197,14 +265,18 @@ struct Lane<'c, 'a, E: PerfEstimator> {
     busy_time: f64,
     /// Migration drain owed before the next admission (lease seconds).
     pending_drain: f64,
-    /// FLOPs of the batch currently in flight, credited to the demand
-    /// window when its [`EventKind::BatchComplete`] fires.
-    inflight_flops: f64,
     /// FLOPs *completed* since the last demand-sampling tick.
     flops_window: f64,
     cache: CacheStats,
     /// The stream's service-level objective (target + QoS priority).
     slo: StreamSlo,
+    /// Incremental tail-latency estimate over completed batches — O(1)
+    /// per completion, replacing the full-history re-sort at every lease
+    /// re-validation.
+    p99: P2Quantile,
+    /// Accumulated SLO violation for the controller's integral term
+    /// ([`SloController::weight_integrating`]), clamped there.
+    slo_error_sum: f64,
     /// Whether the lane is waiting out an exhausted energy-budget window
     /// (idle with queued work it was denied admission for).
     deferred: bool,
@@ -252,7 +324,8 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
             power,
             comm,
             queue: VecDeque::new(),
-            busy: false,
+            inflight: None,
+            epoch: 0,
             sig: String::new(),
             measured: None,
             completions: Vec::new(),
@@ -262,20 +335,28 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
             max_queue: 0,
             busy_time: 0.0,
             pending_drain: 0.0,
-            inflight_flops: 0.0,
             flops_window: 0.0,
             cache: CacheStats::default(),
             slo: StreamSlo::default(),
+            p99: P2Quantile::new(0.99),
+            slo_error_sum: 0.0,
             deferred: false,
             deferrals: 0,
         }
     }
 
+    /// Whether the lane's lease is occupied by an admission slot.
+    fn busy(&self) -> bool {
+        self.inflight.is_some()
+    }
+
     /// The tail latency observed so far (`None` before any completion) —
-    /// what the SLO controller feeds back into lease weight.
+    /// what the SLO controller feeds back into lease weight. Read from
+    /// the incremental P² estimator fed at every batch completion, so
+    /// long-running streams pay O(1) here instead of re-sorting their
+    /// whole completion history at every lease re-validation.
     fn observed_p99(&self) -> Option<f64> {
-        let lats: Vec<f64> = self.completions.iter().map(Completion::latency).collect();
-        slo::observed_p99(&lats)
+        self.p99.value()
     }
 
     /// This lane's fraction of the whole pool under its current lease —
@@ -294,7 +375,7 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
     /// modeled energy (J) so the caller can charge the `f_eng` budget —
     /// exactly once per batch, at its (possibly deferred) dispatch.
     fn dispatch(&mut self, trace: &[Request], stream: usize, now: f64, q: &mut EventQueue) -> f64 {
-        debug_assert!(!self.busy, "dispatch on a busy lane");
+        debug_assert!(!self.busy(), "dispatch on a busy lane");
         let idx = self.queue.pop_front().expect("dispatch on an empty queue");
         let req = &trace[idx];
         let share = self.share;
@@ -348,19 +429,66 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
         // Demand is tracked over *completed* FLOPs: remember the batch's
         // work and credit it when BatchComplete fires, so a long-running
         // batch is not front-loaded into the dispatch-time window.
-        self.inflight_flops = req.workload.total_flops();
-        self.busy = true;
+        self.inflight = Some(InflightSlot {
+            index: idx,
+            slot_end,
+            eff_period,
+            energy,
+            flops: req.workload.total_flops(),
+            charge_window: None,
+        });
+        self.epoch += 1;
         self.busy_time += slot_end - now;
         self.completions.push(Completion { id: req.id, arrival: req.arrival, start, finish });
-        q.push(slot_end, EventKind::BatchComplete { stream, request: req.id });
+        q.push(slot_end, EventKind::BatchComplete { stream, epoch: self.epoch });
         energy
     }
 
+    /// Record which budget window the in-flight batch was charged to, so
+    /// a later preemption can refund the right window.
+    fn note_charge_window(&mut self, window: usize) {
+        if let Some(slot) = self.inflight.as_mut() {
+            slot.charge_window = Some(window);
+        }
+    }
+
+    /// Cancel the in-flight slot mid-term at global time `now` when its
+    /// unexecuted remainder exceeds `min_remaining`
+    /// ([`repartition::MigrationMode::Preempt`]); `None` when the lane is
+    /// idle or the slot is nearly done (cancelling an almost-finished
+    /// slot only wastes its re-run). On cancellation the request goes
+    /// back to the front of the queue, the unexecuted remainder of the
+    /// slot's wall-clock time and the matching fraction of its `f_eng`
+    /// joules are refunded (the executed fraction is lost work and stays
+    /// charged), and the pending [`EventKind::BatchComplete`] is
+    /// invalidated by bumping the dispatch generation. Returns the
+    /// cancelled slot with its (remainder, joules) refund — the caller
+    /// settles the budget refund and re-admission.
+    fn try_preempt(&mut self, now: f64, min_remaining: f64) -> Option<(InflightSlot, f64, f64)> {
+        let slot = self.inflight?;
+        let remainder = (slot.slot_end - now).clamp(0.0, slot.eff_period);
+        if remainder <= min_remaining {
+            return None;
+        }
+        self.inflight = None;
+        let frac = if slot.eff_period > 0.0 { remainder / slot.eff_period } else { 0.0 };
+        let joules = frac * slot.energy;
+        self.busy_time -= remainder;
+        self.energy -= joules;
+        self.completions.pop().expect("in flight implies a provisional record");
+        self.queue.push_front(slot.index);
+        self.epoch += 1; // the stale BatchComplete now misses this lane
+        Some((slot, remainder, joules))
+    }
+
     /// Move this lane onto a new device partition: retarget the
-    /// coordinator (its cache keys re-scope via the system fingerprint),
+    /// coordinator (its cache keys re-scope via the system fingerprint
+    /// and its memoized regimes are *prewarmed* onto the new one),
     /// rebuild the measurement harness, and owe the migration drain.
-    fn migrate(&mut self, part: SystemSpec, drain: f64) {
-        self.coord.retarget(part.clone());
+    /// Returns the prewarm outcome, which the caller folds into the
+    /// engine metrics and this lane's cache attribution.
+    fn migrate(&mut self, part: SystemSpec, drain: f64) -> crate::scheduler::PrewarmReport {
+        let prewarm = self.coord.retarget(part.clone());
         self.gt = GroundTruth::new(part.gpu.clone(), part.fpga.clone(), part.comm_model());
         self.power = PowerTable::new(part.gpu.clone(), part.fpga.clone());
         self.comm = part.comm_model();
@@ -368,6 +496,9 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
         self.sig.clear();
         self.pending_drain += drain;
         self.part = part;
+        self.cache.prewarm_hits += prewarm.hits;
+        self.cache.prewarm_misses += prewarm.misses;
+        prewarm
     }
 
     fn into_outcome(self) -> LaneOutcome {
@@ -444,7 +575,8 @@ fn try_admit<E: PerfEstimator>(
         lanes[stream].deferred = false;
         let joules = lanes[stream].dispatch(traces[stream], stream, now, q);
         if let Some(led) = ledger.as_mut() {
-            led.charge(joules);
+            let window = led.charge(joules);
+            lanes[stream].note_charge_window(window);
         }
         *remaining -= 1;
     } else {
@@ -514,16 +646,34 @@ fn run_event_loop<E: PerfEstimator>(
                 let lane = &mut lanes[stream];
                 lane.queue.push_back(index);
                 lane.max_queue = lane.max_queue.max(lane.queue.len());
-                if !lanes[stream].busy {
+                if !lanes[stream].busy() {
                     try_admit(stream, now, lanes, traces, &mut ledger, &mut q, &mut remaining);
                 }
             }
-            EventKind::BatchComplete { stream, .. } => {
+            EventKind::BatchComplete { stream, epoch } => {
                 let lane = &mut lanes[stream];
-                lane.busy = false;
-                lane.flops_window += lane.inflight_flops;
-                lane.inflight_flops = 0.0;
+                if lane.epoch != epoch {
+                    continue; // a mid-slot preemption cancelled this slot
+                }
+                let slot = lane.inflight.take().expect("live epoch implies an occupied slot");
+                lane.flops_window += slot.flops;
+                // Feed the incremental tail estimator with the finished
+                // batch's latency (the record a preemption would have
+                // cancelled is gone by now, so only real completions
+                // count).
+                let latency =
+                    lane.completions.last().expect("completion recorded at dispatch").latency();
+                lane.p99.observe(latency);
                 if !lanes[stream].queue.is_empty() {
+                    try_admit(stream, now, lanes, traces, &mut ledger, &mut q, &mut remaining);
+                }
+            }
+            EventKind::Preempt { stream } => {
+                // The preempted request sits at the front of its queue;
+                // re-admit it on the new lease right away (or mark it
+                // deferred if the budget objects — it resumes at the next
+                // window tick like any deferred lane).
+                if !lanes[stream].busy() && !lanes[stream].queue.is_empty() {
                     try_admit(stream, now, lanes, traces, &mut ledger, &mut q, &mut remaining);
                 }
             }
@@ -537,7 +687,18 @@ fn run_event_loop<E: PerfEstimator>(
             }
             EventKind::LeaseExpiry => {
                 if let Some(tr) = tracker.as_ref() {
-                    maybe_migrate(pool, traces, lanes, tr, cfg, &mut metrics);
+                    maybe_migrate(
+                        pool,
+                        traces,
+                        lanes,
+                        tr,
+                        cfg,
+                        now,
+                        &mut q,
+                        &mut ledger,
+                        &mut remaining,
+                        &mut metrics,
+                    );
                     let pol = cfg.repartition.as_ref().expect("tracker implies a policy");
                     q.push(now + pol.lease_term, EventKind::LeaseExpiry);
                 }
@@ -552,7 +713,9 @@ fn run_event_loop<E: PerfEstimator>(
                 // Resume deferred lanes highest-priority-first (ties in
                 // stream order) until the refilled window objects again.
                 let mut order: Vec<usize> = (0..lanes.len())
-                    .filter(|&i| lanes[i].deferred && !lanes[i].busy && !lanes[i].queue.is_empty())
+                    .filter(|&i| {
+                        lanes[i].deferred && !lanes[i].busy() && !lanes[i].queue.is_empty()
+                    })
                     .collect();
                 order.sort_by(|&a, &b| {
                     let (pa, pb) = (lanes[a].slo.priority, lanes[b].slo.priority);
@@ -578,18 +741,35 @@ fn run_event_loop<E: PerfEstimator>(
 
 /// Lease-expiry handler: rebuild the lease table from the observed EWMA
 /// demands of the still-active streams — each scaled by the SLO
-/// controller's p99-pressure weight, so a stream missing its target bids
-/// for more of the pool than its raw FLOP rate alone — and migrate only
-/// when the pool-share apportionment shifted past the policy's
+/// controller's PI p99-pressure weight, so a stream missing its target
+/// bids for more of the pool than its raw FLOP rate alone — and migrate
+/// only when the pool-share apportionment shifted past the policy's
 /// hysteresis. A *finished* stream drops out of the apportionment
 /// entirely, so its devices return to the survivors (down to a sole
 /// survivor inheriting the whole pool).
+///
+/// Per migrating stream the policy's [`repartition::MigrationMode`]
+/// decides what happens to an in-flight slot: *drain* lets it finish on
+/// the old lease (the migration takes effect at the next admission);
+/// *preempt* cancels it mid-term when enough of it is left, refunds the
+/// unexecuted time and joules (budget window included), requeues the
+/// request, and schedules an immediate [`EventKind::Preempt`]
+/// re-admission on the new lease. The freed remainders are handed to the
+/// migration's other incoming lease owners as drain rebates
+/// ([`lease::hand_off_remainder`]). Every migration prewarms the
+/// schedule cache for the prospective partition through
+/// [`Coordinator::retarget`], so known regimes stay hits.
+#[allow(clippy::too_many_arguments)]
 fn maybe_migrate<E: PerfEstimator>(
     pool: &SystemSpec,
     traces: &[&[Request]],
     lanes: &mut [Lane<'_, '_, E>],
     tracker: &DemandTracker,
     cfg: &EngineConfig,
+    now: f64,
+    q: &mut EventQueue,
+    ledger: &mut Option<BudgetLedger>,
+    remaining: &mut usize,
     metrics: &mut EngineMetrics,
 ) {
     let pol = cfg.repartition.as_ref().expect("maybe_migrate requires a policy");
@@ -602,11 +782,12 @@ fn maybe_migrate<E: PerfEstimator>(
     let demands: Vec<f64> = active
         .iter()
         .map(|&i| {
-            let l = &lanes[i];
-            // Only targeted lanes pay for the p99 observation (a sort of
-            // the completion history); the controller ignores it otherwise.
+            let l = &mut lanes[i];
+            // The incremental P² estimate makes the observation O(1);
+            // untargeted lanes still skip it (the controller would
+            // ignore it anyway).
             let p99 = if l.slo.p99_target.is_some() { l.observed_p99() } else { None };
-            tracker.rate(i) * cfg.slo.weight(&l.slo, p99)
+            tracker.rate(i) * cfg.slo.weight_integrating(&l.slo, p99, &mut l.slo_error_sum)
         })
         .collect();
     let desired = lease::assign(pool, &demands);
@@ -616,20 +797,58 @@ fn maybe_migrate<E: PerfEstimator>(
         return; // renewal: the table in force is still close enough
     }
     metrics.repartitions += 1;
+    let mut freed = 0.0f64; // preempted slot remainders, wall-clock seconds
+    let mut incoming: Vec<usize> = Vec::new(); // migrated lanes, stream order
+    let mut preempted: Vec<usize> = Vec::new(); // lanes whose slot was cancelled
     for (l, &s) in active.iter().enumerate() {
         let part = desired.partitions[desired.part_of[l]].clone();
         let share = desired.share[l];
         let lane = &mut lanes[s];
         if (part.n_fpga, part.n_gpu) != (lane.part.n_fpga, lane.part.n_gpu) {
             metrics.lease_migrations += 1;
-            if lane.busy || !lane.queue.is_empty() {
+            if lane.busy() || !lane.queue.is_empty() {
                 metrics.preemptions += 1;
             }
-            lane.migrate(part, cfg.migration_drain);
+            if let repartition::MigrationMode::Preempt { min_remaining } = pol.migration {
+                if let Some((slot, remainder, joules)) = lane.try_preempt(now, min_remaining) {
+                    *remaining += 1; // the cancelled batch re-dispatches
+                    freed += remainder;
+                    preempted.push(s);
+                    metrics.slot_preemptions += 1;
+                    metrics.slot_time_refunded += remainder;
+                    metrics.joules_refunded += joules;
+                    if let (Some(led), Some(w)) = (ledger.as_mut(), slot.charge_window) {
+                        led.refund(w, joules);
+                    }
+                    q.push(now, EventKind::Preempt { stream: s });
+                }
+            }
+            let prewarm = lane.migrate(part, cfg.migration_drain);
+            metrics.prewarm_hits += prewarm.hits;
+            metrics.prewarm_misses += prewarm.misses;
+            incoming.push(s);
         } else {
             lane.part = part;
         }
         lane.share = share;
+    }
+    // Hand the freed remainders to the *other* incoming lease owners:
+    // their migration loads overlap the idle window a cancelled slot
+    // left on the hardware they inherit. The preempting lanes are
+    // excluded — a lane's own cancelled slot cannot subsidize its own
+    // move. Everything is settled in wall-clock seconds: a lane pays
+    // `pending_drain / share` wall seconds at its next dispatch, and the
+    // freed remainders are wall-clock idle windows, so drains are
+    // converted out and back around the hand-off.
+    if freed > 0.0 {
+        let takers: Vec<usize> =
+            incoming.iter().copied().filter(|s| !preempted.contains(s)).collect();
+        let mut wall_drains: Vec<f64> =
+            takers.iter().map(|&s| lanes[s].pending_drain / lanes[s].share).collect();
+        lease::hand_off_remainder(freed, &mut wall_drains);
+        for (&s, wall) in takers.iter().zip(wall_drains) {
+            lanes[s].pending_drain = wall * lanes[s].share;
+        }
     }
 }
 
@@ -643,7 +862,10 @@ pub(crate) fn run_single<E: PerfEstimator>(
     trace: &[Request],
 ) -> ServeReport {
     assert!(!trace.is_empty());
-    let cfg = EngineConfig::default();
+    // A sole tenant owns the whole pool for the whole run: there is
+    // nothing to re-partition, so the static config skips the tick and
+    // expiry machinery (and keeps the legacy-equivalence property exact).
+    let cfg = EngineConfig::static_leases();
     let mut lanes = vec![Lane::with_ground_truth(coordinator, sys.clone(), 1.0, gt.clone())];
     let traces: [&[Request]; 1] = [trace];
     run_event_loop(sys, &traces, &mut lanes, &[0.0], &cfg);
@@ -662,7 +884,7 @@ pub struct ServingEngine<'a, E: PerfEstimator> {
 
 impl<'a, E: PerfEstimator> ServingEngine<'a, E> {
     /// An engine over `sys` with a default 64-entry shared schedule cache
-    /// and static leases (see [`EngineConfig`]).
+    /// and the adaptive default config (see [`EngineConfig`]).
     pub fn new(sys: SystemSpec, est: &'a E) -> Self {
         ServingEngine {
             sys,
@@ -807,8 +1029,7 @@ mod tests {
             repartition: Some(RepartitionPolicy {
                 sample_interval: 0.0,
                 lease_term: 1.0,
-                ewma_alpha: 0.5,
-                hysteresis: 0.1,
+                ..RepartitionPolicy::default()
             }),
             ..EngineConfig::default()
         };
@@ -832,7 +1053,7 @@ mod tests {
                 generate_trace(&[(gcn(150_000_000), 8)], 20.0, 2),
             ),
         ];
-        let mut engine = ServingEngine::new(s, &est);
+        let mut engine = ServingEngine::new(s, &est).with_config(EngineConfig::static_leases());
         let r = engine.serve(&streams);
         assert_eq!(r.engine.lease_migrations, 0);
         assert_eq!(r.engine.repartitions, 0);
@@ -865,6 +1086,7 @@ mod tests {
                 lease_term: 0.1,
                 ewma_alpha: 0.6,
                 hysteresis: 0.05,
+                migration: MigrationMode::Drain,
             }),
             ..EngineConfig::default()
         };
@@ -878,5 +1100,14 @@ mod tests {
         );
         assert!(r.engine.repartitions >= 1);
         assert!(r.fairness > 0.0);
+    }
+
+    #[test]
+    fn default_config_is_adaptive_with_drain_migrations() {
+        let cfg = EngineConfig::default();
+        let pol = cfg.repartition.expect("adaptive by default");
+        assert_eq!(pol.migration, MigrationMode::Drain);
+        assert!(EngineConfig::static_leases().repartition.is_none());
+        assert!(EngineConfig::adaptive().repartition.is_some(), "adaptive() aliases the default");
     }
 }

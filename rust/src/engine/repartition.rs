@@ -10,7 +10,10 @@
 //! shifted past a hysteresis threshold (total-variation distance), the
 //! leases migrate — and every stream whose device inventory changed pays
 //! an explicit drain cost before its next admission, mirroring the
-//! intra-stream reschedule drain.
+//! intra-stream reschedule drain. Per migration, [`MigrationMode`]
+//! decides what happens to an in-flight slot: *drain* it to completion
+//! on the old lease, or *preempt* it mid-term with a partial refund of
+//! its unexecuted time and `f_eng` joules (HTS-style task handoff).
 //!
 //! The rates this module tracks are scaled by the SLO controller's
 //! p99-pressure weights before they reach [`super::lease::assign`]
@@ -18,9 +21,37 @@
 //! trace drops out of the apportionment so its devices return to the
 //! survivors — lease re-validation continues down to a sole survivor.
 
+/// How a migration treats a stream's in-flight admission slot — the
+/// per-migration choice between PR-2's drain semantics and true mid-slot
+/// preemption.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum MigrationMode {
+    /// The in-flight slot finishes on the old lease; the migration takes
+    /// effect at the stream's next admission (plus the migration drain)
+    /// — the conservative PR-2 behavior and the default; preemption is a
+    /// policy choice.
+    #[default]
+    Drain,
+    /// Cancel the in-flight slot mid-term when its unexecuted remainder
+    /// exceeds `min_remaining` seconds of lease time: the request goes
+    /// back to the front of its queue and re-admits immediately on the
+    /// new lease, the unexecuted fraction of the slot's time *and* its
+    /// `f_eng` joules are refunded (the executed fraction is lost work
+    /// and stays charged), and the freed remainder is handed to the
+    /// migration's *other* incoming lease owners as a drain rebate
+    /// ([`super::lease::hand_off_remainder`]). Slots with a remainder at
+    /// or below `min_remaining` drain as usual — cancelling an
+    /// almost-done slot only wastes its re-run.
+    Preempt {
+        /// Minimum unexecuted slot remainder (s) worth preempting.
+        min_remaining: f64,
+    },
+}
+
 /// Knobs of the online re-partitioning policy. `None` in
 /// [`super::EngineConfig`] disables re-partitioning entirely (static
-/// leases for the whole run — the PR-1-compatible mode).
+/// leases for the whole run — the [`super::EngineConfig::static_leases`]
+/// escape hatch).
 #[derive(Debug, Clone)]
 pub struct RepartitionPolicy {
     /// Interval between demand-sampling ticks (s): each tick folds the
@@ -33,6 +64,8 @@ pub struct RepartitionPolicy {
     /// Minimum total-variation shift of the pool-share vector before a
     /// migration is worth its drain cost.
     pub hysteresis: f64,
+    /// What happens to a migrating stream's in-flight slot.
+    pub migration: MigrationMode,
 }
 
 impl Default for RepartitionPolicy {
@@ -42,6 +75,7 @@ impl Default for RepartitionPolicy {
             lease_term: 2.0,
             ewma_alpha: 0.4,
             hysteresis: 0.15,
+            migration: MigrationMode::Drain,
         }
     }
 }
@@ -56,6 +90,17 @@ impl RepartitionPolicy {
             lease_term: horizon / 4.0,
             ewma_alpha: 0.5,
             hysteresis: 0.1,
+            migration: MigrationMode::Drain,
+        }
+    }
+
+    /// [`RepartitionPolicy::reactive`] with mid-slot preemption: slots
+    /// whose unexecuted remainder exceeds 1% of the horizon are cancelled
+    /// and refunded instead of drained.
+    pub fn preemptive(horizon: f64) -> RepartitionPolicy {
+        RepartitionPolicy {
+            migration: MigrationMode::Preempt { min_remaining: horizon / 100.0 },
+            ..RepartitionPolicy::reactive(horizon)
         }
     }
 }
@@ -150,5 +195,13 @@ mod tests {
         assert_eq!(p.sample_interval, 1.0);
         assert_eq!(p.lease_term, 2.0);
         assert!(p.lease_term > p.sample_interval);
+        assert_eq!(p.migration, MigrationMode::Drain, "preemption is opt-in");
+    }
+
+    #[test]
+    fn preemptive_policy_sets_a_horizon_scaled_threshold() {
+        let p = RepartitionPolicy::preemptive(8.0);
+        assert_eq!(p.sample_interval, 1.0, "timing knobs follow reactive()");
+        assert_eq!(p.migration, MigrationMode::Preempt { min_remaining: 0.08 });
     }
 }

@@ -22,9 +22,13 @@
 //! comfortably beating it cedes slack — replacing pure demand shares for
 //! both exclusive partitions and oversubscribed time-slice groups
 //! (weights flow through [`super::lease::assign`], whose intra-group
-//! time shares follow the same weighted demands). With default SLOs
-//! (no target, priority 1) every weight is exactly 1 and the engine is
-//! bit-identical to the demand-only partitioning.
+//! time shares follow the same weighted demands). An optional clamped
+//! **integral term** ([`SloController::integral_gain`]) accumulates
+//! persistent violations too small for the proportional term to push
+//! past the re-partitioning hysteresis, so they eventually shift weight
+//! anyway. With default SLOs (no target, priority 1) every weight is
+//! exactly 1 and the engine is bit-identical to the demand-only
+//! partitioning.
 
 use crate::metrics::percentile;
 
@@ -83,10 +87,20 @@ impl StreamSlo {
     }
 }
 
-/// Proportional feedback from observed-vs-target p99 to lease weight.
-/// Always present in [`super::EngineConfig`]; with default [`StreamSlo`]s
-/// it is the identity (weight = demand), so it is opt-in per stream, not
-/// per engine.
+/// Proportional-integral feedback from observed-vs-target p99 to lease
+/// weight. Always present in [`super::EngineConfig`]; with default
+/// [`StreamSlo`]s it is the identity (weight = demand), so it is opt-in
+/// per stream, not per engine.
+///
+/// The proportional term alone has a blind spot: a violation small
+/// enough that the weighted share shift stays below the re-partitioning
+/// hysteresis *never* migrates, no matter how long it persists. The
+/// integral term closes it — each re-validation accumulates the relative
+/// violation `(p99_obs/p99_target − 1)` into a per-stream error sum
+/// (clamped to `±integral_clamp` for anti-windup), and
+/// `integral_gain × error_sum` is added to the pressure before the final
+/// clamp. Defaults are weight-neutral: `integral_gain = 0` reproduces
+/// the proportional-only controller exactly.
 #[derive(Debug, Clone)]
 pub struct SloController {
     /// Exponent on the observed/target p99 ratio. 1.0 = proportional.
@@ -95,21 +109,46 @@ pub struct SloController {
     /// `[priority/max_boost, priority·max_boost]` so one violating
     /// stream cannot starve the rest of the pool.
     pub max_boost: f64,
+    /// Weight of the accumulated violation term; 0 (the default)
+    /// disables integral action entirely.
+    pub integral_gain: f64,
+    /// Anti-windup bound on the accumulated relative violation: the
+    /// error sum stays within `±integral_clamp`, so pressure recovers
+    /// within a bounded number of re-validations once the violation
+    /// clears instead of unwinding a run-length's worth of history.
+    pub integral_clamp: f64,
 }
 
 impl Default for SloController {
     fn default() -> Self {
-        SloController { gain: 1.0, max_boost: 4.0 }
+        SloController { gain: 1.0, max_boost: 4.0, integral_gain: 0.0, integral_clamp: 8.0 }
     }
 }
 
 impl SloController {
-    /// The lease weight multiplier for one stream: its priority times the
-    /// clamped SLO pressure. Streams without a target, or without enough
-    /// completions to observe a p99, weigh in at exactly `priority`.
-    pub fn weight(&self, slo: &StreamSlo, observed_p99: Option<f64>) -> f64 {
+    fn validate(&self) {
         assert!(self.gain > 0.0 && self.gain.is_finite(), "non-positive gain {}", self.gain);
         assert!(self.max_boost >= 1.0, "max_boost {} below 1", self.max_boost);
+        assert!(
+            self.integral_gain >= 0.0 && self.integral_gain.is_finite(),
+            "negative or non-finite integral_gain {}",
+            self.integral_gain
+        );
+        assert!(
+            self.integral_clamp >= 0.0 && self.integral_clamp.is_finite(),
+            "negative or non-finite integral_clamp {}",
+            self.integral_clamp
+        );
+    }
+
+    /// The stateless lease weight multiplier for one stream: its priority
+    /// times the clamped *proportional-only* SLO pressure — no integral
+    /// contribution, whatever `integral_gain` is set to, because there is
+    /// no error history to integrate. Streams without a target, or
+    /// without enough completions to observe a p99, weigh in at exactly
+    /// `priority`. Used for initial leases.
+    pub fn weight(&self, slo: &StreamSlo, observed_p99: Option<f64>) -> f64 {
+        self.validate();
         let pressure = match (slo.p99_target, observed_p99) {
             (Some(target), Some(p99)) => {
                 (p99 / target).powf(self.gain).clamp(1.0 / self.max_boost, self.max_boost)
@@ -118,10 +157,38 @@ impl SloController {
         };
         slo.priority * pressure
     }
+
+    /// The full PI lease weight: fold this re-validation's relative
+    /// violation into `error_sum` (the caller's per-stream accumulator,
+    /// clamped for anti-windup), then weigh priority × clamp(proportional
+    /// + integral). With `integral_gain = 0` (the default) the
+    /// accumulator still updates but contributes nothing — bit-identical
+    /// to [`SloController::weight`] in that case.
+    pub fn weight_integrating(
+        &self,
+        slo: &StreamSlo,
+        observed_p99: Option<f64>,
+        error_sum: &mut f64,
+    ) -> f64 {
+        self.validate();
+        let pressure = match (slo.p99_target, observed_p99) {
+            (Some(target), Some(p99)) => {
+                let clamp = self.integral_clamp;
+                *error_sum = (*error_sum + (p99 / target - 1.0)).clamp(-clamp, clamp);
+                ((p99 / target).powf(self.gain) + self.integral_gain * *error_sum)
+                    .clamp(1.0 / self.max_boost, self.max_boost)
+            }
+            _ => 1.0,
+        };
+        slo.priority * pressure
+    }
 }
 
-/// Observed p99 of a latency sample (any order), `None` when empty —
-/// the controller's measurement side.
+/// Exact observed p99 of a latency sample (any order), `None` when
+/// empty. The engine's serving path now feeds an incremental
+/// [`crate::metrics::P2Quantile`] instead (O(1) per completion); this
+/// full-sort variant survives as the exact reference the estimator is
+/// unit-tested against and for offline analysis of completed runs.
 pub fn observed_p99(latencies: &[f64]) -> Option<f64> {
     if latencies.is_empty() {
         return None;
@@ -161,6 +228,79 @@ mod tests {
         assert!((w - 3.0 * 4.0).abs() < 1e-12, "boost must clamp at max_boost: {w}");
         let floor = c.weight(&StreamSlo::target(1e6, 2.0), Some(1e-3));
         assert!((floor - 2.0 / 4.0).abs() < 1e-12, "cede clamps at 1/max_boost: {floor}");
+    }
+
+    #[test]
+    fn integral_term_is_weight_neutral_at_defaults() {
+        let c = SloController::default();
+        let slo = StreamSlo::target(0.100, 1.0);
+        let mut acc = 0.0;
+        for _ in 0..20 {
+            let w = c.weight_integrating(&slo, Some(0.110), &mut acc);
+            assert!((w - 1.1).abs() < 1e-12, "default integral_gain must add nothing: {w}");
+        }
+        assert!(acc > 0.0, "the accumulator still tracks the violation");
+    }
+
+    #[test]
+    fn persistent_small_violation_accumulates_weight() {
+        // A 5% violation boosts the proportional weight by only 1.05 —
+        // too little to clear a typical migration hysteresis. With
+        // integral action the weight keeps growing until it can.
+        let c = SloController { integral_gain: 0.5, ..SloController::default() };
+        let slo = StreamSlo::target(0.100, 1.0);
+        let mut acc = 0.0;
+        let first = c.weight_integrating(&slo, Some(0.105), &mut acc);
+        let mut last = first;
+        for _ in 0..30 {
+            last = c.weight_integrating(&slo, Some(0.105), &mut acc);
+        }
+        assert!(first < 1.1, "one observation stays near the proportional weight: {first}");
+        assert!(last > first * 1.5, "persistence must compound: {first} -> {last}");
+        assert!(last <= c.max_boost + 1e-12, "the overall clamp still bounds the weight");
+    }
+
+    #[test]
+    fn stateless_weight_never_applies_integral_action() {
+        // `weight` is the documented proportional-only path: even with a
+        // nonzero integral gain it must not sneak in a one-step integral
+        // contribution (the initial-lease path relies on this).
+        let c = SloController { integral_gain: 0.5, ..SloController::default() };
+        let slo = StreamSlo::target(0.100, 1.0);
+        let w = c.weight(&slo, Some(0.200));
+        assert!((w - 2.0).abs() < 1e-12, "proportional only: {w}");
+    }
+
+    #[test]
+    fn anti_windup_bounds_the_accumulator_and_recovery() {
+        let c = SloController { integral_gain: 1.0, integral_clamp: 2.0, ..Default::default() };
+        let slo = StreamSlo::target(0.100, 1.0);
+        let mut acc = 0.0;
+        // A huge sustained violation saturates the accumulator at the
+        // clamp instead of integrating without bound…
+        for _ in 0..100 {
+            c.weight_integrating(&slo, Some(1.0), &mut acc);
+        }
+        assert!((acc - 2.0).abs() < 1e-12, "accumulator must saturate at the clamp: {acc}");
+        // …so once the stream meets its target (ratio 0.5 → error −0.5
+        // per step), the boost unwinds within clamp/|error| steps, not a
+        // run-length's worth.
+        let mut recovered = false;
+        for _ in 0..10 {
+            let w = c.weight_integrating(&slo, Some(0.050), &mut acc);
+            if w <= 1.0 {
+                recovered = true;
+                break;
+            }
+        }
+        assert!(recovered, "bounded windup must unwind quickly (acc {acc})");
+    }
+
+    #[test]
+    #[should_panic(expected = "integral_gain")]
+    fn rejects_negative_integral_gain() {
+        let c = SloController { integral_gain: -0.1, ..Default::default() };
+        c.weight(&StreamSlo::default(), None);
     }
 
     #[test]

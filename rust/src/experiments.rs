@@ -224,9 +224,19 @@ pub fn multi_stream_scenario(cycles: usize, per_phase: usize, seed: u64) -> Vec<
 
 /// Serve `streams` on `sys` with the ground-truth oracle as `f_perf`
 /// (the example/bench/test entry point for multi-stream serving).
-/// Engine defaults apply: static leases, no online re-partitioning.
+/// Engine defaults apply — since the adaptive-by-default flip that means
+/// online re-partitioning with migration-aware cache prewarming; use
+/// [`run_multi_stream_static`] for the frozen-lease escape hatch.
 pub fn run_multi_stream(sys: &SystemSpec, streams: &[StreamSpec]) -> MultiStreamReport {
     run_multi_stream_with(sys, streams, EngineConfig::default())
+}
+
+/// [`run_multi_stream`] with the [`EngineConfig::static_leases`] escape
+/// hatch: the initial demand-proportional leases are frozen for the
+/// whole run (the historical PR-1/PR-2 default, kept for A/B runs and
+/// for reproducing the static acceptance numbers).
+pub fn run_multi_stream_static(sys: &SystemSpec, streams: &[StreamSpec]) -> MultiStreamReport {
+    run_multi_stream_with(sys, streams, EngineConfig::static_leases())
 }
 
 /// [`run_multi_stream`] with an explicit engine configuration — e.g.
@@ -349,8 +359,16 @@ mod tests {
         assert_eq!(streams[1].trace.len(), 2 * 4 * 4);
         let r = run_multi_stream(&SystemSpec::paper_testbed(Interconnect::Pcie4), &streams);
         assert_eq!(r.total_completed, 48 + 32);
-        // 5 + 3 distinct quantized regimes → ≤ 8 DP runs out of 80 lookups.
-        assert!(r.cache.misses <= 8, "misses {}", r.cache.misses);
+        // 5 + 3 distinct quantized regimes → ≤ 8 DP runs out of 80
+        // lookups, *plus* the fallout of plans an adaptive-default
+        // migration could not prewarm onto a new partition (usually
+        // zero; at most two DP re-runs each across migration chains).
+        assert!(
+            r.cache.misses <= 8 + 2 * r.engine.prewarm_misses,
+            "misses {} vs {} prewarm misses",
+            r.cache.misses,
+            r.engine.prewarm_misses
+        );
         assert!(r.cache.hit_rate() > 0.5, "hit rate {}", r.cache.hit_rate());
     }
 

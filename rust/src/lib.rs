@@ -15,8 +15,11 @@
 //!   drift into cache hits, and the event-heap serving engine
 //!   ([`engine`]): one global discrete-event clock for every concurrent
 //!   request stream, devices handed out as time-sliced *leases*
-//!   (arbitrarily many streams per pool) and re-leased online when
-//!   observed demand drifts past a hysteresis —
+//!   (arbitrarily many streams per pool) and — by default — re-leased
+//!   online when observed demand drifts past a hysteresis, each
+//!   migration prewarming the schedule cache for its prospective
+//!   partition and optionally preempting in-flight slots with partial
+//!   time/energy refunds —
 //!   [`coordinator::MultiStreamServer`] and the single-stream
 //!   [`coordinator::Server`] are both front-ends over it.
 //! * **L2/L1 (build time, `python/`)** — the workloads' actual compute
@@ -107,7 +110,8 @@ pub mod prelude {
     };
     pub use crate::devices::{DeviceType, GroundTruth};
     pub use crate::engine::{
-        EnergyBudget, EngineConfig, RepartitionPolicy, ServingEngine, SloController, StreamSlo,
+        EnergyBudget, EngineConfig, MigrationMode, RepartitionPolicy, ServingEngine, SloController,
+        StreamSlo,
     };
     pub use crate::perfmodel::{calibrate, ModelRegistry, OracleModels};
     pub use crate::pipeline::sim::PipelineSim;

@@ -25,6 +25,15 @@
 //! fingerprint, so changing the device inventory (or handing a stream a
 //! different partition of it) can never resurrect a stale plan.
 //!
+//! Fingerprint scoping cuts both ways: a lease *migration* re-scopes a
+//! stream's keys, so every regime it already learned would go cold.
+//! [`ScheduleCache::prewarm`] closes that gap at migration time by
+//! re-keying the old partition's plans under the prospective partition's
+//! fingerprint — re-fitting each plan's device allocations to the new
+//! inventory ([`fit_plan`]) but never re-running Algorithm 1; the first
+//! post-migration admission of a known regime then hits and is re-timed
+//! via [`crate::scheduler::evaluate_plan`] like any other hit.
+//!
 //! The cache also persists: [`ScheduleCache::save_to`] /
 //! [`ScheduleCache::load_from`] serialize the entries (and their recency
 //! order) through `util/json`, so a restarted server warm-starts past
@@ -138,6 +147,13 @@ pub struct CacheStats {
     pub evictions: u64,
     /// Entries dropped by explicit invalidation ([`ScheduleCache::clear`]).
     pub invalidations: u64,
+    /// Plans re-keyed onto a prospective partition by
+    /// [`ScheduleCache::prewarm`] (counting entries already warm there).
+    pub prewarm_hits: u64,
+    /// Plans a prewarm could *not* carry over (the old plan cannot be
+    /// re-fitted to the new inventory); the regime goes cold and its
+    /// first post-migration admission re-runs the DP.
+    pub prewarm_misses: u64,
 }
 
 impl CacheStats {
@@ -162,6 +178,8 @@ impl CacheStats {
             misses: self.misses - earlier.misses,
             evictions: self.evictions - earlier.evictions,
             invalidations: self.invalidations - earlier.invalidations,
+            prewarm_hits: self.prewarm_hits - earlier.prewarm_hits,
+            prewarm_misses: self.prewarm_misses - earlier.prewarm_misses,
         }
     }
 
@@ -173,6 +191,8 @@ impl CacheStats {
         self.misses += delta.misses;
         self.evictions += delta.evictions;
         self.invalidations += delta.invalidations;
+        self.prewarm_hits += delta.prewarm_hits;
+        self.prewarm_misses += delta.prewarm_misses;
     }
 }
 
@@ -180,12 +200,86 @@ impl std::fmt::Display for CacheStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{}/{} hits ({:.1}%), {} evictions",
+            "{}/{} hits ({:.1}%), {} evictions, {}/{} prewarmed",
             self.hits,
             self.lookups(),
             self.hit_rate() * 100.0,
-            self.evictions
+            self.evictions,
+            self.prewarm_hits,
+            self.prewarm_hits + self.prewarm_misses
         )
+    }
+}
+
+/// Outcome of one [`ScheduleCache::prewarm`] call: how many of the old
+/// partition's plans carried over to the prospective fingerprint.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrewarmReport {
+    /// Plans now warm under the new fingerprint (re-fitted, or already
+    /// present there).
+    pub hits: u64,
+    /// Plans that could not be re-fitted to the new inventory.
+    pub misses: u64,
+}
+
+/// Re-fit a cached plan to a new device inventory without re-running the
+/// DP: keep the kernel grouping and device *types*, shrink per-stage
+/// device counts (largest stage first, ties to the earlier stage) until
+/// the plan's totals fit. `None` when no re-fit exists — the plan has
+/// more stages of one type than the new partition has devices of it
+/// (stages of a pipeline occupy distinct devices). Shrink-only; growing
+/// into surplus inventory is the separate, objective-dependent
+/// [`widen_plan`].
+pub fn fit_plan(plan: &[StagePlan], n_fpga: usize, n_gpu: usize) -> Option<Vec<StagePlan>> {
+    let mut fitted = plan.to_vec();
+    for (dev, avail) in [(DeviceType::Fpga, n_fpga), (DeviceType::Gpu, n_gpu)] {
+        let stages = fitted.iter().filter(|s| s.dev == dev).count();
+        if stages > avail {
+            return None;
+        }
+        let mut used: usize = fitted.iter().filter(|s| s.dev == dev).map(|s| s.n).sum();
+        while used > avail {
+            // `used > avail >= stages` guarantees a stage with n >= 2.
+            let widest = fitted
+                .iter_mut()
+                .filter(|s| s.dev == dev && s.n >= 2)
+                .max_by(|a, b| a.n.cmp(&b.n).then(b.first.cmp(&a.first)))
+                .expect("used > stages implies a shrinkable stage");
+            widest.n -= 1;
+            used -= 1;
+        }
+    }
+    Some(fitted)
+}
+
+/// Grow a (fitting) plan into surplus inventory: distribute each device
+/// type's unused devices to that type's narrowest stages first (ties to
+/// the earlier stage). Without this, a plan carried onto a *larger*
+/// partition by [`ScheduleCache::prewarm`] would pin its old, narrower
+/// allocation forever — every later admission hits the cached entry, so
+/// the DP never runs again for that regime and the new hardware sits
+/// idle. Widening keeps the grouping decision but claims the inventory;
+/// timings stay honest because every hit is re-timed by
+/// [`crate::scheduler::evaluate_plan`]. A device type the plan does not
+/// use gains no stages (the grouping is never restructured here).
+/// `prewarm` skips widening for `Objective::Energy` plans — their narrow
+/// allocation is the point (static power scales with device count), not
+/// an artifact of the old partition.
+pub fn widen_plan(plan: &mut [StagePlan], n_fpga: usize, n_gpu: usize) {
+    for (dev, avail) in [(DeviceType::Fpga, n_fpga), (DeviceType::Gpu, n_gpu)] {
+        if plan.iter().all(|s| s.dev != dev) {
+            continue; // no stage of this type to widen
+        }
+        let mut used: usize = plan.iter().filter(|s| s.dev == dev).map(|s| s.n).sum();
+        while used < avail {
+            let narrowest = plan
+                .iter_mut()
+                .filter(|s| s.dev == dev)
+                .min_by(|a, b| a.n.cmp(&b.n).then(a.first.cmp(&b.first)))
+                .expect("a stage of this type exists");
+            narrowest.n += 1;
+            used += 1;
+        }
     }
 }
 
@@ -257,6 +351,78 @@ impl ScheduleCache {
             let k = self.lru.remove(pos).unwrap();
             self.lru.push_back(k);
         }
+    }
+
+    /// Re-key every plan cached under `old_fp` onto `new_fp` — the
+    /// prospective partition of a lease migration, with `n_fpga`/`n_gpu`
+    /// devices — so a migrated stream's first admissions of known regimes
+    /// are hits, not cold misses. Plans are re-fitted to the new
+    /// inventory ([`fit_plan`]) and widened into any surplus
+    /// ([`widen_plan`]; skipped for `Objective::Energy`, whose narrow
+    /// allocations are deliberate). A plan that cannot fit — or that the
+    /// cache's own capacity evicts before the batch completes — counts as
+    /// a prewarm miss and its regime goes cold (one DP re-run at next
+    /// sight); `hits` only ever reports plans actually resident under
+    /// `new_fp` when the call returns. Entries are *copied*, not moved:
+    /// the old partition's keys stay valid for whichever stream inherits
+    /// that partition shape. Timings are never computed here — a
+    /// prewarmed hit re-times through [`crate::scheduler::evaluate_plan`]
+    /// like any other hit.
+    pub fn prewarm(
+        &mut self,
+        old_fp: u64,
+        new_fp: u64,
+        n_fpga: usize,
+        n_gpu: usize,
+    ) -> PrewarmReport {
+        let mut report = PrewarmReport::default();
+        if old_fp == new_fp {
+            return report;
+        }
+        // Collect in LRU order so re-keyed entries inherit the source
+        // recency order (oldest first, like a persisted-cache load).
+        let candidates: Vec<(CacheKey, Vec<StagePlan>)> = self
+            .lru
+            .iter()
+            .filter(|k| k.sys_fp == old_fp)
+            .map(|k| (k.clone(), self.entries[k].clone()))
+            .collect();
+        let energy_fp = objective_fingerprint(Objective::Energy);
+        let mut rekeyed: Vec<CacheKey> = Vec::with_capacity(candidates.len());
+        for (key, plan) in candidates {
+            let obj_fp = key.obj_fp;
+            let new_key = CacheKey { sys_fp: new_fp, ..key };
+            if self.entries.contains_key(&new_key) {
+                // Already warm under the new partition: refresh its
+                // recency so this batch's own inserts evict colder
+                // entries first, not the plans we are vouching for.
+                self.touch(&new_key);
+                rekeyed.push(new_key);
+                continue;
+            }
+            match fit_plan(&plan, n_fpga, n_gpu) {
+                Some(mut fitted) => {
+                    // Claim surplus inventory on a grown partition —
+                    // except for Energy-objective plans, whose narrow
+                    // allocation is deliberate (see `widen_plan`).
+                    if obj_fp != energy_fp {
+                        widen_plan(&mut fitted, n_fpga, n_gpu);
+                    }
+                    self.insert(new_key.clone(), fitted);
+                    rekeyed.push(new_key);
+                }
+                None => report.misses += 1,
+            }
+        }
+        // Count as warm only what is actually resident after the whole
+        // batch: on a small cache, later inserts can evict earlier
+        // re-keyed (or already-warm) entries, and claiming those as hits
+        // would overstate the post-migration warmth.
+        report.hits = rekeyed.iter().filter(|k| self.entries.contains_key(*k)).count() as u64;
+        report.misses += rekeyed.len() as u64 - report.hits;
+        self.stats.prewarm_hits += report.hits;
+        self.stats.prewarm_misses += report.misses;
+        report
     }
 
     /// Drop every entry (e.g. after a device-parameter recalibration whose
@@ -617,9 +783,177 @@ mod tests {
 
     #[test]
     fn accumulate_sums_counters() {
-        let mut a = CacheStats { hits: 1, misses: 2, evictions: 0, invalidations: 0 };
-        a.accumulate(&CacheStats { hits: 3, misses: 1, evictions: 2, invalidations: 1 });
-        assert_eq!(a, CacheStats { hits: 4, misses: 3, evictions: 2, invalidations: 1 });
+        let mut a = CacheStats { hits: 1, misses: 2, ..CacheStats::default() };
+        a.accumulate(&CacheStats {
+            hits: 3,
+            misses: 1,
+            evictions: 2,
+            invalidations: 1,
+            prewarm_hits: 4,
+            prewarm_misses: 1,
+        });
+        assert_eq!(
+            a,
+            CacheStats {
+                hits: 4,
+                misses: 3,
+                evictions: 2,
+                invalidations: 1,
+                prewarm_hits: 4,
+                prewarm_misses: 1,
+            }
+        );
+    }
+
+    #[test]
+    fn fit_plan_shrinks_to_inventory_largest_stage_first() {
+        let plan = vec![
+            StagePlan { first: 0, last: 0, dev: DeviceType::Fpga, n: 3 },
+            StagePlan { first: 1, last: 2, dev: DeviceType::Gpu, n: 2 },
+            StagePlan { first: 3, last: 3, dev: DeviceType::Fpga, n: 1 },
+        ];
+        // Plenty of room: the plan transfers unchanged.
+        assert_eq!(fit_plan(&plan, 4, 2).unwrap(), plan);
+        // 2 FPGAs for two FPGA stages: the 3-wide stage shrinks to 1.
+        let shrunk = fit_plan(&plan, 2, 1).unwrap();
+        assert_eq!(shrunk[0].n, 1, "widest FPGA stage shrinks first");
+        assert_eq!(shrunk[1].n, 1);
+        assert_eq!(shrunk[2].n, 1);
+        // Grouping and device types are preserved exactly.
+        for (a, b) in shrunk.iter().zip(&plan) {
+            assert_eq!((a.first, a.last, a.dev), (b.first, b.last, b.dev));
+        }
+        // One FPGA cannot host two pipelined FPGA stages: no re-fit.
+        assert!(fit_plan(&plan, 1, 2).is_none());
+        assert!(fit_plan(&plan, 2, 0).is_none(), "a GPU stage needs a GPU");
+    }
+
+    #[test]
+    fn prewarm_rekeys_plans_onto_the_new_partition() {
+        let old = SystemSpec { n_fpga: 2, n_gpu: 1, ..sys() };
+        let new = SystemSpec { n_fpga: 1, n_gpu: 1, ..sys() };
+        let (old_fp, new_fp) = (system_fingerprint(&old), system_fingerprint(&new));
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let key = CacheKey::new(old_fp, &wl, Objective::Performance);
+        let wide = vec![
+            StagePlan { first: 0, last: 1, dev: DeviceType::Fpga, n: 2 },
+            StagePlan { first: 2, last: 3, dev: DeviceType::Gpu, n: 1 },
+        ];
+        let mut cache = ScheduleCache::new(8);
+        cache.insert(key.clone(), wide);
+
+        let r = cache.prewarm(old_fp, new_fp, new.n_fpga, new.n_gpu);
+        assert_eq!(r, PrewarmReport { hits: 1, misses: 0 });
+
+        // The prospective key hits, with the plan re-fitted to 1F1G…
+        let new_key = CacheKey::new(new_fp, &wl, Objective::Performance);
+        let fitted = cache.lookup(&new_key).expect("prewarmed entry");
+        assert_eq!(fitted[0].n, 1, "FPGA stage re-fitted to the new inventory");
+        // …and the old key is copied, not moved.
+        assert!(cache.lookup(&key).is_some(), "source entries survive a prewarm");
+        let st = cache.stats();
+        assert_eq!((st.prewarm_hits, st.prewarm_misses), (1, 0));
+
+        // Prewarming again finds the target already warm: still a hit,
+        // no churn.
+        let again = cache.prewarm(old_fp, new_fp, new.n_fpga, new.n_gpu);
+        assert_eq!(again, PrewarmReport { hits: 1, misses: 0 });
+        // A same-fingerprint prewarm is a no-op.
+        assert_eq!(cache.prewarm(old_fp, old_fp, 2, 1), PrewarmReport::default());
+    }
+
+    #[test]
+    fn widen_plan_claims_surplus_narrowest_stage_first() {
+        let mut plan = vec![
+            StagePlan { first: 0, last: 0, dev: DeviceType::Fpga, n: 2 },
+            StagePlan { first: 1, last: 2, dev: DeviceType::Gpu, n: 1 },
+            StagePlan { first: 3, last: 3, dev: DeviceType::Fpga, n: 1 },
+        ];
+        widen_plan(&mut plan, 5, 2);
+        // 2 surplus FPGAs: the narrower stage (n=1) catches up first,
+        // then the earlier of the now-equal stages takes the last one.
+        assert_eq!(plan[0].n, 3);
+        assert_eq!(plan[2].n, 2);
+        assert_eq!(plan[1].n, 2, "the sole GPU stage takes the whole surplus");
+        // No surplus → no change; a type with no stage gains none.
+        let mut gpu_only = vec![StagePlan { first: 0, last: 3, dev: DeviceType::Gpu, n: 1 }];
+        widen_plan(&mut gpu_only, 3, 1);
+        assert_eq!(gpu_only[0].n, 1, "cannot invent FPGA stages");
+    }
+
+    #[test]
+    fn prewarm_widens_onto_a_grown_partition_except_for_energy_plans() {
+        let small = SystemSpec { n_fpga: 1, n_gpu: 1, ..sys() };
+        let grown = sys(); // 3F + 2G
+        let (small_fp, grown_fp) = (system_fingerprint(&small), system_fingerprint(&grown));
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let narrow = vec![
+            StagePlan { first: 0, last: 1, dev: DeviceType::Fpga, n: 1 },
+            StagePlan { first: 2, last: 3, dev: DeviceType::Gpu, n: 1 },
+        ];
+        let mut cache = ScheduleCache::new(8);
+        cache.insert(CacheKey::new(small_fp, &wl, Objective::Performance), narrow.clone());
+        cache.insert(CacheKey::new(small_fp, &wl, Objective::Energy), narrow.clone());
+
+        let r = cache.prewarm(small_fp, grown_fp, grown.n_fpga, grown.n_gpu);
+        assert_eq!(r, PrewarmReport { hits: 2, misses: 0 });
+
+        // The performance plan claims the whole grown inventory…
+        let perf = cache
+            .lookup(&CacheKey::new(grown_fp, &wl, Objective::Performance))
+            .expect("prewarmed");
+        assert_eq!((perf[0].n, perf[1].n), (3, 2), "surplus must not strand: {perf:?}");
+        // …the energy plan keeps its deliberate narrow allocation.
+        let eng =
+            cache.lookup(&CacheKey::new(grown_fp, &wl, Objective::Energy)).expect("prewarmed");
+        assert_eq!(eng, narrow, "energy plans are never widened");
+    }
+
+    #[test]
+    fn prewarm_only_counts_entries_that_survive_capacity() {
+        // Tight cache: 3 slots, an already-warm target at the LRU front
+        // plus two old-fp regimes. Prewarming must (a) refresh the
+        // already-warm target so the batch's own insert evicts a source
+        // entry instead of the plan it is vouching for, and (b) report
+        // only actually-resident plans as hits.
+        let old = SystemSpec { n_fpga: 2, n_gpu: 1, ..sys() };
+        let new = SystemSpec { n_fpga: 1, n_gpu: 1, ..sys() };
+        let (old_fp, new_fp) = (system_fingerprint(&old), system_fingerprint(&new));
+        let r1 = gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 2_000_000, 200, 0.2), 2, 128);
+        let r2 =
+            gnn::gcn_workload(&Dataset::new("T", "t", 1_000_000, 150_000_000, 200, 0.2), 2, 128);
+        let mut cache = ScheduleCache::new(3);
+        // Oldest first: the already-warm target, then the two sources.
+        cache.insert(CacheKey::new(new_fp, &r1, Objective::Performance), plan());
+        cache.insert(CacheKey::new(old_fp, &r1, Objective::Performance), plan());
+        cache.insert(CacheKey::new(old_fp, &r2, Objective::Performance), plan());
+
+        let r = cache.prewarm(old_fp, new_fp, new.n_fpga, new.n_gpu);
+        assert_eq!(r, PrewarmReport { hits: 2, misses: 0 }, "both regimes end up warm");
+        for wl in [&r1, &r2] {
+            assert!(
+                cache.lookup(&CacheKey::new(new_fp, wl, Objective::Performance)).is_some(),
+                "every reported hit must actually be resident"
+            );
+        }
+    }
+
+    #[test]
+    fn prewarm_counts_unfittable_plans_as_misses() {
+        let old = sys(); // 3F + 2G
+        let new = SystemSpec { n_fpga: 1, n_gpu: 0, ..sys() };
+        let (old_fp, new_fp) = (system_fingerprint(&old), system_fingerprint(&new));
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let mut cache = ScheduleCache::new(8);
+        // A GPU stage cannot re-fit onto a 1F+0G partition.
+        cache.insert(
+            CacheKey::new(old_fp, &wl, Objective::Performance),
+            vec![StagePlan { first: 0, last: 3, dev: DeviceType::Gpu, n: 1 }],
+        );
+        let r = cache.prewarm(old_fp, new_fp, new.n_fpga, new.n_gpu);
+        assert_eq!(r, PrewarmReport { hits: 0, misses: 1 });
+        assert!(cache.lookup(&CacheKey::new(new_fp, &wl, Objective::Performance)).is_none());
+        assert_eq!(cache.stats().prewarm_misses, 1);
     }
 
     #[test]

@@ -11,7 +11,9 @@ pub mod oracle;
 pub mod pareto;
 pub mod pipeline_def;
 
-pub use cache::{system_fingerprint, CacheKey, CacheStats, ScheduleCache, SharedScheduleCache};
+pub use cache::{
+    system_fingerprint, CacheKey, CacheStats, PrewarmReport, ScheduleCache, SharedScheduleCache,
+};
 pub use dp::{DpScheduler, DpTables, FinalState, TableKind};
 pub use energy::PowerTable;
 pub use evaluate::evaluate_plan;

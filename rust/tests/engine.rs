@@ -26,15 +26,29 @@
 //!   an identical-demand peer.
 //! * **Re-lease on completion** — a finished stream's devices return to
 //!   the pool, down to a sole survivor holding everything.
+//!
+//! Plus the adaptive-by-default acceptance suite (ISSUE 4):
+//!
+//! * **Default migrates on skew** — the *default* config migrates on
+//!   phase-reversed demand and prewarms the schedule cache for every
+//!   prospective partition.
+//! * **Prewarm accounting** — a hand-back migration under a warm cache
+//!   reports prewarm hits and *zero* post-migration cold misses for the
+//!   migrated stream.
+//! * **Preemption refunds** — mid-slot preemption refunds unexecuted
+//!   time and `f_eng` joules to the charging budget window, preserving
+//!   Σ window_joules == Σ charged − Σ refunded with no negative window.
 
 use dype::config::{Interconnect, Objective, SystemSpec};
 use dype::coordinator::server::{generate_trace, serve_trace, RESCHEDULE_DRAIN_COST};
 use dype::coordinator::{Completion, Coordinator, Request, StreamSpec};
 use dype::devices::GroundTruth;
-use dype::engine::{EnergyBudget, EngineConfig, RepartitionPolicy, ServingEngine, StreamSlo};
+use dype::engine::{
+    EnergyBudget, EngineConfig, MigrationMode, RepartitionPolicy, ServingEngine, StreamSlo,
+};
 use dype::experiments::{
     energy_slo_config, energy_slo_scenario, multi_stream_scenario, run_multi_stream,
-    run_multi_stream_with, skewed_pair_scenario,
+    run_multi_stream_static, run_multi_stream_with, skewed_pair_scenario,
 };
 use dype::perfmodel::{OracleModels, PerfEstimator};
 use dype::scheduler::{evaluate_plan, PowerTable, Schedule, ScheduleCache};
@@ -236,9 +250,156 @@ fn skewed_demand_migrates_leases_static_does_not() {
     assert!(adaptive.engine.repartitions >= 1);
     assert!(adaptive.fairness > 0.0);
 
-    let statik = run_multi_stream(&s, &streams);
-    assert_eq!(statik.engine.lease_migrations, 0, "static default never migrates");
+    let statik = run_multi_stream_static(&s, &streams);
+    assert_eq!(statik.engine.lease_migrations, 0, "the static escape hatch never migrates");
     assert_eq!(statik.total_completed, 48);
+}
+
+// ---- adaptive-by-default + prewarming + preemption (ISSUE 4) ----------
+
+#[test]
+fn default_engine_migrates_on_skew_and_prewarms_the_cache() {
+    // The adaptive-by-default acceptance bar: the *default* config (no
+    // explicit policy) must notice phase-reversed demand skew, migrate at
+    // least one lease, and carry the migrated streams' cached plans onto
+    // their new partitions — so recurring regimes stay hits even though
+    // every migration re-scopes the cache keys.
+    let s = sys();
+    let streams = skewed_pair_scenario(20, 21); // 80 requests, ~4 s of arrivals
+    let r = run_multi_stream(&s, &streams);
+
+    assert_eq!(r.total_completed, 80, "adaptive default must not lose requests");
+    assert!(
+        r.engine.lease_migrations >= 1,
+        "the default engine must migrate on skew: {}",
+        r.engine
+    );
+    assert!(r.engine.prewarm_hits >= 1, "migrations must prewarm known regimes: {}", r.engine);
+    // Cold DP runs are bounded by first sightings (2 regimes × 2 streams)
+    // plus the fallout of plans a prewarm could not re-fit (each such
+    // regime may re-pay the DP once now and, if another migration lands
+    // before it is re-sighted, once more) — prewarming is what keeps
+    // migration from re-paying the DP for known regimes.
+    assert!(
+        r.cache.misses <= 4 + 2 * r.engine.prewarm_misses,
+        "misses {} vs {} prewarm misses: prewarming must absorb migrations",
+        r.cache.misses,
+        r.engine.prewarm_misses
+    );
+}
+
+#[test]
+fn migration_under_a_warm_cache_has_no_post_migration_cold_miss() {
+    // Strict prewarm accounting on a hand-back migration: `short` drains
+    // early, `long` (a single recurring regime) survives and inherits
+    // the whole pool — a per-type superset of its old partition, so the
+    // prewarm is guaranteed to re-fit its plan. The migrated stream must
+    // report exactly its one first-sighting miss and nothing after the
+    // migration.
+    let s = sys();
+    let streams = vec![
+        StreamSpec::new(
+            "short",
+            Objective::Performance,
+            generate_trace(&[(gcn(2_000_000), 8)], 20.0, 141),
+        ),
+        StreamSpec::new(
+            "long",
+            Objective::Performance,
+            generate_trace(&[(gcn(2_000_000), 40)], 10.0, 142),
+        ),
+    ];
+    let r = run_multi_stream(&s, &streams); // pure defaults: adaptive + prewarm
+
+    assert_eq!(r.total_completed, 48);
+    assert!(
+        r.engine.lease_migrations >= 1,
+        "the hand-back must migrate the survivor: {}",
+        r.engine
+    );
+    assert!(r.engine.prewarm_hits >= 1, "the survivor's regime must carry over: {}", r.engine);
+    assert_eq!(r.engine.prewarm_misses, 0, "a superset partition re-fits every plan");
+    let long = &r.streams[1];
+    assert_eq!(long.name, "long");
+    assert_eq!(long.partition, "3F2G", "the survivor ends holding the whole pool");
+    assert_eq!(
+        long.report.cache.misses, 1,
+        "one first-sighting DP, zero post-migration cold misses"
+    );
+    assert!(long.report.cache.prewarm_hits >= 1, "prewarm attributed to the migrated stream");
+}
+
+#[test]
+fn preemption_refunds_conserve_energy_across_budget_windows() {
+    // Mid-slot preemption under a metered budget: cancelled slots refund
+    // the unexecuted fraction of their time and joules to the window
+    // that was charged, so Σ window_joules == Σ charged − Σ refunded ==
+    // the summed per-stream modeled energy, and no window goes negative.
+    let s = sys();
+    let streams = skewed_pair_scenario(16, 91);
+    let cfg = EngineConfig {
+        repartition: Some(RepartitionPolicy::preemptive(1.0)),
+        energy_budget: Some(EnergyBudget::new(1e12, 0.1)), // generous, many windows
+        ..EngineConfig::default()
+    };
+    let r = run_multi_stream_with(&s, &streams, cfg);
+
+    let offered: usize = streams.iter().map(|t| t.trace.len()).sum();
+    assert_eq!(r.total_completed, offered, "preempted batches must still complete");
+    assert!(
+        r.engine.slot_preemptions >= 1,
+        "busy lanes under a preemptive policy must cancel mid-slot: {}",
+        r.engine
+    );
+    assert!(r.engine.slot_preemptions <= r.engine.preemptions);
+    assert!(r.engine.slot_time_refunded > 0.0);
+    assert!(r.engine.joules_refunded > 0.0, "cancelled slots must refund joules");
+    let charged = r.engine.joules_charged();
+    let modeled: f64 = r.streams.iter().map(|sr| sr.report.energy).sum();
+    let tol = modeled.abs() * 1e-9 + 1e-12;
+    assert!(
+        (charged - modeled).abs() < tol,
+        "windows {charged} J vs modeled {modeled} J: refunds must keep f_eng conservation"
+    );
+    assert!(
+        r.engine.window_joules.iter().all(|j| *j >= 0.0),
+        "a refund may never push its window negative: {:?}",
+        r.engine.window_joules
+    );
+}
+
+#[test]
+fn preemptive_and_drain_migrations_agree_on_what_completes() {
+    // Preemption changes *when* leases take effect, never *what* is
+    // served: same scenario, same completions count, both adaptive.
+    let s = sys();
+    let streams = skewed_pair_scenario(12, 51);
+    let offered: usize = streams.iter().map(|t| t.trace.len()).sum();
+    let drain = run_multi_stream_with(
+        &s,
+        &streams,
+        EngineConfig {
+            repartition: Some(RepartitionPolicy::reactive(1.0)),
+            ..EngineConfig::default()
+        },
+    );
+    let preempt = run_multi_stream_with(
+        &s,
+        &streams,
+        EngineConfig {
+            repartition: Some(RepartitionPolicy::preemptive(1.0)),
+            ..EngineConfig::default()
+        },
+    );
+    assert_eq!(drain.total_completed, offered);
+    assert_eq!(preempt.total_completed, offered);
+    assert_eq!(drain.engine.slot_preemptions, 0, "drain mode never cancels slots");
+    assert_eq!(drain.engine.joules_refunded, 0.0);
+    // Refunds only ever *reduce* the modeled energy bill: the preemptive
+    // run re-pays the executed fraction of every cancelled slot, so its
+    // total energy is at least the drain run's minus nothing — and both
+    // stay positive.
+    assert!(preempt.total_energy > 0.0 && drain.total_energy > 0.0);
 }
 
 // ---- energy budget + SLO acceptance (ISSUE 3) -------------------------
@@ -431,6 +592,7 @@ fn finished_streams_return_their_devices_to_the_survivors() {
             lease_term: 0.2,
             ewma_alpha: 0.5,
             hysteresis: 0.02,
+            migration: MigrationMode::Drain,
         }),
         ..EngineConfig::default()
     };
