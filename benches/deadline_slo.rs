@@ -1,0 +1,104 @@
+//! Deadline-SLO serving bench (DESIGN.md §Energy & SLOs): what
+//! admission-time feasibility shedding and criticality-tied preemption
+//! cost and buy on the mixed deadline/best-effort scenario.
+//!
+//! Two policies over the same four streams:
+//!
+//!   * `drain-policy`    — the adaptive default (drain-mode migrations);
+//!     the interactive lane still sheds infeasible requests and still
+//!     preempts via its own per-stream override;
+//!   * `preempt-policy`  — [`dype::experiments::deadline_config`]: the
+//!     policy-level mode is `Preempt`, so unmarked lanes preempt too
+//!     while the `bulk-drain` lane's override keeps it draining.
+//!
+//! Also times the preemptive serve end to end (dispatch + feasibility
+//! check + per-stream mode resolution) and records it to the CI perf
+//! trajectory via `DYPE_BENCH_JSON` (see `util::bench::record_json`).
+
+use std::time::Instant;
+
+use dype::config::{Interconnect, SystemSpec};
+use dype::coordinator::MultiStreamReport;
+use dype::engine::EngineConfig;
+use dype::experiments::{deadline_config, deadline_scenario, run_multi_stream_with};
+use dype::metrics::{fmt_percent, Table};
+use dype::util::bench::{bench, record_json};
+
+fn row(t: &mut Table, mode: &str, r: &MultiStreamReport, wall: f64) {
+    let interactive = &r.streams[0].report;
+    t.row(vec![
+        mode.to_string(),
+        format!("{:.2}s", r.makespan),
+        format!("{}", r.total_completed),
+        format!("{}", r.engine.sheds),
+        fmt_percent(interactive.deadline_attainment),
+        format!("{}", r.engine.slot_preemptions),
+        format!("{}", r.streams[3].report.slot_preemptions),
+        format!("{:.1}ms", wall * 1e3),
+    ]);
+}
+
+fn main() {
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let streams = deadline_scenario(8, 77);
+    let offered: usize = streams.iter().map(|s| s.trace.len()).sum();
+    println!(
+        "mixed deadline/best-effort scenario: {} requests over {}F+{}G\n",
+        offered, sys.n_fpga, sys.n_gpu
+    );
+
+    let t0 = Instant::now();
+    let drain = run_multi_stream_with(&sys, &streams, EngineConfig::default());
+    let drain_wall = t0.elapsed().as_secs_f64();
+
+    let cfg = deadline_config();
+    let t1 = Instant::now();
+    let preempt = run_multi_stream_with(&sys, &streams, cfg.clone());
+    let preempt_wall = t1.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&[
+        "mode",
+        "makespan",
+        "done",
+        "shed",
+        "ddl-attain",
+        "preempts",
+        "bulk-preempts",
+        "wall",
+    ]);
+    row(&mut t, "drain-policy", &drain, drain_wall);
+    row(&mut t, "preempt-policy", &preempt, preempt_wall);
+    print!("{}", t.render());
+
+    println!(
+        "\npreemptive run: {} sheds, interactive deadline attainment {}, engine: {}",
+        preempt.engine.sheds,
+        fmt_percent(preempt.streams[0].report.deadline_attainment),
+        preempt.engine,
+    );
+
+    // Host-side cost of the full deadline-aware dispatch path, for the
+    // CI perf trajectory (short-iteration smoke, not a stable benchmark).
+    let serve = bench("deadline_slo/deadline_serve", 1, 5, || {
+        std::hint::black_box(run_multi_stream_with(&sys, &streams, cfg.clone()));
+    });
+    println!("\n{}", serve.report());
+    let events = preempt.engine.events_processed.max(1) as f64;
+    record_json(&[
+        ("deadline_slo/deadline_serve".to_string(), serve.median),
+        ("deadline_slo/deadline_per_event".to_string(), serve.median / events),
+    ]);
+
+    for r in [&drain, &preempt] {
+        assert_eq!(
+            r.total_completed + r.engine.sheds,
+            offered,
+            "every request completes or is shed"
+        );
+        assert!(r.streams[0].report.shed >= 1, "the overloaded deadline class must shed");
+        assert_eq!(r.streams[3].report.slot_preemptions, 0, "bulk-drain never cancels a slot");
+        for sr in &r.streams[1..] {
+            assert_eq!(sr.report.shed, 0, "{}: best-effort lanes never shed", sr.name);
+        }
+    }
+}

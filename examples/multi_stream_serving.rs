@@ -17,10 +17,15 @@
 //! swaps in the three-class energy/SLO scenario (DESIGN.md §Energy &
 //! SLOs) under a joule budget at 30% of the unbudgeted run's average
 //! draw, showing budget exhaustion defer below-priority streams while
-//! the p99 feedback controller re-weights the leases.
+//! the p99 feedback controller re-weights the leases; `--deadlines`
+//! swaps in the mixed deadline/best-effort scenario under the
+//! preemptive policy, showing infeasible requests shed at admission,
+//! per-stream deadline attainment, and criticality-tied migration
+//! modes (the critical lane preempts while the bulk lane drains).
 //!
 //! Run: `cargo run --release --example multi_stream_serving -- \
-//!       [cycles] [--cache schedules.json] [--static] [--energy-slo]`
+//!       [cycles] [--cache schedules.json] [--static] [--energy-slo] \
+//!       [--deadlines]`
 
 use std::sync::{Arc, Mutex};
 
@@ -29,7 +34,8 @@ use dype::coordinator::MultiStreamServer;
 use dype::devices::GroundTruth;
 use dype::engine::EngineConfig;
 use dype::experiments::{
-    energy_slo_config, energy_slo_scenario, multi_stream_scenario, run_multi_stream,
+    deadline_config, deadline_scenario, energy_slo_config, energy_slo_scenario,
+    multi_stream_scenario, run_multi_stream,
 };
 use dype::metrics::{fmt_percent, Table};
 use dype::perfmodel::OracleModels;
@@ -40,15 +46,24 @@ fn main() {
     let mut cache_path: Option<String> = None;
     let mut statik = false;
     let mut energy_slo = false;
+    let mut deadlines = false;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
             "--cache" => cache_path = Some(args.next().expect("--cache needs a path")),
             "--static" => statik = true,
-            // Adaptive serving is the default now; the old opt-in flag is
-            // accepted (and redundant) so existing invocations keep working.
-            "--adaptive" => statik = false,
+            // Adaptive serving has been the default since the PR-4 flip;
+            // the old opt-in flag is accepted so existing invocations keep
+            // working, but it selects nothing anymore.
+            "--adaptive" => {
+                statik = false;
+                println!(
+                    "note: --adaptive is deprecated — adaptive serving is the default; \
+                     use --static to freeze the initial leases"
+                );
+            }
             "--energy-slo" => energy_slo = true,
+            "--deadlines" => deadlines = true,
             other => cycles = other.parse().expect("cycles must be a number"),
         }
     }
@@ -57,6 +72,12 @@ fn main() {
     if energy_slo {
         println!(
             "system: {}F + {}G over {} — three QoS classes under an energy budget\n",
+            sys.n_fpga, sys.n_gpu, sys.interconnect
+        );
+    } else if deadlines {
+        println!(
+            "system: {}F + {}G over {} — mixed deadline/best-effort classes, \
+             preemptive re-partitioning\n",
             sys.n_fpga, sys.n_gpu, sys.interconnect
         );
     } else {
@@ -83,13 +104,15 @@ fn main() {
 
     let streams = if energy_slo {
         energy_slo_scenario(6, 42)
+    } else if deadlines {
+        deadline_scenario(8, 42)
     } else {
         multi_stream_scenario(cycles, 6, 42)
     };
     for s in &streams {
         println!(
             "stream {:<22} {:>4} requests, offered {:>6.1} req/s, demand {:>8.1} GFLOP/s, \
-             priority {:.0}{}",
+             priority {:.0}{}{}",
             s.name,
             s.trace.len(),
             s.offered_rate(),
@@ -97,6 +120,10 @@ fn main() {
             s.slo.priority,
             match s.slo.p99_target {
                 Some(t) => format!(", p99 target {:.0}ms", t * 1e3),
+                None => String::new(),
+            },
+            match s.slo.deadline {
+                Some(d) => format!(", deadline {:.0}ms", d * 1e3),
                 None => String::new(),
             }
         );
@@ -117,6 +144,8 @@ fn main() {
             0.3 * avg_watts
         );
         energy_slo_config(0.3 * avg_watts)
+    } else if deadlines {
+        deadline_config() // preemptive policy, per-stream overrides apply
     } else if statik {
         EngineConfig::static_leases()
     } else {
@@ -131,11 +160,13 @@ fn main() {
         "stream",
         "lease",
         "done",
+        "shed",
         "thp(req/s)",
         "p50(ms)",
         "p99(ms)",
         "energy(J)",
         "slo",
+        "ddl",
         "defer",
         "resched",
         "cache",
@@ -147,11 +178,13 @@ fn main() {
             sr.name.clone(),
             sr.partition.clone(),
             format!("{}", r.completed),
+            format!("{}", r.shed),
             format!("{:.1}", r.throughput),
             format!("{:.2}", r.p50_latency * 1e3),
             format!("{:.2}", r.p99_latency * 1e3),
             format!("{:.1}", r.energy),
             fmt_percent(r.slo_attainment),
+            fmt_percent(r.deadline_attainment),
             format!("{}", r.deferrals),
             format!("{}", r.reschedules),
             fmt_percent(r.cache.hit_rate()),
@@ -185,7 +218,10 @@ fn main() {
     // migrating runs too, because every migration prewarms the
     // prospective partition's keys. Energy/SLO scenario: the 30% power
     // cap must defer below-priority work — and never the
-    // highest-priority stream.
+    // highest-priority stream. Deadline scenario: the overloaded
+    // deadline class must shed its infeasible requests at admission, and
+    // the Drain-pinned bulk lane must never cancel a slot even under the
+    // preemptive policy.
     if energy_slo {
         assert!(
             report.engine.deferrals >= 1,
@@ -196,6 +232,19 @@ fn main() {
             0,
             "the highest-priority stream is never deferred"
         );
+    } else if deadlines {
+        assert!(
+            report.streams[0].report.shed >= 1,
+            "the overloaded deadline class must shed infeasible requests"
+        );
+        assert_eq!(
+            report.streams[3].report.slot_preemptions,
+            0,
+            "the Drain override must hold for the bulk lane"
+        );
+        for sr in &report.streams[1..] {
+            assert_eq!(sr.report.shed, 0, "{}: best-effort lanes never shed", sr.name);
+        }
     } else {
         assert!(
             report.cache.hit_rate() > 0.5,
@@ -204,12 +253,18 @@ fn main() {
         );
     }
     assert_eq!(
-        report.total_completed,
+        report.total_completed + report.engine.sheds,
         streams.iter().map(|s| s.trace.len()).sum::<usize>(),
-        "no request may starve"
+        "every request completes or is shed — no request may starve"
     );
     if energy_slo {
         println!("OK — budget exhaustion deferred only below-priority streams.");
+    } else if deadlines {
+        println!(
+            "OK — {} infeasible requests shed at admission; the bulk lane drained while \
+             critical lanes preempted.",
+            report.engine.sheds
+        );
     } else {
         println!("OK — recurring drift served from the schedule cache.");
     }

@@ -32,9 +32,13 @@
 //!    historical static numbers;
 //! 5. optionally serves **multi-objective**: a per-window joule budget
 //!    ([`crate::engine::budget`]) defers below-priority admissions when
-//!    the `f_eng` account runs dry, and per-stream p99 targets
-//!    ([`crate::engine::slo`]) feed back into the lease weights — both
-//!    opt-in, both inert for default [`StreamSlo`]s and `None` budgets.
+//!    the `f_eng` account runs dry, per-stream p99 targets
+//!    ([`crate::engine::slo`]) feed back into the lease weights, hard
+//!    per-request deadlines shed infeasible requests at admission
+//!    (never deferring them past their bound), and a per-stream
+//!    migration-mode override ties mid-slot preemption to stream
+//!    criticality — all opt-in, all inert for default [`StreamSlo`]s
+//!    and `None` budgets.
 //!
 //! This module keeps the stream vocabulary ([`StreamSpec`]) and the
 //! report types ([`StreamReport`], [`MultiStreamReport`]), plus the

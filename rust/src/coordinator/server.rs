@@ -75,9 +75,25 @@ pub struct ServeReport {
     /// Fraction of completions meeting the stream's p99 SLO target
     /// ([`crate::metrics::attainment`]); 1.0 when no target is set.
     pub slo_attainment: f64,
+    /// Fraction of the stream's *admission population* (completions plus
+    /// shed requests) that finished inside its deadline
+    /// ([`crate::metrics::deadline_attainment`]); 1.0 when no deadline
+    /// is set. Reported alongside `slo_attainment`: the p99 number
+    /// grades the served tail, this one also charges every shed.
+    pub deadline_attainment: f64,
+    /// Requests the engine's deadline feasibility check shed at
+    /// admission (they were never dispatched and never budget-deferred;
+    /// 0 for streams without a [`crate::engine::StreamSlo::deadline`]).
+    pub shed: usize,
     /// Admissions the engine's energy budget denied this stream (one per
     /// denial decision; 0 without a budget).
     pub deferrals: usize,
+    /// In-flight slots of this stream cancelled mid-term by lease
+    /// migrations (per-stream view of
+    /// [`crate::engine::EngineMetrics::slot_preemptions`], deciding by
+    /// the stream's own [`crate::engine::StreamSlo::migration`] override
+    /// when set, the policy mode otherwise).
+    pub slot_preemptions: usize,
     /// Schedule-cache counters attributable to this run (all-zero when the
     /// serving coordinator has no cache attached).
     pub cache: CacheStats,

@@ -40,6 +40,15 @@
 //! acceptance tests pin down). Streams of *equal* priority are never
 //! deferred against each other: deferral discriminates only strictly
 //! lower priorities.
+//!
+//! Deferral interacts with **deadlines**
+//! ([`super::slo::StreamSlo::deadline`]): before a denial parks a
+//! request, the engine's feasibility check prices the wait to the next
+//! [`super::EventKind::BudgetWindowTick`] against the request's bound —
+//! a request that cannot survive even that lower-bound wait is **shed**
+//! at the denial point instead of deferred past its deadline, and a
+//! stream that has shed its whole trace counts as finished for the
+//! deferral ordering above (it can no longer block lower classes).
 
 /// Per-window joule budget for the serving engine. `None` in
 /// [`super::EngineConfig`] disables energy metering entirely (the

@@ -2,8 +2,9 @@
 //!
 //! Every cause of state change in the serving engine is an [`Event`] on
 //! one global clock: a request arriving, a batch's admission slot
-//! completing, a device lease reaching the end of its term, a
-//! demand-sampling tick, or an energy-budget window boundary. The queue
+//! completing, a request shed by the deadline feasibility check, a
+//! device lease reaching the end of its term, a demand-sampling tick, or
+//! an energy-budget window boundary. The queue
 //! is a binary min-heap ordered by
 //! `(time, push sequence)`, so simultaneous events resolve in push order
 //! — deterministically, with no dependence on hash state or thread
@@ -32,6 +33,14 @@ pub enum EventKind {
     /// cancelled request is back at the front of its queue and the lane
     /// should re-admit immediately on its new lease.
     Preempt { stream: usize },
+    /// The admission-time deadline feasibility check
+    /// ([`crate::engine::slo::StreamSlo::deadline`]) rejected request
+    /// `index`: it can no longer finish inside its latency bound, so it
+    /// is **shed** — removed from the queue, counted against the
+    /// stream's deadline attainment, and never dispatched (and never
+    /// budget-deferred). The handler settles the accounting and lets the
+    /// lane consider the next queued request at the same timestamp.
+    Shed { stream: usize, index: usize },
     /// A device-lease term ended: the lease manager re-validates the
     /// apportionment and either renews every lease or migrates.
     LeaseExpiry,
@@ -174,6 +183,19 @@ mod tests {
     #[should_panic(expected = "non-finite")]
     fn rejects_non_finite_times() {
         EventQueue::new().push(f64::NAN, EventKind::RepartitionTick);
+    }
+
+    #[test]
+    fn shed_events_order_like_any_other_event() {
+        // A shed at `now` pops after same-time events pushed earlier and
+        // before later ones — no special-casing on the heap.
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::RequestArrival { stream: 1, index: 3 });
+        q.push(1.0, EventKind::Shed { stream: 0, index: 2 });
+        q.push(0.5, EventKind::Shed { stream: 0, index: 1 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::Shed { stream: 0, index: 1 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::RequestArrival { stream: 1, index: 3 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::Shed { stream: 0, index: 2 });
     }
 
     #[test]

@@ -187,7 +187,7 @@ pub fn assign(sys: &SystemSpec, demands: &[f64]) -> LeaseAssignment {
     let group_demand: Vec<f64> =
         members.iter().map(|m| m.iter().map(|&s| demands[s]).sum()).collect();
     let partitions = split_pool(sys, &group_demand);
-    let share: Vec<f64> = (0..k)
+    let mut share: Vec<f64> = (0..k)
         .map(|s| {
             let gd = group_demand[part_of[s]];
             if gd > 0.0 {
@@ -198,8 +198,34 @@ pub fn assign(sys: &SystemSpec, demands: &[f64]) -> LeaseAssignment {
         })
         .collect();
 
+    // No-starvation floor: a zero-demand stream grouped with
+    // nonzero-demand peers would get `share = 0/gd = 0`, stretch its
+    // admission slots by 1/0 and never be scheduled (the engine would
+    // even panic pushing the infinite completion time). Floor every
+    // member of a multi-tenant group at MIN_SHARE and renormalize the
+    // group; groups already above the floor are left bit-identical.
+    for m in &members {
+        if m.len() < 2 || m.iter().all(|&s| share[s] >= MIN_SHARE) {
+            continue;
+        }
+        let total: f64 = m.iter().map(|&s| share[s].max(MIN_SHARE)).sum();
+        for &s in m {
+            share[s] = share[s].max(MIN_SHARE) / total;
+        }
+    }
+
     LeaseAssignment { partitions, members, part_of, share }
 }
+
+/// Pre-normalization floor on a multi-tenant lease share: members below
+/// it are raised to `MIN_SHARE` *before* the group renormalizes, so the
+/// effective post-normalization minimum is
+/// `MIN_SHARE / (1 + MIN_SHARE·(n−1))` for an `n`-tenant group —
+/// slightly under 1% but always strictly positive and bounded away from
+/// zero for any realistic group size. Small enough not to distort
+/// demand-weighted shares; large enough that a floored tenant's slots
+/// stretch by a bounded factor (≈ `100·(1 + MIN_SHARE·(n−1))`), not ∞.
+pub const MIN_SHARE: f64 = 0.01;
 
 /// Hand a preempted slot's freed remainder to the migration's *other*
 /// incoming lease owners: a cancelled slot leaves its old devices idle
@@ -303,6 +329,47 @@ mod tests {
         let a = assign(&s, &[0.0, 0.0, 0.0]);
         for i in 0..3 {
             assert!((a.share[i] - 1.0 / 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_demand_member_of_a_mixed_group_is_never_starved() {
+        // The starvation regression: one device forces both streams into
+        // one group, and the zero-demand member used to get share
+        // 0/1.0 = 0 — an infinitely stretched slot, never scheduled.
+        let s = SystemSpec { n_fpga: 1, n_gpu: 0, ..sys() };
+        let a = assign(&s, &[1.0, 0.0]);
+        assert_eq!(a.part_of[0], a.part_of[1], "one device ⇒ one group");
+        assert!(a.share[1] >= MIN_SHARE / 2.0, "floored share {}", a.share[1]);
+        assert!(a.share[0] > a.share[1], "demand still dominates the split");
+        let total: f64 = a.share.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "renormalized shares sum to {total}");
+
+        // Oversubscribed, several zero-demand members mixed with heavy
+        // peers: every member of every group keeps a live share.
+        let b = assign(&s, &[5.0, 0.0, 3.0, 0.0, 0.0]);
+        for (g, m) in b.members.iter().enumerate() {
+            let sum: f64 = m.iter().map(|&i| b.share[i]).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "group {g} shares sum to {sum}");
+        }
+        for i in 0..5 {
+            assert!(b.share[i] >= MIN_SHARE / 2.0, "stream {i} share {}", b.share[i]);
+        }
+    }
+
+    #[test]
+    fn share_floor_leaves_healthy_groups_bit_identical() {
+        // The floor must be a no-op when every member is already above
+        // it — the demand-proportional shares the rest of the test suite
+        // (and the PR-4 equality bar) depends on.
+        let s = SystemSpec { n_fpga: 2, n_gpu: 1, ..sys() };
+        let demands = vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0];
+        let a = assign(&s, &demands);
+        for (g, m) in a.members.iter().enumerate() {
+            let gd: f64 = m.iter().map(|&i| demands[i]).sum();
+            for &i in m {
+                assert_eq!(a.share[i], demands[i] / gd, "group {g} stream {i} perturbed");
+            }
         }
     }
 

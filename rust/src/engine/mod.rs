@@ -36,7 +36,14 @@
 //!   partitioning: a feedback controller scales each stream's lease
 //!   weight by its observed-vs-target p99, so SLO pressure — not offered
 //!   FLOP rate alone — decides both exclusive partitions and
-//!   oversubscribed time-slice shares.
+//!   oversubscribed time-slice shares. Streams may also carry a hard
+//!   per-request **deadline**: admission runs a feasibility check
+//!   (elapsed queueing + budget wait + modeled batch latency) and
+//!   **sheds** a request that can no longer make it
+//!   ([`EventKind::Shed`]) instead of serving it late or deferring it
+//!   past its bound — and a per-stream [`repartition::MigrationMode`]
+//!   override ties preemption to criticality (critical lanes preempt,
+//!   bulk lanes drain).
 //!
 //! The driver ([`ServingEngine`]) feeds each stream's
 //! [`Coordinator`] (schedule cache included) and emits the
@@ -171,6 +178,12 @@ pub struct EngineMetrics {
     /// the one global clock, so streams are directly comparable (no
     /// per-stream clock skew).
     pub utilization: Vec<f64>,
+    /// Requests shed by the admission-time deadline feasibility check
+    /// ([`slo::StreamSlo::deadline`]): they could no longer finish
+    /// inside their latency bound, so they were dropped instead of
+    /// served late or budget-deferred. Zero when no stream carries a
+    /// deadline.
+    pub sheds: usize,
     /// Admissions deferred by energy-budget exhaustion, summed over
     /// every denial decision (a stream deferred across several window
     /// boundaries counts once per denial). Zero without a budget.
@@ -206,7 +219,8 @@ impl std::fmt::Display for EngineMetrics {
         write!(
             f,
             "{} events, {} repartitions, {} lease migrations, {} preemptions \
-             ({} mid-slot), {}/{} prewarmed, {} time-sliced streams, {} budget deferrals",
+             ({} mid-slot), {}/{} prewarmed, {} time-sliced streams, {} budget deferrals, \
+             {} deadline sheds",
             self.events_processed,
             self.repartitions,
             self.lease_migrations,
@@ -215,7 +229,8 @@ impl std::fmt::Display for EngineMetrics {
             self.prewarm_hits,
             self.prewarm_hits + self.prewarm_misses,
             self.time_sliced_streams,
-            self.deferrals
+            self.deferrals,
+            self.sheds
         )
     }
 }
@@ -282,6 +297,10 @@ struct Lane<'c, 'a, E: PerfEstimator> {
     deferred: bool,
     /// Admission denials the energy budget charged this lane.
     deferrals: usize,
+    /// Requests the deadline feasibility check shed from this lane.
+    shed: usize,
+    /// In-flight slots of this lane cancelled mid-term by migrations.
+    slot_preempts: usize,
 }
 
 /// A lane's final accounting, lifted into the public report types.
@@ -342,6 +361,8 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
             slo_error_sum: 0.0,
             deferred: false,
             deferrals: 0,
+            shed: 0,
+            slot_preempts: 0,
         }
     }
 
@@ -365,6 +386,29 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
     fn pool_share(&self, pool: &SystemSpec) -> f64 {
         let d = (pool.n_fpga + pool.n_gpu) as f64;
         self.share * (self.part.n_fpga + self.part.n_gpu) as f64 / d
+    }
+
+    /// Admission-time estimate of one batch's end-to-end service time on
+    /// the current lease (s): the pending migration drain plus the
+    /// share-stretched slot and pipeline fill of the last ground-truth
+    /// measurement — exactly the terms [`Lane::dispatch`] would charge,
+    /// minus the unknowable reschedule drain. The deadline feasibility
+    /// check adds this to the time already queued (and any budget wait)
+    /// before deciding to shed. Deliberately does **not** consult the
+    /// coordinator: feasibility must not disturb cache statistics or
+    /// reschedule hysteresis, so a lane with no measurement yet (first
+    /// admission, or right after a migration dropped it) contributes
+    /// only its drain — the first batch is admitted optimistically and
+    /// seeds the estimate.
+    fn estimated_batch_latency(&self) -> f64 {
+        let drain = self.pending_drain / self.share;
+        match &self.measured {
+            Some(m) => {
+                let eff_period = m.period / self.share;
+                drain + eff_period.max(1e-12) + m.latency() - m.period
+            }
+            None => drain,
+        }
     }
 
     /// Admit the front request at global time `now`: consult the
@@ -509,7 +553,18 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
             Some(target) => crate::metrics::attainment(&raw_lats, target),
             None => 1.0,
         };
-        let lats = LatencySummary::from_unsorted(raw_lats);
+        let deadline_attainment = match self.slo.deadline {
+            Some(d) => crate::metrics::deadline_attainment(&raw_lats, d, self.shed),
+            None => 1.0,
+        };
+        // A deadline stream can legally shed its *entire* trace (e.g.
+        // starved below a zero-joule budget), leaving no completions to
+        // summarize.
+        let lats = if raw_lats.is_empty() {
+            LatencySummary { p50: 0.0, p90: 0.0, p99: 0.0, mean: 0.0, max: 0.0 }
+        } else {
+            LatencySummary::from_unsorted(raw_lats)
+        };
         let partition = if self.share < 1.0 {
             format!("{}F{}G@{:.0}%", self.part.n_fpga, self.part.n_gpu, self.share * 100.0)
         } else {
@@ -521,7 +576,7 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
             report: ServeReport {
                 completed,
                 makespan,
-                throughput: completed as f64 / makespan,
+                throughput: if makespan > 0.0 { completed as f64 / makespan } else { 0.0 },
                 mean_latency: lats.mean,
                 p50_latency: lats.p50,
                 p90_latency: lats.p90,
@@ -531,7 +586,10 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
                 reschedule_downtime: self.downtime,
                 energy: self.energy,
                 slo_attainment,
+                deadline_attainment,
+                shed: self.shed,
                 deferrals: self.deferrals,
+                slot_preemptions: self.slot_preempts,
                 cache: self.cache,
                 completions: self.completions,
             },
@@ -541,10 +599,11 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
 
 /// Whether the energy budget admits a dispatch for `stream` right now:
 /// always, while the open window has joules left; once exhausted, only
-/// when no *unfinished* stream (one that has not yet dispatched its whole
-/// trace) holds strictly higher priority. The top pending class is
-/// work-conserving, so the loop always makes progress — even a zero-joule
-/// budget serves everything eventually, in priority order.
+/// when no *unfinished* stream (one that has not yet dispatched — or
+/// shed — its whole trace) holds strictly higher priority. The top
+/// pending class is work-conserving, so the loop always makes progress —
+/// even a zero-joule budget serves everything eventually, in priority
+/// order.
 fn admission_allowed<E: PerfEstimator>(
     ledger: &Option<BudgetLedger>,
     lanes: &[Lane<'_, '_, E>],
@@ -556,12 +615,28 @@ fn admission_allowed<E: PerfEstimator>(
         return true;
     }
     let p = lanes[stream].slo.priority;
-    lanes.iter().zip(traces).all(|(l, t)| l.completions.len() >= t.len() || l.slo.priority <= p)
+    lanes
+        .iter()
+        .zip(traces)
+        .all(|(l, t)| l.completions.len() + l.shed >= t.len() || l.slo.priority <= p)
 }
 
 /// Admit the front of `stream`'s queue if the energy budget allows it
 /// (charging the ledger), or mark the lane deferred — the one admission
-/// path shared by the arrival, completion, and window-tick handlers.
+/// path shared by the arrival, completion, window-tick, preemption, and
+/// shed handlers.
+///
+/// When the stream carries a [`StreamSlo::deadline`], admission runs a
+/// **feasibility check** first: the front request's elapsed queueing
+/// time, plus the budget wait a denial would impose (at least until
+/// `next_budget_tick`), plus the lane's modeled batch latency
+/// ([`Lane::estimated_batch_latency`]) must fit inside the deadline —
+/// otherwise the request is **shed** via an [`EventKind::Shed`] event at
+/// the current timestamp and neither dispatched nor deferred. The shed
+/// handler settles the accounting and re-enters this function for the
+/// next queued request, so a backlog of infeasible requests drains as a
+/// same-time event cascade.
+#[allow(clippy::too_many_arguments)]
 fn try_admit<E: PerfEstimator>(
     stream: usize,
     now: f64,
@@ -570,8 +645,27 @@ fn try_admit<E: PerfEstimator>(
     ledger: &mut Option<BudgetLedger>,
     q: &mut EventQueue,
     remaining: &mut usize,
+    next_budget_tick: Option<f64>,
 ) {
-    if admission_allowed(&*ledger, lanes, traces, stream) {
+    let allowed = admission_allowed(&*ledger, lanes, traces, stream);
+    let front = lanes[stream].queue.front().copied();
+    if let (Some(deadline), Some(idx)) = (lanes[stream].slo.deadline, front) {
+        let elapsed = now - traces[stream][idx].arrival;
+        // A denied admission waits at least until the next window tick;
+        // the true wait can be longer (the refilled window may still
+        // defer this class), so this is a conservative lower bound — if
+        // even it blows the deadline, the request can never make it.
+        let budget_wait = match next_budget_tick {
+            Some(t) if !allowed => (t - now).max(0.0),
+            _ => 0.0,
+        };
+        if elapsed + budget_wait + lanes[stream].estimated_batch_latency() > deadline {
+            lanes[stream].queue.pop_front();
+            q.push(now, EventKind::Shed { stream, index: idx });
+            return; // the Shed handler re-considers the next request
+        }
+    }
+    if allowed {
         lanes[stream].deferred = false;
         let joules = lanes[stream].dispatch(traces[stream], stream, now, q);
         if let Some(led) = ledger.as_mut() {
@@ -637,6 +731,9 @@ fn run_event_loop<E: PerfEstimator>(
         q.push(b.window, EventKind::BudgetWindowTick);
         BudgetLedger::new(b)
     });
+    // The next BudgetWindowTick's timestamp — the wait a budget denial
+    // imposes, which the deadline feasibility check prices in.
+    let mut next_tick = cfg.energy_budget.as_ref().map(|b| b.window);
 
     while remaining > 0 {
         let ev = q.pop().expect("pending requests imply pending events");
@@ -647,7 +744,16 @@ fn run_event_loop<E: PerfEstimator>(
                 lane.queue.push_back(index);
                 lane.max_queue = lane.max_queue.max(lane.queue.len());
                 if !lanes[stream].busy() {
-                    try_admit(stream, now, lanes, traces, &mut ledger, &mut q, &mut remaining);
+                    try_admit(
+                        stream,
+                        now,
+                        lanes,
+                        traces,
+                        &mut ledger,
+                        &mut q,
+                        &mut remaining,
+                        next_tick,
+                    );
                 }
             }
             EventKind::BatchComplete { stream, epoch } => {
@@ -665,7 +771,16 @@ fn run_event_loop<E: PerfEstimator>(
                     lane.completions.last().expect("completion recorded at dispatch").latency();
                 lane.p99.observe(latency);
                 if !lanes[stream].queue.is_empty() {
-                    try_admit(stream, now, lanes, traces, &mut ledger, &mut q, &mut remaining);
+                    try_admit(
+                        stream,
+                        now,
+                        lanes,
+                        traces,
+                        &mut ledger,
+                        &mut q,
+                        &mut remaining,
+                        next_tick,
+                    );
                 }
             }
             EventKind::Preempt { stream } => {
@@ -674,7 +789,37 @@ fn run_event_loop<E: PerfEstimator>(
                 // deferred if the budget objects — it resumes at the next
                 // window tick like any deferred lane).
                 if !lanes[stream].busy() && !lanes[stream].queue.is_empty() {
-                    try_admit(stream, now, lanes, traces, &mut ledger, &mut q, &mut remaining);
+                    try_admit(
+                        stream,
+                        now,
+                        lanes,
+                        traces,
+                        &mut ledger,
+                        &mut q,
+                        &mut remaining,
+                        next_tick,
+                    );
+                }
+            }
+            EventKind::Shed { stream, .. } => {
+                // Settle a deadline shed: the request already left the
+                // queue when the feasibility check rejected it; count it
+                // and let the lane consider its next queued request at
+                // the same timestamp (which may shed again — a stale
+                // backlog drains as an event cascade).
+                lanes[stream].shed += 1;
+                remaining -= 1;
+                if !lanes[stream].busy() && !lanes[stream].queue.is_empty() {
+                    try_admit(
+                        stream,
+                        now,
+                        lanes,
+                        traces,
+                        &mut ledger,
+                        &mut q,
+                        &mut remaining,
+                        next_tick,
+                    );
                 }
             }
             EventKind::RepartitionTick => {
@@ -721,8 +866,19 @@ fn run_event_loop<E: PerfEstimator>(
                     let (pa, pb) = (lanes[a].slo.priority, lanes[b].slo.priority);
                     pb.partial_cmp(&pa).expect("finite priorities").then(a.cmp(&b))
                 });
+                // Price future denials against the *next* boundary.
+                next_tick = Some(now + window);
                 for s in order {
-                    try_admit(s, now, lanes, traces, &mut ledger, &mut q, &mut remaining);
+                    try_admit(
+                        s,
+                        now,
+                        lanes,
+                        traces,
+                        &mut ledger,
+                        &mut q,
+                        &mut remaining,
+                        next_tick,
+                    );
                 }
                 if remaining > 0 {
                     q.push(now + window, EventKind::BudgetWindowTick);
@@ -735,6 +891,7 @@ fn run_event_loop<E: PerfEstimator>(
         metrics.budget_windows = metrics.window_joules.len();
     }
     metrics.deferrals = lanes.iter().map(|l| l.deferrals).sum();
+    metrics.sheds = lanes.iter().map(|l| l.shed).sum();
     metrics.events_processed = q.processed();
     metrics
 }
@@ -748,7 +905,10 @@ fn run_event_loop<E: PerfEstimator>(
 /// entirely, so its devices return to the survivors (down to a sole
 /// survivor inheriting the whole pool).
 ///
-/// Per migrating stream the policy's [`repartition::MigrationMode`]
+/// Per migrating stream the effective [`repartition::MigrationMode`] —
+/// the stream's own [`StreamSlo::migration`] override when set, the
+/// policy mode otherwise, so a latency-critical lane can preempt while a
+/// bulk lane in the same repartition drains —
 /// decides what happens to an in-flight slot: *drain* lets it finish on
 /// the old lease (the migration takes effect at the next admission);
 /// *preempt* cancels it mid-term when enough of it is left, refunds the
@@ -773,8 +933,11 @@ fn maybe_migrate<E: PerfEstimator>(
     metrics: &mut EngineMetrics,
 ) {
     let pol = cfg.repartition.as_ref().expect("maybe_migrate requires a policy");
+    // "Active" = still has trace left to dispatch; shed requests count as
+    // disposed of, so a fully-shed stream hands its devices back exactly
+    // like a finished one.
     let active: Vec<usize> = (0..lanes.len())
-        .filter(|&i| lanes[i].completions.len() < traces[i].len())
+        .filter(|&i| lanes[i].completions.len() + lanes[i].shed < traces[i].len())
         .collect();
     if active.is_empty() {
         return; // the run is draining its final in-flight slots
@@ -809,11 +972,15 @@ fn maybe_migrate<E: PerfEstimator>(
             if lane.busy() || !lane.queue.is_empty() {
                 metrics.preemptions += 1;
             }
-            if let repartition::MigrationMode::Preempt { min_remaining } = pol.migration {
+            // Criticality-tied preemption: the stream's own migration
+            // mode wins over the policy default when set.
+            let mode = lane.slo.migration.unwrap_or(pol.migration);
+            if let repartition::MigrationMode::Preempt { min_remaining } = mode {
                 if let Some((slot, remainder, joules)) = lane.try_preempt(now, min_remaining) {
                     *remaining += 1; // the cancelled batch re-dispatches
                     freed += remainder;
                     preempted.push(s);
+                    lane.slot_preempts += 1;
                     metrics.slot_preemptions += 1;
                     metrics.slot_time_refunded += remainder;
                     metrics.joules_refunded += joules;

@@ -24,6 +24,12 @@
 /// How a migration treats a stream's in-flight admission slot — the
 /// per-migration choice between PR-2's drain semantics and true mid-slot
 /// preemption.
+///
+/// The [`RepartitionPolicy::migration`] field is only the *default*: a
+/// stream may pin its own mode via
+/// [`super::slo::StreamSlo::migration`], so one repartition can preempt
+/// a latency-critical lane while a bulk lane drains (criticality-tied
+/// handoff, HTS-style).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub enum MigrationMode {
     /// The in-flight slot finishes on the old lease; the migration takes
@@ -64,7 +70,8 @@ pub struct RepartitionPolicy {
     /// Minimum total-variation shift of the pool-share vector before a
     /// migration is worth its drain cost.
     pub hysteresis: f64,
-    /// What happens to a migrating stream's in-flight slot.
+    /// What happens to a migrating stream's in-flight slot, unless the
+    /// stream overrides it ([`super::slo::StreamSlo::migration`]).
     pub migration: MigrationMode,
 }
 

@@ -6,8 +6,18 @@
 //! [`crate::coordinator::StreamSpec`] now carries a [`StreamSlo`]:
 //!
 //! * `p99_target` — the stream's tail-latency SLO (s), if any;
+//! * `deadline` — a hard per-request latency bound (s), if any: a request
+//!   that can no longer finish inside it is **shed** at admission time
+//!   instead of served late or budget-deferred (the engine's feasibility
+//!   check, see `engine/mod.rs`) — the "shed instead of defer" SLO class
+//!   the p99 feedback controller cannot express;
 //! * `priority` — the QoS class the energy-budget deferral orders by
-//!   ([`super::budget`]), and a static multiplier on lease weight.
+//!   ([`super::budget`]), and a static multiplier on lease weight;
+//! * `migration` — an optional per-stream override of the repartition
+//!   policy's [`MigrationMode`]: a latency-critical lane can preempt its
+//!   in-flight slot at migration while a bulk lane on the same policy
+//!   drains, tying handoff aggressiveness to task criticality the way
+//!   HTS does.
 //!
 //! The [`SloController`] closes the loop: at every lease re-validation
 //! the engine computes each stream's observed p99 (from its completions,
@@ -30,6 +40,7 @@
 //! exactly 1 and the engine is bit-identical to the demand-only
 //! partitioning.
 
+use super::repartition::MigrationMode;
 use crate::metrics::percentile;
 
 /// One stream's service-level objective.
@@ -38,23 +49,35 @@ pub struct StreamSlo {
     /// Tail-latency target (s): the stream wants `p99 <= p99_target`.
     /// `None` means best-effort (no latency feedback).
     pub p99_target: Option<f64>,
+    /// Hard per-request latency bound (s): a request that cannot finish
+    /// within `deadline` of its arrival is shed at admission instead of
+    /// served late (and instead of being budget-deferred past its bound).
+    /// `None` means no request is ever shed — the historical behavior.
+    pub deadline: Option<f64>,
     /// QoS priority, higher is more important. Strictly lower-priority
     /// streams are deferred first when the energy budget is exhausted,
     /// and lease weight scales linearly with priority.
     pub priority: f64,
+    /// Per-stream override of the repartition policy's migration mode:
+    /// `Some(Preempt { .. })` lets this lane cancel its in-flight slot at
+    /// a migration even under a drain-mode policy (and `Some(Drain)`
+    /// pins a bulk lane to draining under a preemptive policy). `None`
+    /// inherits [`super::repartition::RepartitionPolicy::migration`].
+    pub migration: Option<MigrationMode>,
 }
 
 impl Default for StreamSlo {
-    /// Best-effort, unit priority — the weight-neutral SLO every legacy
-    /// scenario implicitly ran with.
+    /// Best-effort, unit priority, no deadline, policy-default migration
+    /// — the weight-neutral SLO every legacy scenario implicitly ran
+    /// with.
     fn default() -> Self {
-        StreamSlo { p99_target: None, priority: 1.0 }
+        StreamSlo { p99_target: None, deadline: None, priority: 1.0, migration: None }
     }
 }
 
 impl StreamSlo {
     pub fn new(p99_target: Option<f64>, priority: f64) -> StreamSlo {
-        let slo = StreamSlo { p99_target, priority };
+        let slo = StreamSlo { p99_target, priority, ..StreamSlo::default() };
         slo.validate();
         slo
     }
@@ -68,6 +91,15 @@ impl StreamSlo {
     pub fn validate(&self) {
         if let Some(t) = self.p99_target {
             assert!(t > 0.0 && t.is_finite(), "non-positive p99 target {t}");
+        }
+        if let Some(d) = self.deadline {
+            assert!(d > 0.0 && d.is_finite(), "non-positive deadline {d}");
+        }
+        if let Some(MigrationMode::Preempt { min_remaining }) = self.migration {
+            assert!(
+                min_remaining >= 0.0 && min_remaining.is_finite(),
+                "bad per-stream min_remaining {min_remaining}"
+            );
         }
         assert!(
             self.priority > 0.0 && self.priority.is_finite(),
@@ -84,6 +116,23 @@ impl StreamSlo {
     /// No latency target, just a QoS priority.
     pub fn best_effort(priority: f64) -> StreamSlo {
         StreamSlo::new(None, priority)
+    }
+
+    /// Attach a hard per-request deadline (s, relative to arrival):
+    /// requests that cannot meet it are shed at admission.
+    pub fn with_deadline(mut self, deadline: f64) -> StreamSlo {
+        self.deadline = Some(deadline);
+        self.validate();
+        self
+    }
+
+    /// Override the repartition policy's migration mode for this stream
+    /// alone (criticality-tied preemption: critical lanes preempt, bulk
+    /// lanes drain, whatever the policy default says).
+    pub fn with_migration(mut self, mode: MigrationMode) -> StreamSlo {
+        self.migration = Some(mode);
+        self.validate();
+        self
     }
 }
 
@@ -117,11 +166,25 @@ pub struct SloController {
     /// within a bounded number of re-validations once the violation
     /// clears instead of unwinding a run-length's worth of history.
     pub integral_clamp: f64,
+    /// Fraction of the error accumulator retained by a re-validation
+    /// *without* a p99 observation, in [0, 1]. Without this decay a lane
+    /// that went idle (or observation-less) right after violating kept
+    /// its full integral pressure indefinitely — the accumulator was
+    /// only ever touched when an observation existed. 1.0 reproduces
+    /// that (buggy) hold; the 0.5 default halves the stale pressure per
+    /// idle re-validation, so it unwinds in a handful of lease terms.
+    pub idle_decay: f64,
 }
 
 impl Default for SloController {
     fn default() -> Self {
-        SloController { gain: 1.0, max_boost: 4.0, integral_gain: 0.0, integral_clamp: 8.0 }
+        SloController {
+            gain: 1.0,
+            max_boost: 4.0,
+            integral_gain: 0.0,
+            integral_clamp: 8.0,
+            idle_decay: 0.5,
+        }
     }
 }
 
@@ -138,6 +201,11 @@ impl SloController {
             self.integral_clamp >= 0.0 && self.integral_clamp.is_finite(),
             "negative or non-finite integral_clamp {}",
             self.integral_clamp
+        );
+        assert!(
+            (0.0..=1.0).contains(&self.idle_decay),
+            "idle_decay {} outside [0, 1]",
+            self.idle_decay
         );
     }
 
@@ -164,6 +232,11 @@ impl SloController {
     /// + integral). With `integral_gain = 0` (the default) the
     /// accumulator still updates but contributes nothing — bit-identical
     /// to [`SloController::weight`] in that case.
+    ///
+    /// A re-validation **without** an observation decays the accumulator
+    /// by [`SloController::idle_decay`] instead of freezing it: a lane
+    /// that violated and then went observation-less must not carry its
+    /// full integral pressure forever.
     pub fn weight_integrating(
         &self,
         slo: &StreamSlo,
@@ -178,7 +251,10 @@ impl SloController {
                 ((p99 / target).powf(self.gain) + self.integral_gain * *error_sum)
                     .clamp(1.0 / self.max_boost, self.max_boost)
             }
-            _ => 1.0,
+            _ => {
+                *error_sum *= self.idle_decay;
+                1.0
+            }
         };
         slo.priority * pressure
     }
@@ -297,9 +373,52 @@ mod tests {
     }
 
     #[test]
+    fn idle_revalidations_decay_the_accumulator() {
+        // The windup-across-idle-gaps regression: violate hard enough to
+        // saturate the accumulator, then re-validate without observations
+        // (the lane went idle). The accumulator — and with it the
+        // integral boost — must decay back toward neutral instead of
+        // holding the stale pressure indefinitely.
+        let c = SloController { integral_gain: 1.0, integral_clamp: 2.0, ..Default::default() };
+        let slo = StreamSlo::target(0.100, 1.0);
+        let mut acc = 0.0;
+        for _ in 0..50 {
+            c.weight_integrating(&slo, Some(1.0), &mut acc);
+        }
+        assert!((acc - 2.0).abs() < 1e-12, "saturated at the clamp: {acc}");
+        for k in 1..=10 {
+            let w = c.weight_integrating(&slo, None, &mut acc);
+            assert_eq!(w, 1.0, "no observation, no pressure");
+            let expect = 2.0 * c.idle_decay.powi(k);
+            assert!((acc - expect).abs() < 1e-12, "idle step {k}: acc {acc} vs {expect}");
+        }
+        assert!(acc < 0.01, "ten idle re-validations must erase the windup: {acc}");
+        // Back under observation at the target: the weight is neutral
+        // immediately, not after unwinding a run-length of history.
+        let w = c.weight_integrating(&slo, Some(0.100), &mut acc);
+        assert!(w < 1.01, "recovered lane must weigh ~priority: {w}");
+    }
+
+    #[test]
+    fn idle_decay_of_one_reproduces_the_frozen_accumulator() {
+        let c = SloController { integral_gain: 1.0, idle_decay: 1.0, ..Default::default() };
+        let slo = StreamSlo::target(0.100, 1.0);
+        let mut acc = 1.5;
+        c.weight_integrating(&slo, None, &mut acc);
+        assert_eq!(acc, 1.5, "decay 1.0 is the historical freeze");
+    }
+
+    #[test]
     #[should_panic(expected = "integral_gain")]
     fn rejects_negative_integral_gain() {
         let c = SloController { integral_gain: -0.1, ..Default::default() };
+        c.weight(&StreamSlo::default(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "idle_decay")]
+    fn rejects_out_of_range_idle_decay() {
+        let c = SloController { idle_decay: 1.5, ..Default::default() };
         c.weight(&StreamSlo::default(), None);
     }
 
@@ -320,12 +439,37 @@ mod tests {
     #[should_panic(expected = "non-positive priority")]
     fn validate_catches_struct_literal_nan_priority() {
         // The fields are public; the engine re-validates at serve time.
-        StreamSlo { p99_target: None, priority: f64::NAN }.validate();
+        StreamSlo { priority: f64::NAN, ..Default::default() }.validate();
     }
 
     #[test]
     #[should_panic(expected = "non-positive p99 target")]
     fn rejects_zero_target() {
         StreamSlo::target(0.0, 1.0);
+    }
+
+    #[test]
+    fn deadline_and_migration_ride_along_as_options() {
+        let slo = StreamSlo::target(0.050, 2.0)
+            .with_deadline(0.250)
+            .with_migration(MigrationMode::Preempt { min_remaining: 0.01 });
+        assert_eq!(slo.deadline, Some(0.250));
+        assert_eq!(slo.migration, Some(MigrationMode::Preempt { min_remaining: 0.01 }));
+        assert_eq!(slo.p99_target, Some(0.050), "the p99 target is untouched");
+        let plain = StreamSlo::default();
+        assert!(plain.deadline.is_none() && plain.migration.is_none(), "both default off");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive deadline")]
+    fn rejects_zero_deadline() {
+        StreamSlo::default().with_deadline(0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "min_remaining")]
+    fn validate_catches_nan_per_stream_preemption_threshold() {
+        let mode = MigrationMode::Preempt { min_remaining: f64::NAN };
+        StreamSlo { migration: Some(mode), ..Default::default() }.validate();
     }
 }

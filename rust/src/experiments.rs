@@ -10,7 +10,7 @@
 use crate::config::{Interconnect, Objective, SystemSpec};
 use crate::coordinator::{generate_trace, MultiStreamReport, MultiStreamServer, StreamSpec};
 use crate::devices::GroundTruth;
-use crate::engine::{EnergyBudget, EngineConfig, RepartitionPolicy, StreamSlo};
+use crate::engine::{EnergyBudget, EngineConfig, MigrationMode, RepartitionPolicy, StreamSlo};
 use crate::perfmodel::{calibrate, ModelRegistry, OracleModels, PerfEstimator};
 use crate::pipeline::PipelineSim;
 use crate::scheduler::{baselines, evaluate_plan, DpScheduler, PowerTable, StagePlan};
@@ -327,6 +327,69 @@ pub fn energy_slo_config(cap_watts: f64) -> EngineConfig {
     }
 }
 
+/// The canonical **deadline** serving scenario (DESIGN.md §Energy &
+/// SLOs): mixed deadline and best-effort classes on one pool, built to
+/// exercise both halves of deadline-aware admission —
+///
+/// * **deadline-interactive** — light batches offered well above the
+///   stream's service capacity, with a hard 250 ms deadline (and a
+///   150 ms p99 target for the feedback controller): once the backlog
+///   pushes a request's queueing time past feasibility it is **shed** at
+///   admission instead of served stale, so the lane's latency stays
+///   bounded while its deadline attainment reports the drop rate. Its
+///   [`StreamSlo::migration`] override is `Preempt` — the critical lane
+///   takes its new lease immediately at a migration;
+/// * **front-loaded / back-loaded** — the phase-reversed best-effort
+///   pair from [`skewed_pair_scenario`]: near-equal offered totals,
+///   wildly uneven halves, so the demand tracker migrates leases
+///   mid-run. No per-stream override — they follow the policy mode;
+/// * **bulk-drain** — steady heavy batches at the lowest priority with
+///   an explicit `Drain` override: even under a preemptive policy
+///   ([`deadline_config`]) this lane always finishes its in-flight slot,
+///   demonstrating criticality-tied preemption in the same repartition
+///   that preempts its peers.
+pub fn deadline_scenario(per_phase: usize, seed: u64) -> Vec<StreamSpec> {
+    assert!(per_phase >= 1);
+    let traffic = |edges: u64| {
+        let ds = Dataset::new("TF", "traffic", 1_000_000, edges, 200, 0.2);
+        gnn::gcn_workload(&ds, 2, 128)
+    };
+    let heavy = traffic(150_000_000);
+    let light = traffic(2_000_000);
+    let interactive = generate_trace(&[(light.clone(), 6 * per_phase)], 40.0, seed);
+    let front =
+        generate_trace(&[(heavy.clone(), per_phase), (light.clone(), per_phase)], 10.0, seed + 1);
+    let back = generate_trace(&[(light, per_phase), (heavy.clone(), per_phase)], 10.0, seed + 2);
+    let bulk = generate_trace(&[(heavy, per_phase)], 4.0, seed + 3);
+    vec![
+        StreamSpec::new("deadline-interactive", Objective::Performance, interactive).with_slo(
+            StreamSlo::target(0.150, 3.0)
+                .with_deadline(0.250)
+                .with_migration(MigrationMode::Preempt { min_remaining: 0.005 }),
+        ),
+        StreamSpec::new("front-loaded", Objective::Performance, front)
+            .with_slo(StreamSlo::best_effort(2.0)),
+        StreamSpec::new("back-loaded", Objective::Performance, back)
+            .with_slo(StreamSlo::best_effort(2.0)),
+        StreamSpec::new("bulk-drain", Objective::Performance, bulk)
+            .with_slo(StreamSlo::best_effort(1.0).with_migration(MigrationMode::Drain)),
+    ]
+}
+
+/// The engine configuration [`deadline_scenario`] is meant to run under:
+/// the preemptive re-partitioning policy (policy-level mode `Preempt`,
+/// so unmarked lanes preempt and the `bulk-drain` override visibly
+/// dissents), no energy budget — deadline sheds are a *latency*
+/// mechanism and must show up without budget interference. Pair with an
+/// [`EnergyBudget`] to see infeasible requests shed instead of
+/// budget-deferred.
+pub fn deadline_config() -> EngineConfig {
+    EngineConfig {
+        repartition: Some(RepartitionPolicy::preemptive(1.0)),
+        ..EngineConfig::default()
+    }
+}
+
 /// Reference workload for static-plan tuning: same model family on the
 /// paper's reference configuration (ogbn-arxiv for GNNs; the mid-grid
 /// point for transformers).
@@ -406,6 +469,30 @@ mod tests {
         let budget = cfg.energy_budget.expect("budgeted config");
         assert!((budget.joules_per_window - 250.0 * 0.25).abs() < 1e-9);
         assert!(cfg.repartition.is_some(), "SLO weights need lease re-validation to act");
+    }
+
+    #[test]
+    fn deadline_scenario_mixes_classes_and_overrides() {
+        let streams = deadline_scenario(8, 23);
+        assert_eq!(streams.len(), 4);
+        let interactive = &streams[0].slo;
+        assert_eq!(interactive.deadline, Some(0.250), "the critical lane carries the deadline");
+        assert_eq!(interactive.migration, Some(MigrationMode::Preempt { min_remaining: 0.005 }));
+        assert!(interactive.p99_target.is_some(), "deadline and p99 target coexist");
+        assert!(
+            streams[1].slo.migration.is_none() && streams[2].slo.migration.is_none(),
+            "the skewed pair follows the policy mode"
+        );
+        assert_eq!(streams[3].slo.migration, Some(MigrationMode::Drain), "bulk pins drain");
+        assert!(streams[3].slo.deadline.is_none(), "best-effort lanes shed nothing");
+        assert!(interactive.priority > streams[1].slo.priority);
+        // Offered rate far above any single-device service capacity, so
+        // the backlog (and with it the shed path) is guaranteed.
+        assert!(streams[0].offered_rate() > 25.0, "rate {}", streams[0].offered_rate());
+        let cfg = deadline_config();
+        let pol = cfg.repartition.expect("deadline serving re-partitions");
+        assert!(matches!(pol.migration, MigrationMode::Preempt { .. }), "policy mode preempts");
+        assert!(cfg.energy_budget.is_none(), "sheds are a latency mechanism, not a budget one");
     }
 
     #[test]

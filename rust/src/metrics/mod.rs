@@ -59,7 +59,12 @@ impl LatencySummary {
 /// — which is what lets the serving engine observe a long-running
 /// stream's p99 at every lease re-validation without re-sorting its
 /// whole completion record (the [`crate::engine::slo`] controller's
-/// measurement side). Exact (nearest-rank) below five observations.
+/// measurement side). Exact (nearest-rank) until the five P² markers
+/// are fully seeded — i.e. through the fifth observation; the marker
+/// heights only start tracking the target quantile from the sixth
+/// observation on, and the middle marker of a freshly seeded estimator
+/// is the sample *median*, which for p = 0.99 would briefly report the
+/// median as the tail.
 #[derive(Debug, Clone)]
 pub struct P2Quantile {
     p: f64,
@@ -153,11 +158,14 @@ impl P2Quantile {
     }
 
     /// The current estimate: `None` before any observation, exact
-    /// nearest-rank below five, the P² marker from there on.
+    /// nearest-rank while the markers are still seeding (count ≤ 5 — at
+    /// exactly five the markers hold the sorted sample but have not been
+    /// adjusted yet, so `q[2]` would be the *median*, not the target
+    /// quantile), the P² marker from the sixth observation on.
     pub fn value(&self) -> Option<f64> {
         match self.count {
             0 => None,
-            c if c < 5 => {
+            c if c <= 5 => {
                 let mut s = self.init[..c].to_vec();
                 s.sort_by(|a, b| a.partial_cmp(b).unwrap());
                 Some(percentile(&s, self.p))
@@ -185,6 +193,19 @@ pub fn attainment(latencies: &[f64], target: f64) -> f64 {
         return 1.0;
     }
     latencies.iter().filter(|&&l| l <= target).count() as f64 / latencies.len() as f64
+}
+
+/// Deadline attainment over a stream's whole admission population:
+/// completions at or under `deadline`, divided by completions *plus*
+/// `shed` requests — a request the engine shed at admission missed its
+/// deadline by definition, so unlike [`attainment`] the denominator
+/// counts it. 1.0 for an empty population.
+pub fn deadline_attainment(latencies: &[f64], deadline: f64, shed: usize) -> f64 {
+    let n = latencies.len() + shed;
+    if n == 0 {
+        return 1.0;
+    }
+    latencies.iter().filter(|&&l| l <= deadline).count() as f64 / n as f64
 }
 
 /// Simple fixed-width console table writer for the bench harnesses.
@@ -308,6 +329,53 @@ mod tests {
         let mut sorted = vec![3.0, 1.0, 2.0];
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(est.value(), Some(percentile(&sorted, 0.99)));
+    }
+
+    #[test]
+    fn p2_cold_start_is_exact_at_every_seed_count() {
+        // The cold-start regression: for a tail quantile every estimate
+        // during marker seeding must be the exact nearest-rank
+        // percentile of the samples seen so far — at 1, 2, 3, 4 AND 5
+        // observations. At exactly five the markers are seeded but
+        // unadjusted, so the naive `q[2]` readout would report the
+        // *median* of the first five (here 3.0) as the p99.
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        for p in [0.5, 0.9, 0.99] {
+            let mut est = P2Quantile::new(p);
+            for (i, &x) in xs.iter().enumerate() {
+                est.observe(x);
+                let mut sorted = xs[..=i].to_vec();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let exact = percentile(&sorted, p);
+                assert_eq!(
+                    est.value(),
+                    Some(exact),
+                    "p={p}: estimate after {} samples must be exact",
+                    i + 1
+                );
+            }
+        }
+        // In particular the 5-sample p99 is the max, not the median.
+        let mut est = P2Quantile::new(0.99);
+        for &x in &xs {
+            est.observe(x);
+        }
+        assert_eq!(est.value(), Some(5.0), "seeded-but-unadjusted markers must not leak q[2]");
+    }
+
+    #[test]
+    fn p2_single_sample_estimates_that_sample() {
+        let mut est = P2Quantile::new(0.99);
+        est.observe(0.042);
+        assert_eq!(est.value(), Some(0.042));
+    }
+
+    #[test]
+    fn deadline_attainment_counts_shed_requests_as_misses() {
+        assert_eq!(deadline_attainment(&[], 0.1, 0), 1.0, "vacuous population");
+        assert_eq!(deadline_attainment(&[0.05, 0.2], 0.1, 0), 0.5, "no sheds: plain attainment");
+        assert_eq!(deadline_attainment(&[0.05, 0.05], 0.1, 2), 0.5, "sheds dilute the numerator");
+        assert_eq!(deadline_attainment(&[], 0.1, 3), 0.0, "all shed, nothing attained");
     }
 
     #[test]

@@ -38,6 +38,22 @@
 //! * **Preemption refunds** — mid-slot preemption refunds unexecuted
 //!   time and `f_eng` joules to the charging budget window, preserving
 //!   Σ window_joules == Σ charged − Σ refunded with no negative window.
+//!
+//! Plus the deadline-aware admission suite (ISSUE 5):
+//!
+//! * **Shed at admission** — an overloaded deadline stream sheds the
+//!   requests that can no longer meet their bound instead of serving
+//!   them late; nothing is lost (completed + shed == offered) and
+//!   deadline attainment is reported per stream.
+//! * **Shed, never budget-deferred** — under a zero-joule budget an
+//!   infeasible deadline request is shed the moment the budget wait
+//!   blows its bound, instead of deferring forever.
+//! * **Per-stream migration modes** — a `Drain` override pins a bulk
+//!   lane to draining under a preemptive policy (and vice versa), so
+//!   preemption follows stream criticality, not just the policy.
+//! * **Neutral knobs are inert** — streams with no deadline and no
+//!   per-stream mode (or with explicitly neutral settings) are
+//!   bit-identical to the PR-4 adaptive default.
 
 use dype::config::{Interconnect, Objective, SystemSpec};
 use dype::coordinator::server::{generate_trace, serve_trace, RESCHEDULE_DRAIN_COST};
@@ -47,8 +63,9 @@ use dype::engine::{
     EnergyBudget, EngineConfig, MigrationMode, RepartitionPolicy, ServingEngine, StreamSlo,
 };
 use dype::experiments::{
-    energy_slo_config, energy_slo_scenario, multi_stream_scenario, run_multi_stream,
-    run_multi_stream_static, run_multi_stream_with, skewed_pair_scenario,
+    deadline_config, deadline_scenario, energy_slo_config, energy_slo_scenario,
+    multi_stream_scenario, run_multi_stream, run_multi_stream_static, run_multi_stream_with,
+    skewed_pair_scenario,
 };
 use dype::perfmodel::{OracleModels, PerfEstimator};
 use dype::scheduler::{evaluate_plan, PowerTable, Schedule, ScheduleCache};
@@ -400,6 +417,215 @@ fn preemptive_and_drain_migrations_agree_on_what_completes() {
     // total energy is at least the drain run's minus nothing — and both
     // stay positive.
     assert!(preempt.total_energy > 0.0 && drain.total_energy > 0.0);
+}
+
+// ---- deadline-aware admission + per-stream preemption (ISSUE 5) -------
+
+#[test]
+fn deadline_scenario_sheds_infeasible_requests_and_splits_migration_modes() {
+    // The canonical mixed-class scenario: the overloaded interactive
+    // lane must shed (its 40 req/s cannot fit a 250 ms deadline on its
+    // slice of the pool), best-effort lanes must be untouched by the
+    // deadline machinery, and the per-stream migration overrides must
+    // hold — the bulk lane never cancels a slot even though the policy
+    // mode is Preempt.
+    let s = sys();
+    let streams = deadline_scenario(12, 101);
+    let offered: usize = streams.iter().map(|t| t.trace.len()).sum();
+    let r = run_multi_stream_with(&s, &streams, deadline_config());
+
+    assert_eq!(
+        r.total_completed + r.engine.sheds,
+        offered,
+        "every request either completes or is shed — none lost"
+    );
+    let interactive = &r.streams[0].report;
+    assert!(interactive.shed >= 1, "overload must shed: {}", r.engine);
+    assert_eq!(interactive.shed + interactive.completed, streams[0].trace.len());
+    assert!(
+        (0.0..1.0).contains(&interactive.deadline_attainment),
+        "sheds must show up in deadline attainment: {}",
+        interactive.deadline_attainment
+    );
+    // Every served-and-on-time completion is inside the bound, so the
+    // reported fraction is consistent with the raw completions.
+    let met = interactive
+        .completions
+        .iter()
+        .filter(|c| c.latency() <= streams[0].slo.deadline.unwrap())
+        .count();
+    let expect = met as f64 / (interactive.completed + interactive.shed) as f64;
+    assert!((interactive.deadline_attainment - expect).abs() < 1e-12);
+    for sr in &r.streams[1..] {
+        assert_eq!(sr.report.shed, 0, "{} has no deadline, nothing to shed", sr.name);
+        assert_eq!(sr.report.deadline_attainment, 1.0, "{}: vacuous attainment", sr.name);
+        assert_eq!(sr.report.completed, sr.report.completions.len());
+    }
+    // Criticality-tied preemption: the preemptive policy must cancel at
+    // least one slot somewhere, the Drain-pinned bulk lane none, and the
+    // engine total must be exactly the per-stream sum.
+    assert!(r.engine.slot_preemptions >= 1, "preemptive policy never preempted: {}", r.engine);
+    let bulk = &r.streams[3];
+    assert_eq!(bulk.name, "bulk-drain");
+    assert_eq!(bulk.report.slot_preemptions, 0, "the Drain override must hold");
+    let per_stream: usize = r.streams.iter().map(|sr| sr.report.slot_preemptions).sum();
+    assert_eq!(r.engine.slot_preemptions, per_stream);
+}
+
+#[test]
+fn infeasible_deadline_requests_shed_instead_of_budget_deferring() {
+    // A zero-joule budget defers everything below the top class — but a
+    // deferred wait of up to a whole window (0.5 s) can never fit a
+    // 20 ms deadline, so the low-priority deadline stream's requests
+    // must be shed at the denial point, not parked forever; the
+    // high-priority stream is untouched and the run terminates.
+    let s = sys();
+    let hi_trace = generate_trace(&[(gcn(2_000_000), 12)], 20.0, 171);
+    let ddl_trace = generate_trace(&[(gcn(2_000_000), 10)], 20.0, 172);
+    let streams = vec![
+        StreamSpec::new("hi", Objective::Performance, hi_trace)
+            .with_slo(StreamSlo::best_effort(2.0)),
+        StreamSpec::new("ddl", Objective::Performance, ddl_trace)
+            .with_slo(StreamSlo::best_effort(1.0).with_deadline(0.020)),
+    ];
+    let cfg = EngineConfig::budgeted(EnergyBudget::new(0.0, 0.5));
+    let r = run_multi_stream_with(&s, &streams, cfg);
+
+    let hi = &r.streams[0].report;
+    let ddl = &r.streams[1].report;
+    assert_eq!(hi.completed, 12, "the top class is never shed or starved");
+    assert_eq!(hi.shed, 0);
+    assert_eq!(hi.deferrals, 0);
+    assert_eq!(ddl.completed + ddl.shed, 10, "every deadline request is settled");
+    assert!(ddl.shed >= 5, "the budget wait must shed most of the deadline lane: {}", ddl.shed);
+    assert_eq!(r.engine.sheds, ddl.shed);
+    assert_eq!(r.total_completed, 12 + ddl.completed);
+    assert!(
+        ddl.deadline_attainment <= (ddl.completed as f64) / 10.0,
+        "sheds are deadline misses by definition"
+    );
+}
+
+#[test]
+fn drain_override_dissents_from_a_preemptive_policy() {
+    // Same skewed pair the preemption acceptance test uses, but the
+    // back-loaded stream pins Drain: every mid-slot cancellation must be
+    // attributable to the unmarked (policy-mode) stream alone.
+    let s = sys();
+    let streams: Vec<StreamSpec> = skewed_pair_scenario(16, 91)
+        .into_iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            if i == 1 {
+                let slo = spec.slo.clone().with_migration(MigrationMode::Drain);
+                spec.with_slo(slo)
+            } else {
+                spec
+            }
+        })
+        .collect();
+    let offered: usize = streams.iter().map(|t| t.trace.len()).sum();
+    let cfg = EngineConfig {
+        repartition: Some(RepartitionPolicy::preemptive(1.0)),
+        ..EngineConfig::default()
+    };
+    let r = run_multi_stream_with(&s, &streams, cfg);
+
+    assert_eq!(r.total_completed, offered, "overrides must not lose requests");
+    assert_eq!(
+        r.streams[1].report.slot_preemptions, 0,
+        "the Drain-pinned lane may never cancel a slot"
+    );
+    assert_eq!(
+        r.engine.slot_preemptions,
+        r.streams[0].report.slot_preemptions,
+        "every cancellation belongs to the policy-mode lane"
+    );
+}
+
+#[test]
+fn preempt_override_acts_under_a_drain_policy() {
+    // The mirror image: a drain-mode policy with one lane opting into
+    // preemption — only that lane may ever cancel mid-slot, and the
+    // drain-default peer never does.
+    let s = sys();
+    let streams: Vec<StreamSpec> = skewed_pair_scenario(16, 91)
+        .into_iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            if i == 0 {
+                let slo = spec
+                    .slo
+                    .clone()
+                    .with_migration(MigrationMode::Preempt { min_remaining: 0.01 });
+                spec.with_slo(slo)
+            } else {
+                spec
+            }
+        })
+        .collect();
+    let offered: usize = streams.iter().map(|t| t.trace.len()).sum();
+    let cfg = EngineConfig {
+        repartition: Some(RepartitionPolicy::reactive(1.0)), // policy mode: Drain
+        ..EngineConfig::default()
+    };
+    let r = run_multi_stream_with(&s, &streams, cfg);
+
+    assert_eq!(r.total_completed, offered);
+    assert_eq!(
+        r.streams[1].report.slot_preemptions, 0,
+        "the policy-default lane drains under a Drain policy"
+    );
+    assert_eq!(
+        r.engine.slot_preemptions,
+        r.streams[0].report.slot_preemptions,
+        "only the opted-in lane may preempt"
+    );
+}
+
+#[test]
+fn neutral_deadline_knobs_are_bit_identical_to_the_adaptive_default() {
+    // The compatibility bar: streams with no deadline and no per-stream
+    // mode must serve exactly as the PR-4 engine served them. Sharpest
+    // in-repo form: run the same scenario twice — once untouched, once
+    // with the new knobs set to *explicitly neutral* values (a deadline
+    // no request can miss, a migration override equal to the policy
+    // default) so the feasibility check and the per-stream mode lookup
+    // actually execute — and require bitwise-equal serving outcomes.
+    let s = sys();
+    let plain = multi_stream_scenario(2, 4, 9);
+    let neutral: Vec<StreamSpec> = plain
+        .iter()
+        .cloned()
+        .map(|spec| {
+            let slo = spec.slo.clone().with_deadline(1e9).with_migration(MigrationMode::Drain);
+            spec.with_slo(slo)
+        })
+        .collect();
+
+    let base = run_multi_stream(&s, &plain);
+    let r = run_multi_stream(&s, &neutral);
+
+    assert_eq!(r.total_completed, base.total_completed);
+    assert_eq!(r.makespan, base.makespan);
+    assert_eq!(r.fairness, base.fairness);
+    assert_eq!(r.engine.sheds, 0, "an unmissable deadline never sheds");
+    assert_eq!(base.engine.sheds, 0);
+    assert_eq!(r.engine.lease_migrations, base.engine.lease_migrations);
+    assert_eq!(r.engine.repartitions, base.engine.repartitions);
+    for (n, b) in r.streams.iter().zip(&base.streams) {
+        assert_eq!(n.partition, b.partition);
+        assert_eq!(n.report.completions.len(), b.report.completions.len());
+        for (cn, cb) in n.report.completions.iter().zip(&b.report.completions) {
+            assert_eq!(cn.id, cb.id, "{}: service order diverged", n.name);
+            assert_eq!(cn.start, cb.start, "{}: starts diverged", n.name);
+            assert_eq!(cn.finish, cb.finish, "{}: finishes diverged", n.name);
+        }
+        assert_eq!(n.report.reschedules, b.report.reschedules);
+        assert_eq!(n.report.energy, b.report.energy);
+        assert_eq!(n.report.shed, 0);
+        assert_eq!(n.report.deadline_attainment, 1.0, "everything fits a 1e9 s bound");
+    }
 }
 
 // ---- energy budget + SLO acceptance (ISSUE 3) -------------------------
