@@ -1,0 +1,36 @@
+//! Scenario-sweep bench (DESIGN.md §Scenarios): per-cell engine-run cost
+//! on a seeded subset of the zoo, one median per scenario×policy cell,
+//! recorded to the CI perf trajectory via `DYPE_BENCH_JSON` (see
+//! `util::bench::record_json`).
+//!
+//! The subset is the three canonical scenarios at reduced request
+//! counts — big enough to exercise repartitioning, shedding, and
+//! preemption, small enough that the whole grid stays a smoke test. The
+//! point is the *trajectory*: a regression in admission, lease pricing,
+//! or the event heap shows up as a step in every cell at once, while a
+//! policy-specific regression (say, preemption bookkeeping) moves only
+//! its own column.
+
+use dype::scenario::catalog;
+use dype::scenario::sweep::{run_cell, Policy};
+use dype::scenario::ScenarioManifest;
+use dype::util::bench::{bench, header, record_json};
+
+fn main() {
+    let subset: Vec<ScenarioManifest> =
+        vec![catalog::multi_stream(1, 2, 9), catalog::skewed_pair(3, 11), catalog::deadline(4, 23)];
+
+    println!("{}", header());
+    let mut entries = Vec::new();
+    for m in &subset {
+        for policy in Policy::ALL {
+            let name = format!("scenario_sweep/{}/{}", m.name, policy.name());
+            let stats = bench(&name, 1, 5, || {
+                std::hint::black_box(run_cell(m, policy).expect("cell runs"));
+            });
+            println!("{}", stats.report());
+            entries.push((name, stats.median));
+        }
+    }
+    record_json(&entries);
+}

@@ -169,6 +169,17 @@ impl BudgetLedger {
         self.refunded
     }
 
+    /// Scale the budget mid-run (a [`crate::engine::perturb`] budget-cut
+    /// perturbation): the per-window refill and the open window's balance
+    /// both scale by `factor`, so banked headroom and carried debt shrink
+    /// (or grow) proportionally. The window *duration* is untouched — the
+    /// tick cadence already on the event heap stays valid.
+    pub(crate) fn scale(&mut self, factor: f64) {
+        assert!(factor >= 0.0 && factor.is_finite(), "bad budget scale factor {factor}");
+        self.budget.joules_per_window *= factor;
+        self.remaining *= factor;
+    }
+
     /// Close the open window and refill the budget, carrying the balance
     /// over: an overdraft (negative remainder) is deducted from the
     /// refill, unused joules bank up to one extra window's worth.
@@ -250,6 +261,30 @@ mod tests {
         assert!(windows.iter().all(|j| *j >= 0.0), "refunds never push a window negative");
         // Conservation: Σ windows == Σ charged − Σ refunded.
         assert!((windows.iter().sum::<f64>() - (15.0 - 6.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scale_cuts_refill_and_open_balance_but_not_cadence() {
+        let mut l = BudgetLedger::new(EnergyBudget::new(10.0, 0.5));
+        l.charge(4.0); // 6 J left in the open window
+        l.scale(0.5); // budget cut: refill 5 J/window, balance 3 J
+        assert_eq!(l.window(), 0.5, "the tick cadence never changes");
+        l.charge(2.0);
+        assert!(!l.exhausted(), "3 J scaled balance covers a 2 J batch");
+        l.charge(2.0);
+        assert!(l.exhausted(), "the scaled balance is gone");
+        l.roll_window();
+        l.charge(4.0);
+        assert!(l.exhausted(), "the refill itself is scaled: 5 J − 1 J debt < 4.1 J");
+        // Charges are recorded gross — scaling meters admission, it never
+        // rewrites what batches actually drew.
+        assert_eq!(l.into_window_joules(), vec![8.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad budget scale factor")]
+    fn scale_rejects_negative_factors() {
+        BudgetLedger::new(EnergyBudget::new(10.0, 0.5)).scale(-0.5);
     }
 
     #[test]

@@ -52,6 +52,12 @@ pub enum EventKind {
     /// by budget exhaustion resume highest-priority-first
     /// (see [`crate::engine::budget`]).
     BudgetWindowTick,
+    /// A scheduled mid-run perturbation fires: `index` points into the
+    /// engine config's perturbation list (see [`crate::engine::perturb`]).
+    /// The handler mutates the live system — device-pool cut, budget
+    /// scale, SLO tightening — and forces a lease re-validation so the
+    /// policies under test must adapt, not merely start well.
+    Perturbation { index: usize },
 }
 
 /// A timestamped event. `seq` is the queue's push counter — the

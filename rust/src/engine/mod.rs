@@ -55,12 +55,14 @@
 pub mod budget;
 pub mod events;
 pub mod lease;
+pub mod perturb;
 pub mod repartition;
 pub mod slo;
 
 pub use budget::EnergyBudget;
 pub use events::{Event, EventKind, EventQueue};
 pub use lease::{LeaseAssignment, OverSubscribed};
+pub use perturb::{Perturbation, PerturbationKind};
 pub use repartition::{DemandTracker, MigrationMode, RepartitionPolicy};
 pub use slo::{SloController, StreamSlo};
 
@@ -107,6 +109,12 @@ pub struct EngineConfig {
     /// Always applied, but the identity for default [`StreamSlo`]s, so
     /// SLO pressure is opt-in per stream.
     pub slo: SloController,
+    /// Scripted mid-run perturbations ([`perturb`]): each becomes one
+    /// [`EventKind::Perturbation`] on the heap; a device cut shrinks the
+    /// live pool and forces a lease re-apportionment (hysteresis
+    /// bypassed — the hardware *did* change) under every policy, static
+    /// included. Empty by default — the historical engine, bit for bit.
+    pub perturbations: Vec<Perturbation>,
 }
 
 impl Default for EngineConfig {
@@ -116,6 +124,7 @@ impl Default for EngineConfig {
             migration_drain: 80e-3,
             energy_budget: None,
             slo: SloController::default(),
+            perturbations: Vec::new(),
         }
     }
 }
@@ -199,11 +208,15 @@ pub struct EngineMetrics {
     pub window_joules: Vec<f64>,
     /// Each stream's fraction of the device pool (time share × device
     /// fraction) under the last lease it held — the end state the SLO
-    /// controller and re-partitioner steered toward. A finished stream
-    /// keeps reporting the lease it ended on even after its devices were
-    /// handed back, so the entries need not sum to 1. Empty for the
-    /// single-stream path.
+    /// controller and re-partitioner steered toward. Measured against
+    /// the pool as it ended the run (a device-cut perturbation shrinks
+    /// it). A finished stream keeps reporting the lease it ended on even
+    /// after its devices were handed back, so the entries need not sum
+    /// to 1. Empty for the single-stream path.
     pub final_pool_share: Vec<f64>,
+    /// Scheduled perturbations that actually fired before the last
+    /// request settled (one past the makespan never fires).
+    pub perturbations_applied: usize,
 }
 
 impl EngineMetrics {
@@ -280,7 +293,9 @@ struct Lane<'c, 'a, E: PerfEstimator> {
     busy_time: f64,
     /// Migration drain owed before the next admission (lease seconds).
     pending_drain: f64,
-    /// FLOPs *completed* since the last demand-sampling tick.
+    /// FLOPs *settled* since the last demand-sampling tick: completed
+    /// batches plus shed requests — shed work is demand the lane had
+    /// (shed-aware lease bidding), so overload never reads as idleness.
     flops_window: f64,
     cache: CacheStats,
     /// The stream's service-level objective (target + QoS priority).
@@ -683,16 +698,20 @@ fn try_admit<E: PerfEstimator>(
 /// global clock; with a re-partitioning policy, also samples demand and
 /// migrates leases; with an energy budget, also meters the `f_eng`
 /// account and defers below-priority admissions across window
-/// boundaries. Returns the engine metrics (utilization and final pool
-/// shares left empty — the caller fills them in).
+/// boundaries; with scheduled perturbations, also mutates the live
+/// system when they fire. Returns the engine metrics (utilization and
+/// final pool shares left empty — the caller fills them in) plus the
+/// pool as the run ended it (shrunken by any device-cut perturbation —
+/// what final pool shares must be measured against).
 fn run_event_loop<E: PerfEstimator>(
     pool: &SystemSpec,
     traces: &[&[Request]],
     lanes: &mut [Lane<'_, '_, E>],
     initial_demands: &[f64],
     cfg: &EngineConfig,
-) -> EngineMetrics {
+) -> (EngineMetrics, SystemSpec) {
     assert_eq!(traces.len(), lanes.len());
+    let mut pool = pool.clone();
     let mut q = EventQueue::new();
     let mut remaining = 0usize;
     for (s, trace) in traces.iter().enumerate() {
@@ -701,6 +720,10 @@ fn run_event_loop<E: PerfEstimator>(
         for (i, req) in trace.iter().enumerate() {
             q.push(req.arrival, EventKind::RequestArrival { stream: s, index: i });
         }
+    }
+    for (i, p) in cfg.perturbations.iter().enumerate() {
+        p.validate(lanes.len());
+        q.push(p.at, EventKind::Perturbation { index: i });
     }
 
     let mut metrics = EngineMetrics {
@@ -741,6 +764,24 @@ fn run_event_loop<E: PerfEstimator>(
         match ev.kind {
             EventKind::RequestArrival { stream, index } => {
                 let lane = &mut lanes[stream];
+                // Queue-ahead feasibility (early shedding): the front-only
+                // check in `try_admit` prices only the head of the queue,
+                // so under overload a hopeless request would sit in a deep
+                // queue for its whole deadline before shedding at the
+                // front. Price the work *ahead* of it instead — one
+                // share-stretched slot per queued (and in-flight)
+                // predecessor — and shed on arrival when even that lower
+                // bound blows the deadline, which bounds queue depth to
+                // the deadline-feasibility horizon. A lane with no
+                // measurement yet admits optimistically, as at the front.
+                if let (Some(deadline), Some(m)) = (lane.slo.deadline, lane.measured.as_ref()) {
+                    let ahead = lane.queue.len() + usize::from(lane.busy());
+                    let queue_wait = ahead as f64 * (m.period / lane.share).max(1e-12);
+                    if queue_wait + lane.estimated_batch_latency() > deadline {
+                        q.push(now, EventKind::Shed { stream, index });
+                        continue; // never enqueued; the Shed handler settles it
+                    }
+                }
                 lane.queue.push_back(index);
                 lane.max_queue = lane.max_queue.max(lane.queue.len());
                 if !lanes[stream].busy() {
@@ -801,13 +842,19 @@ fn run_event_loop<E: PerfEstimator>(
                     );
                 }
             }
-            EventKind::Shed { stream, .. } => {
+            EventKind::Shed { stream, index } => {
                 // Settle a deadline shed: the request already left the
-                // queue when the feasibility check rejected it; count it
-                // and let the lane consider its next queued request at
-                // the same timestamp (which may shed again — a stale
-                // backlog drains as an event cascade).
+                // queue when the feasibility check rejected it (or, for an
+                // arrival shed, never entered it); count it and let the
+                // lane consider its next queued request at the same
+                // timestamp (which may shed again — a stale backlog drains
+                // as an event cascade). Shed work still counts as
+                // *demand*: credit its FLOPs to the sampling window, so an
+                // overloaded lane shedding heavily keeps bidding for
+                // devices instead of looking idle and ceding its share to
+                // better-off tenants (shed-aware lease bidding).
                 lanes[stream].shed += 1;
+                lanes[stream].flops_window += traces[stream][index].workload.total_flops();
                 remaining -= 1;
                 if !lanes[stream].busy() && !lanes[stream].queue.is_empty() {
                     try_admit(
@@ -831,18 +878,20 @@ fn run_event_loop<E: PerfEstimator>(
                 }
             }
             EventKind::LeaseExpiry => {
-                if let Some(tr) = tracker.as_ref() {
+                if tracker.is_some() {
                     maybe_migrate(
-                        pool,
+                        &pool,
                         traces,
                         lanes,
-                        tr,
+                        tracker.as_ref(),
+                        initial_demands,
                         cfg,
                         now,
                         &mut q,
                         &mut ledger,
                         &mut remaining,
                         &mut metrics,
+                        false,
                     );
                     let pol = cfg.repartition.as_ref().expect("tracker implies a policy");
                     q.push(now + pol.lease_term, EventKind::LeaseExpiry);
@@ -884,6 +933,46 @@ fn run_event_loop<E: PerfEstimator>(
                     q.push(now + window, EventKind::BudgetWindowTick);
                 }
             }
+            EventKind::Perturbation { index } => {
+                match cfg.perturbations[index].kind {
+                    PerturbationKind::DeviceCut { n_fpga, n_gpu } => {
+                        pool.n_fpga = pool.n_fpga.saturating_sub(n_fpga);
+                        pool.n_gpu = pool.n_gpu.saturating_sub(n_gpu);
+                        if pool.n_fpga + pool.n_gpu == 0 {
+                            pool.n_gpu = 1; // a cut cannot strand the run deviceless
+                        }
+                        // The hardware *did* change: re-apportion with the
+                        // hysteresis bypassed, static leases included — no
+                        // policy can keep serving on devices that left.
+                        maybe_migrate(
+                            &pool,
+                            traces,
+                            lanes,
+                            tracker.as_ref(),
+                            initial_demands,
+                            cfg,
+                            now,
+                            &mut q,
+                            &mut ledger,
+                            &mut remaining,
+                            &mut metrics,
+                            true,
+                        );
+                    }
+                    PerturbationKind::BudgetScale { factor } => {
+                        // A no-op without a ledger: scaling a budget the
+                        // run never had cannot change anything.
+                        if let Some(led) = ledger.as_mut() {
+                            led.scale(factor);
+                        }
+                    }
+                    PerturbationKind::SloTighten { stream, p99_scale, deadline_scale } => {
+                        let slo = &mut lanes[stream].slo;
+                        Perturbation::tighten_slo(slo, p99_scale, deadline_scale);
+                    }
+                }
+                metrics.perturbations_applied += 1;
+            }
         }
     }
     if let Some(led) = ledger {
@@ -893,7 +982,7 @@ fn run_event_loop<E: PerfEstimator>(
     metrics.deferrals = lanes.iter().map(|l| l.deferrals).sum();
     metrics.sheds = lanes.iter().map(|l| l.shed).sum();
     metrics.events_processed = q.processed();
-    metrics
+    (metrics, pool)
 }
 
 /// Lease-expiry handler: rebuild the lease table from the observed EWMA
@@ -904,6 +993,13 @@ fn run_event_loop<E: PerfEstimator>(
 /// hysteresis. A *finished* stream drops out of the apportionment
 /// entirely, so its devices return to the survivors (down to a sole
 /// survivor inheriting the whole pool).
+///
+/// Also the device-cut perturbation handler, with `force` set: the
+/// hysteresis comparison is skipped (the pool itself changed — the old
+/// shares are measured against hardware that no longer exists) and,
+/// without a repartition policy (static leases, hence no `tracker`),
+/// demand falls back to the offered `initial_demands` and the migration
+/// mode to [`MigrationMode::Drain`].
 ///
 /// Per migrating stream the effective [`repartition::MigrationMode`] —
 /// the stream's own [`StreamSlo::migration`] override when set, the
@@ -924,15 +1020,16 @@ fn maybe_migrate<E: PerfEstimator>(
     pool: &SystemSpec,
     traces: &[&[Request]],
     lanes: &mut [Lane<'_, '_, E>],
-    tracker: &DemandTracker,
+    tracker: Option<&DemandTracker>,
+    initial_demands: &[f64],
     cfg: &EngineConfig,
     now: f64,
     q: &mut EventQueue,
     ledger: &mut Option<BudgetLedger>,
     remaining: &mut usize,
     metrics: &mut EngineMetrics,
+    force: bool,
 ) {
-    let pol = cfg.repartition.as_ref().expect("maybe_migrate requires a policy");
     // "Active" = still has trace left to dispatch; shed requests count as
     // disposed of, so a fully-shed stream hands its devices back exactly
     // like a finished one.
@@ -950,14 +1047,18 @@ fn maybe_migrate<E: PerfEstimator>(
             // untargeted lanes still skip it (the controller would
             // ignore it anyway).
             let p99 = if l.slo.p99_target.is_some() { l.observed_p99() } else { None };
-            tracker.rate(i) * cfg.slo.weight_integrating(&l.slo, p99, &mut l.slo_error_sum)
+            let rate = tracker.map_or(initial_demands[i], |t| t.rate(i));
+            rate * cfg.slo.weight_integrating(&l.slo, p99, &mut l.slo_error_sum)
         })
         .collect();
     let desired = lease::assign(pool, &demands);
-    let current: Vec<f64> = active.iter().map(|&i| lanes[i].pool_share(pool)).collect();
-    let next: Vec<f64> = (0..active.len()).map(|l| desired.pool_share(l, pool)).collect();
-    if share_shift(&current, &next) <= pol.hysteresis {
-        return; // renewal: the table in force is still close enough
+    if !force {
+        let pol = cfg.repartition.as_ref().expect("unforced migration requires a policy");
+        let current: Vec<f64> = active.iter().map(|&i| lanes[i].pool_share(pool)).collect();
+        let next: Vec<f64> = (0..active.len()).map(|l| desired.pool_share(l, pool)).collect();
+        if share_shift(&current, &next) <= pol.hysteresis {
+            return; // renewal: the table in force is still close enough
+        }
     }
     metrics.repartitions += 1;
     let mut freed = 0.0f64; // preempted slot remainders, wall-clock seconds
@@ -973,8 +1074,12 @@ fn maybe_migrate<E: PerfEstimator>(
                 metrics.preemptions += 1;
             }
             // Criticality-tied preemption: the stream's own migration
-            // mode wins over the policy default when set.
-            let mode = lane.slo.migration.unwrap_or(pol.migration);
+            // mode wins over the policy default when set (Drain when no
+            // policy is in force — forced cuts under static leases).
+            let mode = lane
+                .slo
+                .migration
+                .unwrap_or(cfg.repartition.as_ref().map_or(MigrationMode::Drain, |p| p.migration));
             if let repartition::MigrationMode::Preempt { min_remaining } = mode {
                 if let Some((slot, remainder, joules)) = lane.try_preempt(now, min_remaining) {
                     *remaining += 1; // the cancelled batch re-dispatches
@@ -1035,7 +1140,7 @@ pub(crate) fn run_single<E: PerfEstimator>(
     let cfg = EngineConfig::static_leases();
     let mut lanes = vec![Lane::with_ground_truth(coordinator, sys.clone(), 1.0, gt.clone())];
     let traces: [&[Request]; 1] = [trace];
-    run_event_loop(sys, &traces, &mut lanes, &[0.0], &cfg);
+    let _ = run_event_loop(sys, &traces, &mut lanes, &[0.0], &cfg);
     lanes.pop().expect("one lane").into_outcome().report
 }
 
@@ -1119,8 +1224,9 @@ impl<'a, E: PerfEstimator> ServingEngine<'a, E> {
             .collect();
         let traces: Vec<&[Request]> = streams.iter().map(|s| s.trace.as_slice()).collect();
 
-        let mut metrics = run_event_loop(&self.sys, &traces, &mut lanes, &demands, &self.cfg);
-        metrics.final_pool_share = lanes.iter().map(|l| l.pool_share(&self.sys)).collect();
+        let (mut metrics, final_pool) =
+            run_event_loop(&self.sys, &traces, &mut lanes, &demands, &self.cfg);
+        metrics.final_pool_share = lanes.iter().map(|l| l.pool_share(&final_pool)).collect();
 
         let outcomes: Vec<LaneOutcome> = lanes.into_iter().map(Lane::into_outcome).collect();
         let makespan = outcomes.iter().map(|o| o.report.makespan).fold(0.0, f64::max);
@@ -1267,6 +1373,96 @@ mod tests {
         );
         assert!(r.engine.repartitions >= 1);
         assert!(r.fairness > 0.0);
+    }
+
+    #[test]
+    fn device_cut_perturbation_shrinks_the_pool_and_forces_migration() {
+        // 3F+2G cut down to 1F+1G mid-run, under *static* leases: the
+        // forced re-apportionment must still happen (no policy can keep
+        // serving on devices that left), every request must still settle,
+        // and the final pool shares must be measured against the shrunken
+        // pool — valid fractions of 2 devices, not of the original 5.
+        let s = sys();
+        let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let est = OracleModels { gt: &gt };
+        let streams = vec![
+            StreamSpec::new(
+                "a",
+                Objective::Performance,
+                generate_trace(&[(gcn(150_000_000), 12)], 20.0, 5),
+            ),
+            StreamSpec::new(
+                "b",
+                Objective::Performance,
+                generate_trace(&[(gcn(2_000_000), 12)], 20.0, 6),
+            ),
+        ];
+        let cfg = EngineConfig {
+            perturbations: vec![Perturbation::device_cut(0.05, 2, 1)],
+            ..EngineConfig::static_leases()
+        };
+        let mut engine = ServingEngine::new(s, &est).with_config(cfg);
+        let r = engine.serve(&streams);
+        assert_eq!(r.total_completed, 24, "a device cut must not lose requests");
+        assert_eq!(r.engine.perturbations_applied, 1);
+        assert!(r.engine.repartitions >= 1, "a cut forces a re-apportionment: {}", r.engine);
+        assert!(r.engine.lease_migrations >= 1, "5 devices shrank to 2: {}", r.engine);
+        for share in &r.engine.final_pool_share {
+            assert!(*share > 0.0 && *share <= 1.0 + 1e-9, "post-cut pool share {share}");
+        }
+    }
+
+    #[test]
+    fn budget_scale_without_a_ledger_is_a_counted_noop() {
+        // Scaling a budget the run never had changes nothing observable —
+        // except the applied-perturbations counter.
+        let s = sys();
+        let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let est = OracleModels { gt: &gt };
+        let mk = || {
+            vec![StreamSpec::new(
+                "a",
+                Objective::Performance,
+                generate_trace(&[(gcn(2_000_000), 6)], 20.0, 9),
+            )]
+        };
+        let base = ServingEngine::new(s.clone(), &est)
+            .with_config(EngineConfig::static_leases())
+            .serve(&mk());
+        let cfg = EngineConfig {
+            perturbations: vec![Perturbation::budget_scale(0.01, 0.5)],
+            ..EngineConfig::static_leases()
+        };
+        let pert = ServingEngine::new(s, &est).with_config(cfg).serve(&mk());
+        assert_eq!(pert.engine.perturbations_applied, 1);
+        assert_eq!(base.total_completed, pert.total_completed);
+        assert_eq!(base.makespan, pert.makespan, "an unbudgeted scale must not perturb timing");
+        assert_eq!(base.total_energy, pert.total_energy);
+    }
+
+    #[test]
+    fn slo_tighten_perturbation_starts_shedding_mid_run() {
+        // A deadline so loose it never sheds, tightened mid-run to one so
+        // hard nothing queued or arriving can make it: completions before
+        // the perturbation, sheds after, nothing lost.
+        let s = sys();
+        let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+        let est = OracleModels { gt: &gt };
+        let trace = generate_trace(&[(gcn(2_000_000), 10)], 40.0, 11);
+        let offered = trace.len();
+        let streams = vec![StreamSpec::new("a", Objective::Performance, trace)
+            .with_slo(StreamSlo::target(0.100, 2.0).with_deadline(10.0))];
+        let cfg = EngineConfig {
+            perturbations: vec![Perturbation::slo_tighten(0.05, 0, 1.0, 1e-6)],
+            ..EngineConfig::default()
+        };
+        let mut engine = ServingEngine::new(s, &est).with_config(cfg);
+        let r = engine.serve(&streams);
+        let rep = &r.streams[0].report;
+        assert_eq!(r.engine.perturbations_applied, 1);
+        assert_eq!(rep.completed + rep.shed, offered, "every request settles exactly once");
+        assert!(rep.shed >= 1, "a 10 microsecond deadline must shed: {rep:?}");
+        assert!(rep.completed >= 1, "work admitted before the tightening completes");
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Mid-run perturbations — scripted "what breaks at t=…" events.
+//!
+//! The paper's study is static breadth: 86 workload×system cells, each
+//! served by one fixed configuration. The scenario zoo adds the dynamic
+//! axis: a manifest can schedule perturbations that mutate the *live*
+//! system mid-run — devices disappearing from the pool, the energy
+//! budget shrinking, an SLO tightening — so the sweep compares policies
+//! on how they *re-adapt*, not just on how they start. Each entry in
+//! [`super::EngineConfig::perturbations`] becomes one
+//! [`super::EventKind::Perturbation`] on the event heap; the handler
+//! applies the mutation and forces an immediate lease re-validation.
+
+use super::slo::StreamSlo;
+
+/// What a scheduled perturbation does when it fires.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PerturbationKind {
+    /// Remove devices from the pool (saturating; a cut that would empty
+    /// the pool keeps one GPU so the run can still finish). Leases are
+    /// re-apportioned over the shrunken pool at the same timestamp.
+    DeviceCut { n_fpga: usize, n_gpu: usize },
+    /// Multiply the energy budget's per-window refill *and* the open
+    /// window's balance by `factor` (see
+    /// [`super::budget`]'s scale semantics). A no-op when the engine
+    /// runs unbudgeted.
+    BudgetScale { factor: f64 },
+    /// Tighten (or loosen) stream `stream`'s SLO in place: its p99
+    /// target and deadline are multiplied by the respective scale, when
+    /// present. Scales of 1.0 leave the knob untouched.
+    SloTighten { stream: usize, p99_scale: f64, deadline_scale: f64 },
+}
+
+/// One scheduled mid-run perturbation: at engine time `at`, apply `kind`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Perturbation {
+    /// Engine-clock firing time (s), strictly positive and finite.
+    pub at: f64,
+    pub kind: PerturbationKind,
+}
+
+impl Perturbation {
+    pub fn device_cut(at: f64, n_fpga: usize, n_gpu: usize) -> Perturbation {
+        Perturbation { at, kind: PerturbationKind::DeviceCut { n_fpga, n_gpu } }
+    }
+
+    pub fn budget_scale(at: f64, factor: f64) -> Perturbation {
+        Perturbation { at, kind: PerturbationKind::BudgetScale { factor } }
+    }
+
+    pub fn slo_tighten(at: f64, stream: usize, p99_scale: f64, deadline_scale: f64) -> Self {
+        let kind = PerturbationKind::SloTighten { stream, p99_scale, deadline_scale };
+        Perturbation { at, kind }
+    }
+
+    /// Panic on malformed perturbations before the run starts (the same
+    /// eager-validation stance as [`StreamSlo::validate`]): firing times
+    /// must be positive finite, cuts must cut something, scales must be
+    /// positive finite (budget scale may be zero — a total blackout),
+    /// and stream indices must exist.
+    pub fn validate(&self, n_streams: usize) {
+        assert!(
+            self.at > 0.0 && self.at.is_finite(),
+            "perturbation time {} must be positive and finite",
+            self.at
+        );
+        match self.kind {
+            PerturbationKind::DeviceCut { n_fpga, n_gpu } => {
+                assert!(n_fpga + n_gpu >= 1, "a device cut must remove at least one device");
+            }
+            PerturbationKind::BudgetScale { factor } => {
+                assert!(
+                    factor >= 0.0 && factor.is_finite(),
+                    "bad budget scale factor {factor}"
+                );
+            }
+            PerturbationKind::SloTighten { stream, p99_scale, deadline_scale } => {
+                assert!(stream < n_streams, "perturbation targets stream {stream} of {n_streams}");
+                for s in [p99_scale, deadline_scale] {
+                    assert!(s > 0.0 && s.is_finite(), "bad SLO scale {s}");
+                }
+            }
+        }
+    }
+
+    /// Apply an [`PerturbationKind::SloTighten`] to a lane's SLO in
+    /// place, re-validating the result so a degenerate scale fails loudly
+    /// instead of feeding the controller a non-positive target.
+    pub(crate) fn tighten_slo(slo: &mut StreamSlo, p99_scale: f64, deadline_scale: f64) {
+        if let Some(t) = slo.p99_target.as_mut() {
+            *t *= p99_scale;
+        }
+        if let Some(d) = slo.deadline.as_mut() {
+            *d *= deadline_scale;
+        }
+        slo.validate();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctors_round_trip_the_kind() {
+        let cut = Perturbation::device_cut(1.5, 1, 0);
+        assert_eq!(cut.kind, PerturbationKind::DeviceCut { n_fpga: 1, n_gpu: 0 });
+        cut.validate(1);
+        let cap = Perturbation::budget_scale(2.0, 0.0);
+        cap.validate(1); // zero factor = blackout, legal
+        let slo = Perturbation::slo_tighten(1.0, 2, 0.5, 0.5);
+        slo.validate(3);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive and finite")]
+    fn rejects_non_positive_times() {
+        Perturbation::device_cut(0.0, 1, 0).validate(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "must remove at least one device")]
+    fn rejects_empty_cuts() {
+        Perturbation::device_cut(1.0, 0, 0).validate(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "targets stream 3 of 3")]
+    fn rejects_out_of_range_stream_indices() {
+        Perturbation::slo_tighten(1.0, 3, 0.5, 1.0).validate(3);
+    }
+
+    #[test]
+    fn tighten_scales_only_present_knobs() {
+        let mut slo = StreamSlo::target(0.100, 2.0).with_deadline(0.250);
+        Perturbation::tighten_slo(&mut slo, 0.5, 0.4);
+        assert_eq!(slo.p99_target, Some(0.050));
+        assert_eq!(slo.deadline, Some(0.100));
+        let mut bare = StreamSlo::best_effort(1.0);
+        Perturbation::tighten_slo(&mut bare, 0.5, 0.5);
+        assert_eq!(bare.p99_target, None);
+        assert_eq!(bare.deadline, None);
+    }
+}

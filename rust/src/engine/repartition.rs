@@ -112,8 +112,10 @@ impl RepartitionPolicy {
     }
 }
 
-/// Per-stream EWMA of observed demand (completed FLOP/s), seeded with
-/// the offered-rate estimate the initial leases were sized on.
+/// Per-stream EWMA of observed demand (settled FLOP/s — completed *and*
+/// shed batches both count; a deadline lane shedding under overload is
+/// at peak demand, not idle, and must keep bidding for devices), seeded
+/// with the offered-rate estimate the initial leases were sized on.
 #[derive(Debug, Clone)]
 pub struct DemandTracker {
     alpha: f64,
@@ -128,8 +130,9 @@ impl DemandTracker {
     }
 
     /// Fold one sampling window into the EWMAs. `windows[i]` is the FLOPs
-    /// stream `i` completed since the previous tick; `now` is the tick's
-    /// global-clock time. No-op for a zero-length window.
+    /// stream `i` settled (completed or shed) since the previous tick;
+    /// `now` is the tick's global-clock time. No-op for a zero-length
+    /// window.
     pub fn tick(&mut self, now: f64, windows: &[f64]) {
         assert_eq!(windows.len(), self.rates.len());
         let dt = now - self.last_tick;

@@ -8,9 +8,9 @@
 //!   theoretical-additive) and DYPE's three objective modes.
 
 use crate::config::{Interconnect, Objective, SystemSpec};
-use crate::coordinator::{generate_trace, MultiStreamReport, MultiStreamServer, StreamSpec};
+use crate::coordinator::{MultiStreamReport, MultiStreamServer, StreamSpec};
 use crate::devices::GroundTruth;
-use crate::engine::{EnergyBudget, EngineConfig, MigrationMode, RepartitionPolicy, StreamSlo};
+use crate::engine::{EnergyBudget, EngineConfig, RepartitionPolicy};
 use crate::perfmodel::{calibrate, ModelRegistry, OracleModels, PerfEstimator};
 use crate::pipeline::PipelineSim;
 use crate::scheduler::{baselines, evaluate_plan, DpScheduler, PowerTable, StagePlan};
@@ -195,31 +195,16 @@ pub fn run_case<E: PerfEstimator>(case: &Case, est: &E, reference_wl: &Workload)
 /// fixed (5 GCN buckets + 3 transformer buckets), so the DP-miss count
 /// stays constant while hits grow with `cycles × per_phase`.
 pub fn multi_stream_scenario(cycles: usize, per_phase: usize, seed: u64) -> Vec<StreamSpec> {
-    assert!(cycles >= 1 && per_phase >= 1);
-    let day_edges: [u64; 6] =
-        [2_000_000, 20_000_000, 150_000_000, 50_000_000, 150_000_000, 8_000_000];
-    let mut gcn_phases = Vec::new();
-    for _ in 0..cycles {
-        for &edges in &day_edges {
-            let ds = Dataset::new("TF", "traffic", 1_000_000, edges, 200, 0.2);
-            gcn_phases.push((gnn::gcn_workload(&ds, 2, 128), per_phase));
-        }
-    }
-    let gcn_trace = generate_trace(&gcn_phases, 40.0, seed);
+    build_catalog(crate::scenario::catalog::multi_stream(cycles, per_phase, seed))
+}
 
-    let regimes: [(u64, u64); 4] = [(2048, 512), (4096, 1024), (8192, 1024), (2048, 512)];
-    let mut tf_phases = Vec::new();
-    for _ in 0..cycles {
-        for &(seq, win) in &regimes {
-            tf_phases.push((transformer::transformer_workload(seq, win, 8), per_phase));
-        }
-    }
-    let tf_trace = generate_trace(&tf_phases, 20.0, seed + 1);
-
-    vec![
-        StreamSpec::new("gcn-traffic", Objective::Performance, gcn_trace),
-        StreamSpec::new("swin-transformer", Objective::Performance, tf_trace),
-    ]
+/// Lower a catalog manifest to its streams. The scenario zoo is the
+/// single source of truth for the canonical serving scenarios; these
+/// wrappers keep the historical `experiments::*_scenario` entry points
+/// (and their exact traces — the manifest round-trip is bit-identical,
+/// asserted by the scenario-sweep integration tests).
+fn build_catalog(m: crate::scenario::ScenarioManifest) -> Vec<StreamSpec> {
+    m.build().expect("catalog manifests are valid").streams
 }
 
 /// Serve `streams` on `sys` with the ground-truth oracle as `f_perf`
@@ -261,19 +246,7 @@ pub fn run_multi_stream_with(
 /// migrate devices toward the currently-heavy stream. Used by
 /// `benches/engine_repartition.rs` and the engine acceptance tests.
 pub fn skewed_pair_scenario(per_phase: usize, seed: u64) -> Vec<StreamSpec> {
-    assert!(per_phase >= 1);
-    let traffic = |edges: u64| {
-        let ds = Dataset::new("TF", "traffic", 1_000_000, edges, 200, 0.2);
-        gnn::gcn_workload(&ds, 2, 128)
-    };
-    let heavy = traffic(150_000_000);
-    let light = traffic(2_000_000);
-    let a = generate_trace(&[(heavy.clone(), per_phase), (light.clone(), per_phase)], 10.0, seed);
-    let b = generate_trace(&[(light, per_phase), (heavy, per_phase)], 10.0, seed + 1);
-    vec![
-        StreamSpec::new("front-loaded", Objective::Performance, a),
-        StreamSpec::new("back-loaded", Objective::Performance, b),
-    ]
+    build_catalog(crate::scenario::catalog::skewed_pair(per_phase, seed))
 }
 
 /// The canonical **energy/SLO** serving scenario (DESIGN.md §Energy &
@@ -294,22 +267,7 @@ pub fn skewed_pair_scenario(per_phase: usize, seed: u64) -> Vec<StreamSpec> {
 /// below-priority work; serve it unbudgeted for the baseline point of
 /// the throughput-vs-joules frontier.
 pub fn energy_slo_scenario(per_phase: usize, seed: u64) -> Vec<StreamSpec> {
-    assert!(per_phase >= 1);
-    let traffic = |edges: u64| {
-        let ds = Dataset::new("TF", "traffic", 1_000_000, edges, 200, 0.2);
-        gnn::gcn_workload(&ds, 2, 128)
-    };
-    let critical = generate_trace(&[(traffic(2_000_000), 5 * per_phase)], 25.0, seed);
-    let bulk = generate_trace(&[(traffic(150_000_000), 2 * per_phase)], 5.0, seed + 1);
-    let background = generate_trace(&[(traffic(20_000_000), 3 * per_phase)], 12.0, seed + 2);
-    vec![
-        StreamSpec::new("latency-critical", Objective::Performance, critical)
-            .with_slo(StreamSlo::target(0.100, 3.0)),
-        StreamSpec::new("bulk-analytics", Objective::Performance, bulk)
-            .with_slo(StreamSlo::best_effort(2.0)),
-        StreamSpec::new("background-embeddings", Objective::Performance, background)
-            .with_slo(StreamSlo::best_effort(1.0)),
-    ]
+    build_catalog(crate::scenario::catalog::energy_slo(per_phase, seed))
 }
 
 /// The engine configuration [`energy_slo_scenario`] is meant to run
@@ -337,7 +295,7 @@ pub fn energy_slo_config(cap_watts: f64) -> EngineConfig {
 ///   pushes a request's queueing time past feasibility it is **shed** at
 ///   admission instead of served stale, so the lane's latency stays
 ///   bounded while its deadline attainment reports the drop rate. Its
-///   [`StreamSlo::migration`] override is `Preempt` — the critical lane
+///   [`crate::engine::StreamSlo::migration`] override is `Preempt` — the critical lane
 ///   takes its new lease immediately at a migration;
 /// * **front-loaded / back-loaded** — the phase-reversed best-effort
 ///   pair from [`skewed_pair_scenario`]: near-equal offered totals,
@@ -349,31 +307,7 @@ pub fn energy_slo_config(cap_watts: f64) -> EngineConfig {
 ///   demonstrating criticality-tied preemption in the same repartition
 ///   that preempts its peers.
 pub fn deadline_scenario(per_phase: usize, seed: u64) -> Vec<StreamSpec> {
-    assert!(per_phase >= 1);
-    let traffic = |edges: u64| {
-        let ds = Dataset::new("TF", "traffic", 1_000_000, edges, 200, 0.2);
-        gnn::gcn_workload(&ds, 2, 128)
-    };
-    let heavy = traffic(150_000_000);
-    let light = traffic(2_000_000);
-    let interactive = generate_trace(&[(light.clone(), 6 * per_phase)], 40.0, seed);
-    let front =
-        generate_trace(&[(heavy.clone(), per_phase), (light.clone(), per_phase)], 10.0, seed + 1);
-    let back = generate_trace(&[(light, per_phase), (heavy.clone(), per_phase)], 10.0, seed + 2);
-    let bulk = generate_trace(&[(heavy, per_phase)], 4.0, seed + 3);
-    vec![
-        StreamSpec::new("deadline-interactive", Objective::Performance, interactive).with_slo(
-            StreamSlo::target(0.150, 3.0)
-                .with_deadline(0.250)
-                .with_migration(MigrationMode::Preempt { min_remaining: 0.005 }),
-        ),
-        StreamSpec::new("front-loaded", Objective::Performance, front)
-            .with_slo(StreamSlo::best_effort(2.0)),
-        StreamSpec::new("back-loaded", Objective::Performance, back)
-            .with_slo(StreamSlo::best_effort(2.0)),
-        StreamSpec::new("bulk-drain", Objective::Performance, bulk)
-            .with_slo(StreamSlo::best_effort(1.0).with_migration(MigrationMode::Drain)),
-    ]
+    build_catalog(crate::scenario::catalog::deadline(per_phase, seed))
 }
 
 /// The engine configuration [`deadline_scenario`] is meant to run under:
@@ -406,6 +340,7 @@ pub fn reference_workload(wl: &Workload) -> Workload {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::MigrationMode;
 
     #[test]
     fn case_grids_have_paper_counts() {

@@ -40,6 +40,7 @@ pub mod metrics;
 pub mod perfmodel;
 pub mod pipeline;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
 pub mod util;
 pub mod workload;
@@ -115,6 +116,8 @@ pub mod prelude {
     };
     pub use crate::perfmodel::{calibrate, ModelRegistry, OracleModels};
     pub use crate::pipeline::sim::PipelineSim;
+    pub use crate::scenario::sweep::{Policy, SweepReport};
+    pub use crate::scenario::{Arrival, ScenarioManifest};
     pub use crate::scheduler::{baselines, CacheStats, DpScheduler, Schedule, ScheduleCache, Stage};
     pub use crate::workload::{gnn, transformer, Dataset, KernelDesc, KernelKind, Workload};
 }

@@ -6,6 +6,8 @@
 //! * `pareto`    — dump the Pareto front of the design space.
 //! * `calibrate` — train the §V performance models and print fit quality.
 //! * `sweep`     — DYPE vs baselines across the paper's GNN workloads.
+//! * `scenario-sweep` — the serving scenario zoo crossed with every
+//!   serving policy (or one manifest from disk), Pareto-annotated.
 //! * `serve`     — end-to-end real execution: stream inferences through a
 //!   scheduled pipeline running AOT artifacts via PJRT.
 //!
@@ -32,6 +34,7 @@ USAGE:
   dype pareto    [--workload W] [--interconnect I]
   dype calibrate [--interconnect I]
   dype sweep     [--interconnect I] [--objective O]
+  dype scenario-sweep [--manifest FILE.json]
   dype serve     [--inferences N] [--artifact-dir DIR]
 
   W: gcn-<DS> | gin-<DS> (DS in S1..S4, OA, OP) | transf-<seq>-<win>
@@ -204,6 +207,9 @@ fn main() -> Result<()> {
             let obj = Objective::parse(args.get("objective", "perf"))?;
             sweep(ic, obj)?;
         }
+        "scenario-sweep" => {
+            scenario_sweep(args.kv.get("manifest").map(String::as_str))?;
+        }
         "serve" => {
             serve(args.get_usize("inferences", 16)?, args.get("artifact-dir", "artifacts"))?;
         }
@@ -259,6 +265,21 @@ fn sweep(ic: Interconnect, obj: Objective) -> Result<()> {
         }
     }
     print!("{}", t.render());
+    Ok(())
+}
+
+/// The scenario zoo crossed with every serving policy — or a single
+/// manifest loaded from disk — rendered as the Pareto-annotated grid.
+fn scenario_sweep(manifest: Option<&str>) -> Result<()> {
+    use dype::scenario::sweep::{run_grid, run_zoo, Policy};
+    let report = match manifest {
+        Some(path) => {
+            let m = dype::scenario::ScenarioManifest::load(path)?;
+            run_grid(&[m], &Policy::ALL)?
+        }
+        None => run_zoo()?,
+    };
+    print!("{}", report.render());
     Ok(())
 }
 

@@ -269,6 +269,27 @@ pub fn jain_index(xs: &[f64]) -> f64 {
     sum * sum / (n * sq)
 }
 
+/// Indices of the Pareto-non-dominated rows of `points`, every
+/// dimension maximized (negate a dimension to minimize it). A point is
+/// dominated when some other point is at least as good everywhere and
+/// strictly better somewhere; exact duplicates dominate nothing, so
+/// both survive. O(n²·d) — sized for report grids, not DP tables (the
+/// scheduler keeps its own specialized
+/// [`crate::scheduler::pareto_front`]).
+pub fn pareto_front(points: &[Vec<f64>]) -> Vec<usize> {
+    if let Some(first) = points.first() {
+        for p in points {
+            assert_eq!(p.len(), first.len(), "ragged pareto points");
+        }
+    }
+    let dominates = |a: &[f64], b: &[f64]| {
+        a.iter().zip(b).all(|(x, y)| x >= y) && a.iter().zip(b).any(|(x, y)| x > y)
+    };
+    (0..points.len())
+        .filter(|&i| !points.iter().enumerate().any(|(j, p)| j != i && dominates(p, &points[i])))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -316,6 +337,20 @@ mod tests {
         let skew = jain_index(&[1.0, 0.0, 0.0]);
         assert!((skew - 1.0 / 3.0).abs() < 1e-12, "monopolist → 1/n, got {skew}");
         assert_eq!(jain_index(&[0.0, 0.0]), 0.0, "degenerate sample");
+    }
+
+    #[test]
+    fn pareto_front_keeps_exactly_the_non_dominated() {
+        // b dominates a; c trades off against b; d duplicates c.
+        let pts = vec![
+            vec![1.0, 1.0], // a: dominated by b
+            vec![2.0, 2.0], // b
+            vec![3.0, 0.5], // c: better x, worse y
+            vec![3.0, 0.5], // d: exact duplicate of c
+        ];
+        assert_eq!(pareto_front(&pts), vec![1, 2, 3]);
+        assert_eq!(pareto_front(&[]), Vec::<usize>::new());
+        assert_eq!(pareto_front(&[vec![1.0]]), vec![0]);
     }
 
     #[test]

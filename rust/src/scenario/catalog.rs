@@ -1,0 +1,531 @@
+//! The checked-in scenario zoo.
+//!
+//! Fourteen manifests: the four canonical serving scenarios the
+//! experiments module has always built ([`multi_stream`],
+//! [`skewed_pair`], [`energy_slo`], [`deadline`] — the
+//! `crate::experiments::*_scenario` builders now *delegate here*, so the
+//! manifest format is the single source of truth and the round-trip is
+//! bit-identical), plus ten dynamic stressors exercising the arrival
+//! curves and mid-run perturbations the static 86-case grid cannot
+//! express. [`all`] returns the full zoo; every entry has a checked-in
+//! twin under `scenarios/` that CI tree-compares against these builders.
+
+use super::{Arrival, BudgetCfg, Phase, ScenarioManifest, StreamCfg, SystemCfg, WorkloadCfg};
+use crate::config::{Interconnect, Objective};
+use crate::engine::{MigrationMode, Perturbation, StreamSlo};
+
+/// The traffic-forecast GCN lane every canonical scenario draws from: a
+/// 1M-intersection road network whose interaction-graph edge count is
+/// the drift axis.
+fn traffic_gcn(edges: u64) -> WorkloadCfg {
+    WorkloadCfg::Gcn {
+        code: "TF".to_string(),
+        graph: "traffic".to_string(),
+        vertices: 1_000_000,
+        edges,
+        feature_len: 200,
+        degree_skew: 0.2,
+        layers: 2,
+        hidden: 128,
+    }
+}
+
+/// A mid-size GIN lane (synthetic product-graph numbers) for mixed-fleet
+/// scenarios.
+fn products_gin() -> WorkloadCfg {
+    WorkloadCfg::Gin {
+        code: "PR".to_string(),
+        graph: "products".to_string(),
+        vertices: 400_000,
+        edges: 1_200_000,
+        feature_len: 100,
+        degree_skew: 0.6,
+        layers: 3,
+        hidden: 64,
+        mlp_layers: 2,
+    }
+}
+
+fn phase(workload: WorkloadCfg, count: usize) -> Phase {
+    Phase { workload, count }
+}
+
+fn poisson(rate: f64) -> Arrival {
+    Arrival::Poisson { rate }
+}
+
+/// All canonical streams serve performance-objective lanes; QoS
+/// differentiation lives in the [`StreamSlo`], not the objective.
+fn stream(
+    name: &str,
+    arrival: Arrival,
+    seed: u64,
+    phases: Vec<Phase>,
+    slo: StreamSlo,
+) -> StreamCfg {
+    StreamCfg {
+        name: name.to_string(),
+        objective: Objective::Performance,
+        seed,
+        arrival,
+        phases,
+        slo,
+    }
+}
+
+/// The paper testbed's inventory (3 FPGAs + 2 GPUs, PCIe 4).
+fn paper_system() -> SystemCfg {
+    SystemCfg { n_fpga: 3, n_gpu: 2, interconnect: Interconnect::Pcie4 }
+}
+
+// ---------------------------------------------------------------------
+// The four canonical scenarios, parameterized exactly like their
+// `crate::experiments` ancestors (same workloads, rates, seed offsets,
+// stream order) so the delegation round-trip is bit-identical.
+
+/// Manifest twin of `experiments::multi_stream_scenario`: recurring
+/// day-cycle drift on a GCN lane plus a regime-cycling transformer lane.
+pub fn multi_stream(cycles: usize, per_phase: usize, seed: u64) -> ScenarioManifest {
+    assert!(cycles >= 1 && per_phase >= 1);
+    let day_edges: [u64; 6] =
+        [2_000_000, 20_000_000, 150_000_000, 50_000_000, 150_000_000, 8_000_000];
+    let mut gcn_phases = Vec::new();
+    for _ in 0..cycles {
+        for &edges in &day_edges {
+            gcn_phases.push(phase(traffic_gcn(edges), per_phase));
+        }
+    }
+    let regimes: [(u64, u64); 4] = [(2048, 512), (4096, 1024), (8192, 1024), (2048, 512)];
+    let mut tf_phases = Vec::new();
+    for _ in 0..cycles {
+        for &(seq, window) in &regimes {
+            tf_phases.push(phase(WorkloadCfg::Transformer { seq, window, layers: 8 }, per_phase));
+        }
+    }
+    ScenarioManifest {
+        name: "multi-stream".to_string(),
+        description: "Canonical two-lane serving: day-cycle GCN drift + transformer regimes"
+            .to_string(),
+        system: paper_system(),
+        streams: vec![
+            stream("gcn-traffic", poisson(40.0), seed, gcn_phases, StreamSlo::default()),
+            stream("swin-transformer", poisson(20.0), seed + 1, tf_phases, StreamSlo::default()),
+        ],
+        budget: None,
+        perturbations: vec![],
+    }
+}
+
+/// Manifest twin of `experiments::skewed_pair_scenario`: equal offered
+/// totals, phase-reversed halves — the repartitioning stressor.
+pub fn skewed_pair(per_phase: usize, seed: u64) -> ScenarioManifest {
+    assert!(per_phase >= 1);
+    let heavy = traffic_gcn(150_000_000);
+    let light = traffic_gcn(2_000_000);
+    let front = vec![phase(heavy.clone(), per_phase), phase(light.clone(), per_phase)];
+    let back = vec![phase(light, per_phase), phase(heavy, per_phase)];
+    ScenarioManifest {
+        name: "skewed-pair".to_string(),
+        description: "Phase-reversed demand skew: static leases are wrong in both halves"
+            .to_string(),
+        system: paper_system(),
+        streams: vec![
+            stream("front-loaded", poisson(10.0), seed, front, StreamSlo::default()),
+            stream("back-loaded", poisson(10.0), seed + 1, back, StreamSlo::default()),
+        ],
+        budget: None,
+        perturbations: vec![],
+    }
+}
+
+/// Manifest twin of `experiments::energy_slo_scenario` (three QoS
+/// classes under a power cap); the budget matches the 250 W cap the
+/// acceptance tests pair it with.
+pub fn energy_slo(per_phase: usize, seed: u64) -> ScenarioManifest {
+    assert!(per_phase >= 1);
+    let streams = vec![
+        stream(
+            "latency-critical",
+            poisson(25.0),
+            seed,
+            vec![phase(traffic_gcn(2_000_000), 5 * per_phase)],
+            StreamSlo::target(0.100, 3.0),
+        ),
+        stream(
+            "bulk-analytics",
+            poisson(5.0),
+            seed + 1,
+            vec![phase(traffic_gcn(150_000_000), 2 * per_phase)],
+            StreamSlo::best_effort(2.0),
+        ),
+        stream(
+            "background-embeddings",
+            poisson(12.0),
+            seed + 2,
+            vec![phase(traffic_gcn(20_000_000), 3 * per_phase)],
+            StreamSlo::best_effort(1.0),
+        ),
+    ];
+    ScenarioManifest {
+        name: "energy-slo".to_string(),
+        description: "Three QoS classes under a 250 W budget: defer strictly below priority"
+            .to_string(),
+        system: paper_system(),
+        streams,
+        budget: Some(BudgetCfg { cap_watts: 250.0, window: 0.25 }),
+        perturbations: vec![],
+    }
+}
+
+/// Manifest twin of `experiments::deadline_scenario`: an overloaded hard
+/// deadline lane (preempt override) among best-effort skew and a
+/// drain-pinned bulk lane.
+pub fn deadline(per_phase: usize, seed: u64) -> ScenarioManifest {
+    assert!(per_phase >= 1);
+    let heavy = traffic_gcn(150_000_000);
+    let light = traffic_gcn(2_000_000);
+    let interactive_slo = StreamSlo::target(0.150, 3.0)
+        .with_deadline(0.250)
+        .with_migration(MigrationMode::Preempt { min_remaining: 0.005 });
+    let streams = vec![
+        stream(
+            "deadline-interactive",
+            poisson(40.0),
+            seed,
+            vec![phase(light.clone(), 6 * per_phase)],
+            interactive_slo,
+        ),
+        stream(
+            "front-loaded",
+            poisson(10.0),
+            seed + 1,
+            vec![phase(heavy.clone(), per_phase), phase(light.clone(), per_phase)],
+            StreamSlo::best_effort(2.0),
+        ),
+        stream(
+            "back-loaded",
+            poisson(10.0),
+            seed + 2,
+            vec![phase(light, per_phase), phase(heavy.clone(), per_phase)],
+            StreamSlo::best_effort(2.0),
+        ),
+        stream(
+            "bulk-drain",
+            poisson(4.0),
+            seed + 3,
+            vec![phase(heavy, per_phase)],
+            StreamSlo::best_effort(1.0).with_migration(MigrationMode::Drain),
+        ),
+    ];
+    ScenarioManifest {
+        name: "deadline".to_string(),
+        description: "Overloaded hard-deadline lane among best-effort skew and a drain-pinned bulk"
+            .to_string(),
+        system: paper_system(),
+        streams,
+        budget: None,
+        perturbations: vec![],
+    }
+}
+
+// ---------------------------------------------------------------------
+// The dynamic stressors: arrival curves and perturbations the static
+// grid cannot express. Request counts stay small — the whole zoo is a
+// CI-speed regression net, not a load generator.
+
+/// A flash crowd slams an overloaded deadline lane: queue-ahead pricing
+/// must shed hopeless arrivals on arrival and keep the queue bounded.
+pub fn flash_crowd() -> ScenarioManifest {
+    let burst =
+        Arrival::FlashCrowd { base_rate: 10.0, peak_rate: 200.0, start: 0.2, duration: 0.3 };
+    let interactive_slo = StreamSlo::target(0.150, 3.0)
+        .with_deadline(0.250)
+        .with_migration(MigrationMode::Preempt { min_remaining: 0.005 });
+    ScenarioManifest {
+        name: "flash-crowd".to_string(),
+        description: "200/s burst into a 250 ms deadline lane: early shedding bounds the queue"
+            .to_string(),
+        system: paper_system(),
+        streams: vec![
+            stream(
+                "deadline-interactive",
+                burst,
+                31,
+                vec![phase(traffic_gcn(2_000_000), 50)],
+                interactive_slo,
+            ),
+            stream(
+                "bulk-drain",
+                poisson(4.0),
+                32,
+                vec![phase(traffic_gcn(150_000_000), 6)],
+                StreamSlo::best_effort(1.0).with_migration(MigrationMode::Drain),
+            ),
+        ],
+        budget: None,
+        perturbations: vec![],
+    }
+}
+
+/// A raised-cosine day curve against a steady transformer lane: demand
+/// tracking must follow the swell without thrashing at the trough.
+pub fn diurnal() -> ScenarioManifest {
+    let day = Arrival::Diurnal { base_rate: 5.0, peak_rate: 60.0, period: 2.0 };
+    ScenarioManifest {
+        name: "diurnal".to_string(),
+        description: "Raised-cosine GCN day curve beside a steady transformer lane".to_string(),
+        system: paper_system(),
+        streams: vec![
+            stream(
+                "gcn-diurnal",
+                day,
+                41,
+                vec![phase(traffic_gcn(20_000_000), 40)],
+                StreamSlo::target(0.200, 2.0),
+            ),
+            stream(
+                "txf-steady",
+                poisson(10.0),
+                42,
+                vec![phase(WorkloadCfg::Transformer { seq: 2048, window: 512, layers: 8 }, 12)],
+                StreamSlo::best_effort(1.0),
+            ),
+        ],
+        budget: None,
+        perturbations: vec![],
+    }
+}
+
+/// An MMPP-style burst chain (calm/burst states on a fixed dwell)
+/// against a trickle of heavy bulk work.
+pub fn mmpp_burst() -> ScenarioManifest {
+    let bursts = Arrival::Mmpp { rates: vec![4.0, 80.0], dwell: 0.5 };
+    ScenarioManifest {
+        name: "mmpp-burst".to_string(),
+        description: "Two-state burst chain (4/s calm, 80/s burst) beside heavy bulk".to_string(),
+        system: paper_system(),
+        streams: vec![
+            stream(
+                "bursty-gnn",
+                bursts,
+                51,
+                vec![phase(traffic_gcn(2_000_000), 40)],
+                StreamSlo::best_effort(2.0),
+            ),
+            stream(
+                "bulk",
+                poisson(4.0),
+                52,
+                vec![phase(traffic_gcn(150_000_000), 5)],
+                StreamSlo::best_effort(1.0),
+            ),
+        ],
+        budget: None,
+        perturbations: vec![],
+    }
+}
+
+/// The skewed pair, then two devices die mid-run: adaptive policies must
+/// re-apportion the shrunken pool at the cut.
+pub fn device_failure() -> ScenarioManifest {
+    let mut m = skewed_pair(4, 61);
+    m.name = "device-failure".to_string();
+    m.description =
+        "Skewed pair loses one FPGA and one GPU at t=0.6 s: re-apportion or stall".to_string();
+    m.perturbations = vec![Perturbation::device_cut(0.6, 1, 1)];
+    m
+}
+
+/// The energy/SLO class mix, then the power cap halves mid-run: deferral
+/// pressure doubles and priority order must hold.
+pub fn budget_cut() -> ScenarioManifest {
+    let mut m = energy_slo(2, 71);
+    m.name = "budget-cut".to_string();
+    m.description = "Energy/SLO classes; the 250 W cap halves at t=1 s".to_string();
+    m.perturbations = vec![Perturbation::budget_scale(1.0, 0.5)];
+    m
+}
+
+/// A comfortably-served deadline lane whose deadline collapses to 200 ms
+/// mid-run: shedding must start exactly when the bound tightens.
+pub fn slo_tighten() -> ScenarioManifest {
+    let interactive_slo = StreamSlo::target(0.200, 3.0).with_deadline(10.0);
+    ScenarioManifest {
+        name: "slo-tighten".to_string(),
+        description: "A 10 s deadline collapses to 200 ms at t=0.5 s: shedding starts mid-run"
+            .to_string(),
+        system: paper_system(),
+        streams: vec![
+            stream(
+                "tightening-lane",
+                poisson(40.0),
+                81,
+                vec![phase(traffic_gcn(2_000_000), 30)],
+                interactive_slo,
+            ),
+            stream(
+                "bulk",
+                poisson(4.0),
+                82,
+                vec![phase(traffic_gcn(150_000_000), 4)],
+                StreamSlo::best_effort(1.0),
+            ),
+        ],
+        budget: None,
+        perturbations: vec![Perturbation::slo_tighten(0.5, 0, 1.0, 0.02)],
+    }
+}
+
+/// Four lanes on a 2F+1G pool: more streams than devices, so every lease
+/// is a weighted time slice.
+pub fn oversubscribed() -> ScenarioManifest {
+    let sizes: [u64; 4] = [2_000_000, 8_000_000, 20_000_000, 50_000_000];
+    let streams = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &edges)| {
+            stream(
+                &format!("lane-{i}"),
+                poisson(8.0),
+                91 + i as u64,
+                vec![phase(traffic_gcn(edges), 8)],
+                StreamSlo::best_effort(1.0 + i as f64),
+            )
+        })
+        .collect();
+    ScenarioManifest {
+        name: "oversubscribed".to_string(),
+        description: "Four lanes on a 2F+1G pool: weighted time-sliced leases only".to_string(),
+        system: SystemCfg { n_fpga: 2, n_gpu: 1, interconnect: Interconnect::Pcie4 },
+        streams,
+        budget: None,
+        perturbations: vec![],
+    }
+}
+
+/// GCN + GIN + transformer lanes sharing one pool: the heterogeneous
+/// mix the lease apportionment must price across model families.
+pub fn mixed_fleet() -> ScenarioManifest {
+    ScenarioManifest {
+        name: "mixed-fleet".to_string(),
+        description: "GCN, GIN, and transformer lanes share one paper-testbed pool".to_string(),
+        system: paper_system(),
+        streams: vec![
+            stream(
+                "gcn-lane",
+                poisson(20.0),
+                101,
+                vec![phase(traffic_gcn(20_000_000), 12)],
+                StreamSlo::target(0.200, 2.0),
+            ),
+            stream(
+                "gin-lane",
+                poisson(12.0),
+                102,
+                vec![phase(products_gin(), 10)],
+                StreamSlo::best_effort(1.5),
+            ),
+            stream(
+                "txf-lane",
+                poisson(10.0),
+                103,
+                vec![phase(WorkloadCfg::Transformer { seq: 4096, window: 1024, layers: 8 }, 8)],
+                StreamSlo::best_effort(1.0),
+            ),
+        ],
+        budget: None,
+        perturbations: vec![],
+    }
+}
+
+/// The canonical two-lane mix on a CXL 3.0 fabric — the interconnect
+/// axis of the paper grid, in scenario form.
+pub fn cxl_fleet() -> ScenarioManifest {
+    let mut m = multi_stream(1, 3, 111);
+    m.name = "cxl-fleet".to_string();
+    m.description =
+        "Canonical two-lane mix on CXL 3.0: cheaper hops, different frontier".to_string();
+    m.system.interconnect = Interconnect::Cxl3;
+    m
+}
+
+/// Everything at once: a flash crowd into a deadline lane *while* the
+/// power cap halves mid-burst.
+pub fn flash_crowd_budget() -> ScenarioManifest {
+    let mut m = flash_crowd();
+    m.name = "flash-crowd-budget".to_string();
+    m.description =
+        "Flash crowd into a deadline lane while the power cap halves mid-burst".to_string();
+    m.streams[0].seed = 121;
+    m.streams[1].seed = 122;
+    m.budget = Some(BudgetCfg { cap_watts: 250.0, window: 0.25 });
+    m.perturbations = vec![Perturbation::budget_scale(0.35, 0.5)];
+    m
+}
+
+/// The whole zoo, canonical scenarios first. Every entry has a
+/// checked-in twin at `scenarios/<file_name>` (tree-compared in CI).
+pub fn all() -> Vec<ScenarioManifest> {
+    vec![
+        multi_stream(2, 4, 9),
+        skewed_pair(5, 11),
+        energy_slo(4, 17),
+        deadline(8, 23),
+        flash_crowd(),
+        diurnal(),
+        mmpp_burst(),
+        device_failure(),
+        budget_cut(),
+        slo_tighten(),
+        oversubscribed(),
+        mixed_fleet(),
+        cxl_fleet(),
+        flash_crowd_budget(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ScenarioManifest;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn the_zoo_has_fourteen_unique_buildable_scenarios() {
+        let zoo = all();
+        assert_eq!(zoo.len(), 14);
+        let names: BTreeSet<&str> = zoo.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names.len(), 14, "scenario names must be unique");
+        for m in &zoo {
+            let built = m.build().unwrap_or_else(|e| panic!("{} fails to build: {e:#}", m.name));
+            assert!(!built.streams.is_empty());
+            let total: usize = built.streams.iter().map(|s| s.trace.len()).sum();
+            assert!(total >= 10, "{} is too small to exercise anything", m.name);
+        }
+    }
+
+    #[test]
+    fn every_manifest_round_trips_through_its_pretty_form() {
+        for m in all() {
+            let back = ScenarioManifest::parse_str(&m.to_pretty_string())
+                .unwrap_or_else(|e| panic!("{}: {e:#}", m.name));
+            assert_eq!(back, m, "{} drifts through serialization", m.name);
+        }
+    }
+
+    #[test]
+    fn stressors_carry_their_advertised_dynamics() {
+        assert!(matches!(flash_crowd().streams[0].arrival, Arrival::FlashCrowd { .. }));
+        assert_eq!(flash_crowd().streams[0].slo.deadline, Some(0.250));
+        assert!(matches!(diurnal().streams[0].arrival, Arrival::Diurnal { .. }));
+        assert!(matches!(mmpp_burst().streams[0].arrival, Arrival::Mmpp { .. }));
+        assert_eq!(device_failure().perturbations.len(), 1);
+        assert!(budget_cut().budget.is_some());
+        assert_eq!(slo_tighten().perturbations.len(), 1);
+        assert_eq!(cxl_fleet().system.interconnect, Interconnect::Cxl3);
+        let over = oversubscribed();
+        assert!(over.streams.len() > over.system.n_fpga + over.system.n_gpu);
+        assert!(flash_crowd_budget().budget.is_some());
+        assert_eq!(flash_crowd_budget().perturbations.len(), 1);
+    }
+}

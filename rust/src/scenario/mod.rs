@@ -1,0 +1,1096 @@
+//! The scenario zoo — declarative serving scenarios and their manifest
+//! format (DESIGN.md §Scenarios).
+//!
+//! The paper's evaluation is a *static* grid: 86 workload×system cells,
+//! each measured once under each scheduler. This module is the serving
+//! analogue of that study, made declarative and dynamic: a
+//! [`ScenarioManifest`] is a small JSON document (parsed with
+//! [`crate::util::json`] — no external deps) that names
+//!
+//! * an **arrival process** per stream ([`Arrival`]): constant-rate
+//!   Poisson (bit-identical to
+//!   [`crate::coordinator::generate_trace`]), a diurnal rate curve, a
+//!   flash crowd, or an MMPP-style burst chain;
+//! * a **stream mix** ([`StreamCfg`]): GNN / transformer / mixed lanes
+//!   drawn from the [`crate::workload`] builders, each with its own
+//!   objective, seed, and [`StreamSlo`] class;
+//! * a **system** ([`SystemCfg`]): device pool sizes and interconnect,
+//!   lowered onto the paper testbed's device configs;
+//! * optional **budget** ([`BudgetCfg`]) and mid-run **perturbations**
+//!   ([`Perturbation`]): device cuts, budget cuts, SLO tightening.
+//!
+//! [`ScenarioManifest::build`] lowers the manifest to engine vocabulary
+//! ([`BuiltScenario`]); [`sweep`] runs a scenario×policy grid over the
+//! zoo ([`catalog`]) and reports the winner per cell — the repo's
+//! regression net for the paper's "optimal in 77 of 86 cases" headline.
+//!
+//! The codec is **strict**: unknown keys are rejected, so a typo in a
+//! checked-in manifest fails loudly in CI instead of silently changing
+//! the scenario.
+
+pub mod catalog;
+pub mod sweep;
+
+use std::collections::BTreeMap;
+use std::f64::consts::TAU;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Interconnect, Objective, SystemSpec};
+use crate::coordinator::{Request, StreamSpec};
+use crate::engine::{
+    EnergyBudget, EngineConfig, MigrationMode, Perturbation, PerturbationKind, StreamSlo,
+};
+use crate::util::json::{self, Json};
+use crate::util::Rng;
+use crate::workload::{gnn, transformer, Dataset, Workload};
+
+/// One declarative serving scenario: everything
+/// [`crate::experiments::run_multi_stream_with`] needs except the policy
+/// under test, which the sweep supplies per grid cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioManifest {
+    /// Kebab-case scenario id; the checked-in file is
+    /// `scenarios/<name with '-'→'_'>.json` ([`Self::file_name`]).
+    pub name: String,
+    pub description: String,
+    pub system: SystemCfg,
+    pub streams: Vec<StreamCfg>,
+    /// `Some` puts the run under a per-window joule budget.
+    pub budget: Option<BudgetCfg>,
+    /// Scripted mid-run mutations, in manifest order.
+    pub perturbations: Vec<Perturbation>,
+}
+
+/// Device pool of a scenario. Device *configs* (clocks, power curves)
+/// stay the paper testbed's; manifests vary inventory and interconnect —
+/// the same axes the paper's 86-case grid sweeps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SystemCfg {
+    pub n_fpga: usize,
+    pub n_gpu: usize,
+    pub interconnect: Interconnect,
+}
+
+/// Energy budget as a power cap: `cap_watts` × `window` joules refill
+/// each window (see [`EnergyBudget::from_power_cap`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BudgetCfg {
+    pub cap_watts: f64,
+    pub window: f64,
+}
+
+/// One request lane: an arrival process over a phase sequence of
+/// workloads, plus objective and SLO class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamCfg {
+    pub name: String,
+    pub objective: Objective,
+    /// RNG seed for the arrival recurrence (one draw per request).
+    pub seed: u64,
+    pub arrival: Arrival,
+    /// Consecutive workload phases; requests take phase workloads in
+    /// order, mirroring [`crate::coordinator::generate_trace`]'s
+    /// `(workload, count)` pairs.
+    pub phases: Vec<Phase>,
+    pub slo: StreamSlo,
+}
+
+/// `count` consecutive requests carrying the same workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub workload: WorkloadCfg,
+    pub count: usize,
+}
+
+/// A workload named by its generator parameters, so a manifest is
+/// self-contained: graph workloads spell out the [`Dataset`] fields,
+/// transformers their geometry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadCfg {
+    Gcn {
+        code: String,
+        graph: String,
+        vertices: u64,
+        edges: u64,
+        feature_len: u64,
+        degree_skew: f64,
+        layers: usize,
+        hidden: u64,
+    },
+    Gin {
+        code: String,
+        graph: String,
+        vertices: u64,
+        edges: u64,
+        feature_len: u64,
+        degree_skew: f64,
+        layers: usize,
+        hidden: u64,
+        mlp_layers: usize,
+    },
+    Transformer { seq: u64, window: u64, layers: usize },
+}
+
+/// A stream's arrival process. Timestamps come from the thinning-free
+/// recurrence `t += Exp(1)/rate_at(t)` — one RNG draw per request, so
+/// the constant-rate case reproduces
+/// [`crate::coordinator::generate_trace`] bit for bit and every process
+/// is deterministic per seed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// Constant-rate Poisson (req/s).
+    Poisson { rate: f64 },
+    /// Raised-cosine day curve: `base` at phase 0, `peak` half a period
+    /// in, period `period` seconds.
+    Diurnal { base_rate: f64, peak_rate: f64, period: f64 },
+    /// Step burst: `base_rate` everywhere except `[start, start+duration)`,
+    /// where the rate jumps to `peak_rate`.
+    FlashCrowd { base_rate: f64, peak_rate: f64, start: f64, duration: f64 },
+    /// Markov-modulated-style burst chain with deterministic state
+    /// dwell: the rate cycles through `rates`, holding each for `dwell`
+    /// seconds.
+    Mmpp { rates: Vec<f64>, dwell: f64 },
+}
+
+impl Arrival {
+    /// Instantaneous arrival rate (req/s) at time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match self {
+            Arrival::Poisson { rate } => *rate,
+            Arrival::Diurnal { base_rate, peak_rate, period } => {
+                let phase = (t / period).fract();
+                base_rate + (peak_rate - base_rate) * 0.5 * (1.0 - (TAU * phase).cos())
+            }
+            Arrival::FlashCrowd { base_rate, peak_rate, start, duration } => {
+                if t >= *start && t < start + duration {
+                    *peak_rate
+                } else {
+                    *base_rate
+                }
+            }
+            Arrival::Mmpp { rates, dwell } => rates[(t / dwell) as usize % rates.len()],
+        }
+    }
+
+    /// Draw `n` arrival timestamps: `t += -(1 - u).ln() / rate_at(t)`
+    /// with one `gen_f64` per request — the exact recurrence (and RNG
+    /// draw budget) of [`crate::coordinator::generate_trace`], evaluated
+    /// at the piecewise rate.
+    pub fn times(&self, n: usize, seed: u64) -> Vec<f64> {
+        self.validate();
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += -(1.0 - rng.gen_f64()).ln() / self.rate_at(t);
+            out.push(t);
+        }
+        out
+    }
+
+    /// Panic on degenerate parameters (the engine's eager-validation
+    /// stance; the JSON codec surfaces shape errors as `Result`s, value
+    /// errors fail here).
+    pub fn validate(&self) {
+        fn positive(x: f64, what: &str) {
+            assert!(x > 0.0 && x.is_finite(), "{what} must be positive and finite, got {x}");
+        }
+        match self {
+            Arrival::Poisson { rate } => positive(*rate, "poisson rate"),
+            Arrival::Diurnal { base_rate, peak_rate, period } => {
+                positive(*base_rate, "diurnal base_rate");
+                positive(*peak_rate, "diurnal peak_rate");
+                positive(*period, "diurnal period");
+            }
+            Arrival::FlashCrowd { base_rate, peak_rate, start, duration } => {
+                positive(*base_rate, "flash-crowd base_rate");
+                positive(*peak_rate, "flash-crowd peak_rate");
+                positive(*duration, "flash-crowd duration");
+                assert!(*start >= 0.0 && start.is_finite(), "flash-crowd start must be >= 0");
+            }
+            Arrival::Mmpp { rates, dwell } => {
+                assert!(!rates.is_empty(), "mmpp needs at least one rate state");
+                for r in rates {
+                    positive(*r, "mmpp rate");
+                }
+                positive(*dwell, "mmpp dwell");
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Arrival::Poisson { rate } => {
+                obj_from(vec![("kind", jstr("poisson")), ("rate", jnum(*rate))])
+            }
+            Arrival::Diurnal { base_rate, peak_rate, period } => obj_from(vec![
+                ("kind", jstr("diurnal")),
+                ("base_rate", jnum(*base_rate)),
+                ("peak_rate", jnum(*peak_rate)),
+                ("period", jnum(*period)),
+            ]),
+            Arrival::FlashCrowd { base_rate, peak_rate, start, duration } => obj_from(vec![
+                ("kind", jstr("flash-crowd")),
+                ("base_rate", jnum(*base_rate)),
+                ("peak_rate", jnum(*peak_rate)),
+                ("start", jnum(*start)),
+                ("duration", jnum(*duration)),
+            ]),
+            Arrival::Mmpp { rates, dwell } => obj_from(vec![
+                ("kind", jstr("mmpp")),
+                ("rates", Json::Arr(rates.iter().map(|r| jnum(*r)).collect())),
+                ("dwell", jnum(*dwell)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json, what: &str) -> Result<Arrival> {
+        let m = obj(j, what)?;
+        let kind = str_field(m, "kind", what)?;
+        Ok(match kind {
+            "poisson" => {
+                check_keys(m, &["kind", "rate"], what)?;
+                Arrival::Poisson { rate: num_field(m, "rate", what)? }
+            }
+            "diurnal" => {
+                check_keys(m, &["base_rate", "kind", "peak_rate", "period"], what)?;
+                Arrival::Diurnal {
+                    base_rate: num_field(m, "base_rate", what)?,
+                    peak_rate: num_field(m, "peak_rate", what)?,
+                    period: num_field(m, "period", what)?,
+                }
+            }
+            "flash-crowd" => {
+                check_keys(m, &["base_rate", "duration", "kind", "peak_rate", "start"], what)?;
+                Arrival::FlashCrowd {
+                    base_rate: num_field(m, "base_rate", what)?,
+                    peak_rate: num_field(m, "peak_rate", what)?,
+                    start: num_field(m, "start", what)?,
+                    duration: num_field(m, "duration", what)?,
+                }
+            }
+            "mmpp" => {
+                check_keys(m, &["dwell", "kind", "rates"], what)?;
+                let mut rates = Vec::new();
+                for (i, r) in arr_field(m, "rates", what)?.iter().enumerate() {
+                    let msg = || format!("{what}: rates[{i}] must be a number");
+                    rates.push(r.as_f64().with_context(msg)?);
+                }
+                Arrival::Mmpp { rates, dwell: num_field(m, "dwell", what)? }
+            }
+            other => bail!("{what}: unknown arrival kind '{other}'"),
+        })
+    }
+}
+
+impl WorkloadCfg {
+    /// Lower to a [`Workload`] via the same builders the experiments
+    /// use, so a manifest round-trips the hard-coded scenarios exactly.
+    pub fn build(&self) -> Workload {
+        match self {
+            WorkloadCfg::Gcn { layers, hidden, .. } => {
+                let ds = self.dataset().expect("gcn carries a dataset");
+                gnn::gcn_workload(&ds, *layers, *hidden)
+            }
+            WorkloadCfg::Gin { layers, hidden, mlp_layers, .. } => {
+                let ds = self.dataset().expect("gin carries a dataset");
+                gnn::gin_workload(&ds, *layers, *hidden, *mlp_layers)
+            }
+            WorkloadCfg::Transformer { seq, window, layers } => {
+                transformer::transformer_workload(*seq, *window, *layers)
+            }
+        }
+    }
+
+    fn dataset(&self) -> Option<Dataset> {
+        match self {
+            WorkloadCfg::Gcn { code, graph, vertices, edges, feature_len, degree_skew, .. }
+            | WorkloadCfg::Gin { code, graph, vertices, edges, feature_len, degree_skew, .. } => {
+                Some(Dataset::new(code, graph, *vertices, *edges, *feature_len, *degree_skew))
+            }
+            WorkloadCfg::Transformer { .. } => None,
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        match self {
+            WorkloadCfg::Gcn { .. } => "gcn",
+            WorkloadCfg::Gin { .. } => "gin",
+            WorkloadCfg::Transformer { .. } => "transformer",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![("kind", jstr(self.kind_name()))];
+        match self {
+            WorkloadCfg::Gcn { code, graph, vertices, edges, feature_len, degree_skew, .. }
+            | WorkloadCfg::Gin { code, graph, vertices, edges, feature_len, degree_skew, .. } => {
+                pairs.push(("code", jstr(code)));
+                pairs.push(("graph", jstr(graph)));
+                pairs.push(("vertices", jint(*vertices)));
+                pairs.push(("edges", jint(*edges)));
+                pairs.push(("feature_len", jint(*feature_len)));
+                pairs.push(("degree_skew", jnum(*degree_skew)));
+            }
+            WorkloadCfg::Transformer { .. } => {}
+        }
+        match self {
+            WorkloadCfg::Gcn { layers, hidden, .. } => {
+                pairs.push(("layers", jint(*layers as u64)));
+                pairs.push(("hidden", jint(*hidden)));
+            }
+            WorkloadCfg::Gin { layers, hidden, mlp_layers, .. } => {
+                pairs.push(("layers", jint(*layers as u64)));
+                pairs.push(("hidden", jint(*hidden)));
+                pairs.push(("mlp_layers", jint(*mlp_layers as u64)));
+            }
+            WorkloadCfg::Transformer { seq, window, layers } => {
+                pairs.push(("seq", jint(*seq)));
+                pairs.push(("window", jint(*window)));
+                pairs.push(("layers", jint(*layers as u64)));
+            }
+        }
+        obj_from(pairs)
+    }
+
+    fn from_json(j: &Json, what: &str) -> Result<WorkloadCfg> {
+        let m = obj(j, what)?;
+        let graph_keys = [
+            "code", "degree_skew", "edges", "feature_len", "graph", "hidden", "kind", "layers",
+            "vertices",
+        ];
+        let kind = str_field(m, "kind", what)?;
+        Ok(match kind {
+            "gcn" => {
+                check_keys(m, &graph_keys, what)?;
+                WorkloadCfg::Gcn {
+                    code: str_field(m, "code", what)?.to_string(),
+                    graph: str_field(m, "graph", what)?.to_string(),
+                    vertices: int_field(m, "vertices", what)?,
+                    edges: int_field(m, "edges", what)?,
+                    feature_len: int_field(m, "feature_len", what)?,
+                    degree_skew: num_field(m, "degree_skew", what)?,
+                    layers: int_field(m, "layers", what)? as usize,
+                    hidden: int_field(m, "hidden", what)?,
+                }
+            }
+            "gin" => {
+                let mut gin_keys = graph_keys.to_vec();
+                gin_keys.push("mlp_layers");
+                check_keys(m, &gin_keys, what)?;
+                WorkloadCfg::Gin {
+                    code: str_field(m, "code", what)?.to_string(),
+                    graph: str_field(m, "graph", what)?.to_string(),
+                    vertices: int_field(m, "vertices", what)?,
+                    edges: int_field(m, "edges", what)?,
+                    feature_len: int_field(m, "feature_len", what)?,
+                    degree_skew: num_field(m, "degree_skew", what)?,
+                    layers: int_field(m, "layers", what)? as usize,
+                    hidden: int_field(m, "hidden", what)?,
+                    mlp_layers: int_field(m, "mlp_layers", what)? as usize,
+                }
+            }
+            "transformer" => {
+                check_keys(m, &["kind", "layers", "seq", "window"], what)?;
+                WorkloadCfg::Transformer {
+                    seq: int_field(m, "seq", what)?,
+                    window: int_field(m, "window", what)?,
+                    layers: int_field(m, "layers", what)? as usize,
+                }
+            }
+            other => bail!("{what}: unknown workload kind '{other}'"),
+        })
+    }
+}
+
+impl Phase {
+    fn to_json(&self) -> Json {
+        obj_from(vec![("count", jint(self.count as u64)), ("workload", self.workload.to_json())])
+    }
+
+    fn from_json(j: &Json, what: &str) -> Result<Phase> {
+        let m = obj(j, what)?;
+        check_keys(m, &["count", "workload"], what)?;
+        let count = int_field(m, "count", what)? as usize;
+        if count == 0 {
+            bail!("{what}: phase count must be >= 1");
+        }
+        let workload = WorkloadCfg::from_json(field(m, "workload", what)?, what)?;
+        Ok(Phase { workload, count })
+    }
+}
+
+impl StreamCfg {
+    /// Materialize the lane: draw arrival times, stamp requests in phase
+    /// order (ids are trace positions, as in
+    /// [`crate::coordinator::generate_trace`]), attach objective + SLO.
+    pub fn build(&self) -> Result<StreamSpec> {
+        if self.phases.is_empty() {
+            bail!("stream '{}' has no phases", self.name);
+        }
+        let n: usize = self.phases.iter().map(|p| p.count).sum();
+        let times = self.arrival.times(n, self.seed);
+        let mut trace = Vec::with_capacity(n);
+        for phase in &self.phases {
+            let wl = phase.workload.build();
+            for _ in 0..phase.count {
+                let arrival = times[trace.len()];
+                trace.push(Request { id: trace.len(), arrival, workload: wl.clone() });
+            }
+        }
+        Ok(StreamSpec::new(self.name.clone(), self.objective, trace).with_slo(self.slo.clone()))
+    }
+
+    fn to_json(&self) -> Json {
+        obj_from(vec![
+            ("name", jstr(&self.name)),
+            ("objective", jstr(&objective_to_str(&self.objective))),
+            ("seed", jint(self.seed)),
+            ("arrival", self.arrival.to_json()),
+            ("phases", Json::Arr(self.phases.iter().map(|p| p.to_json()).collect())),
+            ("slo", slo_to_json(&self.slo)),
+        ])
+    }
+
+    fn from_json(j: &Json, what: &str) -> Result<StreamCfg> {
+        let m = obj(j, what)?;
+        check_keys(m, &["arrival", "name", "objective", "phases", "seed", "slo"], what)?;
+        let name = str_field(m, "name", what)?.to_string();
+        let what = &format!("{what} ('{name}')");
+        let mut phases = Vec::new();
+        for (i, p) in arr_field(m, "phases", what)?.iter().enumerate() {
+            phases.push(Phase::from_json(p, &format!("{what} phase {i}"))?);
+        }
+        let slo = match m.get("slo") {
+            Some(s) => slo_from_json(s, what)?,
+            None => StreamSlo::default(),
+        };
+        Ok(StreamCfg {
+            objective: objective_from_str(str_field(m, "objective", what)?)?,
+            seed: int_field(m, "seed", what)?,
+            arrival: Arrival::from_json(field(m, "arrival", what)?, what)?,
+            phases,
+            slo,
+            name,
+        })
+    }
+}
+
+impl SystemCfg {
+    /// Lower onto the paper testbed's device configs with this pool's
+    /// inventory and interconnect.
+    pub fn build(&self) -> SystemSpec {
+        let base = SystemSpec::paper_testbed(self.interconnect);
+        SystemSpec { n_fpga: self.n_fpga, n_gpu: self.n_gpu, ..base }
+    }
+
+    fn to_json(&self) -> Json {
+        obj_from(vec![
+            ("interconnect", jstr(interconnect_to_str(self.interconnect))),
+            ("n_fpga", jint(self.n_fpga as u64)),
+            ("n_gpu", jint(self.n_gpu as u64)),
+        ])
+    }
+
+    fn from_json(j: &Json, what: &str) -> Result<SystemCfg> {
+        let m = obj(j, what)?;
+        check_keys(m, &["interconnect", "n_fpga", "n_gpu"], what)?;
+        let cfg = SystemCfg {
+            n_fpga: int_field(m, "n_fpga", what)? as usize,
+            n_gpu: int_field(m, "n_gpu", what)? as usize,
+            interconnect: Interconnect::parse(str_field(m, "interconnect", what)?)?,
+        };
+        if cfg.n_fpga + cfg.n_gpu == 0 {
+            bail!("{what}: the device pool is empty");
+        }
+        Ok(cfg)
+    }
+}
+
+impl BudgetCfg {
+    pub fn build(&self) -> EnergyBudget {
+        EnergyBudget::from_power_cap(self.cap_watts, self.window)
+    }
+
+    fn to_json(&self) -> Json {
+        obj_from(vec![("cap_watts", jnum(self.cap_watts)), ("window", jnum(self.window))])
+    }
+
+    fn from_json(j: &Json, what: &str) -> Result<BudgetCfg> {
+        let m = obj(j, what)?;
+        check_keys(m, &["cap_watts", "window"], what)?;
+        let cfg = BudgetCfg {
+            cap_watts: num_field(m, "cap_watts", what)?,
+            window: num_field(m, "window", what)?,
+        };
+        if cfg.cap_watts <= 0.0 || !cfg.cap_watts.is_finite() {
+            bail!("{what}: cap_watts must be positive and finite");
+        }
+        if cfg.window <= 0.0 || !cfg.window.is_finite() {
+            bail!("{what}: window must be positive and finite");
+        }
+        Ok(cfg)
+    }
+}
+
+/// A manifest lowered to engine vocabulary, ready for
+/// [`crate::experiments::run_multi_stream_with`].
+#[derive(Debug, Clone)]
+pub struct BuiltScenario {
+    pub system: SystemSpec,
+    pub streams: Vec<StreamSpec>,
+    pub budget: Option<EnergyBudget>,
+    pub perturbations: Vec<Perturbation>,
+}
+
+impl BuiltScenario {
+    /// Fold the scenario's budget and perturbation script into an engine
+    /// config. The policy under test supplies the rest (repartitioning,
+    /// SLO controller); the scenario supplies the environment.
+    pub fn apply(&self, mut cfg: EngineConfig) -> EngineConfig {
+        if let Some(b) = &self.budget {
+            cfg.energy_budget = Some(b.clone());
+        }
+        cfg.perturbations = self.perturbations.clone();
+        cfg
+    }
+}
+
+impl ScenarioManifest {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("description", jstr(&self.description)),
+            ("name", jstr(&self.name)),
+            ("streams", Json::Arr(self.streams.iter().map(|s| s.to_json()).collect())),
+            ("system", self.system.to_json()),
+        ];
+        if let Some(b) = &self.budget {
+            pairs.push(("budget", b.to_json()));
+        }
+        if !self.perturbations.is_empty() {
+            let ps = self.perturbations.iter().map(perturbation_to_json).collect();
+            pairs.push(("perturbations", Json::Arr(ps)));
+        }
+        obj_from(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScenarioManifest> {
+        let m = obj(j, "manifest")?;
+        let keys = ["budget", "description", "name", "perturbations", "streams", "system"];
+        check_keys(m, &keys, "manifest")?;
+        let name = str_field(m, "name", "manifest")?.to_string();
+        let what = format!("scenario '{name}'");
+        let description = str_field(m, "description", &what)?.to_string();
+        let system = SystemCfg::from_json(field(m, "system", &what)?, &what)?;
+        let mut streams = Vec::new();
+        for (i, s) in arr_field(m, "streams", &what)?.iter().enumerate() {
+            streams.push(StreamCfg::from_json(s, &format!("{what} stream {i}"))?);
+        }
+        if streams.is_empty() {
+            bail!("{what}: needs at least one stream");
+        }
+        let budget = match m.get("budget") {
+            Some(b) => Some(BudgetCfg::from_json(b, &what)?),
+            None => None,
+        };
+        let mut perturbations = Vec::new();
+        if m.contains_key("perturbations") {
+            for (i, p) in arr_field(m, "perturbations", &what)?.iter().enumerate() {
+                perturbations.push(perturbation_from_json(p, &format!("{what} perturbation {i}"))?);
+            }
+        }
+        Ok(ScenarioManifest { name, description, system, streams, budget, perturbations })
+    }
+
+    pub fn parse_str(text: &str) -> Result<ScenarioManifest> {
+        let j = json::parse(text).context("manifest is not valid JSON")?;
+        ScenarioManifest::from_json(&j)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ScenarioManifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        ScenarioManifest::parse_str(&text).with_context(|| format!("in {}", path.display()))
+    }
+
+    /// The checked-in file name for this manifest under `scenarios/`.
+    pub fn file_name(&self) -> String {
+        format!("{}.json", self.name.replace('-', "_"))
+    }
+
+    /// Lower to engine vocabulary. Value validation (arrival rates,
+    /// perturbation scripts) panics eagerly, mirroring the engine's own
+    /// stance; structural errors come back as `Err`.
+    pub fn build(&self) -> Result<BuiltScenario> {
+        let mut streams = Vec::new();
+        for s in &self.streams {
+            streams.push(s.build()?);
+        }
+        for p in &self.perturbations {
+            p.validate(streams.len());
+        }
+        Ok(BuiltScenario {
+            system: self.system.build(),
+            streams,
+            budget: self.budget.as_ref().map(BudgetCfg::build),
+            perturbations: self.perturbations.clone(),
+        })
+    }
+
+    /// Indented serialization for the checked-in `scenarios/*.json`
+    /// files — same tree as [`Self::to_json`], human-diffable layout.
+    pub fn to_pretty_string(&self) -> String {
+        let mut out = String::new();
+        pretty(&self.to_json(), 0, &mut out);
+        out.push('\n');
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scalar codecs. `Objective::parse` and `Interconnect::parse` are lossy
+// / many-to-one on purpose (CLI ergonomics); the manifest codec pins one
+// canonical spelling per value so serialize∘parse is the identity.
+
+fn objective_to_str(o: &Objective) -> String {
+    match o {
+        Objective::Performance => "perf".to_string(),
+        Objective::Energy => "energy".to_string(),
+        Objective::Balanced { min_throughput_frac } => format!("balanced:{min_throughput_frac}"),
+        Objective::QoS { min_throughput } => format!("qos:{min_throughput}"),
+    }
+}
+
+fn objective_from_str(s: &str) -> Result<Objective> {
+    if let Some(frac) = s.strip_prefix("balanced:") {
+        let msg = || format!("bad balanced fraction in '{s}'");
+        return Ok(Objective::Balanced { min_throughput_frac: frac.parse().with_context(msg)? });
+    }
+    Objective::parse(s)
+}
+
+fn migration_to_str(m: &MigrationMode) -> String {
+    match m {
+        MigrationMode::Drain => "drain".to_string(),
+        MigrationMode::Preempt { min_remaining } => format!("preempt:{min_remaining}"),
+    }
+}
+
+fn migration_from_str(s: &str) -> Result<MigrationMode> {
+    if s == "drain" {
+        return Ok(MigrationMode::Drain);
+    }
+    match s.strip_prefix("preempt:") {
+        Some(t) => {
+            let msg = || format!("bad preempt threshold in '{s}'");
+            Ok(MigrationMode::Preempt { min_remaining: t.parse().with_context(msg)? })
+        }
+        None => bail!("unknown migration mode '{s}' (drain|preempt:<min_remaining>)"),
+    }
+}
+
+fn interconnect_to_str(ic: Interconnect) -> &'static str {
+    match ic {
+        Interconnect::Pcie4 => "pcie4",
+        Interconnect::Pcie5 => "pcie5",
+        Interconnect::Cxl3 => "cxl3",
+    }
+}
+
+fn slo_to_json(slo: &StreamSlo) -> Json {
+    let mut pairs = vec![("priority", jnum(slo.priority))];
+    if let Some(t) = slo.p99_target {
+        pairs.push(("p99_target", jnum(t)));
+    }
+    if let Some(d) = slo.deadline {
+        pairs.push(("deadline", jnum(d)));
+    }
+    if let Some(m) = slo.migration {
+        pairs.push(("migration", jstr(&migration_to_str(&m))));
+    }
+    obj_from(pairs)
+}
+
+fn slo_from_json(j: &Json, what: &str) -> Result<StreamSlo> {
+    let m = obj(j, what)?;
+    check_keys(m, &["deadline", "migration", "p99_target", "priority"], what)?;
+    let mut slo = StreamSlo::default();
+    if let Some(p) = opt_num(m, "priority", what)? {
+        slo.priority = p;
+    }
+    slo.p99_target = opt_num(m, "p99_target", what)?;
+    slo.deadline = opt_num(m, "deadline", what)?;
+    if let Some(v) = m.get("migration") {
+        let msg = || format!("{what}: field 'migration' must be a string");
+        slo.migration = Some(migration_from_str(v.as_str().with_context(msg)?)?);
+    }
+    slo.validate();
+    Ok(slo)
+}
+
+fn perturbation_to_json(p: &Perturbation) -> Json {
+    let mut pairs = vec![("at", jnum(p.at))];
+    match &p.kind {
+        PerturbationKind::DeviceCut { n_fpga, n_gpu } => {
+            pairs.push(("kind", jstr("device-cut")));
+            pairs.push(("n_fpga", jint(*n_fpga as u64)));
+            pairs.push(("n_gpu", jint(*n_gpu as u64)));
+        }
+        PerturbationKind::BudgetScale { factor } => {
+            pairs.push(("kind", jstr("budget-scale")));
+            pairs.push(("factor", jnum(*factor)));
+        }
+        PerturbationKind::SloTighten { stream, p99_scale, deadline_scale } => {
+            pairs.push(("kind", jstr("slo-tighten")));
+            pairs.push(("stream", jint(*stream as u64)));
+            pairs.push(("p99_scale", jnum(*p99_scale)));
+            pairs.push(("deadline_scale", jnum(*deadline_scale)));
+        }
+    }
+    obj_from(pairs)
+}
+
+fn perturbation_from_json(j: &Json, what: &str) -> Result<Perturbation> {
+    let m = obj(j, what)?;
+    let at = num_field(m, "at", what)?;
+    let kind = str_field(m, "kind", what)?;
+    Ok(match kind {
+        "device-cut" => {
+            check_keys(m, &["at", "kind", "n_fpga", "n_gpu"], what)?;
+            let n_fpga = int_field(m, "n_fpga", what)? as usize;
+            let n_gpu = int_field(m, "n_gpu", what)? as usize;
+            Perturbation::device_cut(at, n_fpga, n_gpu)
+        }
+        "budget-scale" => {
+            check_keys(m, &["at", "factor", "kind"], what)?;
+            Perturbation::budget_scale(at, num_field(m, "factor", what)?)
+        }
+        "slo-tighten" => {
+            check_keys(m, &["at", "deadline_scale", "kind", "p99_scale", "stream"], what)?;
+            Perturbation::slo_tighten(
+                at,
+                int_field(m, "stream", what)? as usize,
+                num_field(m, "p99_scale", what)?,
+                num_field(m, "deadline_scale", what)?,
+            )
+        }
+        other => bail!("{what}: unknown perturbation kind '{other}'"),
+    })
+}
+
+// ---------------------------------------------------------------------
+// JSON plumbing: tiny constructors, strict-object accessors, pretty
+// printer.
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn jint(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+fn obj_from(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn obj<'a>(j: &'a Json, what: &str) -> Result<&'a BTreeMap<String, Json>> {
+    j.as_obj().with_context(|| format!("{what}: expected an object"))
+}
+
+/// The strictness gate: every object's keys must be a subset of what the
+/// schema names, so a misspelled manifest key is an error, not a silent
+/// default.
+fn check_keys(m: &BTreeMap<String, Json>, allowed: &[&str], what: &str) -> Result<()> {
+    for key in m.keys() {
+        if !allowed.contains(&key.as_str()) {
+            bail!("{what}: unknown key '{key}' (expected one of: {})", allowed.join(", "));
+        }
+    }
+    Ok(())
+}
+
+fn field<'a>(m: &'a BTreeMap<String, Json>, key: &str, what: &str) -> Result<&'a Json> {
+    m.get(key).with_context(|| format!("{what}: missing field '{key}'"))
+}
+
+fn num_field(m: &BTreeMap<String, Json>, key: &str, what: &str) -> Result<f64> {
+    let v = field(m, key, what)?;
+    v.as_f64().with_context(|| format!("{what}: field '{key}' must be a number"))
+}
+
+fn int_field(m: &BTreeMap<String, Json>, key: &str, what: &str) -> Result<u64> {
+    let v = field(m, key, what)?;
+    v.as_u64().with_context(|| format!("{what}: field '{key}' must be a non-negative integer"))
+}
+
+fn str_field<'a>(m: &'a BTreeMap<String, Json>, key: &str, what: &str) -> Result<&'a str> {
+    let v = field(m, key, what)?;
+    v.as_str().with_context(|| format!("{what}: field '{key}' must be a string"))
+}
+
+fn arr_field<'a>(m: &'a BTreeMap<String, Json>, key: &str, what: &str) -> Result<&'a [Json]> {
+    let v = field(m, key, what)?;
+    v.as_arr().with_context(|| format!("{what}: field '{key}' must be an array"))
+}
+
+fn opt_num(m: &BTreeMap<String, Json>, key: &str, what: &str) -> Result<Option<f64>> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let msg = || format!("{what}: field '{key}' must be a number");
+            Ok(Some(v.as_f64().with_context(msg)?))
+        }
+    }
+}
+
+fn pretty(j: &Json, depth: usize, out: &mut String) {
+    match j {
+        Json::Arr(v) if !v.is_empty() => {
+            out.push_str("[\n");
+            for (i, x) in v.iter().enumerate() {
+                indent(out, depth + 1);
+                pretty(x, depth + 1, out);
+                if i + 1 < v.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            indent(out, depth);
+            out.push(']');
+        }
+        Json::Obj(m) if !m.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, x)) in m.iter().enumerate() {
+                indent(out, depth + 1);
+                out.push_str(&Json::Str(k.clone()).to_string());
+                out.push_str(": ");
+                pretty(x, depth + 1, out);
+                if i + 1 < m.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            indent(out, depth);
+            out.push('}');
+        }
+        leaf => out.push_str(&leaf.to_string()),
+    }
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::generate_trace;
+
+    fn kitchen_sink() -> ScenarioManifest {
+        ScenarioManifest {
+            name: "kitchen-sink".to_string(),
+            description: "every schema feature at once".to_string(),
+            system: SystemCfg { n_fpga: 2, n_gpu: 1, interconnect: Interconnect::Cxl3 },
+            streams: vec![
+                StreamCfg {
+                    name: "gnn-lane".to_string(),
+                    objective: Objective::Performance,
+                    seed: 7,
+                    arrival: Arrival::FlashCrowd {
+                        base_rate: 5.0,
+                        peak_rate: 80.0,
+                        start: 0.5,
+                        duration: 0.25,
+                    },
+                    phases: vec![
+                        Phase {
+                            workload: WorkloadCfg::Gcn {
+                                code: "TF".to_string(),
+                                graph: "traffic".to_string(),
+                                vertices: 1_000_000,
+                                edges: 2_000_000,
+                                feature_len: 200,
+                                degree_skew: 0.2,
+                                layers: 2,
+                                hidden: 128,
+                            },
+                            count: 3,
+                        },
+                        Phase {
+                            workload: WorkloadCfg::Gin {
+                                code: "PR".to_string(),
+                                graph: "products".to_string(),
+                                vertices: 400_000,
+                                edges: 1_200_000,
+                                feature_len: 100,
+                                degree_skew: 0.6,
+                                layers: 3,
+                                hidden: 64,
+                                mlp_layers: 2,
+                            },
+                            count: 2,
+                        },
+                    ],
+                    slo: StreamSlo::target(0.1, 3.0)
+                        .with_deadline(0.25)
+                        .with_migration(MigrationMode::Preempt { min_remaining: 0.005 }),
+                },
+                StreamCfg {
+                    name: "txf-lane".to_string(),
+                    objective: Objective::Balanced { min_throughput_frac: 0.7 },
+                    seed: 8,
+                    arrival: Arrival::Mmpp { rates: vec![4.0, 40.0], dwell: 0.5 },
+                    phases: vec![Phase {
+                        workload: WorkloadCfg::Transformer { seq: 2048, window: 512, layers: 4 },
+                        count: 4,
+                    }],
+                    slo: StreamSlo::best_effort(1.0),
+                },
+            ],
+            budget: Some(BudgetCfg { cap_watts: 200.0, window: 0.25 }),
+            perturbations: vec![
+                Perturbation::device_cut(0.4, 1, 0),
+                Perturbation::budget_scale(0.6, 0.5),
+                Perturbation::slo_tighten(0.8, 0, 0.5, 1.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn kitchen_sink_round_trips_compact_and_pretty() {
+        let m = kitchen_sink();
+        let compact = ScenarioManifest::parse_str(&m.to_json().to_string()).unwrap();
+        assert_eq!(compact, m);
+        let pretty = ScenarioManifest::parse_str(&m.to_pretty_string()).unwrap();
+        assert_eq!(pretty, m);
+        assert_eq!(m.file_name(), "kitchen_sink.json");
+    }
+
+    #[test]
+    fn kitchen_sink_builds() {
+        let built = kitchen_sink().build().unwrap();
+        assert_eq!(built.system.n_fpga, 2);
+        assert_eq!(built.system.n_gpu, 1);
+        assert_eq!(built.streams.len(), 2);
+        assert_eq!(built.streams[0].trace.len(), 5);
+        assert_eq!(built.streams[0].slo.deadline, Some(0.25));
+        assert!(built.budget.is_some());
+        assert_eq!(built.perturbations.len(), 3);
+        // Ids are trace positions; arrivals are non-decreasing.
+        for (i, r) in built.streams[0].trace.iter().enumerate() {
+            assert_eq!(r.id, i);
+            if i > 0 {
+                assert!(r.arrival >= built.streams[0].trace[i - 1].arrival);
+            }
+        }
+        // The engine config inherits budget + perturbation script.
+        let cfg = built.apply(EngineConfig::default());
+        assert!(cfg.energy_budget.is_some());
+        assert_eq!(cfg.perturbations.len(), 3);
+    }
+
+    #[test]
+    fn poisson_times_match_generate_trace_bit_for_bit() {
+        let ds = Dataset::new("TF", "traffic", 1_000_000, 2_000_000, 200, 0.2);
+        let wl = gnn::gcn_workload(&ds, 2, 128);
+        let legacy = generate_trace(&[(wl, 12)], 40.0, 9);
+        let times = Arrival::Poisson { rate: 40.0 }.times(12, 9);
+        assert_eq!(times.len(), 12);
+        for (r, t) in legacy.iter().zip(&times) {
+            assert_eq!(r.arrival.to_bits(), t.to_bits(), "divergence at id {}", r.id);
+        }
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_everywhere() {
+        let m = kitchen_sink();
+        let Json::Obj(mut top) = m.to_json() else { panic!("manifest serializes to an object") };
+        top.insert("typo".to_string(), Json::Bool(true));
+        let err = ScenarioManifest::from_json(&Json::Obj(top)).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key 'typo'"), "{err:#}");
+
+        let bad_stream = r#"{"description": "d", "name": "x", "system":
+            {"interconnect": "pcie4", "n_fpga": 1, "n_gpu": 1}, "streams": [
+            {"name": "s", "objective": "perf", "seed": 1,
+             "arrival": {"kind": "poisson", "rate": 2.0, "surprise": 1},
+             "phases": [{"count": 1, "workload":
+                {"kind": "transformer", "seq": 128, "window": 64, "layers": 1}}]}]}"#;
+        let err = ScenarioManifest::parse_str(bad_stream).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown key 'surprise'"), "{err:#}");
+    }
+
+    #[test]
+    fn missing_fields_name_the_field_and_context() {
+        let text = r#"{"description": "d", "name": "x", "streams": [],
+            "system": {"interconnect": "pcie4", "n_fpga": 1}}"#;
+        let err = ScenarioManifest::parse_str(text).unwrap_err();
+        assert!(format!("{err:#}").contains("missing field 'n_gpu'"), "{err:#}");
+        assert!(format!("{err:#}").contains("scenario 'x'"), "{err:#}");
+    }
+
+    #[test]
+    fn scalar_codecs_pin_one_spelling_per_value() {
+        for o in [
+            Objective::Performance,
+            Objective::Energy,
+            Objective::Balanced { min_throughput_frac: 0.7 },
+            Objective::QoS { min_throughput: 12.5 },
+        ] {
+            assert_eq!(objective_from_str(&objective_to_str(&o)).unwrap(), o);
+        }
+        for m in [MigrationMode::Drain, MigrationMode::Preempt { min_remaining: 0.005 }] {
+            assert_eq!(migration_from_str(&migration_to_str(&m)).unwrap(), m);
+        }
+        for ic in [Interconnect::Pcie4, Interconnect::Pcie5, Interconnect::Cxl3] {
+            assert_eq!(Interconnect::parse(interconnect_to_str(ic)).unwrap(), ic);
+        }
+        assert!(migration_from_str("teleport").is_err());
+        assert!(objective_from_str("balanced:x").is_err());
+    }
+
+    #[test]
+    fn arrival_curves_hit_their_landmarks() {
+        let d = Arrival::Diurnal { base_rate: 10.0, peak_rate: 50.0, period: 8.0 };
+        assert!((d.rate_at(0.0) - 10.0).abs() < 1e-9);
+        assert!((d.rate_at(4.0) - 50.0).abs() < 1e-9, "peak at half period");
+        assert!((d.rate_at(8.0) - 10.0).abs() < 1e-9, "periodic");
+
+        let f = Arrival::FlashCrowd { base_rate: 5.0, peak_rate: 200.0, start: 1.0, duration: 0.5 };
+        assert_eq!(f.rate_at(0.9), 5.0);
+        assert_eq!(f.rate_at(1.0), 200.0);
+        assert_eq!(f.rate_at(1.49), 200.0);
+        assert_eq!(f.rate_at(1.5), 5.0);
+
+        let m = Arrival::Mmpp { rates: vec![2.0, 20.0, 8.0], dwell: 0.5 }; // cycles
+        assert_eq!(m.rate_at(0.1), 2.0);
+        assert_eq!(m.rate_at(0.6), 20.0);
+        assert_eq!(m.rate_at(1.2), 8.0);
+        assert_eq!(m.rate_at(1.6), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive and finite")]
+    fn zero_rate_arrivals_fail_validation() {
+        Arrival::Poisson { rate: 0.0 }.times(3, 1);
+    }
+
+    #[test]
+    fn burst_arrivals_cluster_inside_the_burst() {
+        // At base 2/s vs peak 400/s over [0.2, 0.7), most of a 60-request
+        // trace must land inside the burst window.
+        let a = Arrival::FlashCrowd { base_rate: 2.0, peak_rate: 400.0, start: 0.2, duration: 0.5 };
+        let times = a.times(60, 3);
+        let inside = times.iter().filter(|t| (0.2..0.7).contains(*t)).count();
+        assert!(inside > 40, "only {inside} of 60 arrivals inside the burst");
+    }
+}

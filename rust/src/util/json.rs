@@ -1,9 +1,14 @@
-//! Minimal JSON parser — enough for `artifacts/manifest.json`.
+//! Minimal JSON parser + writer — enough for `artifacts/manifest.json`
+//! and the scenario manifests under `scenarios/`.
 //!
 //! The offline build has no `serde_json`; this recursive-descent parser
 //! covers the full JSON grammar (objects, arrays, strings with escapes,
-//! numbers, booleans, null) with precise error positions. It is used only
-//! on the control path (manifest loading), never per-request.
+//! numbers, booleans, null) with precise error positions. The writer is
+//! the [`fmt::Display`] impl: compact output, object keys in `BTreeMap`
+//! order (deterministic), numbers via Rust's shortest-round-trip `f64`
+//! formatting — `parse(v.to_string())` always reproduces `v` bit for
+//! bit. Both run only on the control path (manifest loading/saving),
+//! never per-request.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -62,6 +67,66 @@ impl Json {
         match self {
             Json::Obj(m) => Some(m),
             _ => None,
+        }
+    }
+}
+
+/// Escape a string for inclusion in a JSON document (adds the quotes).
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            '\u{8}' => f.write_str("\\b")?,
+            '\u{c}' => f.write_str("\\f")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+impl fmt::Display for Json {
+    /// Compact serialization; `parse(x.to_string()) == x` for any tree
+    /// whose numbers are finite (non-finite numbers have no JSON
+    /// representation and panic — they never belong in a manifest).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                assert!(n.is_finite(), "non-finite number {n} cannot be serialized as JSON");
+                // Rust's f64 Display is the shortest string that parses
+                // back to the same bits, so round-trips are exact.
+                write!(f, "{n}")
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(v) => {
+                f.write_str("[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, x)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{x}")?;
+                }
+                f.write_str("}")
+            }
         }
     }
 }
@@ -320,5 +385,40 @@ mod tests {
         let j = parse("[[1,2],[3]]").unwrap();
         assert_eq!(j.idx(0).unwrap().idx(1).unwrap().as_f64(), Some(2.0));
         assert_eq!(j.idx(1).unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn serializer_round_trips_structures() {
+        let src = r#"{"a": [1, 2.5, -3e-2], "b": {"c": true, "d": null}, "e": "x\n\"y\"\\z"}"#;
+        let j = parse(src).unwrap();
+        let out = j.to_string();
+        assert_eq!(parse(&out).unwrap(), j, "parse(serialize(x)) == x");
+        // Keys come out in BTreeMap order and output is compact.
+        assert!(out.starts_with(r#"{"a":[1,2.5,"#), "got {out}");
+        assert!(!out.contains(' '), "compact output, got {out}");
+    }
+
+    #[test]
+    fn serializer_round_trips_f64_bits() {
+        let exp = -(1.0f64 - 0.731).ln() / 40.0;
+        for x in [0.1, 1.0 / 3.0, 40.0, exp, f64::MIN_POSITIVE, 1e300] {
+            let out = Json::Num(x).to_string();
+            let back = parse(&out).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} → {out} → {back}");
+        }
+    }
+
+    #[test]
+    fn serializer_escapes_control_chars() {
+        let j = Json::Str("a\u{1}b\u{8}".into());
+        let out = j.to_string();
+        assert_eq!(out, "\"a\\u0001b\\b\"");
+        assert_eq!(parse(&out).unwrap(), j);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn serializer_rejects_non_finite() {
+        let _ = Json::Num(f64::NAN).to_string();
     }
 }

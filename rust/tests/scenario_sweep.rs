@@ -1,0 +1,206 @@
+//! Integration tests for the scenario zoo and the declarative sweep
+//! runner (DESIGN.md §Scenarios) — the repo's regression net for the
+//! paper's "optimal in 77 of 86 cases" headline:
+//!
+//! * the checked-in `scenarios/*.json` files mirror the catalog builders
+//!   tree-for-tree (a manifest edit without a catalog edit, or vice
+//!   versa, fails here);
+//! * the four canonical scenarios round-trip through the JSON manifest
+//!   format **bit-identically** — same request ids, arrival bit
+//!   patterns, workloads, SLOs as the historical
+//!   `experiments::*_scenario` entry points;
+//! * a seeded-subset sweep grid keeps the adaptive default at or above
+//!   the static-lease baseline (the regression the zoo exists to catch);
+//! * the flash-crowd stressor stays queue-bounded via early shedding,
+//!   and the shed-aware demand bid keeps an overloaded deadline lane's
+//!   pool share alive.
+
+use std::path::PathBuf;
+
+use dype::engine::MigrationMode;
+use dype::experiments::{
+    self, deadline_scenario, energy_slo_scenario, multi_stream_scenario, skewed_pair_scenario,
+};
+use dype::scenario::sweep::{run_grid, Policy};
+use dype::scenario::{catalog, ScenarioManifest};
+use dype::util::json;
+
+fn scenarios_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+// ---- the checked-in zoo ------------------------------------------------
+
+#[test]
+fn checked_in_manifests_mirror_the_catalog_tree_for_tree() {
+    for m in catalog::all() {
+        let path = scenarios_dir().join(m.file_name());
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{} is missing its checked-in twin: {e}", m.name));
+        let file_tree = json::parse(&text).unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        assert_eq!(
+            file_tree,
+            m.to_json(),
+            "{} drifted from catalog::{}; regenerate it from to_pretty_string():\n{}",
+            path.display(),
+            m.name.replace('-', "_"),
+            m.to_pretty_string()
+        );
+        let parsed = ScenarioManifest::parse_str(&text).unwrap_or_else(|e| panic!("{e:#}"));
+        assert_eq!(parsed, m, "{} parses to a different manifest", path.display());
+    }
+}
+
+#[test]
+fn no_orphan_files_in_the_scenarios_directory() {
+    let expected: Vec<String> = catalog::all().iter().map(|m| m.file_name()).collect();
+    for entry in std::fs::read_dir(scenarios_dir()).expect("scenarios/ exists") {
+        let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+        assert!(
+            expected.contains(&name),
+            "scenarios/{name} has no catalog builder — add it to catalog::all()"
+        );
+    }
+}
+
+#[test]
+fn every_checked_in_manifest_loads_and_builds() {
+    for m in catalog::all() {
+        let loaded = ScenarioManifest::load(scenarios_dir().join(m.file_name()))
+            .unwrap_or_else(|e| panic!("{e:#}"));
+        let built = loaded.build().unwrap_or_else(|e| panic!("{}: {e:#}", m.name));
+        assert!(!built.streams.is_empty(), "{} built no streams", m.name);
+    }
+}
+
+// ---- bit-identical manifest round-trip of the canonical scenarios ------
+
+fn assert_streams_identical(
+    label: &str,
+    via_manifest: &[dype::coordinator::StreamSpec],
+    legacy: &[dype::coordinator::StreamSpec],
+) {
+    assert_eq!(via_manifest.len(), legacy.len(), "{label}: stream count");
+    for (a, b) in via_manifest.iter().zip(legacy) {
+        assert_eq!(a.name, b.name, "{label}");
+        assert_eq!(a.objective, b.objective, "{label}/{}", a.name);
+        assert_eq!(a.slo, b.slo, "{label}/{}", a.name);
+        assert_eq!(a.trace.len(), b.trace.len(), "{label}/{}", a.name);
+        for (x, y) in a.trace.iter().zip(&b.trace) {
+            assert_eq!(x.id, y.id, "{label}/{}", a.name);
+            assert_eq!(
+                x.arrival.to_bits(),
+                y.arrival.to_bits(),
+                "{label}/{} diverges at id {} ({} vs {})",
+                a.name,
+                x.id,
+                x.arrival,
+                y.arrival
+            );
+            assert_eq!(x.workload.name, y.workload.name, "{label}/{} id {}", a.name, x.id);
+            assert_eq!(x.workload.kernels, y.workload.kernels, "{label}/{} id {}", a.name, x.id);
+        }
+    }
+}
+
+/// Serialize → parse → build must reproduce the historical builders bit
+/// for bit: ids, arrival bit patterns, workload kernel chains, SLOs.
+#[test]
+fn canonical_scenarios_round_trip_bit_identically() {
+    let cases: Vec<(&str, ScenarioManifest, Vec<dype::coordinator::StreamSpec>)> = vec![
+        ("multi-stream", catalog::multi_stream(2, 4, 9), multi_stream_scenario(2, 4, 9)),
+        ("skewed-pair", catalog::skewed_pair(5, 11), skewed_pair_scenario(5, 11)),
+        ("energy-slo", catalog::energy_slo(4, 17), energy_slo_scenario(4, 17)),
+        ("deadline", catalog::deadline(8, 23), deadline_scenario(8, 23)),
+    ];
+    for (label, manifest, legacy) in cases {
+        let reparsed = ScenarioManifest::parse_str(&manifest.to_pretty_string())
+            .unwrap_or_else(|e| panic!("{label}: {e:#}"));
+        assert_eq!(reparsed, manifest, "{label} drifts through serialization");
+        let built = reparsed.build().unwrap_or_else(|e| panic!("{label}: {e:#}"));
+        assert_streams_identical(label, &built.streams, &legacy);
+    }
+}
+
+#[test]
+fn deadline_manifest_carries_the_migration_overrides() {
+    let built = catalog::deadline(8, 23).build().unwrap();
+    assert_eq!(
+        built.streams[0].slo.migration,
+        Some(MigrationMode::Preempt { min_remaining: 0.005 })
+    );
+    assert_eq!(built.streams[3].slo.migration, Some(MigrationMode::Drain));
+}
+
+// ---- the seeded-subset sweep grid --------------------------------------
+
+/// The regression net proper: on a small seeded subset of the zoo, the
+/// best adaptive policy must stay at (or within a whisker of) the
+/// static-lease baseline in every scenario, and ahead in most — the
+/// CI-sized analogue of the paper's 77-of-86 scoreboard.
+#[test]
+fn adaptive_wins_or_ties_static_on_the_seeded_subset() {
+    let subset =
+        vec![catalog::multi_stream(1, 2, 9), catalog::skewed_pair(3, 11), catalog::deadline(4, 23)];
+    let report = run_grid(&subset, &Policy::ALL).expect("grid runs");
+    assert_eq!(report.cells.len(), subset.len() * Policy::ALL.len());
+
+    for c in &report.cells {
+        let label = format!("{}/{}", c.scenario, c.policy.name());
+        assert!(c.conserved(), "{label}: {} + {} != {}", c.completed, c.sheds, c.offered);
+        assert!(c.score().is_finite(), "{label}: non-finite score");
+    }
+
+    for sc in report.scenarios() {
+        let adaptive = report.best_adaptive_score(sc);
+        let baseline = report.best_static_score(sc);
+        assert!(
+            adaptive >= 0.85 * baseline,
+            "{sc}: best adaptive score {adaptive:.3} collapsed below static {baseline:.3}"
+        );
+    }
+    let (wins, n) = report.adaptive_scoreboard();
+    assert_eq!(n, 3);
+    assert!(wins >= 2, "adaptive wins or ties only {wins} of {n} seeded scenarios");
+
+    let rendered = report.render();
+    assert!(rendered.contains("win"), "report must mark winners:\n{rendered}");
+    assert!(rendered.contains(&format!("{wins} of {n} scenarios")), "{rendered}");
+}
+
+// ---- stressor regressions (satellites 1 + 2) ---------------------------
+
+/// Early shedding at admission must keep the flash-crowd queue bounded:
+/// arrivals that cannot make their deadline from deep queue positions
+/// are refused on arrival instead of rotting in the queue.
+#[test]
+fn flash_crowd_stays_queue_bounded_via_early_shedding() {
+    let built = catalog::flash_crowd().build().unwrap();
+    let cfg = built.apply(Policy::Deadline.engine_config());
+    let report = experiments::run_multi_stream_with(&built.system, &built.streams, cfg);
+    let lane = &report.streams[0];
+    assert_eq!(lane.name, "deadline-interactive");
+    assert!(lane.report.shed >= 1, "a 200/s burst into a 250 ms deadline lane must shed");
+    assert!(
+        lane.report.max_queue_depth <= 30,
+        "queue depth {} — early shedding failed to bound the burst",
+        lane.report.max_queue_depth
+    );
+}
+
+/// Shed-aware demand bidding: the overloaded deadline lane sheds, but
+/// its shed FLOPs still count toward its demand EWMA, so its pool share
+/// must not decay to nothing.
+#[test]
+fn shed_aware_bidding_keeps_the_overloaded_lane_funded() {
+    let built = catalog::deadline(8, 23).build().unwrap();
+    let cfg = built.apply(Policy::Deadline.engine_config());
+    let report = experiments::run_multi_stream_with(&built.system, &built.streams, cfg);
+    let total_shed: usize = report.streams.iter().map(|s| s.report.shed).sum();
+    assert!(total_shed >= 1, "the overloaded deadline scenario must shed");
+    let share = report.engine.final_pool_share[0];
+    assert!(
+        share > 0.05,
+        "deadline-interactive ends with pool share {share:.3}; shed demand fell out of its bid"
+    );
+}

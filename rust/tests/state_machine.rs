@@ -1,0 +1,180 @@
+//! Property tests for the engine's per-request state machine on seeded
+//! random scenarios (DESIGN.md §Scenarios).
+//!
+//! Every admitted request moves admission → (defer)* → dispatch →
+//! (preempt/migrate)* → completion, or is shed exactly once at
+//! admission. Whatever random mix of workloads, arrival curves, SLO
+//! classes, budgets, and policies a seed produces, the run must uphold:
+//!
+//! * **conservation** — per stream, completions + sheds == offered, and
+//!   completion ids are unique trace positions;
+//! * **ordering** — per-stream latency percentiles are finite and
+//!   monotone (p50 ≤ p90 ≤ p99);
+//! * **energy** — when budgeted, Σ per-stream modeled energy equals the
+//!   ledger's Σ window_joules (charged − refunded), and no refund pushes
+//!   a window negative;
+//! * **no panic** — the engine finishes every seeded scenario.
+//!
+//! The scenarios are built through [`dype::scenario`] manifests, so
+//! this doubles as a fuzz of the manifest → engine lowering path.
+
+use std::collections::BTreeSet;
+
+use dype::config::{Interconnect, Objective};
+use dype::engine::{MigrationMode, StreamSlo};
+use dype::experiments::run_multi_stream_with;
+use dype::scenario::sweep::Policy;
+use dype::scenario::{
+    Arrival, BudgetCfg, Phase, ScenarioManifest, StreamCfg, SystemCfg, WorkloadCfg,
+};
+use dype::util::Rng;
+
+fn random_workload(rng: &mut Rng) -> WorkloadCfg {
+    match rng.gen_range_usize(0, 3) {
+        0 => WorkloadCfg::Gcn {
+            code: "TF".to_string(),
+            graph: "traffic".to_string(),
+            vertices: 1_000_000,
+            edges: [2_000_000, 20_000_000, 150_000_000][rng.gen_range_usize(0, 3)],
+            feature_len: 200,
+            degree_skew: 0.2,
+            layers: 2,
+            hidden: 128,
+        },
+        1 => WorkloadCfg::Gin {
+            code: "PR".to_string(),
+            graph: "products".to_string(),
+            vertices: 400_000,
+            edges: 1_200_000,
+            feature_len: 100,
+            degree_skew: 0.6,
+            layers: 3,
+            hidden: 64,
+            mlp_layers: 2,
+        },
+        _ => WorkloadCfg::Transformer {
+            seq: [2048, 4096][rng.gen_range_usize(0, 2)],
+            window: 512,
+            layers: 8,
+        },
+    }
+}
+
+fn random_arrival(rng: &mut Rng) -> Arrival {
+    let rate = rng.gen_range_f64(5.0, 40.0);
+    match rng.gen_range_usize(0, 3) {
+        0 => Arrival::Poisson { rate },
+        1 => Arrival::Diurnal { base_rate: rate, peak_rate: rate * 4.0, period: 1.5 },
+        _ => Arrival::FlashCrowd {
+            base_rate: rate,
+            peak_rate: rate * 6.0,
+            start: 0.2,
+            duration: 0.4,
+        },
+    }
+}
+
+fn random_slo(rng: &mut Rng) -> StreamSlo {
+    let priority = rng.gen_range_f64(1.0, 4.0);
+    let mut slo = match rng.gen_range_usize(0, 3) {
+        0 => StreamSlo::best_effort(priority),
+        1 => StreamSlo::target(rng.gen_range_f64(0.1, 0.4), priority),
+        _ => StreamSlo::target(0.15, priority).with_deadline(rng.gen_range_f64(0.25, 2.0)),
+    };
+    if rng.gen_range_usize(0, 2) == 1 {
+        slo = slo.with_migration(match rng.gen_range_usize(0, 2) {
+            0 => MigrationMode::Drain,
+            _ => MigrationMode::Preempt { min_remaining: 0.005 },
+        });
+    }
+    slo
+}
+
+/// A whole random scenario from one seed: 2–4 streams, 4–10 requests
+/// each, sometimes a power cap. Small on purpose — 8 seeds must stay
+/// CI-speed — but every state-machine transition is reachable.
+fn random_manifest(seed: u64) -> ScenarioManifest {
+    let mut rng = Rng::seed_from_u64(seed);
+    let n_streams = rng.gen_range_usize(2, 5);
+    let streams = (0..n_streams)
+        .map(|i| StreamCfg {
+            name: format!("lane-{i}"),
+            objective: Objective::Performance,
+            seed: seed * 100 + i as u64,
+            arrival: random_arrival(&mut rng),
+            phases: vec![Phase {
+                workload: random_workload(&mut rng),
+                count: rng.gen_range_usize(4, 11),
+            }],
+            slo: random_slo(&mut rng),
+        })
+        .collect();
+    let budget = if rng.gen_range_usize(0, 2) == 1 {
+        Some(BudgetCfg { cap_watts: rng.gen_range_f64(200.0, 600.0), window: 0.25 })
+    } else {
+        None
+    };
+    ScenarioManifest {
+        name: format!("fuzz-{seed}"),
+        description: "seeded random state-machine scenario".to_string(),
+        system: SystemCfg { n_fpga: 3, n_gpu: 2, interconnect: Interconnect::Pcie4 },
+        streams,
+        budget,
+        perturbations: vec![],
+    }
+}
+
+#[test]
+fn random_scenarios_uphold_the_state_machine_invariants() {
+    for seed in 0..8u64 {
+        let m = random_manifest(seed);
+        let policy = Policy::ALL[(seed as usize) % Policy::ALL.len()];
+        let label = format!("seed {seed} under {}", policy.name());
+
+        let built = m.build().unwrap_or_else(|e| panic!("{label}: {e:#}"));
+        let cfg = built.apply(policy.engine_config());
+        let budgeted = cfg.energy_budget.is_some();
+        let r = run_multi_stream_with(&built.system, &built.streams, cfg);
+
+        for (sr, spec) in r.streams.iter().zip(&built.streams) {
+            let lane = format!("{label}/{}", sr.name);
+            // Conservation: every request settles exactly once.
+            assert_eq!(
+                sr.report.completed + sr.report.shed,
+                spec.trace.len(),
+                "{lane}: {} completed + {} shed != {} offered",
+                sr.report.completed,
+                sr.report.shed,
+                spec.trace.len()
+            );
+            // Completion ids are unique positions of this stream's trace.
+            let ids: BTreeSet<usize> = sr.report.completions.iter().map(|c| c.id).collect();
+            assert_eq!(ids.len(), sr.report.completions.len(), "{lane}: duplicate completion");
+            assert!(ids.iter().all(|id| *id < spec.trace.len()), "{lane}: alien completion id");
+            // Latency percentiles are finite and monotone.
+            if sr.report.completed > 0 {
+                assert!(sr.report.p50_latency > 0.0, "{lane}");
+                assert!(sr.report.p50_latency <= sr.report.p90_latency, "{lane}");
+                assert!(sr.report.p90_latency <= sr.report.p99_latency, "{lane}");
+                assert!(sr.report.p99_latency.is_finite(), "{lane}");
+            }
+        }
+
+        if budgeted {
+            // f_eng conservation: windows hold exactly what the streams'
+            // batches were charged, refunds included, none negative.
+            let charged = r.engine.joules_charged();
+            let modeled: f64 = r.streams.iter().map(|sr| sr.report.energy).sum();
+            let tol = modeled.abs() * 1e-9 + 1e-12;
+            assert!(
+                (charged - modeled).abs() < tol,
+                "{label}: windows {charged} J vs modeled {modeled} J"
+            );
+            assert!(
+                r.engine.window_joules.iter().all(|j| *j >= 0.0),
+                "{label}: negative budget window: {:?}",
+                r.engine.window_joules
+            );
+        }
+    }
+}
