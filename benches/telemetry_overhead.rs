@@ -1,0 +1,107 @@
+//! Telemetry overhead bench (ISSUE 7): what a trace recorder costs the
+//! serving hot path, per processed event.
+//!
+//! Two modes over the same seeded skewed-pair scenario under the
+//! adaptive-drain policy: recorder **off** (the default `NullRecorder`
+//! path — one `Option` branch per emission site, no record ever built)
+//! and recorder **on** (a `TimelineRecorder` accumulating every typed
+//! record). Both modes must produce bitwise-identical serving outcomes;
+//! only host wall time may differ.
+//!
+//! The recorder-off median is the number the bench-smoke 2% gate guards
+//! (`engine_repartition` medians are re-checked against the tracked
+//! baseline): zero-cost-when-off is an acceptance criterion, not an
+//! aspiration. The recorder-on median documents the opt-in price.
+
+use std::time::Instant;
+
+use dype::config::{Interconnect, SystemSpec};
+use dype::coordinator::MultiStreamReport;
+use dype::engine::{EngineConfig, RepartitionPolicy};
+use dype::experiments::{run_multi_stream_with, skewed_pair_scenario};
+use dype::metrics::Table;
+use dype::telemetry::Recorder;
+use dype::util::bench::{fmt_time, record_json};
+
+const REPS: usize = 5;
+
+fn drain_cfg() -> EngineConfig {
+    EngineConfig { repartition: Some(RepartitionPolicy::reactive(1.0)), ..EngineConfig::default() }
+}
+
+fn median(walls: &mut [f64]) -> f64 {
+    walls.sort_by(f64::total_cmp);
+    walls[walls.len() / 2]
+}
+
+fn main() {
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let streams = skewed_pair_scenario(16, 77);
+    let offered: usize = streams.iter().map(|s| s.trace.len()).sum();
+    println!(
+        "skewed two-stream scenario: {} requests over {}F+{}G, adaptive-drain, {REPS} reps\n",
+        offered, sys.n_fpga, sys.n_gpu
+    );
+
+    // Warm the allocator and caches before timing anything.
+    run_multi_stream_with(&sys, &streams, drain_cfg());
+
+    let mut off_walls = Vec::with_capacity(REPS);
+    let mut off: Option<MultiStreamReport> = None;
+    for _ in 0..REPS {
+        let t = Instant::now();
+        let r = run_multi_stream_with(&sys, &streams, drain_cfg());
+        off_walls.push(t.elapsed().as_secs_f64());
+        off = Some(r);
+    }
+    let off = off.unwrap();
+
+    let mut on_walls = Vec::with_capacity(REPS);
+    let mut on: Option<MultiStreamReport> = None;
+    let mut records = 0usize;
+    for _ in 0..REPS {
+        let rec = Recorder::timeline();
+        let cfg = drain_cfg().with_recorder(rec.clone());
+        let t = Instant::now();
+        let r = run_multi_stream_with(&sys, &streams, cfg);
+        on_walls.push(t.elapsed().as_secs_f64());
+        records = rec.drain().len();
+        on = Some(r);
+    }
+    let on = on.unwrap();
+
+    // The recorder is a pure observer: identical serving outcomes.
+    assert_eq!(on.total_completed, off.total_completed, "recorder changed what was served");
+    assert_eq!(on.makespan, off.makespan, "recorder changed the simulated clock");
+    assert_eq!(on.engine.events_processed, off.engine.events_processed);
+    assert!(records > 0, "the timeline recorder captured nothing");
+
+    let events = off.engine.events_processed.max(1) as f64;
+    let off_med = median(&mut off_walls);
+    let on_med = median(&mut on_walls);
+
+    let mut t = Table::new(&["mode", "makespan", "events", "records", "wall/event"]);
+    for (mode, med, n) in [("recorder-off", off_med, 0usize), ("recorder-on", on_med, records)] {
+        t.row(vec![
+            mode.to_string(),
+            format!("{:.2}s", off.makespan),
+            format!("{}", off.engine.events_processed),
+            format!("{n}"),
+            fmt_time(med / events),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nrecorder on/off wall ratio: {:.3} ({} records, {:.1} records/event)",
+        on_med / off_med,
+        records,
+        records as f64 / events
+    );
+
+    // CI perf trajectory (see util::bench::record_json): the off median
+    // is the zero-cost-when-off guard, the on median the opt-in price.
+    record_json(&[
+        ("telemetry_overhead/recorder_off_per_event".to_string(), off_med / events),
+        ("telemetry_overhead/recorder_on_per_event".to_string(), on_med / events),
+    ]);
+}

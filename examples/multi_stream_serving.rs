@@ -22,10 +22,13 @@
 //! preemptive policy, showing infeasible requests shed at admission,
 //! per-stream deadline attainment, and criticality-tied migration
 //! modes (the critical lane preempts while the bulk lane drains).
+//! `--trace <path>` attaches a timeline recorder to the run and writes
+//! the Perfetto `trace_events` JSON (load it at `ui.perfetto.dev`, or
+//! check it with `dype trace-validate <path>`).
 //!
 //! Run: `cargo run --release --example multi_stream_serving -- \
 //!       [cycles] [--cache schedules.json] [--static] [--energy-slo] \
-//!       [--deadlines]`
+//!       [--deadlines] [--trace trace.json]`
 
 use std::sync::{Arc, Mutex};
 
@@ -40,6 +43,7 @@ use dype::experiments::{
 use dype::metrics::{fmt_percent, Table};
 use dype::perfmodel::OracleModels;
 use dype::scheduler::ScheduleCache;
+use dype::telemetry::{export, Recorder};
 
 fn main() {
     let mut cycles = 3usize;
@@ -47,10 +51,12 @@ fn main() {
     let mut statik = false;
     let mut energy_slo = false;
     let mut deadlines = false;
+    let mut trace_path: Option<String> = None;
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
         match a.as_str() {
             "--cache" => cache_path = Some(args.next().expect("--cache needs a path")),
+            "--trace" => trace_path = Some(args.next().expect("--trace needs a path")),
             "--static" => statik = true,
             // Adaptive serving has been the default since the PR-4 flip;
             // the old opt-in flag is accepted so existing invocations keep
@@ -151,6 +157,11 @@ fn main() {
     } else {
         EngineConfig::default() // adaptive with prewarming
     };
+    let recorder = trace_path.as_ref().map(|_| Recorder::timeline());
+    let cfg = match &recorder {
+        Some(rec) => cfg.with_recorder(rec.clone()),
+        None => cfg,
+    };
     let mut server =
         MultiStreamServer::with_cache(sys, &est, cache.clone()).with_engine_config(cfg);
     let report = server.serve(&streams);
@@ -210,6 +221,15 @@ fn main() {
     if let Some(p) = &cache_path {
         cache.lock().unwrap().save_to(p).expect("writable cache path");
         println!("saved {} cached schedules to {p}", cache.lock().unwrap().len());
+    }
+
+    if let (Some(p), Some(rec)) = (&trace_path, &recorder) {
+        let names: Vec<String> = streams.iter().map(|s| s.name.clone()).collect();
+        let records = rec.drain();
+        let doc = export::perfetto(&records, &names);
+        export::validate(&doc).expect("the exporter emits strictly valid traces");
+        std::fs::write(p, format!("{doc}\n")).expect("writable trace path");
+        println!("trace: {} records -> {p} (Perfetto trace_events JSON)", records.len());
     }
 
     // The acceptance bars. Default scenario: recurring drift across ≥2

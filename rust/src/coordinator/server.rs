@@ -94,6 +94,18 @@ pub struct ServeReport {
     /// the stream's own [`crate::engine::StreamSlo::migration`] override
     /// when set, the policy mode otherwise).
     pub slot_preemptions: usize,
+    /// The lane's live incremental p99 estimate as the run ended — the
+    /// [`crate::metrics::P2Quantile`] value the SLO controller actually
+    /// fed back into lease weight, exported so the controller's input is
+    /// inspectable post-run. `None` before any completion. Converges on
+    /// `p99_latency` (the exact post-hoc percentile) as observations
+    /// grow; the two are identical through the estimator's exact phase
+    /// (≤ 5 completions).
+    pub p99_estimate: Option<f64>,
+    /// Completions the p99 estimator observed — the sample size behind
+    /// `p99_estimate` (preempted slots never complete, so this equals
+    /// `completed` on the engine path).
+    pub p99_observations: usize,
     /// Schedule-cache counters attributable to this run (all-zero when the
     /// serving coordinator has no cache attached).
     pub cache: CacheStats,

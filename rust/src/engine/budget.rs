@@ -183,11 +183,15 @@ impl BudgetLedger {
     /// Close the open window and refill the budget, carrying the balance
     /// over: an overdraft (negative remainder) is deducted from the
     /// refill, unused joules bank up to one extra window's worth.
-    pub(crate) fn roll_window(&mut self) {
-        self.window_joules.push(self.charged_in_window);
+    /// Returns the closed window's net charge (what telemetry plots on
+    /// the budget-window track).
+    pub(crate) fn roll_window(&mut self) -> f64 {
+        let closed = self.charged_in_window;
+        self.window_joules.push(closed);
         self.charged_in_window = 0.0;
         let carry = self.remaining.min(self.budget.joules_per_window);
         self.remaining = self.budget.joules_per_window + carry;
+        closed
     }
 
     /// Close the trailing partial window and return the per-window net

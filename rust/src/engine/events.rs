@@ -60,6 +60,41 @@ pub enum EventKind {
     Perturbation { index: usize },
 }
 
+impl EventKind {
+    /// Number of event kinds — sizes the per-kind telemetry counter
+    /// arrays (see [`crate::telemetry::Snapshot`]).
+    pub const COUNT: usize = 8;
+
+    /// Stable per-kind labels, indexed by [`EventKind::index`]. These
+    /// name counters in exported telemetry, so changing one breaks
+    /// downstream dashboards the same way renaming a metric would.
+    pub const NAMES: [&'static str; EventKind::COUNT] = [
+        "arrival",
+        "batch-complete",
+        "preempt",
+        "shed",
+        "lease-expiry",
+        "repartition-tick",
+        "budget-window-tick",
+        "perturbation",
+    ];
+
+    /// Dense index of this kind in declaration order; always
+    /// `< EventKind::COUNT`.
+    pub fn index(&self) -> usize {
+        match self {
+            EventKind::RequestArrival { .. } => 0,
+            EventKind::BatchComplete { .. } => 1,
+            EventKind::Preempt { .. } => 2,
+            EventKind::Shed { .. } => 3,
+            EventKind::LeaseExpiry => 4,
+            EventKind::RepartitionTick => 5,
+            EventKind::BudgetWindowTick => 6,
+            EventKind::Perturbation { .. } => 7,
+        }
+    }
+}
+
 /// A timestamped event. `seq` is the queue's push counter — the
 /// deterministic tie-breaker for equal timestamps.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -189,6 +224,25 @@ mod tests {
     #[should_panic(expected = "non-finite")]
     fn rejects_non_finite_times() {
         EventQueue::new().push(f64::NAN, EventKind::RepartitionTick);
+    }
+
+    #[test]
+    fn kind_indices_are_dense_and_named() {
+        let kinds = [
+            EventKind::RequestArrival { stream: 0, index: 0 },
+            EventKind::BatchComplete { stream: 0, epoch: 0 },
+            EventKind::Preempt { stream: 0 },
+            EventKind::Shed { stream: 0, index: 0 },
+            EventKind::LeaseExpiry,
+            EventKind::RepartitionTick,
+            EventKind::BudgetWindowTick,
+            EventKind::Perturbation { index: 0 },
+        ];
+        assert_eq!(kinds.len(), EventKind::COUNT);
+        for (i, k) in kinds.iter().enumerate() {
+            assert_eq!(k.index(), i, "declaration order is the index contract");
+        }
+        assert_eq!(EventKind::NAMES[EventKind::LeaseExpiry.index()], "lease-expiry");
     }
 
     #[test]

@@ -78,6 +78,7 @@ use crate::perfmodel::{OracleModels, PerfEstimator};
 use crate::scheduler::{
     evaluate_plan, CacheStats, PowerTable, Schedule, ScheduleCache, SharedScheduleCache,
 };
+use crate::telemetry::{self, LeaseSnapshot, Record, Recorder, ShedCause, Snapshot};
 
 use budget::BudgetLedger;
 use repartition::share_shift;
@@ -115,6 +116,12 @@ pub struct EngineConfig {
     /// bypassed — the hardware *did* change) under every policy, static
     /// included. Empty by default — the historical engine, bit for bit.
     pub perturbations: Vec<Perturbation>,
+    /// Trace recorder handle ([`crate::telemetry`]); `None` — the
+    /// default — records nothing and keeps the hot path at one `Option`
+    /// branch per would-be record (the record is built inside a closure
+    /// that never runs). Cloning the config shares the handle, so the
+    /// caller keeps one to drain after the run.
+    pub recorder: Option<Recorder>,
 }
 
 impl Default for EngineConfig {
@@ -125,6 +132,7 @@ impl Default for EngineConfig {
             energy_budget: None,
             slo: SloController::default(),
             perturbations: Vec::new(),
+            recorder: None,
         }
     }
 }
@@ -148,6 +156,25 @@ impl EngineConfig {
     /// attached.
     pub fn budgeted(b: EnergyBudget) -> EngineConfig {
         EngineConfig { energy_budget: Some(b), ..Default::default() }
+    }
+
+    /// Attach a trace recorder: every engine decision emits a typed
+    /// [`Record`] through it (see [`crate::telemetry`]). The handle is
+    /// shared — clone it before attaching to drain the timeline after
+    /// the run.
+    pub fn with_recorder(mut self, rec: Recorder) -> EngineConfig {
+        self.recorder = Some(rec);
+        self
+    }
+
+    /// Emit one trace record if (and only if) a recorder is attached.
+    /// The closure defers record construction, so the recorder-off path
+    /// costs exactly the `Option` branch.
+    #[inline]
+    fn trace(&self, f: impl FnOnce() -> Record) {
+        if let Some(r) = &self.recorder {
+            r.push(f());
+        }
     }
 }
 
@@ -217,6 +244,11 @@ pub struct EngineMetrics {
     /// Scheduled perturbations that actually fired before the last
     /// request settled (one past the makespan never fires).
     pub perturbations_applied: usize,
+    /// Hot-path telemetry counters ([`crate::telemetry::Snapshot`]):
+    /// events popped per kind, the event-heap high-water mark, cache
+    /// probe totals, and the feature-gated handler-timing/allocation
+    /// figures. Maintained unconditionally — no recorder required.
+    pub telemetry: Snapshot,
 }
 
 impl EngineMetrics {
@@ -605,6 +637,8 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
                 shed: self.shed,
                 deferrals: self.deferrals,
                 slot_preemptions: self.slot_preempts,
+                p99_estimate: self.p99.value(),
+                p99_observations: self.p99.count(),
                 cache: self.cache,
                 completions: self.completions,
             },
@@ -661,6 +695,7 @@ fn try_admit<E: PerfEstimator>(
     q: &mut EventQueue,
     remaining: &mut usize,
     next_budget_tick: Option<f64>,
+    cfg: &EngineConfig,
 ) {
     let allowed = admission_allowed(&*ledger, lanes, traces, stream);
     let front = lanes[stream].queue.front().copied();
@@ -674,8 +709,21 @@ fn try_admit<E: PerfEstimator>(
             Some(t) if !allowed => (t - now).max(0.0),
             _ => 0.0,
         };
-        if elapsed + budget_wait + lanes[stream].estimated_batch_latency() > deadline {
+        let batch = lanes[stream].estimated_batch_latency();
+        if elapsed + budget_wait + batch > deadline {
             lanes[stream].queue.pop_front();
+            // Attribute the shed to the dominant feasibility term — the
+            // "why" a trace post-mortem needs.
+            cfg.trace(|| {
+                let cause = if budget_wait >= elapsed && budget_wait >= batch {
+                    ShedCause::BudgetWait
+                } else if elapsed >= batch {
+                    ShedCause::Queueing
+                } else {
+                    ShedCause::BatchLatency
+                };
+                Record::Shed { t: now, stream, index: idx, cause }
+            });
             q.push(now, EventKind::Shed { stream, index: idx });
             return; // the Shed handler re-considers the next request
         }
@@ -691,6 +739,7 @@ fn try_admit<E: PerfEstimator>(
     } else {
         lanes[stream].deferred = true;
         lanes[stream].deferrals += 1;
+        cfg.trace(|| Record::Deferral { t: now, stream });
     }
 }
 
@@ -758,11 +807,22 @@ fn run_event_loop<E: PerfEstimator>(
     // imposes, which the deadline feasibility check prices in.
     let mut next_tick = cfg.energy_budget.as_ref().map(|b| b.window);
 
+    // Hot-path telemetry: always-on counters (a few integer ops per
+    // event) plus the feature-gated timing/allocation figures.
+    let mut snap = Snapshot::default();
+    let alloc_before = telemetry::alloc::allocations();
+    let mut windows_closed = 0usize;
+
     while remaining > 0 {
         let ev = q.pop().expect("pending requests imply pending events");
+        snap.events_popped[ev.kind.index()] += 1;
+        snap.heap_high_water = snap.heap_high_water.max(q.len() + 1);
         let now = ev.time;
+        #[cfg(feature = "telemetry-timing")]
+        let handler_start = std::time::Instant::now();
         match ev.kind {
             EventKind::RequestArrival { stream, index } => {
+                cfg.trace(|| Record::Arrival { t: now, stream, index });
                 let lane = &mut lanes[stream];
                 // Queue-ahead feasibility (early shedding): the front-only
                 // check in `try_admit` prices only the head of the queue,
@@ -778,6 +838,12 @@ fn run_event_loop<E: PerfEstimator>(
                     let ahead = lane.queue.len() + usize::from(lane.busy());
                     let queue_wait = ahead as f64 * (m.period / lane.share).max(1e-12);
                     if queue_wait + lane.estimated_batch_latency() > deadline {
+                        cfg.trace(|| Record::Shed {
+                            t: now,
+                            stream,
+                            index,
+                            cause: ShedCause::QueueAhead,
+                        });
                         q.push(now, EventKind::Shed { stream, index });
                         continue; // never enqueued; the Shed handler settles it
                     }
@@ -794,6 +860,7 @@ fn run_event_loop<E: PerfEstimator>(
                         &mut q,
                         &mut remaining,
                         next_tick,
+                        cfg,
                     );
                 }
             }
@@ -811,6 +878,12 @@ fn run_event_loop<E: PerfEstimator>(
                 let latency =
                     lane.completions.last().expect("completion recorded at dispatch").latency();
                 lane.p99.observe(latency);
+                cfg.trace(|| Record::Slot {
+                    start: slot.slot_end - slot.eff_period,
+                    end: now,
+                    stream,
+                    epoch,
+                });
                 if !lanes[stream].queue.is_empty() {
                     try_admit(
                         stream,
@@ -821,6 +894,7 @@ fn run_event_loop<E: PerfEstimator>(
                         &mut q,
                         &mut remaining,
                         next_tick,
+                        cfg,
                     );
                 }
             }
@@ -839,6 +913,7 @@ fn run_event_loop<E: PerfEstimator>(
                         &mut q,
                         &mut remaining,
                         next_tick,
+                        cfg,
                     );
                 }
             }
@@ -866,6 +941,7 @@ fn run_event_loop<E: PerfEstimator>(
                         &mut q,
                         &mut remaining,
                         next_tick,
+                        cfg,
                     );
                 }
             }
@@ -898,12 +974,18 @@ fn run_event_loop<E: PerfEstimator>(
                 }
             }
             EventKind::BudgetWindowTick => {
-                let Some(window) = ledger.as_mut().map(|led| {
-                    led.roll_window();
-                    led.window()
+                let Some((window, closed)) = ledger.as_mut().map(|led| {
+                    let closed = led.roll_window();
+                    (led.window(), closed)
                 }) else {
                     continue; // ticks are only ever scheduled with a ledger
                 };
+                cfg.trace(|| Record::BudgetWindow {
+                    t: now,
+                    index: windows_closed,
+                    joules: closed,
+                });
+                windows_closed += 1;
                 // Resume deferred lanes highest-priority-first (ties in
                 // stream order) until the refilled window objects again.
                 let mut order: Vec<usize> = (0..lanes.len())
@@ -927,6 +1009,7 @@ fn run_event_loop<E: PerfEstimator>(
                         &mut q,
                         &mut remaining,
                         next_tick,
+                        cfg,
                     );
                 }
                 if remaining > 0 {
@@ -971,8 +1054,19 @@ fn run_event_loop<E: PerfEstimator>(
                         Perturbation::tighten_slo(slo, p99_scale, deadline_scale);
                     }
                 }
+                cfg.trace(|| Record::Perturbation {
+                    t: now,
+                    index,
+                    label: cfg.perturbations[index].kind.label(),
+                });
                 metrics.perturbations_applied += 1;
             }
+        }
+        #[cfg(feature = "telemetry-timing")]
+        {
+            // Host-clock time in the handler (arms that `continue` are
+            // not timed — see `Snapshot::handler_ns`).
+            snap.handler_ns[ev.kind.index()] += handler_start.elapsed().as_nanos() as u64;
         }
     }
     if let Some(led) = ledger {
@@ -982,6 +1076,15 @@ fn run_event_loop<E: PerfEstimator>(
     metrics.deferrals = lanes.iter().map(|l| l.deferrals).sum();
     metrics.sheds = lanes.iter().map(|l| l.shed).sum();
     metrics.events_processed = q.processed();
+    snap.allocations = telemetry::alloc::allocations().saturating_sub(alloc_before);
+    for l in lanes.iter() {
+        snap.cache_probes += l.cache.hits + l.cache.misses;
+        snap.cache_hits += l.cache.hits;
+        snap.prewarm_hits += l.cache.prewarm_hits;
+        snap.prewarm_misses += l.cache.prewarm_misses;
+    }
+    debug_assert_eq!(snap.events_total(), metrics.events_processed);
+    metrics.telemetry = snap;
     (metrics, pool)
 }
 
@@ -1052,11 +1155,15 @@ fn maybe_migrate<E: PerfEstimator>(
         })
         .collect();
     let desired = lease::assign(pool, &demands);
+    // The apportionment shift is computed on the forced path too — it is
+    // cheap (two short Vecs), and the trace record attributes every
+    // repartition to the delta that (would have) triggered it.
+    let current: Vec<f64> = active.iter().map(|&i| lanes[i].pool_share(pool)).collect();
+    let next: Vec<f64> = (0..active.len()).map(|l| desired.pool_share(l, pool)).collect();
+    let shift = share_shift(&current, &next);
     if !force {
         let pol = cfg.repartition.as_ref().expect("unforced migration requires a policy");
-        let current: Vec<f64> = active.iter().map(|&i| lanes[i].pool_share(pool)).collect();
-        let next: Vec<f64> = (0..active.len()).map(|l| desired.pool_share(l, pool)).collect();
-        if share_shift(&current, &next) <= pol.hysteresis {
+        if shift <= pol.hysteresis {
             return; // renewal: the table in force is still close enough
         }
     }
@@ -1092,6 +1199,12 @@ fn maybe_migrate<E: PerfEstimator>(
                     if let (Some(led), Some(w)) = (ledger.as_mut(), slot.charge_window) {
                         led.refund(w, joules);
                     }
+                    cfg.trace(|| Record::Preempt {
+                        t: now,
+                        stream: s,
+                        refunded_time: remainder,
+                        refunded_joules: joules,
+                    });
                     q.push(now, EventKind::Preempt { stream: s });
                 }
             }
@@ -1122,6 +1235,23 @@ fn maybe_migrate<E: PerfEstimator>(
             lanes[s].pending_drain = wall * lanes[s].share;
         }
     }
+    // One repartition record with the applied lease table — the
+    // per-stream rows become the lease tracks in the Perfetto export.
+    cfg.trace(|| Record::Repartition {
+        t: now,
+        shift,
+        hysteresis: cfg.repartition.as_ref().map_or(0.0, |p| p.hysteresis),
+        forced: force,
+        leases: active
+            .iter()
+            .map(|&s| LeaseSnapshot {
+                stream: s,
+                n_fpga: lanes[s].part.n_fpga,
+                n_gpu: lanes[s].part.n_gpu,
+                share: lanes[s].share,
+            })
+            .collect(),
+    });
 }
 
 /// Single-stream entry point backing

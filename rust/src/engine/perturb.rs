@@ -30,6 +30,17 @@ pub enum PerturbationKind {
     SloTighten { stream: usize, p99_scale: f64, deadline_scale: f64 },
 }
 
+impl PerturbationKind {
+    /// Stable short name used by telemetry records and trace exports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PerturbationKind::DeviceCut { .. } => "device-cut",
+            PerturbationKind::BudgetScale { .. } => "budget-scale",
+            PerturbationKind::SloTighten { .. } => "slo-tighten",
+        }
+    }
+}
+
 /// One scheduled mid-run perturbation: at engine time `at`, apply `kind`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Perturbation {
@@ -104,11 +115,14 @@ mod tests {
     fn ctors_round_trip_the_kind() {
         let cut = Perturbation::device_cut(1.5, 1, 0);
         assert_eq!(cut.kind, PerturbationKind::DeviceCut { n_fpga: 1, n_gpu: 0 });
+        assert_eq!(cut.kind.label(), "device-cut");
         cut.validate(1);
         let cap = Perturbation::budget_scale(2.0, 0.0);
         cap.validate(1); // zero factor = blackout, legal
+        assert_eq!(cap.kind.label(), "budget-scale");
         let slo = Perturbation::slo_tighten(1.0, 2, 0.5, 0.5);
         slo.validate(3);
+        assert_eq!(slo.kind.label(), "slo-tighten");
     }
 
     #[test]

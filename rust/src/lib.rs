@@ -42,6 +42,7 @@ pub mod pipeline;
 pub mod runtime;
 pub mod scenario;
 pub mod scheduler;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 

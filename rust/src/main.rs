@@ -7,7 +7,11 @@
 //! * `calibrate` — train the §V performance models and print fit quality.
 //! * `sweep`     — DYPE vs baselines across the paper's GNN workloads.
 //! * `scenario-sweep` — the serving scenario zoo crossed with every
-//!   serving policy (or one manifest from disk), Pareto-annotated.
+//!   serving policy (or one manifest from disk), Pareto-annotated;
+//!   `--trace` re-runs the first scenario's winner with a timeline
+//!   recorder and writes a Perfetto `trace_events` JSON.
+//! * `trace-validate` — strict-parse a trace file and run the exporter's
+//!   structural validator over it.
 //! * `serve`     — end-to-end real execution: stream inferences through a
 //!   scheduled pipeline running AOT artifacts via PJRT.
 //!
@@ -34,7 +38,8 @@ USAGE:
   dype pareto    [--workload W] [--interconnect I]
   dype calibrate [--interconnect I]
   dype sweep     [--interconnect I] [--objective O]
-  dype scenario-sweep [--manifest FILE.json]
+  dype scenario-sweep [--manifest FILE.json] [--trace OUT.json]
+  dype trace-validate FILE.json
   dype serve     [--inferences N] [--artifact-dir DIR]
 
   W: gcn-<DS> | gin-<DS> (DS in S1..S4, OA, OP) | transf-<seq>-<win>
@@ -157,6 +162,11 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
+    if cmd == "trace-validate" {
+        // Positional file argument; bypasses the --key scanner.
+        let Some(path) = argv.get(1) else { bail!("trace-validate needs a file\n\n{USAGE}") };
+        return trace_validate(path);
+    }
     let args = Args::parse(&argv[1..])?;
     let ic = Interconnect::parse(args.get("interconnect", "pcie4"))?;
     match cmd.as_str() {
@@ -208,7 +218,10 @@ fn main() -> Result<()> {
             sweep(ic, obj)?;
         }
         "scenario-sweep" => {
-            scenario_sweep(args.kv.get("manifest").map(String::as_str))?;
+            scenario_sweep(
+                args.kv.get("manifest").map(String::as_str),
+                args.kv.get("trace").map(String::as_str),
+            )?;
         }
         "serve" => {
             serve(args.get_usize("inferences", 16)?, args.get("artifact-dir", "artifacts"))?;
@@ -270,16 +283,62 @@ fn sweep(ic: Interconnect, obj: Objective) -> Result<()> {
 
 /// The scenario zoo crossed with every serving policy — or a single
 /// manifest loaded from disk — rendered as the Pareto-annotated grid.
-fn scenario_sweep(manifest: Option<&str>) -> Result<()> {
-    use dype::scenario::sweep::{run_grid, run_zoo, Policy};
-    let report = match manifest {
-        Some(path) => {
-            let m = dype::scenario::ScenarioManifest::load(path)?;
-            run_grid(&[m], &Policy::ALL)?
-        }
-        None => run_zoo()?,
+/// With `trace`, the first scenario is re-run under its score-winning
+/// policy with a timeline recorder attached, and the Perfetto export is
+/// written to the given path.
+fn scenario_sweep(manifest: Option<&str>, trace: Option<&str>) -> Result<()> {
+    use dype::scenario::sweep::{run_grid, Policy};
+    let manifests = match manifest {
+        Some(path) => vec![dype::scenario::ScenarioManifest::load(path)?],
+        None => dype::scenario::catalog::all(),
     };
+    let report = run_grid(&manifests, &Policy::ALL)?;
     print!("{}", report.render());
+    if let Some(out) = trace {
+        let m = &manifests[0];
+        let policy = report.winner(&m.name).map(|c| c.policy).unwrap_or(Policy::AdaptiveDrain);
+        write_winner_trace(m, policy, out)?;
+    }
+    Ok(())
+}
+
+/// Re-run one manifest under one policy with a timeline recorder and
+/// write the validated Perfetto `trace_events` document to `out`.
+fn write_winner_trace(
+    m: &dype::scenario::ScenarioManifest,
+    policy: dype::scenario::sweep::Policy,
+    out: &str,
+) -> Result<()> {
+    use dype::telemetry::{export, Recorder};
+    let built = m.build()?;
+    let rec = Recorder::timeline();
+    let cfg = built.apply(policy.engine_config()).with_recorder(rec.clone());
+    dype::experiments::run_multi_stream_with(&built.system, &built.streams, cfg);
+    let names: Vec<String> = built.streams.iter().map(|s| s.name.clone()).collect();
+    let records = rec.drain();
+    let doc = export::perfetto(&records, &names);
+    export::validate(&doc).map_err(|e| anyhow::anyhow!("exporter produced invalid trace: {e}"))?;
+    std::fs::write(out, format!("{doc}\n"))?;
+    println!(
+        "trace: {} records from '{}' under {} -> {out}",
+        records.len(),
+        m.name,
+        policy.name()
+    );
+    Ok(())
+}
+
+/// Strict-parse a Perfetto trace file and run the exporter's structural
+/// validator over it; non-zero exit on any violation.
+fn trace_validate(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read '{path}': {e}"))?;
+    let doc = dype::util::json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("'{path}' is not strict JSON: {e}"))?;
+    dype::telemetry::export::validate(&doc)
+        .map_err(|e| anyhow::anyhow!("'{path}' is not a valid trace: {e}"))?;
+    let events = doc.get("traceEvents").and_then(|v| v.as_arr()).map_or(0, |a| a.len());
+    println!("{path}: valid Perfetto trace ({events} events)");
     Ok(())
 }
 

@@ -113,6 +113,7 @@ pub fn multi_stream(cycles: usize, per_phase: usize, seed: u64) -> ScenarioManif
         ],
         budget: None,
         perturbations: vec![],
+        telemetry: false,
     }
 }
 
@@ -135,6 +136,7 @@ pub fn skewed_pair(per_phase: usize, seed: u64) -> ScenarioManifest {
         ],
         budget: None,
         perturbations: vec![],
+        telemetry: false,
     }
 }
 
@@ -174,6 +176,7 @@ pub fn energy_slo(per_phase: usize, seed: u64) -> ScenarioManifest {
         streams,
         budget: Some(BudgetCfg { cap_watts: 250.0, window: 0.25 }),
         perturbations: vec![],
+        telemetry: false,
     }
 }
 
@@ -225,6 +228,7 @@ pub fn deadline(per_phase: usize, seed: u64) -> ScenarioManifest {
         streams,
         budget: None,
         perturbations: vec![],
+        telemetry: false,
     }
 }
 
@@ -264,6 +268,7 @@ pub fn flash_crowd() -> ScenarioManifest {
         ],
         budget: None,
         perturbations: vec![],
+        telemetry: false,
     }
 }
 
@@ -293,6 +298,7 @@ pub fn diurnal() -> ScenarioManifest {
         ],
         budget: None,
         perturbations: vec![],
+        telemetry: false,
     }
 }
 
@@ -322,6 +328,7 @@ pub fn mmpp_burst() -> ScenarioManifest {
         ],
         budget: None,
         perturbations: vec![],
+        telemetry: false,
     }
 }
 
@@ -373,6 +380,7 @@ pub fn slo_tighten() -> ScenarioManifest {
         ],
         budget: None,
         perturbations: vec![Perturbation::slo_tighten(0.5, 0, 1.0, 0.02)],
+        telemetry: false,
     }
 }
 
@@ -400,6 +408,7 @@ pub fn oversubscribed() -> ScenarioManifest {
         streams,
         budget: None,
         perturbations: vec![],
+        telemetry: false,
     }
 }
 
@@ -435,6 +444,7 @@ pub fn mixed_fleet() -> ScenarioManifest {
         ],
         budget: None,
         perturbations: vec![],
+        telemetry: false,
     }
 }
 

@@ -61,6 +61,11 @@ pub struct ScenarioManifest {
     pub budget: Option<BudgetCfg>,
     /// Scripted mid-run mutations, in manifest order.
     pub perturbations: Vec<Perturbation>,
+    /// Opt into engine trace recording ([`crate::telemetry`]): sweep
+    /// runners attach a timeline recorder to every cell of this
+    /// scenario. Off by default — serialized only when set, so existing
+    /// manifests round-trip bit-identically.
+    pub telemetry: bool,
 }
 
 /// Device pool of a scenario. Device *configs* (clocks, power curves)
@@ -543,6 +548,10 @@ pub struct BuiltScenario {
     pub streams: Vec<StreamSpec>,
     pub budget: Option<EnergyBudget>,
     pub perturbations: Vec<Perturbation>,
+    /// Manifest-level trace opt-in, passed through for runners to attach
+    /// a recorder (the scenario cannot carry the recorder itself — it is
+    /// per-run state, not configuration).
+    pub telemetry: bool,
 }
 
 impl BuiltScenario {
@@ -573,12 +582,16 @@ impl ScenarioManifest {
             let ps = self.perturbations.iter().map(perturbation_to_json).collect();
             pairs.push(("perturbations", Json::Arr(ps)));
         }
+        if self.telemetry {
+            pairs.push(("telemetry", Json::Bool(true)));
+        }
         obj_from(pairs)
     }
 
     pub fn from_json(j: &Json) -> Result<ScenarioManifest> {
         let m = obj(j, "manifest")?;
-        let keys = ["budget", "description", "name", "perturbations", "streams", "system"];
+        let keys =
+            ["budget", "description", "name", "perturbations", "streams", "system", "telemetry"];
         check_keys(m, &keys, "manifest")?;
         let name = str_field(m, "name", "manifest")?.to_string();
         let what = format!("scenario '{name}'");
@@ -601,7 +614,19 @@ impl ScenarioManifest {
                 perturbations.push(perturbation_from_json(p, &format!("{what} perturbation {i}"))?);
             }
         }
-        Ok(ScenarioManifest { name, description, system, streams, budget, perturbations })
+        let telemetry = match m.get("telemetry") {
+            Some(v) => v.as_bool().with_context(|| format!("{what}: telemetry must be a bool"))?,
+            None => false,
+        };
+        Ok(ScenarioManifest {
+            name,
+            description,
+            system,
+            streams,
+            budget,
+            perturbations,
+            telemetry,
+        })
     }
 
     pub fn parse_str(text: &str) -> Result<ScenarioManifest> {
@@ -637,6 +662,7 @@ impl ScenarioManifest {
             streams,
             budget: self.budget.as_ref().map(BudgetCfg::build),
             perturbations: self.perturbations.clone(),
+            telemetry: self.telemetry,
         })
     }
 
@@ -963,6 +989,7 @@ mod tests {
                 Perturbation::budget_scale(0.6, 0.5),
                 Perturbation::slo_tighten(0.8, 0, 0.5, 1.0),
             ],
+            telemetry: true,
         }
     }
 
@@ -981,6 +1008,7 @@ mod tests {
         let built = kitchen_sink().build().unwrap();
         assert_eq!(built.system.n_fpga, 2);
         assert_eq!(built.system.n_gpu, 1);
+        assert!(built.telemetry, "the manifest opt-in survives the build");
         assert_eq!(built.streams.len(), 2);
         assert_eq!(built.streams[0].trace.len(), 5);
         assert_eq!(built.streams[0].slo.deadline, Some(0.25));

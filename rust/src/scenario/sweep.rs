@@ -20,6 +20,7 @@ use crate::coordinator::MultiStreamReport;
 use crate::engine::{EngineConfig, RepartitionPolicy};
 use crate::experiments::run_multi_stream_with;
 use crate::metrics::{self, Table};
+use crate::telemetry::{Recorder, Snapshot};
 
 /// The serving policies the grid crosses every scenario with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,6 +91,14 @@ pub struct SweepCell {
     pub sheds: usize,
     pub offered: usize,
     pub perturbations_applied: usize,
+    /// The engine's hot-path counter snapshot for this cell (events
+    /// popped per kind, heap high-water, cache traffic — see
+    /// [`crate::telemetry::Snapshot`]). Always populated; the counters
+    /// are on regardless of whether a trace recorder is attached.
+    pub telemetry: Snapshot,
+    /// Trace records captured by the cell's timeline recorder; 0 unless
+    /// the manifest set [`ScenarioManifest::telemetry`].
+    pub trace_records: usize,
 }
 
 impl SweepCell {
@@ -115,6 +124,8 @@ impl SweepCell {
             sheds: r.streams.iter().map(|s| s.report.shed).sum(),
             offered,
             perturbations_applied: r.engine.perturbations_applied,
+            telemetry: r.engine.telemetry.clone(),
+            trace_records: 0,
         }
     }
 
@@ -151,12 +162,22 @@ impl SweepCell {
 
 /// Run one scenario under one policy: lower the manifest, fold its
 /// budget + perturbation script into the policy's engine config, serve.
+/// When the manifest opts into telemetry, a timeline recorder rides the
+/// run and the cell reports how many trace records it captured.
 pub fn run_cell(m: &ScenarioManifest, policy: Policy) -> Result<SweepCell> {
     let built = m.build()?;
     let offered: usize = built.streams.iter().map(|s| s.trace.len()).sum();
-    let cfg = built.apply(policy.engine_config());
+    let mut cfg = built.apply(policy.engine_config());
+    let recorder = built.telemetry.then(Recorder::timeline);
+    if let Some(rec) = &recorder {
+        cfg = cfg.with_recorder(rec.clone());
+    }
     let report = run_multi_stream_with(&built.system, &built.streams, cfg);
-    Ok(SweepCell::from_report(&m.name, policy, offered, &report))
+    let mut cell = SweepCell::from_report(&m.name, policy, offered, &report);
+    if let Some(rec) = &recorder {
+        cell.trace_records = rec.drain().len();
+    }
+    Ok(cell)
 }
 
 /// Cross every manifest with every policy, in order.
@@ -321,5 +342,20 @@ mod tests {
         assert!(rendered.contains("skewed-pair"));
         assert!(rendered.contains("win"));
         assert!(rendered.contains("of 1 scenarios"));
+        for c in &report.cells {
+            // Counters ride every cell; traces only opt-in manifests.
+            assert!(c.telemetry.events_total() > 0);
+            assert_eq!(c.trace_records, 0, "no recorder without the manifest flag");
+        }
+    }
+
+    #[test]
+    fn a_telemetry_cell_captures_a_trace() {
+        let mut m = catalog::skewed_pair(2, 11);
+        m.telemetry = true;
+        let cell = run_cell(&m, Policy::AdaptiveDrain).expect("cell runs");
+        assert!(cell.trace_records > 0, "the manifest opt-in must attach a recorder");
+        // Every offered request pops exactly one arrival event.
+        assert_eq!(cell.telemetry.popped("arrival") as usize, cell.offered);
     }
 }

@@ -1,0 +1,384 @@
+//! Timeline serialization: Chrome/Perfetto `trace_events` JSON and a
+//! compact JSONL, plus the strict validator CI runs on exported files.
+//!
+//! The Perfetto export lays the engine's run out on three processes so
+//! the trace viewer groups tracks the way the engine thinks:
+//!
+//! * **pid 1 "streams"** — one thread per stream (`tid = stream + 1`):
+//!   `slot` spans for completed admission slots, with `arrival`,
+//!   `shed` (cause-attributed), `deferral`, and `preempt` instants.
+//! * **pid 2 "leases"** — `tid 0` carries `repartition` verdict
+//!   instants (shift vs hysteresis, forced or not) and fired
+//!   perturbations; each stream's thread carries its `lease` snapshots
+//!   (device counts + share) as instants.
+//! * **pid 3 "budget"** — a `window_joules` counter track, one sample
+//!   per closed energy-budget window.
+//!
+//! Timestamps are sim-time microseconds (the `trace_events` unit), so a
+//! seeded scenario exports byte-identically run over run; the JSONL
+//! format ([`jsonl`]) is one [`Record::to_json`] object per line for
+//! programmatic diffing of the same timeline.
+
+use crate::util::json::Json;
+
+use super::{obj, Record};
+
+/// Convert sim-time seconds to the `trace_events` microsecond unit.
+fn us(t: f64) -> Json {
+    Json::Num(t * 1e6)
+}
+
+fn instant(name: &str, pid: usize, tid: usize, t: f64, args: Vec<(&str, Json)>) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("i".to_string())),
+        ("s", Json::Str("t".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", us(t)),
+        ("args", obj(args)),
+    ])
+}
+
+fn span(name: &str, pid: usize, tid: usize, t0: f64, t1: f64, args: Vec<(&str, Json)>) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", us(t0)),
+        ("dur", Json::Num((t1 - t0).max(0.0) * 1e6)),
+        ("args", obj(args)),
+    ])
+}
+
+fn counter(name: &str, pid: usize, t: f64, args: Vec<(&str, Json)>) -> Json {
+    obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("C".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        ("ts", us(t)),
+        ("args", obj(args)),
+    ])
+}
+
+fn metadata(kind: &str, pid: usize, tid: usize, name: &str) -> Json {
+    obj(vec![
+        ("name", Json::Str(kind.to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+    ])
+}
+
+/// Serialize a recorded timeline as Chrome/Perfetto `trace_events` JSON
+/// (`{"traceEvents": [...]}`; load it in Perfetto or chrome://tracing).
+/// `stream_names` labels the per-stream threads; streams beyond its
+/// length fall back to `stream-N`. Events are emitted timestamp-sorted
+/// (metadata first), so [`validate`] accepts every export by
+/// construction.
+pub fn perfetto(records: &[Record], stream_names: &[String]) -> Json {
+    let n_streams = records
+        .iter()
+        .filter_map(|r| match r {
+            Record::Arrival { stream, .. }
+            | Record::Slot { stream, .. }
+            | Record::Shed { stream, .. }
+            | Record::Deferral { stream, .. }
+            | Record::Preempt { stream, .. } => Some(*stream + 1),
+            Record::Repartition { leases, .. } => leases.iter().map(|l| l.stream + 1).max(),
+            _ => None,
+        })
+        .max()
+        .unwrap_or(0)
+        .max(stream_names.len());
+    let name_of =
+        |s: usize| stream_names.get(s).cloned().unwrap_or_else(|| format!("stream-{s}"));
+
+    let mut meta: Vec<Json> = vec![
+        metadata("process_name", 1, 0, "streams"),
+        metadata("process_name", 2, 0, "leases"),
+        metadata("process_name", 3, 0, "budget"),
+        metadata("thread_name", 2, 0, "repartitions"),
+    ];
+    for s in 0..n_streams {
+        meta.push(metadata("thread_name", 1, s + 1, &name_of(s)));
+        meta.push(metadata("thread_name", 2, s + 1, &format!("lease:{}", name_of(s))));
+    }
+
+    let mut timed: Vec<(f64, Json)> = Vec::with_capacity(records.len());
+    for r in records {
+        match r {
+            Record::Arrival { t, stream, index } => {
+                let args = vec![("index", Json::Num(*index as f64))];
+                timed.push((*t, instant("arrival", 1, stream + 1, *t, args)));
+            }
+            Record::Slot { start, end, stream, epoch } => {
+                let args = vec![("epoch", Json::Num(*epoch as f64))];
+                timed.push((*start, span("slot", 1, stream + 1, *start, *end, args)));
+            }
+            Record::Shed { t, stream, index, cause } => {
+                let args = vec![
+                    ("cause", Json::Str(cause.label().to_string())),
+                    ("index", Json::Num(*index as f64)),
+                ];
+                timed.push((*t, instant("shed", 1, stream + 1, *t, args)));
+            }
+            Record::Deferral { t, stream } => {
+                timed.push((*t, instant("deferral", 1, stream + 1, *t, vec![])));
+            }
+            Record::Preempt { t, stream, refunded_time, refunded_joules } => {
+                let args = vec![
+                    ("refunded_time", Json::Num(*refunded_time)),
+                    ("refunded_joules", Json::Num(*refunded_joules)),
+                ];
+                timed.push((*t, instant("preempt", 1, stream + 1, *t, args)));
+            }
+            Record::Repartition { t, shift, hysteresis, forced, leases } => {
+                let args = vec![
+                    ("shift", Json::Num(*shift)),
+                    ("hysteresis", Json::Num(*hysteresis)),
+                    ("forced", Json::Bool(*forced)),
+                ];
+                timed.push((*t, instant("repartition", 2, 0, *t, args)));
+                for l in leases {
+                    let args = vec![
+                        ("fpga", Json::Num(l.n_fpga as f64)),
+                        ("gpu", Json::Num(l.n_gpu as f64)),
+                        ("share", Json::Num(l.share)),
+                    ];
+                    timed.push((*t, instant("lease", 2, l.stream + 1, *t, args)));
+                }
+            }
+            Record::BudgetWindow { t, index, joules } => {
+                let args =
+                    vec![("index", Json::Num(*index as f64)), ("joules", Json::Num(*joules))];
+                timed.push((*t, counter("window_joules", 3, *t, args)));
+            }
+            Record::Perturbation { t, index, label } => {
+                let args = vec![
+                    ("index", Json::Num(*index as f64)),
+                    ("label", Json::Str(label.to_string())),
+                ];
+                timed.push((*t, instant("perturbation", 2, 0, *t, args)));
+            }
+        }
+    }
+    // Stable sort: equal timestamps keep emission (= engine event) order.
+    timed.sort_by(|a, b| a.0.total_cmp(&b.0));
+    meta.extend(timed.into_iter().map(|(_, j)| j));
+    obj(vec![("traceEvents", Json::Arr(meta))])
+}
+
+/// Serialize a timeline as compact JSONL: one [`Record::to_json`]
+/// object per line, in emission order — byte-stable across runs of the
+/// same seeded scenario, so timelines diff with line tools.
+pub fn jsonl(records: &[Record]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&r.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// The event keys `trace_events` consumers understand — anything else
+/// in an exported file is a bug, not an extension.
+const EVENT_KEYS: [&str; 8] = ["args", "dur", "name", "ph", "pid", "s", "tid", "ts"];
+
+/// Strictly validate a Perfetto `trace_events` document: the shape CI
+/// asserts on every `--trace` output (`dype trace-validate`). Checks
+/// the single `traceEvents` top-level key, per-event key allow-list and
+/// required fields, known phase codes, scoped instants, non-negative
+/// span durations, **monotone timestamps** (metadata first), and
+/// balanced `B`/`E` begin/end pairs per `(pid, tid)` track.
+pub fn validate(doc: &Json) -> Result<(), String> {
+    let top = doc.as_obj().ok_or("top level must be an object")?;
+    if top.len() != 1 || !top.contains_key("traceEvents") {
+        let keys: Vec<&String> = top.keys().collect();
+        return Err(format!("top level must hold exactly \"traceEvents\", got {keys:?}"));
+    }
+    let events = top["traceEvents"].as_arr().ok_or("traceEvents must be an array")?;
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut seen_timed = false;
+    let mut open: std::collections::BTreeMap<(u64, u64), i64> = std::collections::BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let e = ev.as_obj().ok_or_else(|| format!("event {i}: not an object"))?;
+        for k in e.keys() {
+            if !EVENT_KEYS.contains(&k.as_str()) {
+                return Err(format!("event {i}: unknown key {k:?}"));
+            }
+        }
+        let field = |k: &str| e.get(k).ok_or_else(|| format!("event {i}: missing {k:?}"));
+        field("name")?.as_str().ok_or_else(|| format!("event {i}: name not a string"))?;
+        let ph = field("ph")?.as_str().ok_or_else(|| format!("event {i}: ph not a string"))?;
+        let pid = field("pid")?.as_u64().ok_or_else(|| format!("event {i}: pid not integral"))?;
+        let tid = e.get("tid").and_then(Json::as_u64).unwrap_or(0);
+        if !["B", "E", "X", "i", "M", "C"].contains(&ph) {
+            return Err(format!("event {i}: unknown phase {ph:?}"));
+        }
+        if ph == "M" {
+            if seen_timed {
+                return Err(format!("event {i}: metadata must precede timed events"));
+            }
+            continue;
+        }
+        seen_timed = true;
+        let ts = field("ts")?
+            .as_f64()
+            .filter(|t| t.is_finite() && *t >= 0.0)
+            .ok_or_else(|| format!("event {i}: ts must be finite and non-negative"))?;
+        if ts < last_ts {
+            return Err(format!("event {i}: timestamp {ts} regresses below {last_ts}"));
+        }
+        last_ts = ts;
+        match ph {
+            "X" => {
+                field("dur")?
+                    .as_f64()
+                    .filter(|d| d.is_finite() && *d >= 0.0)
+                    .ok_or_else(|| format!("event {i}: span dur must be >= 0"))?;
+            }
+            "i" => {
+                let s = field("s")?
+                    .as_str()
+                    .ok_or_else(|| format!("event {i}: instant scope not a string"))?;
+                if !["t", "p", "g"].contains(&s) {
+                    return Err(format!("event {i}: unknown instant scope {s:?}"));
+                }
+            }
+            "B" => *open.entry((pid, tid)).or_insert(0) += 1,
+            "E" => {
+                let depth = open.entry((pid, tid)).or_insert(0);
+                *depth -= 1;
+                if *depth < 0 {
+                    return Err(format!("event {i}: end without begin on track ({pid},{tid})"));
+                }
+            }
+            _ => {}
+        }
+    }
+    if let Some(((pid, tid), n)) = open.iter().find(|(_, n)| **n != 0) {
+        return Err(format!("{n} unbalanced begin/end span(s) on track ({pid},{tid})"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{LeaseSnapshot, ShedCause};
+    use super::*;
+    use crate::util::json;
+
+    fn sample() -> Vec<Record> {
+        vec![
+            Record::Arrival { t: 0.010, stream: 0, index: 0 },
+            Record::Slot { start: 0.010, end: 0.060, stream: 0, epoch: 1 },
+            Record::Shed { t: 0.020, stream: 1, index: 0, cause: ShedCause::QueueAhead },
+            Record::Deferral { t: 0.030, stream: 1 },
+            Record::Preempt { t: 0.040, stream: 0, refunded_time: 0.01, refunded_joules: 2.0 },
+            Record::Repartition {
+                t: 0.050,
+                shift: 0.4,
+                hysteresis: 0.15,
+                forced: false,
+                leases: vec![
+                    LeaseSnapshot { stream: 0, n_fpga: 2, n_gpu: 1, share: 1.0 },
+                    LeaseSnapshot { stream: 1, n_fpga: 1, n_gpu: 1, share: 1.0 },
+                ],
+            },
+            Record::BudgetWindow { t: 0.250, index: 0, joules: 42.5 },
+            Record::Perturbation { t: 0.300, index: 0, label: "device-cut" },
+        ]
+    }
+
+    #[test]
+    fn perfetto_export_passes_its_own_strict_validator() {
+        let doc = perfetto(&sample(), &["interactive".to_string(), "bulk".to_string()]);
+        validate(&doc).unwrap();
+        // Round-trip through the strict parser: Display → parse → equal.
+        let reparsed = json::parse(&doc.to_string()).unwrap();
+        assert_eq!(reparsed, doc);
+        assert_eq!(reparsed.to_string(), doc.to_string());
+    }
+
+    #[test]
+    fn perfetto_lays_out_the_three_processes() {
+        let doc = perfetto(&sample(), &["a".to_string(), "b".to_string()]);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let pids: Vec<u64> = events.iter().filter_map(|e| e.get("pid")?.as_u64()).collect();
+        for pid in [1, 2, 3] {
+            assert!(pids.contains(&pid), "missing process {pid}");
+        }
+        // The shed instant carries its cause attribution.
+        let shed = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("shed"))
+            .expect("shed instant");
+        assert_eq!(shed.get("args").unwrap().get("cause").unwrap().as_str(), Some("queue-ahead"));
+        // Timestamps are microseconds.
+        assert_eq!(shed.get("ts").unwrap().as_f64(), Some(0.020 * 1e6));
+    }
+
+    #[test]
+    fn jsonl_is_one_stable_line_per_record() {
+        let text = jsonl(&sample());
+        assert_eq!(text, jsonl(&sample()), "export must be deterministic");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), sample().len());
+        for line in &lines {
+            json::parse(line).unwrap();
+        }
+        assert_eq!(
+            lines[0],
+            r#"{"index":0,"stream":0,"t":0.01,"type":"arrival"}"#,
+            "line format is pinned — changing it breaks timeline diffing"
+        );
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        let good = perfetto(&sample(), &[]);
+        // Unknown event key.
+        let mut doc = good.clone();
+        if let Json::Obj(top) = &mut doc {
+            if let Some(Json::Arr(evs)) = top.get_mut("traceEvents") {
+                if let Some(Json::Obj(e)) = evs.last_mut() {
+                    e.insert("rogue".to_string(), Json::Null);
+                }
+            }
+        }
+        assert!(validate(&doc).unwrap_err().contains("unknown key"));
+        // Timestamp regression.
+        let mut doc = good.clone();
+        if let Json::Obj(top) = &mut doc {
+            if let Some(Json::Arr(evs)) = top.get_mut("traceEvents") {
+                if let Some(Json::Obj(e)) = evs.last_mut() {
+                    e.insert("ts".to_string(), Json::Num(0.0));
+                }
+            }
+        }
+        assert!(validate(&doc).unwrap_err().contains("regresses"));
+        // Unbalanced begin/end spans.
+        let mut doc = good;
+        if let Json::Obj(top) = &mut doc {
+            if let Some(Json::Arr(evs)) = top.get_mut("traceEvents") {
+                let mut b = std::collections::BTreeMap::new();
+                b.insert("name".to_string(), Json::Str("open".to_string()));
+                b.insert("ph".to_string(), Json::Str("B".to_string()));
+                b.insert("pid".to_string(), Json::Num(1.0));
+                b.insert("tid".to_string(), Json::Num(1.0));
+                b.insert("ts".to_string(), Json::Num(1e9));
+                evs.push(Json::Obj(b));
+            }
+        }
+        assert!(validate(&doc).unwrap_err().contains("unbalanced"));
+        // Stray top-level keys.
+        let mut top = std::collections::BTreeMap::new();
+        top.insert("traceEvents".to_string(), Json::Arr(vec![]));
+        top.insert("extra".to_string(), Json::Null);
+        assert!(validate(&Json::Obj(top)).is_err());
+    }
+}

@@ -1,0 +1,503 @@
+//! Engine telemetry — structured event tracing and hot-path counters
+//! (DESIGN.md §Observability).
+//!
+//! DyPe's thesis is that scheduling should follow *observed* runtime
+//! behavior, and the same goes for working on the scheduler itself: the
+//! engine now has five interacting subsystems (leases, budgets, the SLO
+//! controller, deadline shedding, perturbations) whose interplay the
+//! end-of-run aggregates in [`crate::engine::EngineMetrics`] cannot
+//! explain, and the ROADMAP's profile-driven hot-path rewrite needs to
+//! see where the per-event microseconds go. This module supplies both
+//! views:
+//!
+//! * **Tracing** — every engine decision emits a typed [`Record`]
+//!   carrying its sim-time, stream, and *cause* (which feasibility term
+//!   shed a request, which hysteresis delta triggered a repartition, how
+//!   much a preemption refunded). Records flow through a
+//!   [`TraceRecorder`] attached via
+//!   [`crate::engine::EngineConfig::with_recorder`]; [`export`] turns
+//!   the collected timeline into Chrome/Perfetto `trace_events` JSON
+//!   (one track per stream, per device-lease, and a budget-window
+//!   track) or a compact JSONL for programmatic diffing.
+//! * **Counters** — a [`Snapshot`] of cheap always-on counters the
+//!   event loop maintains regardless of any recorder: events popped per
+//!   [`crate::engine::EventKind`], the event-heap high-water mark,
+//!   schedule-cache probe/hit and prewarm totals, plus feature-gated
+//!   host-clock handler timings (`telemetry-timing`) and an
+//!   allocations-per-run count from a global-allocator hook
+//!   (`telemetry-alloc`).
+//!
+//! **Zero-cost when off** is the design constraint: the default engine
+//! config carries no recorder, so every would-be record costs one
+//! `Option` branch (the record itself is built inside a closure that
+//! never runs), and `benches/telemetry_overhead.rs` holds the
+//! recorder-off path to within noise of the pre-telemetry engine.
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::engine::EventKind;
+use crate::util::json::Json;
+
+/// Which feasibility term dominated a deadline shed — the attribution a
+/// post-mortem needs to tell "arrived hopeless" from "starved by the
+/// budget" from "the batch itself no longer fits".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedCause {
+    /// Arrival-time queue-ahead bound: the work already queued (plus any
+    /// in-flight slot) could not drain inside the deadline, so the
+    /// request was shed before ever entering the queue.
+    QueueAhead,
+    /// Front-of-queue check: time already spent queueing dominated.
+    Queueing,
+    /// Front-of-queue check: the wait a budget denial imposes (at least
+    /// until the next window tick) dominated.
+    BudgetWait,
+    /// Front-of-queue check: the lane's modeled batch latency dominated
+    /// — the request was infeasible even with an empty queue.
+    BatchLatency,
+}
+
+impl ShedCause {
+    /// Stable string spelling used by both export formats.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedCause::QueueAhead => "queue-ahead",
+            ShedCause::Queueing => "queueing",
+            ShedCause::BudgetWait => "budget-wait",
+            ShedCause::BatchLatency => "batch-latency",
+        }
+    }
+}
+
+/// One stream's lease as a repartition left it: device counts plus the
+/// time-slice share — the per-stream row of a [`Record::Repartition`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeaseSnapshot {
+    pub stream: usize,
+    pub n_fpga: usize,
+    pub n_gpu: usize,
+    /// Weighted round-robin share of the partition's term (1.0 =
+    /// exclusive).
+    pub share: f64,
+}
+
+/// A typed trace record. Timestamps are **sim-time seconds** on the
+/// engine's global clock — never the host clock — so two runs of the
+/// same seeded scenario produce byte-identical timelines.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    /// A request reached the engine (it may still be shed on arrival).
+    Arrival { t: f64, stream: usize, index: usize },
+    /// A completed admission slot: stream `stream` occupied its lease
+    /// over `[start, end)` (preempted slots never produce one — they are
+    /// cancelled before completing).
+    Slot { start: f64, end: f64, stream: usize, epoch: u64 },
+    /// The deadline feasibility check shed request `index`, attributed
+    /// to the dominant term that made it infeasible.
+    Shed { t: f64, stream: usize, index: usize, cause: ShedCause },
+    /// The energy budget denied an admission; the lane parks until the
+    /// next window tick.
+    Deferral { t: f64, stream: usize },
+    /// A migration cancelled the stream's in-flight slot mid-term,
+    /// refunding the unexecuted wall-clock remainder and `f_eng` joules.
+    Preempt { t: f64, stream: usize, refunded_time: f64, refunded_joules: f64 },
+    /// An applied lease re-apportionment: the total-variation share
+    /// `shift` that crossed (or, when `forced`, bypassed) the policy's
+    /// `hysteresis`, plus every active stream's resulting lease.
+    Repartition { t: f64, shift: f64, hysteresis: f64, forced: bool, leases: Vec<LeaseSnapshot> },
+    /// An energy-budget window closed with `joules` net charge.
+    BudgetWindow { t: f64, index: usize, joules: f64 },
+    /// A scripted perturbation fired (`index` into the config's list).
+    Perturbation { t: f64, index: usize, label: &'static str },
+}
+
+impl Record {
+    /// Stable record-type tag used by both export formats.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Record::Arrival { .. } => "arrival",
+            Record::Slot { .. } => "slot",
+            Record::Shed { .. } => "shed",
+            Record::Deferral { .. } => "deferral",
+            Record::Preempt { .. } => "preempt",
+            Record::Repartition { .. } => "repartition",
+            Record::BudgetWindow { .. } => "budget-window",
+            Record::Perturbation { .. } => "perturbation",
+        }
+    }
+
+    /// The record's timestamp (a span reports its start).
+    pub fn time(&self) -> f64 {
+        match self {
+            Record::Slot { start, .. } => *start,
+            Record::Arrival { t, .. }
+            | Record::Shed { t, .. }
+            | Record::Deferral { t, .. }
+            | Record::Preempt { t, .. }
+            | Record::Repartition { t, .. }
+            | Record::BudgetWindow { t, .. }
+            | Record::Perturbation { t, .. } => *t,
+        }
+    }
+
+    /// One compact JSON object per record (the JSONL line format).
+    /// Key order is the codec's deterministic BTreeMap order, so equal
+    /// records serialize byte-identically.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("type", Json::Str(self.kind().to_string()))];
+        match self {
+            Record::Arrival { t, stream, index } => {
+                pairs.push(("t", Json::Num(*t)));
+                pairs.push(("stream", Json::Num(*stream as f64)));
+                pairs.push(("index", Json::Num(*index as f64)));
+            }
+            Record::Slot { start, end, stream, epoch } => {
+                pairs.push(("start", Json::Num(*start)));
+                pairs.push(("end", Json::Num(*end)));
+                pairs.push(("stream", Json::Num(*stream as f64)));
+                pairs.push(("epoch", Json::Num(*epoch as f64)));
+            }
+            Record::Shed { t, stream, index, cause } => {
+                pairs.push(("t", Json::Num(*t)));
+                pairs.push(("stream", Json::Num(*stream as f64)));
+                pairs.push(("index", Json::Num(*index as f64)));
+                pairs.push(("cause", Json::Str(cause.label().to_string())));
+            }
+            Record::Deferral { t, stream } => {
+                pairs.push(("t", Json::Num(*t)));
+                pairs.push(("stream", Json::Num(*stream as f64)));
+            }
+            Record::Preempt { t, stream, refunded_time, refunded_joules } => {
+                pairs.push(("t", Json::Num(*t)));
+                pairs.push(("stream", Json::Num(*stream as f64)));
+                pairs.push(("refunded_time", Json::Num(*refunded_time)));
+                pairs.push(("refunded_joules", Json::Num(*refunded_joules)));
+            }
+            Record::Repartition { t, shift, hysteresis, forced, leases } => {
+                pairs.push(("t", Json::Num(*t)));
+                pairs.push(("shift", Json::Num(*shift)));
+                pairs.push(("hysteresis", Json::Num(*hysteresis)));
+                pairs.push(("forced", Json::Bool(*forced)));
+                let rows = leases
+                    .iter()
+                    .map(|l| {
+                        obj(vec![
+                            ("stream", Json::Num(l.stream as f64)),
+                            ("fpga", Json::Num(l.n_fpga as f64)),
+                            ("gpu", Json::Num(l.n_gpu as f64)),
+                            ("share", Json::Num(l.share)),
+                        ])
+                    })
+                    .collect();
+                pairs.push(("leases", Json::Arr(rows)));
+            }
+            Record::BudgetWindow { t, index, joules } => {
+                pairs.push(("t", Json::Num(*t)));
+                pairs.push(("index", Json::Num(*index as f64)));
+                pairs.push(("joules", Json::Num(*joules)));
+            }
+            Record::Perturbation { t, index, label } => {
+                pairs.push(("t", Json::Num(*t)));
+                pairs.push(("index", Json::Num(*index as f64)));
+                pairs.push(("label", Json::Str(label.to_string())));
+            }
+        }
+        obj(pairs)
+    }
+}
+
+/// Build a [`Json::Obj`] from string/value pairs (the codec's BTreeMap
+/// re-sorts keys deterministically).
+pub(crate) fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Sink for engine trace records. Object-safe so the engine can carry
+/// any implementation behind one handle; `drain` exists so callers can
+/// retrieve a timeline without downcasting.
+pub trait TraceRecorder {
+    /// Accept one record. Called on the engine's hot path — implementors
+    /// must stay O(1) amortized.
+    fn record(&mut self, rec: Record);
+
+    /// Hand back (and clear) everything recorded so far. Recorders that
+    /// keep nothing return an empty timeline.
+    fn drain(&mut self) -> Vec<Record> {
+        Vec::new()
+    }
+}
+
+/// The do-nothing recorder: every call inlines to nothing. The engine's
+/// *default* is cheaper still — no recorder handle at all, one `Option`
+/// branch per would-be record — so this type exists for call sites that
+/// want to pass "a recorder" unconditionally.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullRecorder;
+
+impl TraceRecorder for NullRecorder {
+    #[inline(always)]
+    fn record(&mut self, _rec: Record) {}
+}
+
+/// The in-memory timeline recorder: appends every record in emission
+/// order (emission order is deterministic — the engine's event loop is).
+#[derive(Debug, Default)]
+pub struct TimelineRecorder {
+    records: Vec<Record>,
+}
+
+impl TimelineRecorder {
+    pub fn new() -> TimelineRecorder {
+        TimelineRecorder::default()
+    }
+
+    pub fn records(&self) -> &[Record] {
+        &self.records
+    }
+}
+
+impl TraceRecorder for TimelineRecorder {
+    fn record(&mut self, rec: Record) {
+        self.records.push(rec);
+    }
+
+    fn drain(&mut self) -> Vec<Record> {
+        std::mem::take(&mut self.records)
+    }
+}
+
+/// Shared handle to a [`TraceRecorder`], cheap to clone — what
+/// [`crate::engine::EngineConfig`] carries so the config stays `Clone`
+/// while the caller keeps a handle to drain after the run. Cloning
+/// shares the underlying recorder (both handles see the same timeline).
+#[derive(Clone)]
+pub struct Recorder(Rc<RefCell<dyn TraceRecorder>>);
+
+impl Recorder {
+    /// Wrap any recorder implementation.
+    pub fn new(recorder: impl TraceRecorder + 'static) -> Recorder {
+        Recorder(Rc::new(RefCell::new(recorder)))
+    }
+
+    /// A fresh in-memory [`TimelineRecorder`].
+    pub fn timeline() -> Recorder {
+        Recorder::new(TimelineRecorder::new())
+    }
+
+    /// Record one event (the engine's emission path).
+    #[inline]
+    pub fn push(&self, rec: Record) {
+        self.0.borrow_mut().record(rec);
+    }
+
+    /// Drain the recorded timeline (empty for recorders that keep none).
+    pub fn drain(&self) -> Vec<Record> {
+        self.0.borrow_mut().drain()
+    }
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Recorder(..)")
+    }
+}
+
+/// Cheap hot-path counters the event loop maintains unconditionally
+/// (recorder or not) and snapshots into
+/// [`crate::engine::EngineMetrics::telemetry`] — the profile the
+/// hot-path rewrite steers by, attached per sweep cell by
+/// [`crate::scenario::sweep`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    /// Events popped per [`EventKind`], indexed by [`EventKind::index`]
+    /// (labels in [`EventKind::NAMES`]); sums to
+    /// [`crate::engine::EngineMetrics::events_processed`].
+    pub events_popped: [u64; EventKind::COUNT],
+    /// Largest pending-event count the heap reached (measured at pop,
+    /// including the popped event).
+    pub heap_high_water: usize,
+    /// Host-clock nanoseconds spent in each event handler, per kind.
+    /// All-zero unless the `telemetry-timing` feature is on — host time
+    /// is non-deterministic, so it never participates in golden tests.
+    /// Handlers that bail early (stale completions, ledger-less budget
+    /// ticks) are not timed.
+    pub handler_ns: [u64; EventKind::COUNT],
+    /// Heap allocations over the run, from the `telemetry-alloc` global
+    /// allocator hook; 0 when the feature is off. Divide by
+    /// `events_popped` totals for the allocations-per-event figure the
+    /// ROADMAP's hot-path item tracks.
+    pub allocations: u64,
+    /// Schedule-cache lookups across every lane (hits + misses).
+    pub cache_probes: u64,
+    /// Schedule-cache hits across every lane.
+    pub cache_hits: u64,
+    /// Plans migrations successfully prewarmed onto new partitions.
+    pub prewarm_hits: u64,
+    /// Plans migrations failed to re-fit (those regimes re-run the DP).
+    pub prewarm_misses: u64,
+}
+
+impl Snapshot {
+    /// Total events popped — equals the engine's `events_processed`.
+    pub fn events_total(&self) -> u64 {
+        self.events_popped.iter().sum()
+    }
+
+    /// Events popped for one kind, by its stable label (see
+    /// [`EventKind::NAMES`]). Panics on an unknown label — counter names
+    /// are an API, not a guess.
+    pub fn popped(&self, label: &str) -> u64 {
+        let i = EventKind::NAMES
+            .iter()
+            .position(|n| *n == label)
+            .unwrap_or_else(|| panic!("unknown event-kind label {label:?}"));
+        self.events_popped[i]
+    }
+
+    /// The snapshot as a JSON object (per-kind counts keyed by label) —
+    /// what sweep tooling diffs across cells.
+    pub fn to_json(&self) -> Json {
+        let popped = EventKind::NAMES
+            .iter()
+            .zip(self.events_popped)
+            .map(|(n, c)| (n.to_string(), Json::Num(c as f64)))
+            .collect();
+        obj(vec![
+            ("events_popped", Json::Obj(popped)),
+            ("heap_high_water", Json::Num(self.heap_high_water as f64)),
+            ("allocations", Json::Num(self.allocations as f64)),
+            ("cache_probes", Json::Num(self.cache_probes as f64)),
+            ("cache_hits", Json::Num(self.cache_hits as f64)),
+            ("prewarm_hits", Json::Num(self.prewarm_hits as f64)),
+            ("prewarm_misses", Json::Num(self.prewarm_misses as f64)),
+        ])
+    }
+}
+
+/// Allocation counting behind the `telemetry-alloc` feature: a global
+/// allocator that delegates to [`std::alloc::System`] and counts every
+/// allocation in a relaxed atomic. Off by default — installing a global
+/// allocator is a whole-process decision, so it is strictly opt-in.
+pub mod alloc {
+    #[cfg(feature = "telemetry-alloc")]
+    mod counting {
+        use std::alloc::{GlobalAlloc, Layout, System};
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        pub(super) static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+        /// [`System`] wrapper counting allocations (the default
+        /// `alloc_zeroed`/`realloc` route through `alloc`, so one count
+        /// site covers them).
+        struct CountingAlloc;
+
+        // SAFETY: delegates 1:1 to `System`; the relaxed counter has no
+        // effect on allocation behavior.
+        unsafe impl GlobalAlloc for CountingAlloc {
+            unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+                ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+                System.alloc(layout)
+            }
+
+            unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+                System.dealloc(ptr, layout)
+            }
+        }
+
+        #[global_allocator]
+        static COUNTING: CountingAlloc = CountingAlloc;
+    }
+
+    /// Process-wide allocation count so far. The engine samples it
+    /// before and after a run and reports the difference, so concurrent
+    /// allocator traffic outside the run is the caller's noise to
+    /// control (the benches run single-threaded).
+    #[cfg(feature = "telemetry-alloc")]
+    pub fn allocations() -> u64 {
+        counting::ALLOCATIONS.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Always 0 without the `telemetry-alloc` feature.
+    #[cfg(not(feature = "telemetry-alloc"))]
+    pub fn allocations() -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_kinds_and_times_are_stable() {
+        let r = Record::Slot { start: 1.5, end: 2.0, stream: 0, epoch: 3 };
+        assert_eq!(r.kind(), "slot");
+        assert_eq!(r.time(), 1.5);
+        let s = Record::Shed { t: 0.25, stream: 1, index: 4, cause: ShedCause::BudgetWait };
+        assert_eq!(s.kind(), "shed");
+        assert_eq!(s.time(), 0.25);
+        assert_eq!(ShedCause::QueueAhead.label(), "queue-ahead");
+    }
+
+    #[test]
+    fn record_json_is_deterministic_and_typed() {
+        let r = Record::Arrival { t: 0.5, stream: 2, index: 7 };
+        assert_eq!(r.to_json().to_string(), r#"{"index":7,"stream":2,"t":0.5,"type":"arrival"}"#);
+        let p = Record::Preempt { t: 1.0, stream: 0, refunded_time: 0.25, refunded_joules: 3.5 };
+        let j = p.to_json();
+        assert_eq!(j.get("type").unwrap().as_str(), Some("preempt"));
+        assert_eq!(j.get("refunded_joules").unwrap().as_f64(), Some(3.5));
+    }
+
+    #[test]
+    fn timeline_recorder_keeps_emission_order_and_drains_once() {
+        let rec = Recorder::timeline();
+        rec.push(Record::Arrival { t: 0.1, stream: 0, index: 0 });
+        rec.push(Record::Deferral { t: 0.2, stream: 0 });
+        let shared = rec.clone(); // handles share the timeline
+        shared.push(Record::Arrival { t: 0.3, stream: 1, index: 0 });
+        let drained = rec.drain();
+        assert_eq!(drained.len(), 3);
+        assert_eq!(drained[0].time(), 0.1);
+        assert_eq!(drained[2].time(), 0.3);
+        assert!(rec.drain().is_empty(), "drain empties the timeline");
+    }
+
+    #[test]
+    fn null_recorder_records_nothing() {
+        let rec = Recorder::new(NullRecorder);
+        rec.push(Record::Deferral { t: 1.0, stream: 0 });
+        assert!(rec.drain().is_empty());
+    }
+
+    #[test]
+    fn snapshot_labels_resolve_per_kind_counts() {
+        let mut s = Snapshot::default();
+        s.events_popped[0] = 5;
+        s.events_popped[3] = 2;
+        assert_eq!(s.popped("arrival"), 5);
+        assert_eq!(s.popped("shed"), 2);
+        assert_eq!(s.events_total(), 7);
+        let j = s.to_json();
+        let popped = j.get("events_popped").unwrap();
+        assert_eq!(popped.get("arrival").unwrap().as_f64(), Some(5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown event-kind label")]
+    fn snapshot_rejects_unknown_counter_names() {
+        Snapshot::default().popped("no-such-kind");
+    }
+
+    #[test]
+    fn alloc_counter_is_zero_or_monotone() {
+        // With `telemetry-alloc` off this pins the 0 stub; with it on,
+        // the counter can only grow.
+        let a = alloc::allocations();
+        let _v: Vec<u64> = (0..64).collect();
+        assert!(alloc::allocations() >= a);
+    }
+}

@@ -45,6 +45,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -359,6 +366,8 @@ mod tests {
     #[test]
     fn parses_scalars_and_numbers() {
         assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(parse("1").unwrap().as_bool(), None);
         assert_eq!(parse("null").unwrap(), Json::Null);
         assert_eq!(parse("-1.5e3").unwrap(), Json::Num(-1500.0));
         assert_eq!(parse(r#""a\nb""#).unwrap(), Json::Str("a\nb".into()));

@@ -54,10 +54,21 @@
 //! * **Neutral knobs are inert** — streams with no deadline and no
 //!   per-stream mode (or with explicitly neutral settings) are
 //!   bit-identical to the PR-4 adaptive default.
+//!
+//! Plus the telemetry/observability suite (ISSUE 7):
+//!
+//! * **Counter consistency** — engine-wide `EngineMetrics` counters
+//!   (sheds, deferrals, slot preemptions, cache traffic, prewarm
+//!   accounting) equal the sum of the per-stream `ServeReport` counters,
+//!   and the hot-path snapshot's per-kind event counts sum to
+//!   `events_processed`.
+//! * **Live p99 export** — each lane's incremental `P2Quantile` state
+//!   is exported on the report and matches `metrics::percentile` on the
+//!   same completions exactly through the estimator's exact phase.
 
 use dype::config::{Interconnect, Objective, SystemSpec};
 use dype::coordinator::server::{generate_trace, serve_trace, RESCHEDULE_DRAIN_COST};
-use dype::coordinator::{Completion, Coordinator, Request, StreamSpec};
+use dype::coordinator::{Completion, Coordinator, MultiStreamReport, Request, StreamSpec};
 use dype::devices::GroundTruth;
 use dype::engine::{
     EnergyBudget, EngineConfig, MigrationMode, RepartitionPolicy, ServingEngine, StreamSlo,
@@ -67,6 +78,7 @@ use dype::experiments::{
     multi_stream_scenario, run_multi_stream, run_multi_stream_static, run_multi_stream_with,
     skewed_pair_scenario,
 };
+use dype::metrics::percentile;
 use dype::perfmodel::{OracleModels, PerfEstimator};
 use dype::scheduler::{evaluate_plan, PowerTable, Schedule, ScheduleCache};
 use dype::util::Rng;
@@ -838,4 +850,112 @@ fn finished_streams_return_their_devices_to_the_survivors() {
         "survivor pool share {}",
         r.engine.final_pool_share[2]
     );
+}
+
+// ---- telemetry + counter consistency (ISSUE 7) ------------------------
+
+/// Engine-wide counters must be exactly the sum of the per-stream report
+/// counters, and the telemetry snapshot must agree with both — the
+/// cross-layer consistency bar: a dashboard reading `EngineMetrics` and
+/// one reading per-stream `ServeReport`s may never disagree.
+fn assert_counters_consistent(r: &MultiStreamReport, label: &str) {
+    let sheds: usize = r.streams.iter().map(|sr| sr.report.shed).sum();
+    let deferrals: usize = r.streams.iter().map(|sr| sr.report.deferrals).sum();
+    let preempts: usize = r.streams.iter().map(|sr| sr.report.slot_preemptions).sum();
+    let completed: usize = r.streams.iter().map(|sr| sr.report.completed).sum();
+    assert_eq!(r.engine.sheds, sheds, "{label}: shed counter drift");
+    assert_eq!(r.engine.deferrals, deferrals, "{label}: deferral counter drift");
+    assert_eq!(r.engine.slot_preemptions, preempts, "{label}: preemption counter drift");
+    assert_eq!(r.total_completed, completed, "{label}: completion counter drift");
+
+    let hits: u64 = r.streams.iter().map(|sr| sr.report.cache.hits).sum();
+    let probes: u64 =
+        r.streams.iter().map(|sr| sr.report.cache.hits + sr.report.cache.misses).sum();
+    let pw_hits: u64 = r.streams.iter().map(|sr| sr.report.cache.prewarm_hits).sum();
+    let pw_misses: u64 = r.streams.iter().map(|sr| sr.report.cache.prewarm_misses).sum();
+    assert_eq!(r.engine.prewarm_hits, pw_hits, "{label}: engine prewarm-hit drift");
+    assert_eq!(r.engine.prewarm_misses, pw_misses, "{label}: engine prewarm-miss drift");
+
+    let t = &r.engine.telemetry;
+    assert_eq!(t.cache_hits, hits, "{label}: snapshot cache-hit drift");
+    assert_eq!(t.cache_probes, probes, "{label}: snapshot cache-probe drift");
+    assert_eq!(t.prewarm_hits, pw_hits, "{label}: snapshot prewarm-hit drift");
+    assert_eq!(t.prewarm_misses, pw_misses, "{label}: snapshot prewarm-miss drift");
+    assert_eq!(t.events_total(), r.engine.events_processed, "{label}: event count drift");
+    assert!(t.heap_high_water >= 1, "{label}: a run that popped events saw a non-empty heap");
+}
+
+#[test]
+fn engine_counters_equal_per_stream_sums_across_scenario_families() {
+    // One scenario per counter family: deadline (sheds + preemptions),
+    // tight energy budget (deferrals), adaptive skew (migrations +
+    // prewarm/cache traffic). Each must exercise its counters, then
+    // agree with the per-stream sums.
+    let s = sys();
+
+    let deadline = run_multi_stream_with(&s, &deadline_scenario(12, 101), deadline_config());
+    assert!(deadline.engine.sheds >= 1 && deadline.engine.slot_preemptions >= 1);
+    assert_counters_consistent(&deadline, "deadline");
+
+    let streams = energy_slo_scenario(4, 33);
+    let probe = run_multi_stream(&s, &streams);
+    assert_counters_consistent(&probe, "energy-slo probe");
+    let watts = 0.3 * probe.total_energy / probe.makespan;
+    let capped = run_multi_stream_with(&s, &streams, energy_slo_config(watts));
+    assert!(capped.engine.deferrals >= 1);
+    assert_counters_consistent(&capped, "energy-slo capped");
+
+    let adaptive = run_multi_stream(&s, &skewed_pair_scenario(20, 21));
+    assert!(adaptive.engine.prewarm_hits >= 1);
+    assert_counters_consistent(&adaptive, "adaptive skew");
+}
+
+#[test]
+fn live_p99_estimate_matches_the_posthoc_percentile() {
+    // Exact phase: with ≤ 5 completions per stream the P² estimator is
+    // still exact, so the exported estimate must equal
+    // `metrics::percentile` on the same completions to the bit.
+    let s = sys();
+    let streams = vec![
+        StreamSpec::new(
+            "four",
+            Objective::Performance,
+            generate_trace(&[(gcn(2_000_000), 4)], 10.0, 301),
+        ),
+        StreamSpec::new(
+            "five",
+            Objective::Performance,
+            generate_trace(&[(gcn(2_000_000), 5)], 10.0, 302),
+        ),
+    ];
+    let r = run_multi_stream(&s, &streams);
+    for sr in &r.streams {
+        let mut lats: Vec<f64> = sr.report.completions.iter().map(Completion::latency).collect();
+        lats.sort_by(f64::total_cmp);
+        assert_eq!(sr.report.p99_observations, lats.len(), "{}: sample size", sr.name);
+        assert_eq!(
+            sr.report.p99_estimate,
+            Some(percentile(&lats, 0.99)),
+            "{}: the exact phase must reproduce the post-hoc percentile",
+            sr.name
+        );
+    }
+
+    // Estimation phase: past the exact window the P² value is an
+    // approximation, but it must stay inside the observed latency range
+    // and keep counting every completion.
+    let big = run_multi_stream(&s, &skewed_pair_scenario(12, 21));
+    for sr in &big.streams {
+        let lats: Vec<f64> = sr.report.completions.iter().map(Completion::latency).collect();
+        assert!(lats.len() > 5, "{}: the scenario must leave the exact phase", sr.name);
+        assert_eq!(sr.report.p99_observations, lats.len(), "{}: sample size", sr.name);
+        let est = sr.report.p99_estimate.expect("completions were observed");
+        let lo = lats.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = lats.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            (lo..=hi).contains(&est),
+            "{}: estimate {est} outside the observed range [{lo}, {hi}]",
+            sr.name
+        );
+    }
 }

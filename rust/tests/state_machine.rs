@@ -121,6 +121,7 @@ fn random_manifest(seed: u64) -> ScenarioManifest {
         streams,
         budget,
         perturbations: vec![],
+        telemetry: false,
     }
 }
 

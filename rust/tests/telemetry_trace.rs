@@ -1,0 +1,153 @@
+//! Trace-export acceptance tests (ISSUE 7):
+//!
+//! * **Byte-stable timelines** — the same seeded scenario run twice
+//!   yields byte-identical JSONL, every line strict-parseable, opening
+//!   with the earliest arrival (timelines must diff with line tools).
+//! * **Strict Perfetto round-trip** — the `trace_events` export passes
+//!   the exporter's own validator, survives a strict-parse round-trip
+//!   bit-for-bit, and lays out the per-stream, per-lease, and
+//!   budget-window tracks with shed/preempt instants attributed to
+//!   their cause.
+//! * **Recorder neutrality** — attaching a recorder never changes what
+//!   the engine does: recorder-on and recorder-off runs of the same
+//!   scenario are bitwise-identical in every serving outcome.
+
+use dype::config::{Interconnect, SystemSpec};
+use dype::engine::{EnergyBudget, EngineConfig, RepartitionPolicy};
+use dype::experiments::{deadline_scenario, run_multi_stream_with};
+use dype::telemetry::{export, Record, Recorder, ShedCause};
+use dype::util::json::{self, Json};
+
+fn sys() -> SystemSpec {
+    SystemSpec::paper_testbed(Interconnect::Pcie4)
+}
+
+/// The canonical traced scenario's config: the deadline scenario's
+/// preemptive policy (sheds and preemptions guaranteed) plus a generous
+/// metered budget (windows tick without ever deferring).
+fn metered_deadline_config() -> EngineConfig {
+    EngineConfig {
+        repartition: Some(RepartitionPolicy::preemptive(1.0)),
+        energy_budget: Some(EnergyBudget::new(1e12, 0.1)),
+        ..EngineConfig::default()
+    }
+}
+
+fn traced_run() -> (Vec<Record>, Vec<String>) {
+    let streams = deadline_scenario(8, 42);
+    let rec = Recorder::timeline();
+    run_multi_stream_with(&sys(), &streams, metered_deadline_config().with_recorder(rec.clone()));
+    let names = streams.iter().map(|t| t.name.clone()).collect();
+    (rec.drain(), names)
+}
+
+#[test]
+fn seeded_scenario_timeline_is_byte_stable() {
+    let (records, _) = traced_run();
+    let (again, _) = traced_run();
+    assert!(!records.is_empty(), "the scenario must emit records");
+    let text = export::jsonl(&records);
+    assert_eq!(text, export::jsonl(&again), "same seed, same bytes");
+
+    for line in text.lines() {
+        json::parse(line).expect("every JSONL line is strict JSON");
+    }
+    // The timeline opens with the earliest arrival across all streams.
+    let first = json::parse(text.lines().next().unwrap()).unwrap();
+    assert_eq!(first.get("type").and_then(Json::as_str), Some("arrival"));
+    let earliest = deadline_scenario(8, 42)
+        .iter()
+        .map(|t| t.trace[0].arrival)
+        .fold(f64::INFINITY, f64::min);
+    assert_eq!(first.get("t").and_then(Json::as_f64), Some(earliest));
+}
+
+#[test]
+fn perfetto_export_round_trips_and_lays_out_all_tracks() {
+    let (records, names) = traced_run();
+    let doc = export::perfetto(&records, &names);
+    export::validate(&doc).expect("the exporter must satisfy its own validator");
+
+    // Strict-parse round-trip: Display → parse → identical tree+bytes.
+    let reparsed = json::parse(&doc.to_string()).expect("strict JSON");
+    assert_eq!(reparsed, doc);
+    assert_eq!(reparsed.to_string(), doc.to_string());
+
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let named = |n: &str| -> Vec<&Json> {
+        events.iter().filter(|e| e.get("name").and_then(Json::as_str) == Some(n)).collect()
+    };
+    // Per-stream thread metadata for every stream, plus its lease twin.
+    for name in &names {
+        assert!(
+            named("thread_name").iter().any(|e| {
+                e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str)
+                    == Some(name.as_str())
+            }),
+            "missing stream track {name:?}"
+        );
+    }
+    // Slots serve on the stream process, leases snapshot on process 2,
+    // the budget counter ticks on process 3.
+    assert!(!named("slot").is_empty(), "completed slots must export spans");
+    assert!(!named("repartition").is_empty(), "repartition verdicts must export");
+    assert!(
+        named("lease").iter().all(|e| e.get("pid").and_then(Json::as_u64) == Some(2)),
+        "lease snapshots live on the lease process"
+    );
+    let windows = named("window_joules");
+    assert!(!windows.is_empty(), "a metered run must export budget windows");
+    assert!(windows.iter().all(|e| e.get("ph").and_then(Json::as_str) == Some("C")));
+    assert!(windows.iter().all(|e| e.get("pid").and_then(Json::as_u64) == Some(3)));
+    // Shed and preempt instants carry their attribution.
+    let causes = [
+        ShedCause::QueueAhead.label(),
+        ShedCause::Queueing.label(),
+        ShedCause::BudgetWait.label(),
+        ShedCause::BatchLatency.label(),
+    ];
+    let sheds = named("shed");
+    assert!(!sheds.is_empty(), "the overloaded deadline lane must shed");
+    for e in &sheds {
+        let cause = e.get("args").and_then(|a| a.get("cause")).and_then(Json::as_str);
+        assert!(cause.is_some_and(|c| causes.contains(&c)), "unattributed shed: {e}");
+    }
+    assert!(!named("preempt").is_empty(), "the preemptive policy must cancel slots");
+}
+
+#[test]
+fn attaching_a_recorder_changes_no_serving_outcome() {
+    // The recorder must be a pure observer: bitwise-identical serving
+    // outcomes with and without one attached (the behavioral half of
+    // the zero-cost-when-off bar; the bench gates the time half).
+    let streams = deadline_scenario(8, 42);
+    let rec = Recorder::timeline();
+    let cfg = metered_deadline_config().with_recorder(rec.clone());
+    let on = run_multi_stream_with(&sys(), &streams, cfg);
+    let off = run_multi_stream_with(&sys(), &streams, metered_deadline_config());
+    assert!(!rec.drain().is_empty());
+
+    assert_eq!(on.total_completed, off.total_completed);
+    assert_eq!(on.makespan, off.makespan);
+    assert_eq!(on.engine.events_processed, off.engine.events_processed);
+    assert_eq!(on.engine.sheds, off.engine.sheds);
+    assert_eq!(on.engine.slot_preemptions, off.engine.slot_preemptions);
+    // Snapshot fields, minus the host-clock ones (`handler_ns` and
+    // `allocations` are wall-side and may differ when their features
+    // are on; everything sim-side must be identical).
+    assert_eq!(on.engine.telemetry.events_popped, off.engine.telemetry.events_popped);
+    assert_eq!(on.engine.telemetry.heap_high_water, off.engine.telemetry.heap_high_water);
+    assert_eq!(on.engine.telemetry.cache_probes, off.engine.telemetry.cache_probes);
+    assert_eq!(on.engine.telemetry.cache_hits, off.engine.telemetry.cache_hits);
+    for (a, b) in on.streams.iter().zip(&off.streams) {
+        assert_eq!(a.partition, b.partition);
+        assert_eq!(a.report.completions.len(), b.report.completions.len());
+        for (ca, cb) in a.report.completions.iter().zip(&b.report.completions) {
+            assert_eq!(ca.id, cb.id, "{}: service order diverged", a.name);
+            assert_eq!(ca.start, cb.start, "{}: starts diverged", a.name);
+            assert_eq!(ca.finish, cb.finish, "{}: finishes diverged", a.name);
+        }
+        assert_eq!(a.report.energy, b.report.energy);
+        assert_eq!(a.report.p99_estimate, b.report.p99_estimate);
+    }
+}
