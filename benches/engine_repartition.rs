@@ -54,18 +54,12 @@ fn main() {
     let statik = run_multi_stream_static(&sys, &streams);
     let static_wall = t0.elapsed().as_secs_f64();
 
-    let drain_cfg = EngineConfig {
-        repartition: Some(RepartitionPolicy::reactive(1.0)),
-        ..EngineConfig::default()
-    };
+    let drain_cfg = EngineConfig::builder().repartition(RepartitionPolicy::reactive(1.0)).build();
     let t1 = Instant::now();
     let adaptive = run_multi_stream_with(&sys, &streams, drain_cfg);
     let adaptive_wall = t1.elapsed().as_secs_f64();
 
-    let preempt_cfg = EngineConfig {
-        repartition: Some(RepartitionPolicy::preemptive(1.0)),
-        ..EngineConfig::default()
-    };
+    let preempt_cfg = EngineConfig::builder().preemptive(1.0).build();
     let t2 = Instant::now();
     let preempt = run_multi_stream_with(&sys, &streams, preempt_cfg);
     let preempt_wall = t2.elapsed().as_secs_f64();

@@ -61,7 +61,8 @@ fn main() {
     let mut records = 0usize;
     for _ in 0..REPS {
         let rec = Recorder::timeline();
-        let cfg = drain_cfg().with_recorder(rec.clone());
+        let mut cfg = drain_cfg();
+        cfg.recorder = Some(rec.clone());
         let t = Instant::now();
         let r = run_multi_stream_with(&sys, &streams, cfg);
         on_walls.push(t.elapsed().as_secs_f64());

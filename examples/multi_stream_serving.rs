@@ -58,16 +58,6 @@ fn main() {
             "--cache" => cache_path = Some(args.next().expect("--cache needs a path")),
             "--trace" => trace_path = Some(args.next().expect("--trace needs a path")),
             "--static" => statik = true,
-            // Adaptive serving has been the default since the PR-4 flip;
-            // the old opt-in flag is accepted so existing invocations keep
-            // working, but it selects nothing anymore.
-            "--adaptive" => {
-                statik = false;
-                println!(
-                    "note: --adaptive is deprecated — adaptive serving is the default; \
-                     use --static to freeze the initial leases"
-                );
-            }
             "--energy-slo" => energy_slo = true,
             "--deadlines" => deadlines = true,
             other => cycles = other.parse().expect("cycles must be a number"),
@@ -153,15 +143,15 @@ fn main() {
     } else if deadlines {
         deadline_config() // preemptive policy, per-stream overrides apply
     } else if statik {
-        EngineConfig::static_leases()
+        EngineConfig::builder().static_leases().build()
     } else {
         EngineConfig::default() // adaptive with prewarming
     };
     let recorder = trace_path.as_ref().map(|_| Recorder::timeline());
-    let cfg = match &recorder {
-        Some(rec) => cfg.with_recorder(rec.clone()),
-        None => cfg,
-    };
+    let mut cfg = cfg;
+    if let Some(rec) = &recorder {
+        cfg.recorder = Some(rec.clone());
+    }
     let mut server =
         MultiStreamServer::with_cache(sys, &est, cache.clone()).with_engine_config(cfg);
     let report = server.serve(&streams);

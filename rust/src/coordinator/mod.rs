@@ -27,10 +27,11 @@ pub use multi::{partition_system, MultiStreamReport, MultiStreamServer, StreamRe
 pub use server::{generate_trace, serve_trace, Completion, Request, ServeReport, Server};
 
 use crate::config::{Objective, SystemSpec};
+use crate::devices::CommModel;
 use crate::perfmodel::PerfEstimator;
 use crate::scheduler::{
-    cache::CacheKey, evaluate_plan, system_fingerprint, CacheStats, DpScheduler, PowerTable,
-    PrewarmReport, Schedule, SharedScheduleCache,
+    cache::CacheKey, evaluate_plan_into, system_fingerprint, CacheStats, DpScheduler, EvalScratch,
+    PowerTable, PrewarmReport, Schedule, SharedScheduleCache, StagePlan,
 };
 use crate::workload::Workload;
 
@@ -46,6 +47,13 @@ pub struct RescheduleEvent {
 }
 
 /// Streaming-serving coordinator with input-aware rescheduling.
+///
+/// The per-batch path ([`Coordinator::process_batch`] /
+/// `process_batch_into`) is allocation-free at steady state: the cache
+/// key, candidate/re-timed schedules, plan buffers, and evaluation
+/// scratch all live on the coordinator and are refilled in place.
+/// Allocations happen only on the cold paths — a DP run, a structure
+/// swap's log entry, or a capacity grow of one of the scratch buffers.
 pub struct Coordinator<'a, E: PerfEstimator> {
     sys: SystemSpec,
     est: &'a E,
@@ -59,11 +67,28 @@ pub struct Coordinator<'a, E: PerfEstimator> {
     cache: Option<SharedScheduleCache>,
     /// Fingerprint of `sys`, precomputed for cache keys.
     sys_fp: u64,
+    /// Power/comm models for re-timing, rebuilt on [`Coordinator::retarget`].
+    power: PowerTable,
+    comm: CommModel,
+    /// Reusable cache key (refilled per lookup, never reallocated).
+    key: CacheKey,
+    /// Candidate schedule under construction; swapped into `current` and
+    /// recycled from the displaced schedule's allocation.
+    cand: Schedule,
+    /// Re-timing sink for the hysteresis comparison.
+    retimed: Schedule,
+    /// Cache-hit plan buffer.
+    lookup_buf: Vec<StagePlan>,
+    /// Plan buffer backing the by-reference [`Coordinator::process_batch`].
+    wrap_buf: Vec<StagePlan>,
+    scratch: EvalScratch,
 }
 
 impl<'a, E: PerfEstimator> Coordinator<'a, E> {
     pub fn new(sys: SystemSpec, est: &'a E, objective: Objective) -> Self {
         let sys_fp = system_fingerprint(&sys);
+        let power = PowerTable::new(sys.gpu.clone(), sys.fpga.clone());
+        let comm = sys.comm_model();
         Coordinator {
             sys,
             est,
@@ -74,6 +99,14 @@ impl<'a, E: PerfEstimator> Coordinator<'a, E> {
             events: Vec::new(),
             cache: None,
             sys_fp,
+            power,
+            comm,
+            key: CacheKey::default(),
+            cand: Schedule::default(),
+            retimed: Schedule::default(),
+            lookup_buf: Vec::new(),
+            wrap_buf: Vec::new(),
+            scratch: EvalScratch::default(),
         }
     }
 
@@ -110,6 +143,8 @@ impl<'a, E: PerfEstimator> Coordinator<'a, E> {
         let old_fp = self.sys_fp;
         self.sys_fp = system_fingerprint(&sys);
         self.sys = sys;
+        self.power = PowerTable::new(self.sys.gpu.clone(), self.sys.fpga.clone());
+        self.comm = self.sys.comm_model();
         self.current = None;
         let cacheable = !matches!(self.objective, Objective::Balanced { .. });
         match self.cache.as_ref().filter(|_| cacheable) {
@@ -135,70 +170,124 @@ impl<'a, E: PerfEstimator> Coordinator<'a, E> {
     /// max-over-design-space throughput, which only the DP tables know —
     /// it cannot be re-validated from a single re-timed plan, so Balanced
     /// coordinators bypass the cache entirely.
-    fn candidate_schedule(&mut self, wl: &Workload) -> Schedule {
+    fn candidate_into(&mut self, wl: &Workload) {
         let cacheable = !matches!(self.objective, Objective::Balanced { .. });
         let Some(cache) = self.cache.as_ref().filter(|_| cacheable) else {
-            return DpScheduler::new(&self.sys, self.est).schedule(wl, self.objective);
+            self.cand = DpScheduler::new(&self.sys, self.est).schedule(wl, self.objective);
+            return;
         };
-        let key = CacheKey::new(self.sys_fp, wl, self.objective);
-        let hit = cache.lock().unwrap().lookup(&key);
-        if let Some(plan) = hit {
-            let power = PowerTable::new(self.sys.gpu.clone(), self.sys.fpga.clone());
-            let retimed = evaluate_plan(wl, &plan, self.est, &self.sys.comm_model(), &power);
+        self.key.assign(self.sys_fp, wl, self.objective);
+        let hit = cache.lock().unwrap().lookup_into(&self.key, &mut self.lookup_buf);
+        if hit {
+            evaluate_plan_into(
+                wl,
+                &self.lookup_buf,
+                self.est,
+                &self.comm,
+                &self.power,
+                &mut self.scratch,
+                &mut self.cand,
+            );
             let still_valid = match self.objective {
                 Objective::QoS { min_throughput } => {
-                    retimed.throughput() >= min_throughput * (1.0 - 1e-9)
+                    self.cand.throughput() >= min_throughput * (1.0 - 1e-9)
                 }
                 _ => true,
             };
             if still_valid {
-                return retimed;
+                return;
             }
         }
         let sched = DpScheduler::new(&self.sys, self.est).schedule(wl, self.objective);
-        cache.lock().unwrap().insert(key, sched.plan());
-        sched
+        cache.lock().unwrap().insert(self.key.clone(), sched.plan());
+        self.cand = sched;
     }
 
     /// Observe the characteristics of the next input batch and return the
     /// schedule to run it with, rescheduling if the estimated gain exceeds
     /// the hysteresis threshold.
     pub fn process_batch(&mut self, wl: &Workload) -> &Schedule {
+        let mut buf = std::mem::take(&mut self.wrap_buf);
+        self.process_batch_into(wl, &mut buf);
+        self.wrap_buf = buf;
+        self.current.as_ref().expect("process_batch_into installs a schedule")
+    }
+
+    /// [`Coordinator::process_batch`] into caller-owned storage: `plan_out`
+    /// ends holding the installed schedule's frozen plan, and the return
+    /// value says whether the structure changed this batch (first
+    /// schedule, shape change, or a hysteresis-approved swap) — callers
+    /// re-measuring timings can skip the work when it is `false` and
+    /// nothing else changed. Allocation-free at steady state.
+    pub(crate) fn process_batch_into(
+        &mut self,
+        wl: &Workload,
+        plan_out: &mut Vec<StagePlan>,
+    ) -> bool {
         self.batches_seen += 1;
-        let candidate = self.candidate_schedule(wl);
+        self.candidate_into(wl);
 
         let swap = match &self.current {
             None => true,
             Some(cur) => {
-                // Re-time the current structure under the new input
-                // characteristics; swap only for a real improvement.
-                let power = PowerTable::new(self.sys.gpu.clone(), self.sys.fpga.clone());
                 let same_shape = cur.stages.last().map(|s| s.last + 1) == Some(wl.len());
                 if !same_shape {
                     true
                 } else {
-                    let retimed =
-                        evaluate_plan(wl, &cur.plan(), self.est, &self.sys.comm_model(), &power);
-                    let gain = retimed.period / candidate.period - 1.0;
-                    if gain > self.reschedule_threshold {
-                        self.events.push(RescheduleEvent {
-                            batch: self.batches_seen,
-                            workload: wl.name.clone(),
-                            old_mnemonic: retimed.mnemonic(),
-                            new_mnemonic: candidate.mnemonic(),
-                            estimated_gain: gain,
+                    // When the candidate keeps the current structure, the
+                    // re-timed current *is* the candidate: gain is exactly
+                    // 0 and a non-negative threshold can never approve the
+                    // swap, so skip the re-timing entirely. (A zero or
+                    // negative threshold keeps the explicit comparison —
+                    // such a caller wants every tie broken toward the
+                    // candidate.)
+                    let same_structure = cur.stages.len() == self.cand.stages.len()
+                        && cur.stages.iter().zip(&self.cand.stages).all(|(a, b)| {
+                            (a.first, a.last, a.dev, a.n) == (b.first, b.last, b.dev, b.n)
                         });
-                        true
-                    } else {
+                    if same_structure && self.reschedule_threshold > 0.0 {
                         false
+                    } else {
+                        // Re-time the current structure under the new input
+                        // characteristics; swap only for a real improvement.
+                        cur.plan_into(plan_out);
+                        evaluate_plan_into(
+                            wl,
+                            plan_out,
+                            self.est,
+                            &self.comm,
+                            &self.power,
+                            &mut self.scratch,
+                            &mut self.retimed,
+                        );
+                        let gain = self.retimed.period / self.cand.period - 1.0;
+                        if gain > self.reschedule_threshold {
+                            self.events.push(RescheduleEvent {
+                                batch: self.batches_seen,
+                                workload: wl.name.clone(),
+                                old_mnemonic: self.retimed.mnemonic(),
+                                new_mnemonic: self.cand.mnemonic(),
+                                estimated_gain: gain,
+                            });
+                            true
+                        } else {
+                            false
+                        }
                     }
                 }
             }
         };
         if swap {
-            self.current = Some(candidate);
+            // Install the candidate; the displaced schedule's allocation
+            // becomes the next candidate's scratch.
+            let prev = self.current.take();
+            self.current = Some(std::mem::take(&mut self.cand));
+            if let Some(old) = prev {
+                self.cand = old;
+            }
         }
-        self.current.as_ref().unwrap()
+        self.current.as_ref().expect("swap installs on first batch").plan_into(plan_out);
+        swap
     }
 
     pub fn current_schedule(&self) -> Option<&Schedule> {

@@ -27,7 +27,7 @@
 //!    cache for the prospective partition
 //!    ([`crate::scheduler::ScheduleCache::prewarm`]), so a migrated
 //!    stream's known regimes stay hits — freeze the leases with
-//!    [`crate::engine::EngineConfig::static_leases`] via
+//!    [`crate::engine::EngineConfigBuilder::static_leases`] via
 //!    [`MultiStreamServer::with_engine_config`] to reproduce the
 //!    historical static numbers;
 //! 5. optionally serves **multi-objective**: a per-window joule budget
@@ -182,8 +182,9 @@ impl<'a, E: PerfEstimator> MultiStreamServer<'a, E> {
     }
 
     /// Override the engine configuration — e.g.
-    /// [`EngineConfig::static_leases`] to freeze the initial leases
-    /// (serving runs adaptive with cache prewarming by default).
+    /// `EngineConfig::builder().static_leases().build()` to freeze the
+    /// initial leases (serving runs adaptive with cache prewarming by
+    /// default).
     pub fn with_engine_config(mut self, cfg: EngineConfig) -> Self {
         self.cfg = cfg;
         self

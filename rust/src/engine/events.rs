@@ -1,16 +1,39 @@
-//! The event heap — the engine's single source of time.
+//! The event queue — the engine's single source of time.
 //!
 //! Every cause of state change in the serving engine is an [`Event`] on
 //! one global clock: a request arriving, a batch's admission slot
 //! completing, a request shed by the deadline feasibility check, a
 //! device lease reaching the end of its term, a demand-sampling tick, or
-//! an energy-budget window boundary. The queue
-//! is a binary min-heap ordered by
-//! `(time, push sequence)`, so simultaneous events resolve in push order
-//! — deterministically, with no dependence on hash state or thread
-//! interleaving. Arrivals are pushed before any run-time event, which
-//! reproduces the legacy loop's "admit everything that has arrived by
-//! `clock`, then dispatch" semantics at equal timestamps.
+//! an energy-budget window boundary. Whatever the backing store, the
+//! queue contract is total order by `(time, push sequence)`: the
+//! earliest event pops first and simultaneous events resolve in push
+//! order — deterministically, with no dependence on hash state, thread
+//! interleaving, or the queue implementation chosen. Arrivals are pushed
+//! before any run-time event, which reproduces the legacy loop's "admit
+//! everything that has arrived by `clock`, then dispatch" semantics at
+//! equal timestamps.
+//!
+//! Two interchangeable implementations live behind the [`EventQueue`]
+//! trait, selected per run by the [`QueueKind`] config knob:
+//!
+//! * [`BinaryHeapQueue`] — the original binary min-heap. `O(log n)`
+//!   push/pop, allocation-free after its backing buffer warms up.
+//! * [`CalendarQueue`] — a calendar queue (Brown 1988): events live in a
+//!   slab addressed by typed [`EventId`] indices and are bucketed into a
+//!   power-of-two ring of "days" of width `bucket_width`. In the dense-
+//!   timestamp regime the serving engine produces (arrival/completion
+//!   pairs spaced about one pipeline period apart), push and pop touch
+//!   one short bucket — amortized `O(1)` — and the slab plus bucket
+//!   vectors retain their capacity, so the steady state allocates
+//!   nothing. **The default** since the hot-path rewrite.
+//!
+//! Determinism is preserved by construction, not by luck: the calendar
+//! pop selects the minimum `(time, seq)` within the scanned day by a
+//! linear scan, so the result is independent of in-bucket insertion
+//! order (and therefore of `swap_remove` shuffling). The two
+//! implementations are property-tested to pop bit-identical sequences
+//! under adversarial interleavings, and `rust/tests/queue_equivalence.rs`
+//! pins full engine runs equal across the zoo.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -95,10 +118,25 @@ impl EventKind {
     }
 }
 
+/// Which [`EventQueue`] implementation a run uses — an
+/// [`crate::engine::EngineConfig`] knob so benches can A/B the two
+/// in-tree. Both orderings are bit-identical by contract
+/// (property-tested); the choice is purely a performance trade.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueKind {
+    /// The original binary min-heap: `O(log n)`, a safe all-rounder.
+    Heap,
+    /// Slab-backed calendar queue: amortized `O(1)` in the engine's
+    /// dense-timestamp regime, zero allocations at steady state. The
+    /// default.
+    #[default]
+    Calendar,
+}
+
 /// A timestamped event. `seq` is the queue's push counter — the
 /// deterministic tie-breaker for equal timestamps.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub struct Event {
+pub(crate) struct Event {
     /// Global-clock timestamp (s). Always finite.
     pub time: f64,
     /// Push order, unique per queue.
@@ -118,39 +156,92 @@ impl Ord for Event {
     /// Reversed so `BinaryHeap` (a max-heap) pops the *earliest* event;
     /// equal times pop in push order.
     fn cmp(&self, other: &Self) -> Ordering {
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
+        other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
+/// Typed index of an event slot in the [`CalendarQueue`] slab — events
+/// are addressed, never boxed or cloned, so bucket moves are `u32`
+/// copies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct EventId(u32);
+
+impl EventId {
+    #[inline]
+    fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Typed index of a lane in the engine's lane slab (`Vec<Lane>` — lanes
+/// are stored once and addressed by index; nothing in the hot path
+/// clones one).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub(crate) struct LaneId(pub u32);
+
+impl LaneId {
+    #[inline]
+    pub(crate) fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// The queue contract every implementation honors: total `(time, seq)`
+/// order, push-order ties, pop counting. The engine itself dispatches
+/// statically through [`EngineQueue`]; the trait exists so tests can
+/// drive any implementation through one harness.
+pub(crate) trait EventQueue {
+    /// Schedule `kind` at `time`. Times must be finite; they need not be
+    /// monotone with respect to previous pushes (the queue orders them),
+    /// but the engine never schedules into the past.
+    fn push(&mut self, time: f64, kind: EventKind);
+
+    /// Pop the earliest event (ties in push order).
+    fn pop(&mut self) -> Option<Event>;
+
+    /// Pop the earliest event only if `pred` accepts it; otherwise leave
+    /// the queue untouched. This is the same-tick coalescing primitive:
+    /// the lease-expiry handler peels off a coinciding repartition tick
+    /// (and vice versa) without disturbing any other event that may sort
+    /// between them.
+    fn pop_if(&mut self, pred: impl FnMut(&Event) -> bool) -> Option<Event>;
+
+    /// Pending events.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events popped so far (the engine's per-event overhead denominator).
+    fn processed(&self) -> u64;
+}
+
 /// Min-heap of pending events plus the push/pop counters the engine
-/// reports as overhead metrics.
+/// reports as overhead metrics — the original queue, kept as the
+/// [`QueueKind::Heap`] option.
 #[derive(Debug, Default)]
-pub struct EventQueue {
+pub(crate) struct BinaryHeapQueue {
     heap: BinaryHeap<Event>,
     next_seq: u64,
     processed: u64,
 }
 
-impl EventQueue {
-    pub fn new() -> EventQueue {
-        EventQueue::default()
+impl BinaryHeapQueue {
+    pub(crate) fn new() -> BinaryHeapQueue {
+        BinaryHeapQueue::default()
     }
+}
 
-    /// Schedule `kind` at `time`. Times must be finite; they need not be
-    /// monotone with respect to previous pushes (the heap orders them),
-    /// but the engine never schedules into the past.
-    pub fn push(&mut self, time: f64, kind: EventKind) {
+impl EventQueue for BinaryHeapQueue {
+    fn push(&mut self, time: f64, kind: EventKind) {
         assert!(time.is_finite(), "non-finite event time {time}");
         let seq = self.next_seq;
         self.next_seq += 1;
         self.heap.push(Event { time, seq, kind });
     }
 
-    /// Pop the earliest event (ties in push order).
-    pub fn pop(&mut self) -> Option<Event> {
+    fn pop(&mut self) -> Option<Event> {
         let ev = self.heap.pop();
         if ev.is_some() {
             self.processed += 1;
@@ -158,17 +249,298 @@ impl EventQueue {
         ev
     }
 
-    pub fn len(&self) -> usize {
+    fn pop_if(&mut self, mut pred: impl FnMut(&Event) -> bool) -> Option<Event> {
+        if pred(self.heap.peek()?) {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    fn len(&self) -> usize {
         self.heap.len()
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+    fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+/// Buckets start at this power-of-two count and never shrink below it.
+const MIN_BUCKETS: usize = 64;
+/// Bucket width before the first adaptive rebuild (s) — one pipeline
+/// period of a millisecond-scale serving workload.
+const DEFAULT_WIDTH: f64 = 1e-3;
+/// Floor on the adaptive bucket width, so day indices stay well inside
+/// `u64` for any reachable clock value.
+const MIN_WIDTH: f64 = 1e-9;
+
+/// Slab-backed calendar queue (Brown 1988), tuned for the engine's
+/// dense-timestamp regime.
+///
+/// Events live in a free-listed slab (`Vec<Event>` addressed by
+/// [`EventId`]); the ring holds a power-of-two number of buckets, each a
+/// `Vec<EventId>`, where an event at time `t` lives in bucket
+/// `⌊t / bucket_width⌋ mod n_buckets`. A pop scans forward from the
+/// cursor's day: the first day (within one "year" — a full ring
+/// revolution) holding a due event contains the global minimum, because
+/// day order is time order across days; *within* the day a linear scan
+/// selects the minimum `(time, seq)`, making the result independent of
+/// bucket insertion order. When a whole year is empty (sparse far-future
+/// tail), a global min-scan fallback finds the event and re-anchors the
+/// cursor. The ring resizes by rebuild — doubling when occupancy passes
+/// 2× the bucket count, halving below 1/8 — re-deriving the width from
+/// the live event span so a year keeps covering the pending horizon.
+/// After warm-up the slab, free list, and bucket vectors all retain
+/// capacity: the steady state allocates nothing.
+#[derive(Debug)]
+pub(crate) struct CalendarQueue {
+    slab: Vec<Event>,
+    free: Vec<u32>,
+    buckets: Vec<Vec<EventId>>,
+    bucket_width: f64,
+    /// Day index (`⌊t / width⌋`) the pop scan starts from. Invariant:
+    /// `cursor_day <= day_of(e.time)` for every stored event `e`.
+    cursor_day: u64,
+    len: usize,
+    next_seq: u64,
+    processed: u64,
+}
+
+impl Default for CalendarQueue {
+    fn default() -> Self {
+        CalendarQueue {
+            slab: Vec::new(),
+            free: Vec::new(),
+            buckets: vec![Vec::new(); MIN_BUCKETS],
+            bucket_width: DEFAULT_WIDTH,
+            cursor_day: 0,
+            len: 0,
+            next_seq: 0,
+            processed: 0,
+        }
+    }
+}
+
+impl CalendarQueue {
+    pub(crate) fn new() -> CalendarQueue {
+        CalendarQueue::default()
     }
 
-    /// Events popped so far (the engine's per-event overhead denominator).
-    pub fn processed(&self) -> u64 {
+    #[inline]
+    fn day_of(&self, time: f64) -> u64 {
+        // `as` saturates, so even an absurd clock cannot overflow.
+        (time.max(0.0) / self.bucket_width) as u64
+    }
+
+    #[inline]
+    fn bucket_of(&self, day: u64) -> usize {
+        (day & (self.buckets.len() as u64 - 1)) as usize
+    }
+
+    /// Locate the global minimum `(time, seq)` as `(bucket, position)`.
+    fn locate_min(&self) -> Option<(usize, usize)> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len() as u64;
+        for step in 0..n {
+            let day = self.cursor_day + step;
+            let b = self.bucket_of(day);
+            let mut best: Option<(usize, f64, u64)> = None;
+            for (pos, &id) in self.buckets[b].iter().enumerate() {
+                let ev = &self.slab[id.index()];
+                if self.day_of(ev.time) != day {
+                    continue; // an earlier or later year sharing the bucket
+                }
+                let better = match best {
+                    None => true,
+                    Some((_, t, s)) => ev.time < t || (ev.time == t && ev.seq < s),
+                };
+                if better {
+                    best = Some((pos, ev.time, ev.seq));
+                }
+            }
+            if let Some((pos, _, _)) = best {
+                return Some((b, pos));
+            }
+        }
+        // A whole year from the cursor is empty: the remaining events sit
+        // in a sparse far-future tail. One global scan finds the minimum
+        // (day order across days no longer helps, so compare directly).
+        let mut best: Option<(usize, usize, f64, u64)> = None;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (pos, &id) in bucket.iter().enumerate() {
+                let ev = &self.slab[id.index()];
+                let better = match best {
+                    None => true,
+                    Some((_, _, t, s)) => ev.time < t || (ev.time == t && ev.seq < s),
+                };
+                if better {
+                    best = Some((b, pos, ev.time, ev.seq));
+                }
+            }
+        }
+        best.map(|(b, pos, _, _)| (b, pos))
+    }
+
+    fn remove_at(&mut self, bucket: usize, pos: usize) -> Event {
+        let id = self.buckets[bucket].swap_remove(pos);
+        let ev = self.slab[id.index()];
+        self.free.push(id.0);
+        self.len -= 1;
+        ev
+    }
+
+    /// Re-bucket every live event into `n_buckets` (a power of two),
+    /// re-deriving the width from the live span so occupancy stays near
+    /// one event per day. The slab and free list are untouched — only
+    /// bucket membership moves.
+    fn rebuild(&mut self, n_buckets: usize) {
+        debug_assert!(n_buckets.is_power_of_two());
+        let mut min_t = f64::INFINITY;
+        let mut max_t = 0.0f64;
+        for bucket in &self.buckets {
+            for &id in bucket {
+                let t = self.slab[id.index()].time;
+                min_t = min_t.min(t);
+                max_t = max_t.max(t);
+            }
+        }
+        let span = (max_t - min_t).max(0.0);
+        self.bucket_width = if self.len > 1 && span > 0.0 {
+            (span / self.len as f64).max(MIN_WIDTH)
+        } else {
+            DEFAULT_WIDTH
+        };
+        let mut old = std::mem::take(&mut self.buckets);
+        self.buckets = vec![Vec::new(); n_buckets];
+        let n = n_buckets as u64;
+        for bucket in &mut old {
+            for id in bucket.drain(..) {
+                let day = self.day_of(self.slab[id.index()].time);
+                self.buckets[(day & (n - 1)) as usize].push(id);
+            }
+        }
+        self.cursor_day = if self.len == 0 { 0 } else { self.day_of(min_t.max(0.0)) };
+    }
+}
+
+impl EventQueue for CalendarQueue {
+    fn push(&mut self, time: f64, kind: EventKind) {
+        assert!(time.is_finite(), "non-finite event time {time}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let ev = Event { time, seq, kind };
+        let id = match self.free.pop() {
+            Some(i) => {
+                self.slab[i as usize] = ev;
+                EventId(i)
+            }
+            None => {
+                self.slab.push(ev);
+                EventId((self.slab.len() - 1) as u32)
+            }
+        };
+        let day = self.day_of(time);
+        // A past-time push (relative to the cursor) must pull the cursor
+        // back, or the scan would skip it for a whole year.
+        if self.len == 0 || day < self.cursor_day {
+            self.cursor_day = day;
+        }
+        let b = self.bucket_of(day);
+        self.buckets[b].push(id);
+        self.len += 1;
+        if self.len > self.buckets.len() * 2 {
+            self.rebuild(self.buckets.len() * 2);
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        let (b, pos) = self.locate_min()?;
+        let ev = self.remove_at(b, pos);
+        // The popped event was the global minimum, so every survivor's
+        // day is >= its day: advancing the cursor is safe and skips the
+        // empty prefix on the next pop.
+        self.cursor_day = self.day_of(ev.time);
+        self.processed += 1;
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 8 {
+            let target = (self.buckets.len() / 2).max(MIN_BUCKETS);
+            self.rebuild(target);
+        }
+        Some(ev)
+    }
+
+    fn pop_if(&mut self, mut pred: impl FnMut(&Event) -> bool) -> Option<Event> {
+        let (b, pos) = self.locate_min()?;
+        if !pred(&self.slab[self.buckets[b][pos].index()]) {
+            return None;
+        }
+        let ev = self.remove_at(b, pos);
+        self.cursor_day = self.day_of(ev.time);
+        self.processed += 1;
+        Some(ev)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn processed(&self) -> u64 {
         self.processed
+    }
+}
+
+/// The engine's queue: a closed enum over the two implementations, so
+/// the hot loop dispatches statically (match, no vtable) while the
+/// choice stays a runtime config knob.
+#[derive(Debug)]
+pub(crate) enum EngineQueue {
+    Heap(BinaryHeapQueue),
+    Calendar(CalendarQueue),
+}
+
+impl EngineQueue {
+    pub(crate) fn new(kind: QueueKind) -> EngineQueue {
+        match kind {
+            QueueKind::Heap => EngineQueue::Heap(BinaryHeapQueue::new()),
+            QueueKind::Calendar => EngineQueue::Calendar(CalendarQueue::new()),
+        }
+    }
+
+    pub(crate) fn push(&mut self, time: f64, kind: EventKind) {
+        match self {
+            EngineQueue::Heap(q) => q.push(time, kind),
+            EngineQueue::Calendar(q) => q.push(time, kind),
+        }
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<Event> {
+        match self {
+            EngineQueue::Heap(q) => q.pop(),
+            EngineQueue::Calendar(q) => q.pop(),
+        }
+    }
+
+    pub(crate) fn pop_if(&mut self, pred: impl FnMut(&Event) -> bool) -> Option<Event> {
+        match self {
+            EngineQueue::Heap(q) => q.pop_if(pred),
+            EngineQueue::Calendar(q) => q.pop_if(pred),
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            EngineQueue::Heap(q) => q.len(),
+            EngineQueue::Calendar(q) => q.len(),
+        }
+    }
+
+    pub(crate) fn processed(&self) -> u64 {
+        match self {
+            EngineQueue::Heap(q) => q.processed(),
+            EngineQueue::Calendar(q) => q.processed(),
+        }
     }
 }
 
@@ -176,54 +548,109 @@ impl EventQueue {
 mod tests {
     use super::*;
 
+    /// Every queue the contract tests must hold for.
+    fn queues() -> Vec<(&'static str, Box<dyn FnMut() -> TestQueue>)> {
+        vec![
+            ("heap", Box::new(|| TestQueue::Heap(BinaryHeapQueue::new()))),
+            ("calendar", Box::new(|| TestQueue::Calendar(CalendarQueue::new()))),
+        ]
+    }
+
+    /// Test-side mirror of [`EngineQueue`] (kept separate so the tests
+    /// exercise the trait impls directly).
+    enum TestQueue {
+        Heap(BinaryHeapQueue),
+        Calendar(CalendarQueue),
+    }
+
+    impl TestQueue {
+        fn push(&mut self, t: f64, k: EventKind) {
+            match self {
+                TestQueue::Heap(q) => q.push(t, k),
+                TestQueue::Calendar(q) => q.push(t, k),
+            }
+        }
+        fn pop(&mut self) -> Option<Event> {
+            match self {
+                TestQueue::Heap(q) => q.pop(),
+                TestQueue::Calendar(q) => q.pop(),
+            }
+        }
+        fn pop_if(&mut self, pred: impl FnMut(&Event) -> bool) -> Option<Event> {
+            match self {
+                TestQueue::Heap(q) => q.pop_if(pred),
+                TestQueue::Calendar(q) => q.pop_if(pred),
+            }
+        }
+        fn processed(&self) -> u64 {
+            match self {
+                TestQueue::Heap(q) => q.processed(),
+                TestQueue::Calendar(q) => q.processed(),
+            }
+        }
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(2.0, EventKind::LeaseExpiry);
-        q.push(0.5, EventKind::RequestArrival { stream: 0, index: 0 });
-        q.push(1.0, EventKind::BatchComplete { stream: 0, epoch: 0 });
-        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
-        assert_eq!(times, vec![0.5, 1.0, 2.0]);
-        assert_eq!(q.processed(), 3);
+        for (name, mut mk) in queues() {
+            let mut q = mk();
+            q.push(2.0, EventKind::LeaseExpiry);
+            q.push(0.5, EventKind::RequestArrival { stream: 0, index: 0 });
+            q.push(1.0, EventKind::BatchComplete { stream: 0, epoch: 0 });
+            let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+            assert_eq!(times, vec![0.5, 1.0, 2.0], "{name}");
+            assert_eq!(q.processed(), 3, "{name}");
+        }
     }
 
     #[test]
     fn equal_times_pop_in_push_order() {
-        let mut q = EventQueue::new();
-        for i in 0..5 {
-            q.push(1.0, EventKind::RequestArrival { stream: 0, index: i });
+        for (name, mut mk) in queues() {
+            let mut q = mk();
+            for i in 0..5 {
+                q.push(1.0, EventKind::RequestArrival { stream: 0, index: i });
+            }
+            q.push(1.0, EventKind::BatchComplete { stream: 0, epoch: 9 });
+            let mut kinds = Vec::new();
+            while let Some(e) = q.pop() {
+                kinds.push(e.kind);
+            }
+            for (i, k) in kinds.iter().take(5).enumerate() {
+                assert_eq!(*k, EventKind::RequestArrival { stream: 0, index: i }, "{name}");
+            }
+            assert_eq!(kinds[5], EventKind::BatchComplete { stream: 0, epoch: 9 }, "{name}");
         }
-        q.push(1.0, EventKind::BatchComplete { stream: 0, epoch: 9 });
-        let mut kinds = Vec::new();
-        while let Some(e) = q.pop() {
-            kinds.push(e.kind);
-        }
-        for (i, k) in kinds.iter().take(5).enumerate() {
-            assert_eq!(*k, EventKind::RequestArrival { stream: 0, index: i });
-        }
-        assert_eq!(kinds[5], EventKind::BatchComplete { stream: 0, epoch: 9 });
     }
 
     #[test]
     fn interleaved_pushes_stay_deterministic() {
         // Push order is the tie-breaker even when pushes interleave pops.
-        let mut q = EventQueue::new();
-        q.push(1.0, EventKind::RepartitionTick);
-        q.push(0.0, EventKind::RequestArrival { stream: 0, index: 0 });
-        assert_eq!(
-            q.pop().unwrap().kind,
-            EventKind::RequestArrival { stream: 0, index: 0 }
-        );
-        q.push(1.0, EventKind::LeaseExpiry);
-        assert_eq!(q.pop().unwrap().kind, EventKind::RepartitionTick);
-        assert_eq!(q.pop().unwrap().kind, EventKind::LeaseExpiry);
-        assert!(q.pop().is_none());
+        for (name, mut mk) in queues() {
+            let mut q = mk();
+            q.push(1.0, EventKind::RepartitionTick);
+            q.push(0.0, EventKind::RequestArrival { stream: 0, index: 0 });
+            assert_eq!(
+                q.pop().unwrap().kind,
+                EventKind::RequestArrival { stream: 0, index: 0 },
+                "{name}"
+            );
+            q.push(1.0, EventKind::LeaseExpiry);
+            assert_eq!(q.pop().unwrap().kind, EventKind::RepartitionTick, "{name}");
+            assert_eq!(q.pop().unwrap().kind, EventKind::LeaseExpiry, "{name}");
+            assert!(q.pop().is_none(), "{name}");
+        }
     }
 
     #[test]
     #[should_panic(expected = "non-finite")]
-    fn rejects_non_finite_times() {
-        EventQueue::new().push(f64::NAN, EventKind::RepartitionTick);
+    fn heap_rejects_non_finite_times() {
+        BinaryHeapQueue::new().push(f64::NAN, EventKind::RepartitionTick);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn calendar_rejects_non_finite_times() {
+        CalendarQueue::new().push(f64::NAN, EventKind::RepartitionTick);
     }
 
     #[test]
@@ -248,26 +675,162 @@ mod tests {
     #[test]
     fn shed_events_order_like_any_other_event() {
         // A shed at `now` pops after same-time events pushed earlier and
-        // before later ones — no special-casing on the heap.
-        let mut q = EventQueue::new();
-        q.push(1.0, EventKind::RequestArrival { stream: 1, index: 3 });
-        q.push(1.0, EventKind::Shed { stream: 0, index: 2 });
-        q.push(0.5, EventKind::Shed { stream: 0, index: 1 });
-        assert_eq!(q.pop().unwrap().kind, EventKind::Shed { stream: 0, index: 1 });
-        assert_eq!(q.pop().unwrap().kind, EventKind::RequestArrival { stream: 1, index: 3 });
-        assert_eq!(q.pop().unwrap().kind, EventKind::Shed { stream: 0, index: 2 });
+        // before later ones — no special-casing in the queue.
+        for (name, mut mk) in queues() {
+            let mut q = mk();
+            q.push(1.0, EventKind::RequestArrival { stream: 1, index: 3 });
+            q.push(1.0, EventKind::Shed { stream: 0, index: 2 });
+            q.push(0.5, EventKind::Shed { stream: 0, index: 1 });
+            assert_eq!(q.pop().unwrap().kind, EventKind::Shed { stream: 0, index: 1 }, "{name}");
+            assert_eq!(
+                q.pop().unwrap().kind,
+                EventKind::RequestArrival { stream: 1, index: 3 },
+                "{name}"
+            );
+            assert_eq!(q.pop().unwrap().kind, EventKind::Shed { stream: 0, index: 2 }, "{name}");
+        }
     }
 
     #[test]
-    fn budget_ticks_order_with_the_rest_of_the_heap() {
+    fn budget_ticks_order_with_the_rest_of_the_queue() {
         // A window boundary coinciding with an arrival resolves in push
         // order like any other tie — budget refills never jump the queue.
-        let mut q = EventQueue::new();
-        q.push(1.0, EventKind::RequestArrival { stream: 0, index: 0 });
-        q.push(1.0, EventKind::BudgetWindowTick);
+        for (name, mut mk) in queues() {
+            let mut q = mk();
+            q.push(1.0, EventKind::RequestArrival { stream: 0, index: 0 });
+            q.push(1.0, EventKind::BudgetWindowTick);
+            q.push(0.5, EventKind::BudgetWindowTick);
+            assert_eq!(q.pop().unwrap().kind, EventKind::BudgetWindowTick, "{name}");
+            assert_eq!(
+                q.pop().unwrap().kind,
+                EventKind::RequestArrival { stream: 0, index: 0 },
+                "{name}"
+            );
+            assert_eq!(q.pop().unwrap().kind, EventKind::BudgetWindowTick, "{name}");
+        }
+    }
+
+    #[test]
+    fn pop_if_peels_only_a_matching_head() {
+        for (name, mut mk) in queues() {
+            let mut q = mk();
+            q.push(1.0, EventKind::LeaseExpiry);
+            q.push(1.0, EventKind::RepartitionTick);
+            // Head is the expiry (pushed first): a tick-only predicate
+            // must leave the queue untouched...
+            assert!(
+                q.pop_if(|e| e.kind == EventKind::RepartitionTick).is_none(),
+                "{name}: pop_if must not skip past the head"
+            );
+            // ...and an expiry predicate pops exactly it.
+            let ev = q.pop_if(|e| e.kind == EventKind::LeaseExpiry).unwrap();
+            assert_eq!(ev.kind, EventKind::LeaseExpiry, "{name}");
+            assert_eq!(q.pop().unwrap().kind, EventKind::RepartitionTick, "{name}");
+            assert_eq!(q.processed(), 2, "{name}: pop_if pops count as processed");
+        }
+    }
+
+    #[test]
+    fn calendar_survives_resize_and_sparse_tails() {
+        // Push enough same-width events to force at least one grow
+        // rebuild, plus a far-future straggler that needs the sparse
+        // fallback, then drain and check global order.
+        let mut q = CalendarQueue::new();
+        let mut expect: Vec<(f64, u64)> = Vec::new();
+        for i in 0..500u64 {
+            let t = (i % 97) as f64 * 1e-3;
+            q.push(t, EventKind::RequestArrival { stream: 0, index: i as usize });
+            expect.push((t, i));
+        }
+        q.push(1e6, EventKind::LeaseExpiry); // years past everything else
+        expect.push((1e6, 500));
+        expect.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let got: Vec<(f64, u64)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.time, e.seq)).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn calendar_accepts_pushes_before_the_cursor() {
+        // Popping at t=1.0 advances the cursor; a later push at t=0.5
+        // (the engine never does this, but the contract allows it) must
+        // still pop first.
+        let mut q = CalendarQueue::new();
+        q.push(1.0, EventKind::LeaseExpiry);
+        q.push(2.0, EventKind::RepartitionTick);
+        assert_eq!(q.pop().unwrap().time, 1.0);
         q.push(0.5, EventKind::BudgetWindowTick);
         assert_eq!(q.pop().unwrap().kind, EventKind::BudgetWindowTick);
-        assert_eq!(q.pop().unwrap().kind, EventKind::RequestArrival { stream: 0, index: 0 });
-        assert_eq!(q.pop().unwrap().kind, EventKind::BudgetWindowTick);
+        assert_eq!(q.pop().unwrap().kind, EventKind::RepartitionTick);
+    }
+
+    /// Deterministic xorshift — the differential tests need adversarial
+    /// but reproducible interleavings.
+    struct Rng(u64);
+    impl Rng {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+        fn f64(&mut self) -> f64 {
+            (self.next() >> 11) as f64 / (1u64 << 53) as f64
+        }
+    }
+
+    #[test]
+    fn heap_and_calendar_pop_bit_identical_sequences() {
+        // The core determinism property: under random interleavings of
+        // pushes and pops — mixed timescales, duplicate timestamps,
+        // bursts dense enough to force calendar rebuilds — both
+        // implementations yield the exact same (time, seq, kind) stream.
+        for seed in 1..=8u64 {
+            let mut rng = Rng(0x9e37_79b9_7f4a_7c15 ^ seed);
+            let mut heap = BinaryHeapQueue::new();
+            let mut cal = CalendarQueue::new();
+            let mut clock = 0.0f64;
+            for step in 0..4_000 {
+                let r = rng.next() % 100;
+                if r < 60 || heap.is_empty() {
+                    // Mixed horizons: mostly dense (≈ms), sometimes a
+                    // far-future tick, sometimes an exact duplicate of
+                    // "now" to stress tie-breaking.
+                    let dt = match rng.next() % 10 {
+                        0 => 0.0,
+                        1..=7 => rng.f64() * 5e-3,
+                        8 => rng.f64() * 2.0,
+                        _ => rng.f64() * 500.0,
+                    };
+                    let t = clock + dt;
+                    let kind = match rng.next() % 4 {
+                        0 => EventKind::RequestArrival { stream: step % 7, index: step },
+                        1 => EventKind::BatchComplete { stream: step % 7, epoch: step as u64 },
+                        2 => EventKind::RepartitionTick,
+                        _ => EventKind::LeaseExpiry,
+                    };
+                    heap.push(t, kind);
+                    cal.push(t, kind);
+                } else {
+                    let a = heap.pop();
+                    let b = cal.pop();
+                    assert_eq!(a, b, "seed {seed} step {step}");
+                    if let Some(ev) = a {
+                        clock = ev.time; // future pushes stay >= popped time
+                    }
+                }
+            }
+            loop {
+                let a = heap.pop();
+                let b = cal.pop();
+                assert_eq!(a, b, "seed {seed} drain");
+                if a.is_none() {
+                    break;
+                }
+            }
+            assert_eq!(heap.processed(), cal.processed(), "seed {seed}");
+        }
     }
 }

@@ -149,7 +149,7 @@ impl LeaseAssignment {
 /// (identical to [`crate::coordinator::partition_system`]); otherwise
 /// streams are grouped onto `devices` partitions and time-sliced by
 /// demand weight.
-pub fn assign(sys: &SystemSpec, demands: &[f64]) -> LeaseAssignment {
+pub(crate) fn assign(sys: &SystemSpec, demands: &[f64]) -> LeaseAssignment {
     let k = demands.len();
     assert!(k >= 1, "no streams");
     let d = sys.n_fpga + sys.n_gpu;
@@ -225,7 +225,7 @@ pub fn assign(sys: &SystemSpec, demands: &[f64]) -> LeaseAssignment {
 /// zero for any realistic group size. Small enough not to distort
 /// demand-weighted shares; large enough that a floored tenant's slots
 /// stretch by a bounded factor (≈ `100·(1 + MIN_SHARE·(n−1))`), not ∞.
-pub const MIN_SHARE: f64 = 0.01;
+pub(crate) const MIN_SHARE: f64 = 0.01;
 
 /// Hand a preempted slot's freed remainder to the migration's *other*
 /// incoming lease owners: a cancelled slot leaves its old devices idle
@@ -239,7 +239,7 @@ pub const MIN_SHARE: f64 = 0.01;
 /// deterministic, since device identity is not modeled below the
 /// partition level); each drain absorbs at most its own length. Returns
 /// the unconsumed remainder (idle time nobody could overlap with).
-pub fn hand_off_remainder(mut freed: f64, drains: &mut [f64]) -> f64 {
+pub(crate) fn hand_off_remainder(mut freed: f64, drains: &mut [f64]) -> f64 {
     debug_assert!(freed >= 0.0 && freed.is_finite(), "bad freed remainder {freed}");
     for d in drains.iter_mut() {
         if freed <= 0.0 {

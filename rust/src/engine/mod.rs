@@ -1,4 +1,4 @@
-//! The event-heap serving engine — one global clock for every stream.
+//! The event-driven serving engine — one global clock for every stream.
 //!
 //! PR 1's serving layer ran one synchronous discrete-event loop *per
 //! stream* and pinned device partitions for the whole call, so
@@ -9,9 +9,12 @@
 //!
 //! * **[`events`]** — every state change ([`EventKind::RequestArrival`],
 //!   [`EventKind::BatchComplete`], [`EventKind::LeaseExpiry`],
-//!   [`EventKind::RepartitionTick`]) is an entry in one binary-heap
-//!   [`EventQueue`] ordered by a global clock with deterministic
-//!   tie-breaking.
+//!   [`EventKind::RepartitionTick`]) is an entry in one event queue
+//!   ordered by a global clock with deterministic tie-breaking. Two
+//!   interchangeable backends — the original binary heap and a
+//!   slab-backed calendar queue, the zero-allocation default — sit
+//!   behind the [`QueueKind`] config knob, property-tested to pop
+//!   bit-identical sequences.
 //! * **[`lease`]** — devices are *leased*, not owned: with enough
 //!   devices every stream gets an exclusive partition (bit-compatible
 //!   with the legacy spatial partitioning); when streams outnumber
@@ -60,7 +63,7 @@ pub mod repartition;
 pub mod slo;
 
 pub use budget::EnergyBudget;
-pub use events::{Event, EventKind, EventQueue};
+pub use events::{EventKind, QueueKind};
 pub use lease::{LeaseAssignment, OverSubscribed};
 pub use perturb::{Perturbation, PerturbationKind};
 pub use repartition::{DemandTracker, MigrationMode, RepartitionPolicy};
@@ -76,11 +79,14 @@ use crate::devices::{CommModel, GroundTruth};
 use crate::metrics::{jain_index, LatencySummary, P2Quantile};
 use crate::perfmodel::{OracleModels, PerfEstimator};
 use crate::scheduler::{
-    evaluate_plan, CacheStats, PowerTable, Schedule, ScheduleCache, SharedScheduleCache,
+    evaluate_plan_into, CacheStats, EvalScratch, PowerTable, Schedule, ScheduleCache,
+    SharedScheduleCache, StagePlan,
 };
 use crate::telemetry::{self, LeaseSnapshot, Record, Recorder, ShedCause, Snapshot};
+use crate::workload::Workload;
 
 use budget::BudgetLedger;
+use events::{EngineQueue, LaneId};
 use repartition::share_shift;
 
 /// Engine-wide knobs. The default is **adaptive**: online
@@ -91,7 +97,7 @@ use repartition::share_shift;
 /// known regimes stay warm ([`crate::scheduler::ScheduleCache::prewarm`]
 /// via [`Coordinator::retarget`]), which is what made the flip safe for
 /// the historical acceptance scenarios. Freeze the leases with
-/// [`EngineConfig::static_leases`] (the PR-1/PR-2 default) when
+/// [`EngineConfigBuilder::static_leases`] (the PR-1/PR-2 default) when
 /// reproducing the static numbers.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -122,6 +128,12 @@ pub struct EngineConfig {
     /// that never runs). Cloning the config shares the handle, so the
     /// caller keeps one to drain after the run.
     pub recorder: Option<Recorder>,
+    /// Which event-queue backend drives the run ([`events`]): the
+    /// slab-backed calendar queue by default, the original binary heap
+    /// as the conservative alternative. The two are property-tested to
+    /// pop bit-identical sequences, so this knob is purely a
+    /// performance trade — benches compare them in-tree.
+    pub event_queue: QueueKind,
 }
 
 impl Default for EngineConfig {
@@ -133,35 +145,144 @@ impl Default for EngineConfig {
             slo: SloController::default(),
             perturbations: Vec::new(),
             recorder: None,
+            event_queue: QueueKind::default(),
         }
     }
 }
 
-impl EngineConfig {
-    /// Demand-adaptive migration with the default policy. Since the
-    /// adaptive-by-default flip this *is* [`EngineConfig::default`];
-    /// retained as the self-documenting spelling at call sites.
-    pub fn adaptive() -> EngineConfig {
-        EngineConfig::default()
+/// Builder for [`EngineConfig`] — the one construction surface since
+/// the hot-path redesign (the accreted constructors are deprecated
+/// shims over it). Every method overwrites one knob and returns the
+/// builder, so configs read as a sentence:
+///
+/// ```
+/// use dype::engine::{EngineConfig, QueueKind};
+///
+/// let cfg = EngineConfig::builder()
+///     .static_leases()
+///     .event_queue(QueueKind::Heap)
+///     .build();
+/// assert!(cfg.repartition.is_none());
+/// assert_eq!(cfg.event_queue, QueueKind::Heap);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    /// Demand-adaptive migration with the default
+    /// [`RepartitionPolicy`] — a no-op spelling of the default, kept so
+    /// call sites can say what they mean.
+    pub fn adaptive(mut self) -> Self {
+        self.cfg.repartition = Some(RepartitionPolicy::default());
+        self
     }
 
     /// Freeze the initial leases for the whole run — the historical
-    /// PR-1/PR-2 default, kept as the escape hatch for reproducing the
-    /// static acceptance numbers and for A/B-ing what adaptivity buys.
-    pub fn static_leases() -> EngineConfig {
-        EngineConfig { repartition: None, ..Default::default() }
+    /// PR-1/PR-2 behavior, the escape hatch for reproducing the static
+    /// acceptance numbers and for A/B-ing what adaptivity buys.
+    pub fn static_leases(mut self) -> Self {
+        self.cfg.repartition = None;
+        self
     }
 
-    /// The default (adaptive) config with a per-window joule budget
-    /// attached.
-    pub fn budgeted(b: EnergyBudget) -> EngineConfig {
-        EngineConfig { energy_budget: Some(b), ..Default::default() }
+    /// Adaptive migration under a specific policy.
+    pub fn repartition(mut self, pol: RepartitionPolicy) -> Self {
+        self.cfg.repartition = Some(pol);
+        self
+    }
+
+    /// Adaptive migration with mid-slot preemption, reacting on the
+    /// given horizon (see [`RepartitionPolicy::preemptive`]).
+    pub fn preemptive(mut self, horizon: f64) -> Self {
+        self.cfg.repartition = Some(RepartitionPolicy::preemptive(horizon));
+        self
+    }
+
+    /// Drain cost (s of lease time) charged when a migration changes a
+    /// stream's device inventory (see [`EngineConfig::migration_drain`]).
+    pub fn migration_drain(mut self, seconds: f64) -> Self {
+        self.cfg.migration_drain = seconds;
+        self
+    }
+
+    /// Attach a per-window joule budget ([`budget`]).
+    pub fn energy_budget(mut self, b: EnergyBudget) -> Self {
+        self.cfg.energy_budget = Some(b);
+        self
+    }
+
+    /// Replace the SLO feedback controller ([`slo`]).
+    pub fn slo(mut self, controller: SloController) -> Self {
+        self.cfg.slo = controller;
+        self
+    }
+
+    /// Script mid-run perturbations ([`perturb`]).
+    pub fn perturbations(mut self, perturbations: Vec<Perturbation>) -> Self {
+        self.cfg.perturbations = perturbations;
+        self
     }
 
     /// Attach a trace recorder: every engine decision emits a typed
     /// [`Record`] through it (see [`crate::telemetry`]). The handle is
     /// shared — clone it before attaching to drain the timeline after
     /// the run.
+    pub fn recorder(mut self, rec: Recorder) -> Self {
+        self.cfg.recorder = Some(rec);
+        self
+    }
+
+    /// Select the event-queue backend ([`QueueKind`]).
+    pub fn event_queue(mut self, kind: QueueKind) -> Self {
+        self.cfg.event_queue = kind;
+        self
+    }
+
+    pub fn build(self) -> EngineConfig {
+        self.cfg
+    }
+}
+
+impl EngineConfig {
+    /// Start building a config from the adaptive default:
+    ///
+    /// ```
+    /// use dype::engine::EngineConfig;
+    ///
+    /// let cfg = EngineConfig::builder().adaptive().build();
+    /// assert!(cfg.repartition.is_some(), "adaptive is the default");
+    /// ```
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder::default()
+    }
+
+    /// Demand-adaptive migration with the default policy. Since the
+    /// adaptive-by-default flip this *is* [`EngineConfig::default`];
+    /// retained one release as a shim.
+    #[deprecated(note = "use EngineConfig::builder().adaptive().build()")]
+    pub fn adaptive() -> EngineConfig {
+        EngineConfig::default()
+    }
+
+    /// Freeze the initial leases for the whole run — the historical
+    /// PR-1/PR-2 default.
+    #[deprecated(note = "use EngineConfig::builder().static_leases().build()")]
+    pub fn static_leases() -> EngineConfig {
+        EngineConfig::builder().static_leases().build()
+    }
+
+    /// The default (adaptive) config with a per-window joule budget
+    /// attached.
+    #[deprecated(note = "use EngineConfig::builder().energy_budget(b).build()")]
+    pub fn budgeted(b: EnergyBudget) -> EngineConfig {
+        EngineConfig::builder().energy_budget(b).build()
+    }
+
+    /// Attach a trace recorder to an existing config.
+    #[deprecated(note = "use EngineConfig::builder().recorder(rec).build() \
+                         or set the `recorder` field")]
     pub fn with_recorder(mut self, rec: Recorder) -> EngineConfig {
         self.recorder = Some(rec);
         self
@@ -300,6 +421,43 @@ struct InflightSlot {
     charge_window: Option<usize>,
 }
 
+/// The slice of a ground-truth measurement the dispatch math consumes —
+/// copied out of the evaluated schedule so the steady state never
+/// clones stage vectors or workload names.
+#[derive(Debug, Clone, Copy)]
+struct Measured {
+    /// Pipeline initiation interval (s).
+    period: f64,
+    /// End-to-end pipeline latency (s).
+    latency: f64,
+    /// Modeled `f_eng` joules per inference.
+    energy_per_inf: f64,
+}
+
+/// Order-sensitive FNV-1a hash of a workload's kernel-kind sequence —
+/// the lane's "did the observed data characteristics change?" signal.
+/// Replaces the per-dispatch `String` the old loop built from the same
+/// `Debug` stream: the hash distinguishes exactly what the string did,
+/// with no allocation, and a 2⁻⁶⁴ collision merely skips one
+/// re-measurement.
+fn workload_sig(wl: &Workload) -> u64 {
+    use std::fmt::Write as _;
+    struct Fnv(u64);
+    impl std::fmt::Write for Fnv {
+        fn write_str(&mut self, s: &str) -> std::fmt::Result {
+            for b in s.bytes() {
+                self.0 = (self.0 ^ u64::from(b)).wrapping_mul(0x100_0000_01b3);
+            }
+            Ok(())
+        }
+    }
+    let mut h = Fnv(0xcbf2_9ce4_8422_2325);
+    for k in &wl.kernels {
+        let _ = write!(h, "{:?};", k.kind);
+    }
+    h.0
+}
+
 /// One stream's runtime state inside the engine: its lease, its
 /// measurement apparatus, its admission queue, and its counters.
 struct Lane<'c, 'a, E: PerfEstimator> {
@@ -315,8 +473,16 @@ struct Lane<'c, 'a, E: PerfEstimator> {
     /// Dispatch generation: bumped at every dispatch *and* preemption, so
     /// a cancelled slot's [`EventKind::BatchComplete`] pops stale.
     epoch: u64,
-    sig: String,
-    measured: Option<Schedule>,
+    /// [`workload_sig`] of the last measured batch (0 = none yet).
+    sig: u64,
+    measured: Option<Measured>,
+    /// Reusable plan buffer the coordinator fills at every dispatch.
+    plan_buf: Vec<StagePlan>,
+    /// Reusable ground-truth evaluation target (+ its scratch): cleared
+    /// and refilled in place on re-measurement, so the steady state
+    /// reuses the stage and string capacity.
+    timed: Schedule,
+    eval_scratch: EvalScratch,
     completions: Vec<Completion>,
     reschedules: usize,
     downtime: f64,
@@ -392,8 +558,11 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
             queue: VecDeque::new(),
             inflight: None,
             epoch: 0,
-            sig: String::new(),
+            sig: 0,
             measured: None,
+            plan_buf: Vec::new(),
+            timed: Schedule::default(),
+            eval_scratch: EvalScratch::default(),
             completions: Vec::new(),
             reschedules: 0,
             downtime: 0.0,
@@ -449,10 +618,10 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
     /// seeds the estimate.
     fn estimated_batch_latency(&self) -> f64 {
         let drain = self.pending_drain / self.share;
-        match &self.measured {
+        match self.measured {
             Some(m) => {
                 let eff_period = m.period / self.share;
-                drain + eff_period.max(1e-12) + m.latency() - m.period
+                drain + eff_period.max(1e-12) + m.latency - m.period
             }
             None => drain,
         }
@@ -465,30 +634,42 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
     /// schedule the [`EventKind::BatchComplete`]. Returns the batch's
     /// modeled energy (J) so the caller can charge the `f_eng` budget —
     /// exactly once per batch, at its (possibly deferred) dispatch.
-    fn dispatch(&mut self, trace: &[Request], stream: usize, now: f64, q: &mut EventQueue) -> f64 {
+    fn dispatch(&mut self, trace: &[Request], stream: usize, now: f64, q: &mut EngineQueue) -> f64 {
         debug_assert!(!self.busy(), "dispatch on a busy lane");
         let idx = self.queue.pop_front().expect("dispatch on an empty queue");
         let req = &trace[idx];
         let share = self.share;
 
         // Data-aware scheduling: feed the observed characteristics to the
-        // coordinator; it reschedules only past its hysteresis.
-        let sig: String = req.workload.kernels.iter().map(|k| format!("{:?};", k.kind)).collect();
+        // coordinator; it reschedules only past its hysteresis. The plan
+        // lands in this lane's reusable buffer — a steady-state cache hit
+        // round-trips through the coordinator without one allocation.
+        let sig = workload_sig(&req.workload);
         let cache_before = self.coord.cache_stats().unwrap_or_default();
-        let events_before = self.coord.reschedule_events().len();
-        let sched = self.coord.process_batch(&req.workload).clone();
-        let rescheduled = self.coord.reschedule_events().len() > events_before;
+        let rescheduled = self.coord.process_batch_into(&req.workload, &mut self.plan_buf);
         let cache_after = self.coord.cache_stats().unwrap_or_default();
         self.cache.accumulate(&cache_after.since(&cache_before));
 
         if sig != self.sig || rescheduled || self.measured.is_none() {
             self.sig = sig;
-            // Re-measure the (possibly new) schedule on ground truth.
-            let timed = {
-                let oracle = OracleModels { gt: &self.gt };
-                evaluate_plan(&req.workload, &sched.plan(), &oracle, &self.comm, &self.power)
-            };
-            self.measured = Some(timed);
+            // Re-measure the (possibly new) schedule on ground truth,
+            // in place — `timed` and the evaluation scratch keep their
+            // capacity across re-measurements.
+            let oracle = OracleModels { gt: &self.gt };
+            evaluate_plan_into(
+                &req.workload,
+                &self.plan_buf,
+                &oracle,
+                &self.comm,
+                &self.power,
+                &mut self.eval_scratch,
+                &mut self.timed,
+            );
+            self.measured = Some(Measured {
+                period: self.timed.period,
+                latency: self.timed.latency(),
+                energy_per_inf: self.timed.energy_per_inf,
+            });
         }
 
         let mut start = now;
@@ -506,8 +687,8 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
         }
 
         let (period, latency, energy) = {
-            let m = self.measured.as_ref().expect("measured above");
-            (m.period, m.latency(), m.energy_per_inf)
+            let m = self.measured.expect("measured above");
+            (m.period, m.latency, m.energy_per_inf)
         };
         // Weighted round-robin time slicing: a tenant holding `share` of
         // its partition's term sees every slot stretched by 1/share. A
@@ -584,7 +765,7 @@ impl<'c, 'a, E: PerfEstimator> Lane<'c, 'a, E> {
         self.power = PowerTable::new(part.gpu.clone(), part.fpga.clone());
         self.comm = part.comm_model();
         self.measured = None;
-        self.sig.clear();
+        self.sig = 0;
         self.pending_drain += drain;
         self.part = part;
         self.cache.prewarm_hits += prewarm.hits;
@@ -692,7 +873,7 @@ fn try_admit<E: PerfEstimator>(
     lanes: &mut [Lane<'_, '_, E>],
     traces: &[&[Request]],
     ledger: &mut Option<BudgetLedger>,
-    q: &mut EventQueue,
+    q: &mut EngineQueue,
     remaining: &mut usize,
     next_budget_tick: Option<f64>,
     cfg: &EngineConfig,
@@ -761,7 +942,7 @@ fn run_event_loop<E: PerfEstimator>(
 ) -> (EngineMetrics, SystemSpec) {
     assert_eq!(traces.len(), lanes.len());
     let mut pool = pool.clone();
-    let mut q = EventQueue::new();
+    let mut q = EngineQueue::new(cfg.event_queue);
     let mut remaining = 0usize;
     for (s, trace) in traces.iter().enumerate() {
         assert!(!trace.is_empty(), "empty stream trace");
@@ -813,6 +994,11 @@ fn run_event_loop<E: PerfEstimator>(
     let alloc_before = telemetry::alloc::allocations();
     let mut windows_closed = 0usize;
 
+    // Handler scratch, hoisted so periodic ticks reuse capacity instead
+    // of allocating a fresh vector each firing.
+    let mut windows_scratch: Vec<f64> = Vec::with_capacity(lanes.len());
+    let mut resume_order: Vec<LaneId> = Vec::with_capacity(lanes.len());
+
     while remaining > 0 {
         let ev = q.pop().expect("pending requests imply pending events");
         snap.events_popped[ev.kind.index()] += 1;
@@ -834,7 +1020,7 @@ fn run_event_loop<E: PerfEstimator>(
                 // bound blows the deadline, which bounds queue depth to
                 // the deadline-feasibility horizon. A lane with no
                 // measurement yet admits optimistically, as at the front.
-                if let (Some(deadline), Some(m)) = (lane.slo.deadline, lane.measured.as_ref()) {
+                if let (Some(deadline), Some(m)) = (lane.slo.deadline, lane.measured) {
                     let ahead = lane.queue.len() + usize::from(lane.busy());
                     let queue_wait = ahead as f64 * (m.period / lane.share).max(1e-12);
                     if queue_wait + lane.estimated_batch_latency() > deadline {
@@ -947,10 +1133,41 @@ fn run_event_loop<E: PerfEstimator>(
             }
             EventKind::RepartitionTick => {
                 if let (Some(pol), Some(tr)) = (cfg.repartition.as_ref(), tracker.as_mut()) {
-                    let windows: Vec<f64> =
-                        lanes.iter_mut().map(|l| std::mem::take(&mut l.flops_window)).collect();
-                    tr.tick(now, &windows);
+                    windows_scratch.clear();
+                    windows_scratch
+                        .extend(lanes.iter_mut().map(|l| std::mem::take(&mut l.flops_window)));
+                    tr.tick(now, &windows_scratch);
                     q.push(now + pol.sample_interval, EventKind::RepartitionTick);
+                }
+                // Same-tick coalescing: when the lease term lands on the
+                // sampling interval's timestamp (the default policy's
+                // term is a multiple of its interval, so this is the
+                // common case), the expiry is the immediate next event —
+                // fold it into this pass instead of paying a second
+                // pop/dispatch round-trip. `pop_if` only ever inspects
+                // the queue head, so any other same-time event pushed
+                // between the two still pops in exactly its old order.
+                if let Some(co) = q.pop_if(|e| e.time == now && e.kind == EventKind::LeaseExpiry) {
+                    snap.events_popped[co.kind.index()] += 1;
+                    snap.heap_high_water = snap.heap_high_water.max(q.len() + 1);
+                    if tracker.is_some() {
+                        maybe_migrate(
+                            &pool,
+                            traces,
+                            lanes,
+                            tracker.as_ref(),
+                            initial_demands,
+                            cfg,
+                            now,
+                            &mut q,
+                            &mut ledger,
+                            &mut remaining,
+                            &mut metrics,
+                            false,
+                        );
+                        let pol = cfg.repartition.as_ref().expect("tracker implies a policy");
+                        q.push(now + pol.lease_term, EventKind::LeaseExpiry);
+                    }
                 }
             }
             EventKind::LeaseExpiry => {
@@ -972,6 +1189,22 @@ fn run_event_loop<E: PerfEstimator>(
                     let pol = cfg.repartition.as_ref().expect("tracker implies a policy");
                     q.push(now + pol.lease_term, EventKind::LeaseExpiry);
                 }
+                // The mirror coalesce: a sampling tick coinciding with
+                // this expiry (and pushed after it) is the next event —
+                // fold the demand-window roll into this pass.
+                let coalesced =
+                    q.pop_if(|e| e.time == now && e.kind == EventKind::RepartitionTick);
+                if let Some(co) = coalesced {
+                    snap.events_popped[co.kind.index()] += 1;
+                    snap.heap_high_water = snap.heap_high_water.max(q.len() + 1);
+                    if let (Some(pol), Some(tr)) = (cfg.repartition.as_ref(), tracker.as_mut()) {
+                        windows_scratch.clear();
+                        windows_scratch
+                            .extend(lanes.iter_mut().map(|l| std::mem::take(&mut l.flops_window)));
+                        tr.tick(now, &windows_scratch);
+                        q.push(now + pol.sample_interval, EventKind::RepartitionTick);
+                    }
+                }
             }
             EventKind::BudgetWindowTick => {
                 let Some((window, closed)) = ledger.as_mut().map(|led| {
@@ -988,20 +1221,26 @@ fn run_event_loop<E: PerfEstimator>(
                 windows_closed += 1;
                 // Resume deferred lanes highest-priority-first (ties in
                 // stream order) until the refilled window objects again.
-                let mut order: Vec<usize> = (0..lanes.len())
-                    .filter(|&i| {
-                        lanes[i].deferred && !lanes[i].busy() && !lanes[i].queue.is_empty()
-                    })
-                    .collect();
-                order.sort_by(|&a, &b| {
-                    let (pa, pb) = (lanes[a].slo.priority, lanes[b].slo.priority);
-                    pb.partial_cmp(&pa).expect("finite priorities").then(a.cmp(&b))
+                // The order buffer is hoisted scratch; the unstable sort
+                // allocates nothing and its comparator is a total order
+                // (index-tied), so it equals the stable result.
+                resume_order.clear();
+                resume_order.extend(
+                    (0..lanes.len())
+                        .filter(|&i| {
+                            lanes[i].deferred && !lanes[i].busy() && !lanes[i].queue.is_empty()
+                        })
+                        .map(|i| LaneId(i as u32)),
+                );
+                resume_order.sort_unstable_by(|&a, &b| {
+                    let (pa, pb) = (lanes[a.index()].slo.priority, lanes[b.index()].slo.priority);
+                    pb.partial_cmp(&pa).expect("finite priorities").then(a.index().cmp(&b.index()))
                 });
                 // Price future denials against the *next* boundary.
                 next_tick = Some(now + window);
-                for s in order {
+                for &s in &resume_order {
                     try_admit(
-                        s,
+                        s.index(),
                         now,
                         lanes,
                         traces,
@@ -1127,7 +1366,7 @@ fn maybe_migrate<E: PerfEstimator>(
     initial_demands: &[f64],
     cfg: &EngineConfig,
     now: f64,
-    q: &mut EventQueue,
+    q: &mut EngineQueue,
     ledger: &mut Option<BudgetLedger>,
     remaining: &mut usize,
     metrics: &mut EngineMetrics,
@@ -1267,7 +1506,7 @@ pub(crate) fn run_single<E: PerfEstimator>(
     // A sole tenant owns the whole pool for the whole run: there is
     // nothing to re-partition, so the static config skips the tick and
     // expiry machinery (and keeps the legacy-equivalence property exact).
-    let cfg = EngineConfig::static_leases();
+    let cfg = EngineConfig::builder().static_leases().build();
     let mut lanes = vec![Lane::with_ground_truth(coordinator, sys.clone(), 1.0, gt.clone())];
     let traces: [&[Request]; 1] = [trace];
     let _ = run_event_loop(sys, &traces, &mut lanes, &[0.0], &cfg);
@@ -1303,6 +1542,8 @@ impl<'a, E: PerfEstimator> ServingEngine<'a, E> {
         self
     }
 
+    /// Replace the engine configuration (build one with
+    /// [`EngineConfig::builder`]).
     pub fn with_config(mut self, cfg: EngineConfig) -> Self {
         self.cfg = cfg;
         self
@@ -1456,7 +1697,8 @@ mod tests {
                 generate_trace(&[(gcn(150_000_000), 8)], 20.0, 2),
             ),
         ];
-        let mut engine = ServingEngine::new(s, &est).with_config(EngineConfig::static_leases());
+        let mut engine = ServingEngine::new(s, &est)
+            .with_config(EngineConfig::builder().static_leases().build());
         let r = engine.serve(&streams);
         assert_eq!(r.engine.lease_migrations, 0);
         assert_eq!(r.engine.repartitions, 0);
@@ -1527,10 +1769,10 @@ mod tests {
                 generate_trace(&[(gcn(2_000_000), 12)], 20.0, 6),
             ),
         ];
-        let cfg = EngineConfig {
-            perturbations: vec![Perturbation::device_cut(0.05, 2, 1)],
-            ..EngineConfig::static_leases()
-        };
+        let cfg = EngineConfig::builder()
+            .static_leases()
+            .perturbations(vec![Perturbation::device_cut(0.05, 2, 1)])
+            .build();
         let mut engine = ServingEngine::new(s, &est).with_config(cfg);
         let r = engine.serve(&streams);
         assert_eq!(r.total_completed, 24, "a device cut must not lose requests");
@@ -1557,12 +1799,12 @@ mod tests {
             )]
         };
         let base = ServingEngine::new(s.clone(), &est)
-            .with_config(EngineConfig::static_leases())
+            .with_config(EngineConfig::builder().static_leases().build())
             .serve(&mk());
-        let cfg = EngineConfig {
-            perturbations: vec![Perturbation::budget_scale(0.01, 0.5)],
-            ..EngineConfig::static_leases()
-        };
+        let cfg = EngineConfig::builder()
+            .static_leases()
+            .perturbations(vec![Perturbation::budget_scale(0.01, 0.5)])
+            .build();
         let pert = ServingEngine::new(s, &est).with_config(cfg).serve(&mk());
         assert_eq!(pert.engine.perturbations_applied, 1);
         assert_eq!(base.total_completed, pert.total_completed);
@@ -1600,7 +1842,40 @@ mod tests {
         let cfg = EngineConfig::default();
         let pol = cfg.repartition.expect("adaptive by default");
         assert_eq!(pol.migration, MigrationMode::Drain);
+        assert_eq!(cfg.event_queue, QueueKind::Calendar, "calendar queue is the default");
+        assert!(EngineConfig::builder().static_leases().build().repartition.is_none());
+        assert!(EngineConfig::builder().adaptive().build().repartition.is_some());
+    }
+
+    /// The deprecated constructor shims must keep producing exactly what
+    /// their builder spellings produce for the one release they survive.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructor_shims_match_the_builder() {
+        assert!(EngineConfig::adaptive().repartition.is_some());
         assert!(EngineConfig::static_leases().repartition.is_none());
-        assert!(EngineConfig::adaptive().repartition.is_some(), "adaptive() aliases the default");
+        let cfg = EngineConfig::budgeted(EnergyBudget::new(50.0, 1.0));
+        assert_eq!(
+            cfg.energy_budget.as_ref().map(|e| (e.joules_per_window, e.window)),
+            Some((50.0, 1.0)),
+            "budgeted() must attach the budget"
+        );
+        let rec = crate::telemetry::Recorder::timeline();
+        assert!(EngineConfig::default().with_recorder(rec).recorder.is_some());
+    }
+
+    #[test]
+    fn builder_covers_every_knob() {
+        let cfg = EngineConfig::builder()
+            .preemptive(2.0)
+            .migration_drain(0.123)
+            .energy_budget(EnergyBudget::new(10.0, 0.5))
+            .event_queue(QueueKind::Heap)
+            .build();
+        let pol = cfg.repartition.expect("preemptive implies a policy");
+        assert!(matches!(pol.migration, MigrationMode::Preempt { .. }));
+        assert_eq!(cfg.migration_drain, 0.123);
+        assert_eq!(cfg.event_queue, QueueKind::Heap);
+        assert!(cfg.energy_budget.is_some());
     }
 }

@@ -56,8 +56,8 @@ pub enum MigrationMode {
 
 /// Knobs of the online re-partitioning policy. `None` in
 /// [`super::EngineConfig`] disables re-partitioning entirely (static
-/// leases for the whole run — the [`super::EngineConfig::static_leases`]
-/// escape hatch).
+/// leases for the whole run — the
+/// [`super::EngineConfigBuilder::static_leases`] escape hatch).
 #[derive(Debug, Clone)]
 pub struct RepartitionPolicy {
     /// Interval between demand-sampling ticks (s): each tick folds the
@@ -157,7 +157,7 @@ impl DemandTracker {
 
 /// Total-variation distance between two pool-share vectors (each
 /// non-negative, typically summing to ≤ 1): `½·Σ|aᵢ − bᵢ|`, in [0, 1].
-pub fn share_shift(current: &[f64], desired: &[f64]) -> f64 {
+pub(crate) fn share_shift(current: &[f64], desired: &[f64]) -> f64 {
     assert_eq!(current.len(), desired.len());
     0.5 * current.iter().zip(desired).map(|(a, b)| (a - b).abs()).sum::<f64>()
 }

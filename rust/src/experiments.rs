@@ -216,17 +216,16 @@ pub fn run_multi_stream(sys: &SystemSpec, streams: &[StreamSpec]) -> MultiStream
     run_multi_stream_with(sys, streams, EngineConfig::default())
 }
 
-/// [`run_multi_stream`] with the [`EngineConfig::static_leases`] escape
-/// hatch: the initial demand-proportional leases are frozen for the
-/// whole run (the historical PR-1/PR-2 default, kept for A/B runs and
-/// for reproducing the static acceptance numbers).
+/// [`run_multi_stream`] with the static-lease escape hatch: the initial
+/// demand-proportional leases are frozen for the whole run (the
+/// historical PR-1/PR-2 default, kept for A/B runs and for reproducing
+/// the static acceptance numbers).
 pub fn run_multi_stream_static(sys: &SystemSpec, streams: &[StreamSpec]) -> MultiStreamReport {
-    run_multi_stream_with(sys, streams, EngineConfig::static_leases())
+    run_multi_stream_with(sys, streams, EngineConfig::builder().static_leases().build())
 }
 
-/// [`run_multi_stream`] with an explicit engine configuration — e.g.
-/// [`EngineConfig::adaptive`] to let device leases migrate with observed
-/// demand.
+/// [`run_multi_stream`] with an explicit engine configuration — build
+/// one with [`EngineConfig::builder`].
 pub fn run_multi_stream_with(
     sys: &SystemSpec,
     streams: &[StreamSpec],
@@ -278,11 +277,10 @@ pub fn energy_slo_scenario(per_phase: usize, seed: u64) -> Vec<StreamSpec> {
 /// ([`crate::scheduler::PowerTable::pool_power_cap`]) or from a measured
 /// baseline run's average draw (`total_energy / makespan`).
 pub fn energy_slo_config(cap_watts: f64) -> EngineConfig {
-    EngineConfig {
-        repartition: Some(RepartitionPolicy::reactive(2.0)),
-        energy_budget: Some(EnergyBudget::from_power_cap(cap_watts, 0.25)),
-        ..EngineConfig::default()
-    }
+    EngineConfig::builder()
+        .repartition(RepartitionPolicy::reactive(2.0))
+        .energy_budget(EnergyBudget::from_power_cap(cap_watts, 0.25))
+        .build()
 }
 
 /// The canonical **deadline** serving scenario (DESIGN.md §Energy &
@@ -318,10 +316,7 @@ pub fn deadline_scenario(per_phase: usize, seed: u64) -> Vec<StreamSpec> {
 /// [`EnergyBudget`] to see infeasible requests shed instead of
 /// budget-deferred.
 pub fn deadline_config() -> EngineConfig {
-    EngineConfig {
-        repartition: Some(RepartitionPolicy::preemptive(1.0)),
-        ..EngineConfig::default()
-    }
+    EngineConfig::builder().preemptive(1.0).build()
 }
 
 /// Reference workload for static-plan tuning: same model family on the

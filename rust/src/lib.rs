@@ -105,20 +105,50 @@ pub mod workload;
 /// assert!(report.fairness > 0.0);
 /// assert!(report.engine.time_sliced_streams >= 1);
 /// ```
+///
+/// Configuring the engine through the builder — policies, budgets, the
+/// recorder, and the event-queue implementation are knobs on one fluent
+/// surface, and both queue implementations serve bit-identically:
+///
+/// ```
+/// use dype::prelude::*;
+///
+/// let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+/// let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+/// let est = OracleModels { gt: &gt };
+/// let wl = gnn::gcn_workload(&Dataset::synthetic2(), 2, 128);
+/// let streams = vec![StreamSpec::new(
+///     "lane",
+///     Objective::Performance,
+///     generate_trace(&[(wl, 6)], 10.0, 7),
+/// )];
+/// let cfg = EngineConfig::builder()
+///     .preemptive(1.0)
+///     .energy_budget(EnergyBudget::new(1e12, 0.5))
+///     .event_queue(QueueKind::Heap)
+///     .build();
+/// let heap = ServingEngine::new(sys.clone(), &est).with_config(cfg.clone()).serve(&streams);
+/// let cal_cfg = EngineConfig { event_queue: QueueKind::Calendar, ..cfg };
+/// let calendar = ServingEngine::new(sys, &est).with_config(cal_cfg).serve(&streams);
+/// assert_eq!(heap.total_completed, calendar.total_completed);
+/// assert_eq!(heap.makespan, calendar.makespan);
+/// ```
 pub mod prelude {
     pub use crate::config::{Interconnect, Objective, SystemSpec};
     pub use crate::coordinator::{
-        generate_trace, Coordinator, MultiStreamServer, Server, StreamSpec,
+        generate_trace, Coordinator, MultiStreamReport, MultiStreamServer, ServeReport, Server,
+        StreamSpec,
     };
     pub use crate::devices::{DeviceType, GroundTruth};
     pub use crate::engine::{
-        EnergyBudget, EngineConfig, MigrationMode, RepartitionPolicy, ServingEngine, SloController,
-        StreamSlo,
+        EnergyBudget, EngineConfig, EngineConfigBuilder, MigrationMode, QueueKind,
+        RepartitionPolicy, ServingEngine, SloController, StreamSlo,
     };
     pub use crate::perfmodel::{calibrate, ModelRegistry, OracleModels};
     pub use crate::pipeline::sim::PipelineSim;
     pub use crate::scenario::sweep::{Policy, SweepReport};
     pub use crate::scenario::{Arrival, ScenarioManifest};
     pub use crate::scheduler::{baselines, CacheStats, DpScheduler, Schedule, ScheduleCache, Stage};
+    pub use crate::telemetry::{Recorder, Snapshot, TraceRecorder};
     pub use crate::workload::{gnn, transformer, Dataset, KernelDesc, KernelKind, Workload};
 }

@@ -12,8 +12,15 @@
 //!   recorder and writes a Perfetto `trace_events` JSON.
 //! * `trace-validate` — strict-parse a trace file and run the exporter's
 //!   structural validator over it.
+//! * `bench-report` — render the tracked perf baseline
+//!   (`BENCH_serving.json`) and, given a fresh medians capture, the
+//!   per-bench deltas the CI bench gate reasons about.
 //! * `serve`     — end-to-end real execution: stream inferences through a
 //!   scheduled pipeline running AOT artifacts via PJRT.
+//!
+//! File-handling flags are uniform across subcommands: `--manifest` for
+//! scenario inputs, `--trace` for trace files, `--out` for written
+//! outputs. Every subcommand answers `--help` with its own usage.
 //!
 //! (Argument parsing is hand-rolled: the offline build has no clap.)
 
@@ -38,13 +45,71 @@ USAGE:
   dype pareto    [--workload W] [--interconnect I]
   dype calibrate [--interconnect I]
   dype sweep     [--interconnect I] [--objective O]
-  dype scenario-sweep [--manifest FILE.json] [--trace OUT.json]
-  dype trace-validate FILE.json
+  dype scenario-sweep [--manifest FILE.json] [--out TRACE.json]
+  dype trace-validate [--trace] FILE.json
+  dype bench-report   [--baseline FILE.json] [--fresh FILE.json]
   dype serve     [--inferences N] [--artifact-dir DIR]
 
   W: gcn-<DS> | gin-<DS> (DS in S1..S4, OA, OP) | transf-<seq>-<win>
   I: pcie4 | pcie5 | cxl3          O: perf | balanced | energy
+
+  `dype <subcommand> --help` prints that subcommand's own usage.
 ";
+
+/// Per-subcommand usage blurbs (`dype <subcommand> --help`).
+fn sub_usage(cmd: &str) -> Option<&'static str> {
+    Some(match cmd {
+        "schedule" => {
+            "dype schedule — run Algorithm 1 for one workload, print the pipeline\n\n\
+             USAGE:\n  dype schedule [--workload W] [--interconnect I] [--objective O]\n\
+             \x20               [--fpgas N] [--gpus N] [--oracle]\n\n\
+             \x20 --workload W      gcn-<DS> | gin-<DS> (DS in S1..S4, OA, OP) |\n\
+             \x20                   transf-<seq>-<win>        [default: gcn-OA]\n\
+             \x20 --interconnect I  pcie4 | pcie5 | cxl3      [default: pcie4]\n\
+             \x20 --objective O     perf | balanced | energy  [default: perf]\n\
+             \x20 --fpgas/--gpus N  installed device counts   [default: 3F 2G]\n\
+             \x20 --oracle          use ground-truth models, not calibrated fits\n"
+        }
+        "pareto" => {
+            "dype pareto — dump the Pareto front of the design space\n\n\
+             USAGE:\n  dype pareto [--workload W] [--interconnect I]\n"
+        }
+        "calibrate" => {
+            "dype calibrate — train the performance models, print fit quality\n\n\
+             USAGE:\n  dype calibrate [--interconnect I]\n"
+        }
+        "sweep" => {
+            "dype sweep — DYPE vs baselines across the paper's GNN workloads\n\n\
+             USAGE:\n  dype sweep [--interconnect I] [--objective O]\n"
+        }
+        "scenario-sweep" => {
+            "dype scenario-sweep — serving zoo x policy grid, Pareto-annotated\n\n\
+             USAGE:\n  dype scenario-sweep [--manifest FILE.json] [--out TRACE.json]\n\n\
+             \x20 --manifest FILE  run one manifest from disk instead of the zoo\n\
+             \x20 --out TRACE      re-run the first scenario's winner with a\n\
+             \x20                  recorder, write the Perfetto trace here\n\
+             \x20                  (--trace is a back-compat alias)\n"
+        }
+        "trace-validate" => {
+            "dype trace-validate — strict-parse + structurally validate a trace\n\n\
+             USAGE:\n  dype trace-validate [--trace] FILE.json\n\n\
+             Exits nonzero on any parse or validation error.\n"
+        }
+        "bench-report" => {
+            "dype bench-report — tracked perf baseline, with optional deltas\n\n\
+             USAGE:\n  dype bench-report [--baseline FILE.json] [--fresh FILE.json]\n\n\
+             \x20 --baseline FILE  tracked medians  [default: BENCH_serving.json]\n\
+             \x20 --fresh FILE     fresh medians (the CI artifact, or a raw\n\
+             \x20                  DYPE_BENCH_JSON JSONL capture); adds the\n\
+             \x20                  per-bench delta column the CI gate checks\n"
+        }
+        "serve" => {
+            "dype serve — stream real inferences through a scheduled pipeline\n\n\
+             USAGE:\n  dype serve [--inferences N] [--artifact-dir DIR]\n"
+        }
+        _ => return None,
+    })
+}
 
 /// Tiny argument scanner: `--key value` pairs plus boolean flags.
 struct Args {
@@ -162,10 +227,21 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
+    if argv[1..].iter().any(|a| a == "--help" || a == "-h") {
+        print!("{}", sub_usage(cmd).unwrap_or(USAGE));
+        return Ok(());
+    }
     if cmd == "trace-validate" {
-        // Positional file argument; bypasses the --key scanner.
-        let Some(path) = argv.get(1) else { bail!("trace-validate needs a file\n\n{USAGE}") };
-        return trace_validate(path);
+        // `--trace FILE` is the unified spelling; a bare positional path
+        // is kept for back-compat with the original CLI.
+        let path = match argv.get(1) {
+            Some(p) if !p.starts_with("--") => p.clone(),
+            _ => match Args::parse(&argv[1..])?.kv.get("trace") {
+                Some(p) => p.clone(),
+                None => bail!("trace-validate needs a file (positional or --trace)\n\n{USAGE}"),
+            },
+        };
+        return trace_validate(&path);
     }
     let args = Args::parse(&argv[1..])?;
     let ic = Interconnect::parse(args.get("interconnect", "pcie4"))?;
@@ -218,9 +294,15 @@ fn main() -> Result<()> {
             sweep(ic, obj)?;
         }
         "scenario-sweep" => {
-            scenario_sweep(
-                args.kv.get("manifest").map(String::as_str),
-                args.kv.get("trace").map(String::as_str),
+            // `--out` is the unified output flag; `--trace` stays as a
+            // back-compat alias from when the trace was the only output.
+            let out = args.kv.get("out").or_else(|| args.kv.get("trace"));
+            scenario_sweep(args.kv.get("manifest").map(String::as_str), out.map(String::as_str))?;
+        }
+        "bench-report" => {
+            bench_report(
+                args.get("baseline", "BENCH_serving.json"),
+                args.kv.get("fresh").map(String::as_str),
             )?;
         }
         "serve" => {
@@ -312,7 +394,8 @@ fn write_winner_trace(
     use dype::telemetry::{export, Recorder};
     let built = m.build()?;
     let rec = Recorder::timeline();
-    let cfg = built.apply(policy.engine_config()).with_recorder(rec.clone());
+    let mut cfg = built.apply(policy.engine_config());
+    cfg.recorder = Some(rec.clone());
     dype::experiments::run_multi_stream_with(&built.system, &built.streams, cfg);
     let names: Vec<String> = built.streams.iter().map(|s| s.name.clone()).collect();
     let records = rec.drain();
@@ -340,6 +423,70 @@ fn trace_validate(path: &str) -> Result<()> {
     let events = doc.get("traceEvents").and_then(|v| v.as_arr()).map_or(0, |a| a.len());
     println!("{path}: valid Perfetto trace ({events} events)");
     Ok(())
+}
+
+/// Render the tracked perf baseline and, given a fresh medians file, the
+/// per-bench deltas the CI bench-smoke gate reasons about.
+fn bench_report(baseline: &str, fresh: Option<&str>) -> Result<()> {
+    use dype::util::bench::fmt_time;
+    let base = read_medians(baseline)?;
+    let fresh_rows = fresh.map(read_medians).transpose()?;
+    match fresh_rows {
+        None => {
+            let mut t = Table::new(&["bench", "median"]);
+            for (name, ns) in &base {
+                t.row(vec![name.clone(), fmt_time(ns * 1e-9)]);
+            }
+            print!("{}", t.render());
+        }
+        Some(rows) => {
+            let mut t = Table::new(&["bench", "baseline", "fresh", "delta"]);
+            for (name, ns) in &rows {
+                t.row(match base.iter().find(|(b, _)| b == name) {
+                    Some((_, b)) => vec![
+                        name.clone(),
+                        fmt_time(b * 1e-9),
+                        fmt_time(ns * 1e-9),
+                        format!("{:+.1}%", (ns / b - 1.0) * 100.0),
+                    ],
+                    None => vec![name.clone(), "-".into(), fmt_time(ns * 1e-9), "new".into()],
+                });
+            }
+            print!("{}", t.render());
+        }
+    }
+    Ok(())
+}
+
+/// Parse a bench-medians file: either the tracked JSON array
+/// (`[{"bench": ..., "median_ns": ...}, ...]`) or the raw JSONL capture
+/// a bench run appends via `DYPE_BENCH_JSON` (one object per line).
+fn read_medians(path: &str) -> Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read '{path}': {e}"))?;
+    let row = |v: &dype::util::json::Json| -> Result<(String, f64)> {
+        let name = v.get("bench").and_then(|n| n.as_str());
+        let ns = v.get("median_ns").and_then(|n| n.as_f64());
+        match (name, ns) {
+            (Some(n), Some(m)) => Ok((n.to_string(), m)),
+            _ => bail!("'{path}': every row needs \"bench\" and \"median_ns\""),
+        }
+    };
+    let mut out = Vec::new();
+    if let Ok(doc) = dype::util::json::parse(&text) {
+        let arr = doc.as_arr().ok_or_else(|| anyhow::anyhow!("'{path}': expected a JSON array"))?;
+        for v in arr {
+            out.push(row(v)?);
+        }
+        return Ok(out);
+    }
+    // Not a single JSON document — try one object per non-empty line.
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let v = dype::util::json::parse(line)
+            .map_err(|e| anyhow::anyhow!("'{path}' is neither JSON nor JSONL: {e}"))?;
+        out.push(row(&v)?);
+    }
+    Ok(out)
 }
 
 /// End-to-end real execution of the demo GCN through a scheduled pipeline.

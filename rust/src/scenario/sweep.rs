@@ -17,7 +17,7 @@ use anyhow::Result;
 
 use super::{catalog, ScenarioManifest};
 use crate::coordinator::MultiStreamReport;
-use crate::engine::{EngineConfig, RepartitionPolicy};
+use crate::engine::EngineConfig;
 use crate::experiments::run_multi_stream_with;
 use crate::metrics::{self, Table};
 use crate::telemetry::{Recorder, Snapshot};
@@ -25,8 +25,9 @@ use crate::telemetry::{Recorder, Snapshot};
 /// The serving policies the grid crosses every scenario with.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
-    /// Frozen demand-proportional leases ([`EngineConfig::static_leases`])
-    /// — the baseline the adaptive policies must beat.
+    /// Frozen demand-proportional leases
+    /// ([`crate::engine::EngineConfigBuilder::static_leases`]) — the
+    /// baseline the adaptive policies must beat.
     Static,
     /// The engine default: online re-partitioning, drain-mode handoffs.
     AdaptiveDrain,
@@ -57,16 +58,10 @@ impl Policy {
 
     pub fn engine_config(&self) -> EngineConfig {
         match self {
-            Policy::Static => EngineConfig::static_leases(),
+            Policy::Static => EngineConfig::builder().static_leases().build(),
             Policy::AdaptiveDrain => EngineConfig::default(),
-            Policy::AdaptivePreempt => EngineConfig {
-                repartition: Some(RepartitionPolicy::preemptive(2.0)),
-                ..EngineConfig::default()
-            },
-            Policy::Deadline => EngineConfig {
-                repartition: Some(RepartitionPolicy::preemptive(1.0)),
-                ..EngineConfig::default()
-            },
+            Policy::AdaptivePreempt => EngineConfig::builder().preemptive(2.0).build(),
+            Policy::Deadline => EngineConfig::builder().preemptive(1.0).build(),
         }
     }
 }
@@ -170,7 +165,7 @@ pub fn run_cell(m: &ScenarioManifest, policy: Policy) -> Result<SweepCell> {
     let mut cfg = built.apply(policy.engine_config());
     let recorder = built.telemetry.then(Recorder::timeline);
     if let Some(rec) = &recorder {
-        cfg = cfg.with_recorder(rec.clone());
+        cfg.recorder = Some(rec.clone());
     }
     let report = run_multi_stream_with(&built.system, &built.streams, cfg);
     let mut cell = SweepCell::from_report(&m.name, policy, offered, &report);

@@ -53,7 +53,11 @@ use super::pipeline_def::StagePlan;
 
 /// A schedule-cache key: system fingerprint × objective × the quantized
 /// per-kernel characteristic buckets, in chain order.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+///
+/// `Default` produces an empty key (no kernels) that matches nothing the
+/// cache would ever store — it exists so hot-path callers can hold a
+/// reusable key and refill it in place with [`CacheKey::assign`].
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash)]
 pub struct CacheKey {
     sys_fp: u64,
     obj_fp: u64,
@@ -64,11 +68,18 @@ impl CacheKey {
     /// Build the key for scheduling `wl` under `objective` on the system
     /// identified by `sys_fp` (see [`system_fingerprint`]).
     pub fn new(sys_fp: u64, wl: &Workload, objective: Objective) -> CacheKey {
-        CacheKey {
-            sys_fp,
-            obj_fp: objective_fingerprint(objective),
-            kernels: wl.kernels.iter().map(|k| kernel_bucket(&k.kind)).collect(),
-        }
+        let mut key = CacheKey::default();
+        key.assign(sys_fp, wl, objective);
+        key
+    }
+
+    /// Refill `self` in place as [`CacheKey::new`] would build it,
+    /// reusing the kernel-bucket vector's capacity.
+    pub(crate) fn assign(&mut self, sys_fp: u64, wl: &Workload, objective: Objective) {
+        self.sys_fp = sys_fp;
+        self.obj_fp = objective_fingerprint(objective);
+        self.kernels.clear();
+        self.kernels.extend(wl.kernels.iter().map(|k| kernel_bucket(&k.kind)));
     }
 }
 
@@ -316,18 +327,30 @@ impl ScheduleCache {
 
     /// Look up the plan for `key`, counting a hit or miss.
     pub fn lookup(&mut self, key: &CacheKey) -> Option<Vec<StagePlan>> {
-        let hit = self.entries.get(key).cloned();
-        match hit {
+        let mut out = Vec::new();
+        self.lookup_into(key, &mut out).then_some(out)
+    }
+
+    /// [`ScheduleCache::lookup`] into caller-owned storage: on a hit,
+    /// `out` is cleared and refilled with the cached plan and `true` is
+    /// returned; on a miss `out` is left untouched. Stats and recency
+    /// update exactly as `lookup` does. The engine's dispatch path uses
+    /// this so steady-state cache hits copy into a reusable buffer
+    /// instead of cloning a fresh `Vec` per admission.
+    pub fn lookup_into(&mut self, key: &CacheKey, out: &mut Vec<StagePlan>) -> bool {
+        match self.entries.get(key) {
             Some(plan) => {
-                self.stats.hits += 1;
-                self.touch(key);
-                Some(plan)
+                out.clear();
+                out.extend_from_slice(plan);
             }
             None => {
                 self.stats.misses += 1;
-                None
+                return false;
             }
         }
+        self.stats.hits += 1;
+        self.touch(key);
+        true
     }
 
     /// Memoize a freshly-computed plan, evicting the least-recently-used

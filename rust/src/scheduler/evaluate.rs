@@ -7,10 +7,19 @@
 
 use crate::devices::{CommModel, Endpoint};
 use crate::perfmodel::PerfEstimator;
-use crate::workload::Workload;
+use crate::workload::{KernelKind, Workload};
 
 use super::energy::{stage_activity_energy, PowerTable};
 use super::pipeline_def::{Schedule, Stage, StagePlan};
+
+/// Scratch buffers for [`evaluate_plan_into`]: the per-stage kind and
+/// kernel-time vectors, which hold their capacity across calls so
+/// steady-state re-timing allocates nothing.
+#[derive(Debug, Default)]
+pub struct EvalScratch {
+    kinds: Vec<KernelKind>,
+    kernel_times: Vec<(KernelKind, f64)>,
+}
 
 /// Build a fully-timed [`Schedule`] for `plan` over `wl`, with execution
 /// times from `est` and transfers from `comm`.
@@ -21,14 +30,38 @@ pub fn evaluate_plan<E: PerfEstimator>(
     comm: &CommModel,
     power: &PowerTable,
 ) -> Schedule {
+    let mut scratch = EvalScratch::default();
+    let mut out = Schedule::default();
+    evaluate_plan_into(wl, plan, est, comm, power, &mut scratch, &mut out);
+    out
+}
+
+/// [`evaluate_plan`] into caller-owned storage: `out` is cleared and
+/// refilled in place (its stage vector and workload-name string keep
+/// their capacity) and the per-stage buffers live in `scratch`, so a
+/// caller that re-times schedules repeatedly — the serving engine's
+/// dispatch path does, once per admitted batch — allocates nothing at
+/// steady state.
+pub fn evaluate_plan_into<E: PerfEstimator>(
+    wl: &Workload,
+    plan: &[StagePlan],
+    est: &E,
+    comm: &CommModel,
+    power: &PowerTable,
+    scratch: &mut EvalScratch,
+    out: &mut Schedule,
+) {
     assert!(!plan.is_empty(), "empty plan");
     assert_eq!(plan[0].first, 0, "plan must start at kernel 0");
     assert_eq!(plan.last().unwrap().last + 1, wl.len(), "plan must cover the workload");
 
-    let mut stages: Vec<Stage> = Vec::with_capacity(plan.len());
+    out.workload.clear();
+    out.workload.push_str(&wl.name);
+    out.stages.clear();
     for (idx, p) in plan.iter().enumerate() {
-        let kinds: Vec<_> = wl.kernels[p.first..=p.last].iter().map(|k| k.kind).collect();
-        let exec = est.stage_time(&kinds, p.dev, p.n);
+        scratch.kinds.clear();
+        scratch.kinds.extend(wl.kernels[p.first..=p.last].iter().map(|k| k.kind));
+        let exec = est.stage_time(&scratch.kinds, p.dev, p.n);
         let bytes = wl.transfer_bytes_into(p.first);
         let src = if idx == 0 {
             Endpoint::Host
@@ -38,9 +71,9 @@ pub fn evaluate_plan<E: PerfEstimator>(
         };
         let t_comm = comm.transfer_time(bytes, src, Endpoint::Devices(p.dev, p.n));
         if idx > 0 {
-            stages[idx - 1].comm_out_time = t_comm;
+            out.stages[idx - 1].comm_out_time = t_comm;
         }
-        stages.push(Stage {
+        out.stages.push(Stage {
             first: p.first,
             last: p.last,
             dev: p.dev,
@@ -51,29 +84,29 @@ pub fn evaluate_plan<E: PerfEstimator>(
         });
     }
 
-    let period = stages.iter().map(Stage::total_time).fold(0.0f64, f64::max);
+    out.period = out.stages.iter().map(Stage::total_time).fold(0.0f64, f64::max);
 
     // Energy account (see `energy.rs`).
     let mut activity = 0.0;
     let mut static_weight = 0.0;
-    for s in &stages {
-        let kernel_times: Vec<_> = wl.kernels[s.first..=s.last]
-            .iter()
-            .map(|k| (k.kind, est.stage_time(std::slice::from_ref(&k.kind), s.dev, s.n)))
-            .collect();
+    for s in &out.stages {
+        scratch.kernel_times.clear();
+        scratch.kernel_times.extend(
+            wl.kernels[s.first..=s.last]
+                .iter()
+                .map(|k| (k.kind, est.stage_time(std::slice::from_ref(&k.kind), s.dev, s.n))),
+        );
         activity += stage_activity_energy(
             power,
             s.dev,
             s.n,
-            &kernel_times,
+            &scratch.kernel_times,
             s.comm_in_time,
             s.comm_out_time,
         );
         static_weight += s.n as f64 * power.static_power(s.dev);
     }
-    let energy_per_inf = activity + static_weight * period;
-
-    Schedule { workload: wl.name.clone(), stages, period, energy_per_inf }
+    out.energy_per_inf = activity + static_weight * out.period;
 }
 
 #[cfg(test)]

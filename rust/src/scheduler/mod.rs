@@ -16,7 +16,7 @@ pub use cache::{
 };
 pub use dp::{DpScheduler, DpTables, FinalState, TableKind};
 pub use energy::PowerTable;
-pub use evaluate::evaluate_plan;
+pub use evaluate::{evaluate_plan, evaluate_plan_into, EvalScratch};
 pub use oracle::ExhaustiveScheduler;
 pub use pareto::{pareto_front, ParetoPoint};
 pub use pipeline_def::{Schedule, Stage, StagePlan};

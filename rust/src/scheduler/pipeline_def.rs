@@ -48,7 +48,13 @@ pub struct StagePlan {
 }
 
 /// A complete schedule for a workload on a system.
-#[derive(Debug, Clone)]
+///
+/// Derives `Default` (an empty, zero-period schedule) so re-timing
+/// sinks like [`super::evaluate::evaluate_plan_into`] can be
+/// constructed once and refilled in place — an empty `Schedule` is
+/// never a *valid* schedule (see [`Schedule::validate`]), just a
+/// buffer awaiting its first fill.
+#[derive(Debug, Clone, Default)]
 pub struct Schedule {
     pub workload: String,
     pub stages: Vec<Stage>,
@@ -94,10 +100,19 @@ impl Schedule {
 
     /// Freeze the structure (drop timings) for re-evaluation elsewhere.
     pub fn plan(&self) -> Vec<StagePlan> {
-        self.stages
-            .iter()
-            .map(|s| StagePlan { first: s.first, last: s.last, dev: s.dev, n: s.n })
-            .collect()
+        let mut out = Vec::with_capacity(self.stages.len());
+        self.plan_into(&mut out);
+        out
+    }
+
+    /// [`Schedule::plan`] into caller-owned storage (`out` is cleared
+    /// first), reusing its capacity — the serving hot path freezes the
+    /// installed structure once per batch through this.
+    pub fn plan_into(&self, out: &mut Vec<StagePlan>) {
+        out.clear();
+        for s in &self.stages {
+            out.push(StagePlan { first: s.first, last: s.last, dev: s.dev, n: s.n });
+        }
     }
 
     /// The paper's schedule notation: `3F2G` = 3 FPGAs then 2 GPUs;

@@ -15,7 +15,7 @@
 //!   shed a request, which hysteresis delta triggered a repartition, how
 //!   much a preemption refunded). Records flow through a
 //!   [`TraceRecorder`] attached via
-//!   [`crate::engine::EngineConfig::with_recorder`]; [`export`] turns
+//!   [`crate::engine::EngineConfigBuilder::recorder`]; [`export`] turns
 //!   the collected timeline into Chrome/Perfetto `trace_events` JSON
 //!   (one track per stream, per device-lease, and a budget-window
 //!   track) or a compact JSONL for programmatic diffing.

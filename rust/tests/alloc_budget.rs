@@ -1,0 +1,66 @@
+//! Allocation budget for the engine's hot path, measured with the
+//! `telemetry-alloc` counting allocator (this test only builds when the
+//! feature is on — see `required-features` in Cargo.toml).
+//!
+//! The zero-allocation rewrite's contract is *differential*: growing
+//! the offered load must not grow the allocation count with it, because
+//! steady-state pops, admissions, and completions all run on slab and
+//! scratch storage. Per-run constants (lane setup, first-touch Vec
+//! growth, cold schedule-cache misses) are allowed — they are identical
+//! across run sizes and cancel in the subtraction.
+//!
+//! Run single-threaded (`--test-threads=1`, as CI does): the counter is
+//! process-global, so a concurrent test's allocations would leak into
+//! the sampled window.
+
+use dype::prelude::*;
+
+/// Serve `n` requests per stream under the adaptive default on the
+/// given queue; return the engine-loop allocation count and the events
+/// processed (both sampled by the engine itself, so report assembly
+/// outside the loop does not pollute the window).
+fn engine_allocs(n: usize, queue: QueueKind) -> (u64, u64) {
+    let sys = SystemSpec::paper_testbed(Interconnect::Pcie4);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+    let wl = gnn::gcn_workload(&Dataset::synthetic2(), 2, 128);
+    let streams = vec![
+        StreamSpec::new("a", Objective::Performance, generate_trace(&[(wl.clone(), n)], 25.0, 3)),
+        StreamSpec::new("b", Objective::Performance, generate_trace(&[(wl, n)], 25.0, 4)),
+    ];
+    let cfg = EngineConfig::builder().event_queue(queue).build();
+    let report = ServingEngine::new(sys, &est).with_config(cfg).serve(&streams);
+    assert_eq!(report.total_completed, 2 * n, "no deadline lanes, so every request completes");
+    (report.engine.telemetry.allocations, report.engine.events_processed)
+}
+
+#[test]
+fn counting_allocator_is_live() {
+    let before = dype::telemetry::alloc::allocations();
+    // black_box keeps the optimizer from eliding the heap allocation.
+    let v = std::hint::black_box(vec![0u64; 1024]);
+    assert!(dype::telemetry::alloc::allocations() > before, "telemetry-alloc hook not installed");
+    drop(v);
+}
+
+/// Tripling the offered load must cost (almost) no extra allocations
+/// per extra event, on both queue implementations. The 0.5 ceiling is
+/// deliberately loose against amortized growth (completion logs double,
+/// calendar buckets resize) while still an order of magnitude below the
+/// several-allocations-per-event behavior of the pre-slab engine.
+#[test]
+fn steady_state_allocations_per_event_stay_near_zero() {
+    for queue in [QueueKind::Calendar, QueueKind::Heap] {
+        let (small_allocs, small_events) = engine_allocs(150, queue);
+        let (big_allocs, big_events) = engine_allocs(450, queue);
+        assert!(big_events > small_events, "{queue:?}: larger run must pop more events");
+        let extra_allocs = big_allocs.saturating_sub(small_allocs);
+        let extra_events = big_events - small_events;
+        let per_event = extra_allocs as f64 / extra_events as f64;
+        assert!(
+            per_event < 0.5,
+            "{queue:?}: {extra_allocs} extra allocations over {extra_events} extra events \
+             ({per_event:.3}/event) — the hot path is allocating again"
+        );
+    }
+}

@@ -500,7 +500,7 @@ fn infeasible_deadline_requests_shed_instead_of_budget_deferring() {
         StreamSpec::new("ddl", Objective::Performance, ddl_trace)
             .with_slo(StreamSlo::best_effort(1.0).with_deadline(0.020)),
     ];
-    let cfg = EngineConfig::budgeted(EnergyBudget::new(0.0, 0.5));
+    let cfg = EngineConfig::builder().energy_budget(EnergyBudget::new(0.0, 0.5)).build();
     let r = run_multi_stream_with(&s, &streams, cfg);
 
     let hi = &r.streams[0].report;
@@ -651,7 +651,7 @@ fn generous_budget_and_uniform_slos_change_nothing() {
     let s = sys();
     let streams = multi_stream_scenario(2, 4, 9);
     let base = run_multi_stream(&s, &streams);
-    let cfg = EngineConfig::budgeted(EnergyBudget::new(1e12, 0.5));
+    let cfg = EngineConfig::builder().energy_budget(EnergyBudget::new(1e12, 0.5)).build();
     let budgeted = run_multi_stream_with(&s, &streams, cfg);
 
     assert_eq!(budgeted.total_completed, base.total_completed);
@@ -697,7 +697,7 @@ fn zero_budget_window_defers_everything_below_top_priority() {
         StreamSpec::new("hi", Objective::Performance, hi_trace)
             .with_slo(StreamSlo::best_effort(2.0)),
     ];
-    let cfg = EngineConfig::budgeted(EnergyBudget::new(0.0, 0.05));
+    let cfg = EngineConfig::builder().energy_budget(EnergyBudget::new(0.0, 0.05)).build();
     let r = run_multi_stream_with(&s, &streams, cfg);
 
     assert_eq!(r.total_completed, 20, "deferral must not starve anyone forever");

@@ -1,0 +1,141 @@
+//! Golden check on the crate's curated public surface.
+//!
+//! [`dype::prelude`] is the stable API: examples, benches, and
+//! downstream users import it wholesale, so its contents are a contract
+//! — growing or shrinking it is an API decision, not a side effect of a
+//! refactor. Two halves enforce that:
+//!
+//! * the explicit import below is the *compile-time* half — a removed
+//!   or renamed re-export fails to resolve;
+//! * [`prelude_matches_the_golden_surface`] is the *textual* half — it
+//!   parses the prelude block out of `lib.rs` and diffs the re-exported
+//!   names against [`GOLDEN_PRELUDE`], so silent additions fail too.
+//!
+//! To change the surface deliberately: edit the prelude, update the
+//! golden list here, and note the change in DESIGN.md.
+
+// The compile-time half: every golden name must resolve through the
+// prelude. Kept exhaustive on purpose — the smoke test below only
+// exercises a handful of them.
+#[allow(unused_imports)]
+use dype::prelude::{
+    baselines, calibrate, generate_trace, gnn, transformer, Arrival, CacheStats, Coordinator,
+    Dataset, DeviceType, DpScheduler, EnergyBudget, EngineConfig, EngineConfigBuilder, GroundTruth,
+    Interconnect, KernelDesc, KernelKind, MigrationMode, ModelRegistry, MultiStreamReport,
+    MultiStreamServer, Objective, OracleModels, PipelineSim, Policy, QueueKind, Recorder,
+    RepartitionPolicy, ScenarioManifest, Schedule, ScheduleCache, ServeReport, Server,
+    ServingEngine, SloController, Snapshot, Stage, StreamSlo, StreamSpec, SweepReport, SystemSpec,
+    TraceRecorder, Workload,
+};
+
+/// Every name `dype::prelude` re-exports. Order here is cosmetic (the
+/// test sorts both sides); completeness is what is golden.
+const GOLDEN_PRELUDE: &[&str] = &[
+    "Arrival",
+    "CacheStats",
+    "Coordinator",
+    "Dataset",
+    "DeviceType",
+    "DpScheduler",
+    "EnergyBudget",
+    "EngineConfig",
+    "EngineConfigBuilder",
+    "GroundTruth",
+    "Interconnect",
+    "KernelDesc",
+    "KernelKind",
+    "MigrationMode",
+    "ModelRegistry",
+    "MultiStreamReport",
+    "MultiStreamServer",
+    "Objective",
+    "OracleModels",
+    "PipelineSim",
+    "Policy",
+    "QueueKind",
+    "Recorder",
+    "RepartitionPolicy",
+    "ScenarioManifest",
+    "Schedule",
+    "ScheduleCache",
+    "ServeReport",
+    "Server",
+    "ServingEngine",
+    "SloController",
+    "Snapshot",
+    "Stage",
+    "StreamSlo",
+    "StreamSpec",
+    "SweepReport",
+    "SystemSpec",
+    "TraceRecorder",
+    "Workload",
+    "baselines",
+    "calibrate",
+    "generate_trace",
+    "gnn",
+    "transformer",
+];
+
+/// Pull the re-exported names out of the `pub mod prelude { ... }`
+/// block in `lib.rs`: each `pub use` statement contributes either its
+/// brace-list members or its final path segment.
+fn prelude_names() -> Vec<String> {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/src/lib.rs");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    let start = text.find("pub mod prelude {").expect("lib.rs declares pub mod prelude");
+    let mut names = Vec::new();
+    for stmt in text[start..].split("pub use ").skip(1) {
+        let stmt = stmt.split(';').next().expect("use statement is terminated");
+        match stmt.find('{') {
+            Some(open) => {
+                let close = stmt.rfind('}').expect("use list is closed");
+                for n in stmt[open + 1..close].split(',') {
+                    let n = n.trim();
+                    if !n.is_empty() {
+                        names.push(n.to_string());
+                    }
+                }
+            }
+            None => names.push(stmt.trim().rsplit("::").next().expect("path").to_string()),
+        }
+    }
+    names
+}
+
+#[test]
+fn prelude_matches_the_golden_surface() {
+    let mut actual = prelude_names();
+    actual.sort();
+    let mut golden = GOLDEN_PRELUDE.to_vec();
+    golden.sort_unstable();
+    assert_eq!(
+        actual,
+        golden,
+        "prelude re-exports drifted from the golden list; \
+         update GOLDEN_PRELUDE (and DESIGN.md) if the change is deliberate"
+    );
+}
+
+#[test]
+fn golden_list_is_duplicate_free() {
+    let mut sorted = GOLDEN_PRELUDE.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), GOLDEN_PRELUDE.len(), "duplicate entries in GOLDEN_PRELUDE");
+}
+
+/// The prelude alone is enough to drive the serving stack end to end —
+/// the import ergonomics the curation exists to protect.
+#[test]
+fn prelude_smoke_drives_the_serving_stack() {
+    let sys = SystemSpec::reduced_testbed(Interconnect::Pcie4);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+    let wl = gnn::gcn_workload(&Dataset::synthetic2(), 2, 128);
+    let trace = generate_trace(&[(wl, 3)], 6.0, 5);
+    let streams = vec![StreamSpec::new("s0", Objective::Performance, trace)];
+    let cfg = EngineConfig::builder().event_queue(QueueKind::Heap).build();
+    let report = ServingEngine::new(sys, &est).with_config(cfg).serve(&streams);
+    assert_eq!(report.total_completed, 3);
+}

@@ -1,0 +1,115 @@
+//! Differential property test: the two event-queue implementations
+//! ([`QueueKind::Heap`] and [`QueueKind::Calendar`]) must be
+//! observationally indistinguishable. The engine's determinism contract
+//! is keyed on `(time, seq)` pop order, not on which queue structure
+//! delivered it — so every serving outcome, engine counter, telemetry
+//! snapshot, and trace record has to match **bit-for-bit** across
+//! queues on every scenario × policy cell.
+//!
+//! A seeded subset of the zoo runs on every `cargo test`; the full
+//! catalog × [`Policy::ALL`] grid rides `#[ignore]` and is exercised by
+//! CI's sweep-smoke job with `--include-ignored`.
+
+use dype::coordinator::MultiStreamReport;
+use dype::engine::{EngineConfig, EngineMetrics, EventKind, QueueKind};
+use dype::experiments::run_multi_stream_with;
+use dype::scenario::sweep::Policy;
+use dype::scenario::{catalog, ScenarioManifest};
+use dype::telemetry::{Record, Recorder};
+
+/// Run one scenario × policy cell on the given queue, with a timeline
+/// recorder attached so the full trace participates in the comparison.
+fn run_cell(
+    m: &ScenarioManifest,
+    policy: Policy,
+    queue: QueueKind,
+) -> (MultiStreamReport, Vec<Record>) {
+    let built = m.build().expect("manifest builds");
+    let mut cfg = built.apply(policy.engine_config());
+    cfg.event_queue = queue;
+    let rec = Recorder::timeline();
+    cfg.recorder = Some(rec.clone());
+    let report = run_multi_stream_with(&built.system, &built.streams, cfg);
+    (report, rec.drain())
+}
+
+/// Zero the host-side snapshot counters (handler timings, allocation
+/// count) so the rest of the metrics struct can be compared exactly:
+/// those two are feature-gated host measurements and differ run-to-run
+/// by design, while everything else is sim-deterministic.
+fn sim_side(metrics: &EngineMetrics) -> EngineMetrics {
+    let mut m = metrics.clone();
+    m.telemetry.handler_ns = [0; EventKind::COUNT];
+    m.telemetry.allocations = 0;
+    m
+}
+
+/// The full bitwise-equivalence check for one scenario × policy cell.
+fn assert_equivalent(m: &ScenarioManifest, policy: Policy) {
+    let (heap, heap_trace) = run_cell(m, policy, QueueKind::Heap);
+    let (cal, cal_trace) = run_cell(m, policy, QueueKind::Calendar);
+    let label = format!("{} x {}", m.name, policy.name());
+
+    assert_eq!(heap.total_completed, cal.total_completed, "{label}: total_completed");
+    assert_eq!(heap.makespan.to_bits(), cal.makespan.to_bits(), "{label}: makespan");
+    assert_eq!(heap.fairness.to_bits(), cal.fairness.to_bits(), "{label}: fairness");
+    assert_eq!(heap.total_energy.to_bits(), cal.total_energy.to_bits(), "{label}: total_energy");
+    assert_eq!(sim_side(&heap.engine), sim_side(&cal.engine), "{label}: engine metrics");
+    assert_eq!(heap_trace, cal_trace, "{label}: trace timelines");
+
+    assert_eq!(heap.streams.len(), cal.streams.len(), "{label}: stream count");
+    for (h, c) in heap.streams.iter().zip(&cal.streams) {
+        let lane = format!("{label} [{}]", h.name);
+        assert_eq!(h.name, c.name, "{label}: stream order");
+        assert_eq!(h.partition, c.partition, "{lane}: partition");
+        assert_eq!(h.report.completed, c.report.completed, "{lane}: completed");
+        assert_eq!(h.report.shed, c.report.shed, "{lane}: sheds");
+        assert_eq!(h.report.deferrals, c.report.deferrals, "{lane}: deferrals");
+        assert_eq!(h.report.energy.to_bits(), c.report.energy.to_bits(), "{lane}: energy");
+        assert_eq!(h.report.p99_latency.to_bits(), c.report.p99_latency.to_bits(), "{lane}: p99");
+        assert_eq!(h.report.completions.len(), c.report.completions.len(), "{lane}: completions");
+        for (a, b) in h.report.completions.iter().zip(&c.report.completions) {
+            assert_eq!(a.id, b.id, "{lane}: completion order");
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits(), "{lane}: req {} arrival", a.id);
+            assert_eq!(a.start.to_bits(), b.start.to_bits(), "{lane}: req {} start", a.id);
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits(), "{lane}: req {} finish", a.id);
+        }
+    }
+}
+
+#[test]
+fn calendar_is_the_default_queue() {
+    assert_eq!(EngineConfig::default().event_queue, QueueKind::Calendar);
+    assert_eq!(EngineConfig::builder().build().event_queue, QueueKind::Calendar);
+}
+
+/// CI-sized seeded subset: one representative of each scenario family
+/// (multi-phase drift, skewed pair, energy budget, deadline lanes),
+/// crossed with every policy — 16 cells, each run twice.
+#[test]
+fn queues_agree_on_the_seeded_subset() {
+    let subset = vec![
+        catalog::multi_stream(1, 2, 9),
+        catalog::skewed_pair(3, 11),
+        catalog::energy_slo(3, 17),
+        catalog::deadline(4, 23),
+    ];
+    for m in &subset {
+        for p in Policy::ALL {
+            assert_equivalent(m, p);
+        }
+    }
+}
+
+/// The exhaustive grid: every catalog scenario × every policy, both
+/// queues. Too slow for the default test pass, so it rides `#[ignore]`;
+/// CI's sweep-smoke job runs it with `--include-ignored`.
+#[test]
+#[ignore = "full zoo x policy grid; run with --include-ignored"]
+fn queues_agree_on_the_full_zoo() {
+    for m in catalog::all() {
+        for p in Policy::ALL {
+            assert_equivalent(&m, p);
+        }
+    }
+}

@@ -36,7 +36,9 @@ fn metered_deadline_config() -> EngineConfig {
 fn traced_run() -> (Vec<Record>, Vec<String>) {
     let streams = deadline_scenario(8, 42);
     let rec = Recorder::timeline();
-    run_multi_stream_with(&sys(), &streams, metered_deadline_config().with_recorder(rec.clone()));
+    let mut cfg = metered_deadline_config();
+    cfg.recorder = Some(rec.clone());
+    run_multi_stream_with(&sys(), &streams, cfg);
     let names = streams.iter().map(|t| t.name.clone()).collect();
     (rec.drain(), names)
 }
@@ -122,7 +124,8 @@ fn attaching_a_recorder_changes_no_serving_outcome() {
     // the zero-cost-when-off bar; the bench gates the time half).
     let streams = deadline_scenario(8, 42);
     let rec = Recorder::timeline();
-    let cfg = metered_deadline_config().with_recorder(rec.clone());
+    let mut cfg = metered_deadline_config();
+    cfg.recorder = Some(rec.clone());
     let on = run_multi_stream_with(&sys(), &streams, cfg);
     let off = run_multi_stream_with(&sys(), &streams, metered_deadline_config());
     assert!(!rec.drain().is_empty());
