@@ -1,0 +1,119 @@
+//! Fleet scale-out bench (DESIGN.md §Fleet): completed-request
+//! throughput of a 4-shard fleet vs a single shard on the balanced
+//! fleet scenario, plus the router's per-admission cost.
+//!
+//! The scenario is `catalog::fleet_balanced` with its request counts
+//! scaled up (eight near-equal lanes, 480 requests on a 12F+8G pool).
+//! A 1-shard fleet is the bare engine (pinned bit-identical in
+//! `rust/tests/fleet.rs`), so the 1-vs-4 delta is exactly what sharding
+//! buys: four engines on four OS threads, each serving a quarter of the
+//! lanes on a quarter of the pool. On a host with >= 4 workers the
+//! 4-shard fleet must clear 3x the single shard's throughput — that bar
+//! is asserted here and the medians feed the CI perf trajectory
+//! (recorded as seconds per completed request, so a *rise* is a
+//! regression, matching the bench gate's direction).
+
+use std::time::Instant;
+
+use dype::devices::GroundTruth;
+use dype::engine::EngineConfig;
+use dype::fleet::{FleetConfig, ServingFleet};
+use dype::perfmodel::OracleModels;
+use dype::scenario::catalog;
+use dype::util::bench::{bench, fmt_time, record_json};
+use dype::util::pool::default_threads;
+
+fn main() {
+    let mut m = catalog::fleet_balanced();
+    for s in &mut m.streams {
+        for p in &mut s.phases {
+            p.count = 60;
+        }
+    }
+    let built = m.build().expect("manifest builds");
+    let sys = built.system.clone();
+    let offered: usize = built.streams.iter().map(|s| s.trace.len()).sum();
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+
+    println!(
+        "fleet scale-out: {} requests over {} lanes on {}F+{}G ({} host workers)\n",
+        offered,
+        built.streams.len(),
+        sys.n_fpga,
+        sys.n_gpu,
+        default_threads()
+    );
+
+    // Best-of-3 wall clock per shard count; every run must complete the
+    // whole offered load (balanced lanes have no deadlines, so nothing
+    // sheds and the throughput numbers compare like for like).
+    let serve_wall = |shards: usize| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let cfg = FleetConfig {
+                shards,
+                threads: shards,
+                engine: built.apply(EngineConfig::default()),
+                ..FleetConfig::default()
+            };
+            let mut fleet = ServingFleet::new(sys.clone(), &est, cfg);
+            let t0 = Instant::now();
+            let report = fleet.serve(&built.streams);
+            let wall = t0.elapsed().as_secs_f64();
+            assert_eq!(report.total_completed, offered, "balanced fleet completes everything");
+            assert!(report.conserved());
+            best = best.min(wall);
+        }
+        best
+    };
+
+    let wall1 = serve_wall(1);
+    let wall4 = serve_wall(4);
+    let per1 = wall1 / offered as f64;
+    let per4 = wall4 / offered as f64;
+    println!(
+        "1 shard : {} wall, {}/request ({:.0} req/s host)",
+        fmt_time(wall1),
+        fmt_time(per1),
+        offered as f64 / wall1
+    );
+    println!(
+        "4 shards: {} wall, {}/request ({:.0} req/s host)",
+        fmt_time(wall4),
+        fmt_time(per4),
+        offered as f64 / wall4
+    );
+    println!("speedup : {:.2}x", wall1 / wall4);
+
+    // Router cost: place all eight lanes across four shards, timed per
+    // admission (demand estimate + regime extraction + affinity probes).
+    let router = ServingFleet::new(sys.clone(), &est, FleetConfig::new(4));
+    let stats = bench("fleet/route", 2, 20, || {
+        std::hint::black_box(router.route(&built.streams));
+    });
+    let route_per = stats.median / built.streams.len() as f64;
+    println!("\nrouter: {} per admission over {} lanes x 4 shards", fmt_time(route_per), 8);
+
+    // The scale-out bar needs real parallel workers: on a starved host
+    // (CI containers can pin us to one core) the 4 shards time-share a
+    // single core and wall clock cannot scale, so the bar is only
+    // meaningful — and only asserted — with >= 4 workers available.
+    if default_threads() >= 4 {
+        assert!(
+            wall1 >= 3.0 * wall4,
+            "4-shard fleet must clear 3x single-shard throughput: {} vs {} wall",
+            fmt_time(wall1),
+            fmt_time(wall4)
+        );
+        println!("OK — 4-shard fleet cleared the 3x scale-out bar.");
+    } else {
+        println!("note: {} worker(s) available, 3x scale-out bar not asserted", default_threads());
+    }
+
+    record_json(&[
+        ("fleet/1shard_throughput".to_string(), per1),
+        ("fleet/4shard_throughput".to_string(), per4),
+        ("fleet/route_per_admission".to_string(), route_per),
+    ]);
+}

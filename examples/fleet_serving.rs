@@ -1,0 +1,100 @@
+//! Sharded fleet serving demo (DESIGN.md §Fleet): horizontal scale-out
+//! over the serving engine.
+//!
+//! Two scenarios from the zoo:
+//!
+//! * `fleet-balanced` — eight near-equal GCN lanes on a 12F+8G pool.
+//!   A four-shard fleet carves the pool into even 3F+2G slices, the
+//!   router spreads two lanes per shard, every shard serves on its own
+//!   OS thread with its own schedule cache (registry-prewarmed from the
+//!   lanes' expected regimes, so first admissions hit), and no
+//!   migration triggers.
+//! * `fleet-skewed` — an overloaded 250 ms-deadline lane co-locating
+//!   with bulk on one slice of a two-shard paper-testbed fleet. The hot
+//!   shard's shed rate clears the hysteresis bound while the other
+//!   shard coasts, so the fleet drains the worst-shedding stream and
+//!   re-admits it on the cold shard, prewarming the destination cache
+//!   with the stream's carried-over plans.
+//!
+//! `--trace <path>` writes the balanced run's shard-namespaced Perfetto
+//! `trace_events` JSON (shard N's streams/leases/budget tracks become
+//! `shardN:`-prefixed processes; load it at `ui.perfetto.dev`).
+//!
+//! Run: `cargo run --release --example fleet_serving -- [--trace trace.json]`
+
+use dype::devices::GroundTruth;
+use dype::engine::EngineConfig;
+use dype::fleet::{FleetConfig, ServingFleet};
+use dype::perfmodel::OracleModels;
+use dype::scenario::catalog;
+use dype::telemetry::export;
+
+fn main() -> anyhow::Result<()> {
+    let mut trace_path: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--trace" => trace_path = Some(args.next().expect("--trace needs a path")),
+            other => panic!("unknown argument '{other}'"),
+        }
+    }
+
+    // --- Balanced: eight near-equal lanes over a four-shard fleet.
+    let built = catalog::fleet_balanced().build()?;
+    let sys = built.system.clone();
+    println!(
+        "fleet-balanced: {} lanes on {}F + {}G, 4 shards, registry prewarm on\n",
+        built.streams.len(),
+        sys.n_fpga,
+        sys.n_gpu
+    );
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+    let cfg = FleetConfig {
+        shards: 4,
+        engine: built.apply(EngineConfig::default()),
+        telemetry: trace_path.is_some(),
+        registry_prewarm: true,
+        ..FleetConfig::default()
+    };
+    let mut fleet = ServingFleet::new(sys, &est, cfg);
+    let report = fleet.serve(&built.streams);
+    print!("{}", report.render());
+    assert!(report.conserved(), "every request completes or sheds exactly once");
+    assert!(report.migrations.is_empty(), "a balanced fleet never migrates");
+    for s in &report.shards {
+        assert_eq!(s.streams.len(), 2, "the router spreads eight equal lanes two per shard");
+    }
+
+    if let Some(p) = &trace_path {
+        let doc = export::perfetto_fleet(&report.timelines());
+        export::validate(&doc).expect("the exporter emits strictly valid traces");
+        std::fs::write(p, format!("{doc}\n"))?;
+        println!("trace: shard-namespaced Perfetto export -> {p}");
+    }
+
+    // --- Skewed: an overloaded deadline lane forces a migration.
+    let built = catalog::fleet_skewed().build()?;
+    let sys = built.system.clone();
+    println!(
+        "\nfleet-skewed: {} lanes on {}F + {}G, 2 shards\n",
+        built.streams.len(),
+        sys.n_fpga,
+        sys.n_gpu
+    );
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+    let cfg = FleetConfig {
+        shards: 2,
+        engine: built.apply(EngineConfig::default()),
+        ..FleetConfig::default()
+    };
+    let mut fleet = ServingFleet::new(sys, &est, cfg);
+    let report = fleet.serve(&built.streams);
+    print!("{}", report.render());
+    assert!(report.conserved(), "conservation holds across migrations");
+    assert!(!report.migrations.is_empty(), "the hot shard sheds past hysteresis and migrates");
+
+    println!("\nOK — balanced fleet spread evenly; skewed fleet migrated off the hot shard.");
+    Ok(())
+}

@@ -15,15 +15,18 @@
 //! (`--quick` sweeps the three smallest scenarios only).
 
 use dype::scenario::catalog;
-use dype::scenario::sweep::{run_grid, run_zoo, Policy};
+use dype::scenario::sweep::{run_grid_parallel, run_zoo_parallel, Policy};
+use dype::util::pool::default_threads;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
+    // The parallel grid fans cells out across a worker pool and is
+    // byte-identical to the serial sweep (pinned by a tier-1 test).
     let report = if quick {
         let subset = vec![catalog::skewed_pair(2, 11), catalog::mmpp_burst(), catalog::diurnal()];
-        run_grid(&subset, &Policy::ALL)?
+        run_grid_parallel(&subset, &Policy::ALL, default_threads())?
     } else {
-        run_zoo()?
+        run_zoo_parallel()?
     };
 
     let n_scenarios = report.scenarios().len();

@@ -1,0 +1,709 @@
+//! Sharded fleet serving: horizontal scale-out over the serving engine.
+//!
+//! One [`crate::engine::ServingEngine`] multiplexes arbitrarily many
+//! streams over one device pool — but it is a single discrete-event
+//! clock, so wall-clock serving capacity stops at one core. The fleet
+//! layer shards the pool: `shards` engines run in parallel on real OS
+//! threads (the [`crate::util::pool`] scoped-thread fan-out), each
+//! owning a **disjoint** slice of the device inventory (carved by the
+//! same largest-remainder apportionment as lease partitioning,
+//! `lease::split_pool`) and its **own** schedule cache — caches are
+//! never shared across shards, so the hot path never contends on one
+//! mutex and cache warmth becomes a *placement* signal instead of a
+//! global side effect.
+//!
+//! Streams are placed at admission by a deterministic router
+//! ([`ServingFleet::route`]): SLO class first (priority descending —
+//! latency-critical lanes pick their shard before bulk does), demand
+//! estimate second, then greedy least-relative-load with a
+//! **cache-affinity discount** — a shard whose cache already holds a
+//! plan for one of the stream's expected regimes (shape + objective
+//! match under any system fingerprint, [`ScheduleCache::affinity`])
+//! scores cheaper than a cold one.
+//!
+//! After a serve pass the fleet inspects per-shard health: when one
+//! shard's deadline-shed rate degrades past `shed_threshold` *and*
+//! exceeds the coldest shard's by more than `hysteresis` (or the
+//! deadline-attainment analogue), the most-shedding stream drains from
+//! the hot shard and re-admits on the coldest shard. The destination
+//! cache is prewarmed through the existing re-keying path: the victim's
+//! plans are carried across caches
+//! ([`ScheduleCache::copy_fingerprint_into`]) and re-fitted onto its
+//! prospective partition ([`ScheduleCache::prewarm`]), so known regimes
+//! re-admit as hits, not cold DP runs. Each stream migrates at most
+//! once per serve and rounds are capped, so placement always converges.
+//!
+//! A single-shard fleet is the degenerate case and is **bit-identical**
+//! to driving the bare engine: the one shard owns the whole pool, the
+//! router has one choice, streams stay in admission order, and no
+//! migration can trigger (`rust/tests/fleet.rs` pins this
+//! differentially — reports, metrics, and telemetry timeline).
+
+use std::path::Path;
+
+use crate::config::{Objective, SystemSpec};
+use crate::coordinator::{MultiStreamReport, StreamSpec};
+use crate::engine::{lease, EngineConfig, ServingEngine};
+use crate::metrics::Table;
+use crate::perfmodel::PerfEstimator;
+use crate::scheduler::{
+    system_fingerprint, CacheKey, CacheStats, DpScheduler, PrewarmReport, ScheduleCache,
+    SharedScheduleCache,
+};
+use crate::telemetry::{Record, Recorder};
+use crate::util::pool::{default_threads, run_indexed};
+
+/// Projected-load multiplier for a shard whose cache is already warm
+/// for one of the candidate stream's regimes: a 25% discount, enough to
+/// win ties and near-ties without overriding a real load imbalance.
+const AFFINITY_FACTOR: f64 = 0.75;
+
+/// Fleet-level configuration. `engine` is the per-shard template —
+/// every shard serves under a clone of it, so policy knobs
+/// (repartitioning, budgets, event queue) apply fleet-wide.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of engine shards (each needs at least one device).
+    pub shards: usize,
+    /// Per-shard schedule-cache capacity (the bare engine's default 64).
+    pub cache_capacity: usize,
+    /// Worker threads for parallel shard runs; shards beyond this queue.
+    pub threads: usize,
+    /// Per-shard engine configuration template.
+    pub engine: EngineConfig,
+    /// Attach a fresh timeline recorder to every shard run and surface
+    /// the drained records per shard ([`ShardReport::timeline`],
+    /// exported via [`crate::telemetry::export::perfetto_fleet`]).
+    /// Overrides any recorder on the `engine` template.
+    pub telemetry: bool,
+    /// Seed each shard's cache from its streams' expected regimes at
+    /// spin-up (the DP runs once per distinct regime × lane partition
+    /// *before* the clock starts), so first admissions hit without any
+    /// prior run or persisted cache file. Off by default — the
+    /// cold-start path is the bare engine's, bit for bit.
+    pub registry_prewarm: bool,
+    /// Deadline-shed rate above which a shard counts as degraded.
+    pub shed_threshold: f64,
+    /// A migration triggers only when hot and cold shard health differ
+    /// by more than this — the anti-flap band.
+    pub hysteresis: f64,
+    /// Migration rounds per serve (one stream moves per round).
+    pub max_migrations: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            shards: 1,
+            cache_capacity: 64,
+            threads: default_threads(),
+            engine: EngineConfig::default(),
+            telemetry: false,
+            registry_prewarm: false,
+            shed_threshold: 0.02,
+            hysteresis: 0.01,
+            max_migrations: 2,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// The default configuration over `shards` shards.
+    pub fn new(shards: usize) -> FleetConfig {
+        FleetConfig { shards, ..FleetConfig::default() }
+    }
+}
+
+/// One completed cross-shard stream migration.
+#[derive(Debug, Clone)]
+pub struct FleetMigration {
+    /// Name of the migrated stream.
+    pub stream: String,
+    /// Source (hot) shard index.
+    pub from: usize,
+    /// Destination (cold) shard index.
+    pub to: usize,
+    /// Outcome of prewarming the destination cache with the stream's
+    /// carried-over plans, re-keyed onto its new lane partition.
+    pub prewarm: PrewarmReport,
+}
+
+/// One shard's slice of a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub shard: usize,
+    /// The shard's disjoint device slice.
+    pub n_fpga: usize,
+    pub n_gpu: usize,
+    /// Final resident stream names, in admission order.
+    pub streams: Vec<String>,
+    /// Plans seeded by the spin-up registry prewarm (0 when disabled).
+    pub prewarm_seeded: usize,
+    /// The shard's serve report; `None` for a shard left with no
+    /// streams (possible after a migration drains its only one).
+    pub report: Option<MultiStreamReport>,
+    /// The shard cache's cumulative counters after the run.
+    pub cache: CacheStats,
+    /// Drained telemetry records (empty unless [`FleetConfig::telemetry`]).
+    pub timeline: Vec<Record>,
+}
+
+/// Aggregate of every shard's serve pass plus the migration log.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub shards: Vec<ShardReport>,
+    pub migrations: Vec<FleetMigration>,
+    /// Total requests offered across all streams.
+    pub offered: usize,
+    pub total_completed: usize,
+    pub total_shed: usize,
+    pub total_energy: f64,
+    /// Max over shard makespans — shards run concurrently.
+    pub makespan: f64,
+    /// `total_completed / makespan`.
+    pub aggregate_throughput: f64,
+}
+
+impl FleetReport {
+    /// Every offered request completes or sheds exactly once, across
+    /// all shards and migrations — the fleet-level conservation law.
+    pub fn conserved(&self) -> bool {
+        self.total_completed + self.total_shed == self.offered
+    }
+
+    /// Per-shard `(timeline, stream names)` pairs in shard order — the
+    /// input shape of [`crate::telemetry::export::perfetto_fleet`].
+    pub fn timelines(&self) -> Vec<(Vec<Record>, Vec<String>)> {
+        self.shards.iter().map(|s| (s.timeline.clone(), s.streams.clone())).collect()
+    }
+
+    /// Human-readable per-shard table plus the migration log.
+    pub fn render(&self) -> String {
+        let mut t =
+            Table::new(&["shard", "devices", "streams", "completed", "shed", "J", "mkspan s"]);
+        for s in &self.shards {
+            let (completed, shed, energy, makespan) = s
+                .report
+                .as_ref()
+                .map(|r| (r.total_completed, r.engine.sheds, r.total_energy, r.makespan))
+                .unwrap_or((0, 0, 0.0, 0.0));
+            t.row(vec![
+                format!("{}", s.shard),
+                format!("{}F{}G", s.n_fpga, s.n_gpu),
+                s.streams.join(","),
+                format!("{completed}"),
+                format!("{shed}"),
+                format!("{energy:.1}"),
+                format!("{makespan:.3}"),
+            ]);
+        }
+        let mut out = t.render();
+        for m in &self.migrations {
+            out.push_str(&format!(
+                "migrated '{}' shard {} -> {} ({} plans prewarmed, {} cold)\n",
+                m.stream, m.from, m.to, m.prewarm.hits, m.prewarm.misses
+            ));
+        }
+        out.push_str(&format!(
+            "fleet: {}/{} completed, {} shed, {:.1} J, makespan {:.3} s, {:.1} inf/s\n",
+            self.total_completed,
+            self.offered,
+            self.total_shed,
+            self.total_energy,
+            self.makespan,
+            self.aggregate_throughput
+        ));
+        out
+    }
+}
+
+/// N parallel [`ServingEngine`] shards behind an SLO- and
+/// affinity-aware admission router. See the module docs for the
+/// placement and migration machinery.
+pub struct ServingFleet<'a, E: PerfEstimator> {
+    est: &'a E,
+    cfg: FleetConfig,
+    /// Disjoint, inventory-conserving device slices, one per shard.
+    pools: Vec<SystemSpec>,
+    /// Per-shard schedule caches — never shared across shards.
+    caches: Vec<SharedScheduleCache>,
+}
+
+impl<'a, E: PerfEstimator + Sync> ServingFleet<'a, E> {
+    /// Carve `sys` into `cfg.shards` disjoint slices (equal-weight
+    /// largest-remainder split: inventory is conserved and every shard
+    /// gets at least one device) and stand up one cold cache per shard.
+    pub fn new(sys: SystemSpec, est: &'a E, cfg: FleetConfig) -> Self {
+        assert!(cfg.shards >= 1, "a fleet needs at least one shard");
+        let pools = lease::split_pool(&sys, &vec![1.0; cfg.shards]);
+        let caches = (0..cfg.shards).map(|_| ScheduleCache::shared(cfg.cache_capacity)).collect();
+        ServingFleet { est, cfg, pools, caches }
+    }
+
+    /// The per-shard device slices, in shard order.
+    pub fn pools(&self) -> &[SystemSpec] {
+        &self.pools
+    }
+
+    /// Handle to one shard's schedule cache.
+    pub fn cache(&self, shard: usize) -> SharedScheduleCache {
+        self.caches[shard].clone()
+    }
+
+    /// Warm-start shard caches from `dir/shard<i>.json` files persisted
+    /// by [`Self::save_caches`]; missing files leave that shard cold.
+    /// Returns how many shards loaded a file.
+    pub fn load_caches(&mut self, dir: impl AsRef<Path>) -> anyhow::Result<usize> {
+        let mut loaded = 0;
+        for s in 0..self.cfg.shards {
+            let path = dir.as_ref().join(format!("shard{s}.json"));
+            if path.exists() {
+                *self.caches[s].lock().unwrap() =
+                    ScheduleCache::load_from(&path, self.cfg.cache_capacity)?;
+                loaded += 1;
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Persist every shard cache to `dir/shard<i>.json`.
+    pub fn save_caches(&self, dir: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        for s in 0..self.cfg.shards {
+            self.caches[s].lock().unwrap().save_to(dir.as_ref().join(format!("shard{s}.json")))?;
+        }
+        Ok(())
+    }
+
+    /// Place every stream on a shard. Deterministic: streams place in
+    /// (SLO priority desc, demand desc, index) order, each onto the
+    /// shard minimizing projected relative load — demand already placed
+    /// plus this stream, over the shard's device count — discounted by
+    /// [`AFFINITY_FACTOR`] when the shard's cache is already warm for
+    /// any of the stream's expected regimes. Ties go to the lowest
+    /// shard index. Returns `stream index -> shard index`.
+    pub fn route(&self, streams: &[StreamSpec]) -> Vec<usize> {
+        let demand: Vec<f64> = streams.iter().map(StreamSpec::demand).collect();
+        let regimes: Vec<Vec<CacheKey>> = streams.iter().map(expected_regimes).collect();
+        let mut order: Vec<usize> = (0..streams.len()).collect();
+        order.sort_by(|&a, &b| {
+            let pri = streams[b].slo.priority.total_cmp(&streams[a].slo.priority);
+            pri.then(demand[b].total_cmp(&demand[a])).then(a.cmp(&b))
+        });
+        let caps: Vec<f64> = self.pools.iter().map(|p| (p.n_fpga + p.n_gpu) as f64).collect();
+        let mut load = vec![0.0f64; self.pools.len()];
+        let mut shard_of = vec![0usize; streams.len()];
+        for &i in &order {
+            let warm: Vec<bool> = self
+                .caches
+                .iter()
+                .map(|c| {
+                    let cache = c.lock().unwrap();
+                    regimes[i].iter().any(|k| cache.affinity(k) > 0)
+                })
+                .collect();
+            let score = |s: usize| {
+                let projected = (load[s] + demand[i]) / caps[s];
+                if warm[s] {
+                    projected * AFFINITY_FACTOR
+                } else {
+                    projected
+                }
+            };
+            let best = (0..self.pools.len())
+                .min_by(|&x, &y| score(x).total_cmp(&score(y)).then(x.cmp(&y)))
+                .expect("a fleet has at least one shard");
+            shard_of[i] = best;
+            load[best] += demand[i];
+        }
+        shard_of
+    }
+
+    /// Serve every stream to completion across the fleet: route, run
+    /// all shards in parallel, then drain-and-re-admit streams off
+    /// degraded shards (re-running only the two affected shards per
+    /// round) until health is inside the hysteresis band or the round
+    /// cap is hit.
+    pub fn serve(&mut self, streams: &[StreamSpec]) -> FleetReport {
+        assert!(!streams.is_empty(), "no streams");
+        let k = self.cfg.shards;
+        let shard_of = self.route(streams);
+        let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (i, &s) in shard_of.iter().enumerate() {
+            assigned[s].push(i);
+        }
+
+        let seeded: Vec<usize> = if self.cfg.registry_prewarm {
+            (0..k).map(|s| self.registry_prewarm(streams, &assigned[s], s)).collect()
+        } else {
+            vec![0; k]
+        };
+
+        let mut reports: Vec<Option<MultiStreamReport>> = vec![None; k];
+        let mut timelines: Vec<Vec<Record>> = vec![Vec::new(); k];
+        let all: Vec<usize> = (0..k).collect();
+        self.run_shards(streams, &assigned, &all, &mut reports, &mut timelines);
+
+        let mut migrations: Vec<FleetMigration> = Vec::new();
+        let mut moved: Vec<usize> = Vec::new();
+        while migrations.len() < self.cfg.max_migrations {
+            let next = self.pick_migration(streams, &assigned, &reports, &moved);
+            let Some((victim, from, to)) = next else {
+                break;
+            };
+            // The victim's admission-time lane partition on the source
+            // shard keys the plans worth carrying across caches.
+            let (old_fp, _, _) = self.lane_partition(streams, &assigned[from], victim, from);
+            assigned[from].retain(|&i| i != victim);
+            assigned[to].push(victim);
+            assigned[to].sort_unstable();
+            let (new_fp, nf, ng) = self.lane_partition(streams, &assigned[to], victim, to);
+            let prewarm = {
+                let src = self.caches[from].lock().unwrap();
+                let mut dst = self.caches[to].lock().unwrap();
+                src.copy_fingerprint_into(&mut dst, old_fp);
+                drop(src);
+                dst.prewarm(old_fp, new_fp, nf, ng)
+            };
+            self.run_shards(streams, &assigned, &[from, to], &mut reports, &mut timelines);
+            moved.push(victim);
+            migrations.push(FleetMigration {
+                stream: streams[victim].name.clone(),
+                from,
+                to,
+                prewarm,
+            });
+        }
+
+        let offered: usize = streams.iter().map(|s| s.trace.len()).sum();
+        let mut total_completed = 0;
+        let mut total_shed = 0;
+        let mut total_energy = 0.0;
+        let mut makespan = 0.0f64;
+        let mut shards = Vec::with_capacity(k);
+        for s in 0..k {
+            let report = reports[s].take();
+            if let Some(r) = &report {
+                total_completed += r.total_completed;
+                total_shed += r.engine.sheds;
+                total_energy += r.total_energy;
+                makespan = makespan.max(r.makespan);
+            }
+            shards.push(ShardReport {
+                shard: s,
+                n_fpga: self.pools[s].n_fpga,
+                n_gpu: self.pools[s].n_gpu,
+                streams: assigned[s].iter().map(|&i| streams[i].name.clone()).collect(),
+                prewarm_seeded: seeded[s],
+                report,
+                cache: self.caches[s].lock().unwrap().stats(),
+                timeline: std::mem::take(&mut timelines[s]),
+            });
+        }
+        let aggregate_throughput =
+            if makespan > 0.0 { total_completed as f64 / makespan } else { 0.0 };
+        FleetReport {
+            shards,
+            migrations,
+            offered,
+            total_completed,
+            total_shed,
+            total_energy,
+            makespan,
+            aggregate_throughput,
+        }
+    }
+
+    /// Run the shards named in `which` (in parallel, up to
+    /// `cfg.threads` workers) and write results back by shard index.
+    /// Each worker stands up its own engine over the shard's pool,
+    /// cache, and a clone of the engine template; streams stay in
+    /// admission order, so a one-shard fleet is exactly one bare
+    /// `ServingEngine::serve` call.
+    fn run_shards(
+        &self,
+        streams: &[StreamSpec],
+        assigned: &[Vec<usize>],
+        which: &[usize],
+        reports: &mut [Option<MultiStreamReport>],
+        timelines: &mut [Vec<Record>],
+    ) {
+        let results = run_indexed(which.len(), self.cfg.threads.max(1), |j| {
+            let shard = which[j];
+            let members = &assigned[shard];
+            if members.is_empty() {
+                return (None, Vec::new());
+            }
+            let specs: Vec<StreamSpec> = members.iter().map(|&i| streams[i].clone()).collect();
+            let mut cfg = self.cfg.engine.clone();
+            let rec = if self.cfg.telemetry { Some(Recorder::timeline()) } else { None };
+            if let Some(r) = &rec {
+                cfg.recorder = Some(r.clone());
+            }
+            let mut engine = ServingEngine::new(self.pools[shard].clone(), self.est)
+                .with_cache(self.caches[shard].clone())
+                .with_config(cfg);
+            let report = engine.serve(&specs);
+            (Some(report), rec.map(|r| r.drain()).unwrap_or_default())
+        });
+        for (j, (report, timeline)) in results.into_iter().enumerate() {
+            reports[which[j]] = report;
+            timelines[which[j]] = timeline;
+        }
+    }
+
+    /// Seed one shard's cache at spin-up: mirror the engine's initial
+    /// lease apportionment (SLO-weighted demand, `lease::assign`), then
+    /// run the DP once per distinct (lane partition, regime, objective)
+    /// key the shard's streams will look up on first admission, and
+    /// insert the plans — exactly what each lane's coordinator would
+    /// compute on its first cold miss, done before the clock starts.
+    /// `Balanced`-objective lanes bypass the cache and are skipped.
+    /// Returns the number of plans seeded.
+    fn registry_prewarm(&self, streams: &[StreamSpec], members: &[usize], shard: usize) -> usize {
+        if members.is_empty() {
+            return 0;
+        }
+        let weighted: Vec<f64> = members
+            .iter()
+            .map(|&i| streams[i].demand() * self.cfg.engine.slo.weight(&streams[i].slo, None))
+            .collect();
+        let assignment = lease::assign(&self.pools[shard], &weighted);
+        let mut cache = self.caches[shard].lock().unwrap();
+        let mut seeded = 0;
+        for (j, &i) in members.iter().enumerate() {
+            let s = &streams[i];
+            if matches!(s.objective, Objective::Balanced { .. }) {
+                continue;
+            }
+            let (part, _) = assignment.lease_of(j);
+            let fp = system_fingerprint(part);
+            let part = part.clone();
+            for r in &s.trace {
+                let key = CacheKey::new(fp, &r.workload, s.objective);
+                if cache.contains(&key) {
+                    continue;
+                }
+                let sched = DpScheduler::new(&part, self.est).schedule(&r.workload, s.objective);
+                cache.insert(key, sched.plan());
+                seeded += 1;
+            }
+        }
+        seeded
+    }
+
+    /// A stream's admission-time lane partition on `shard` given the
+    /// member set: the same SLO-weighted demand split the engine runs
+    /// at t=0, which is where that lane's cache entries are keyed.
+    fn lane_partition(
+        &self,
+        streams: &[StreamSpec],
+        members: &[usize],
+        stream: usize,
+        shard: usize,
+    ) -> (u64, usize, usize) {
+        let weighted: Vec<f64> = members
+            .iter()
+            .map(|&i| streams[i].demand() * self.cfg.engine.slo.weight(&streams[i].slo, None))
+            .collect();
+        let assignment = lease::assign(&self.pools[shard], &weighted);
+        let j = members.iter().position(|&i| i == stream).expect("stream is a member");
+        let (part, _) = assignment.lease_of(j);
+        (system_fingerprint(part), part.n_fpga, part.n_gpu)
+    }
+
+    /// Decide the next migration, if any: the shard with the worst
+    /// deadline-shed rate is hot, the one with the lowest (shed rate,
+    /// demand load) is cold, and a move triggers only past both the
+    /// absolute threshold and the hot-cold hysteresis band (on the shed
+    /// rate, or its deadline-attainment analogue). The victim is the
+    /// hot shard's most-shedding not-yet-moved stream. Returns
+    /// `(stream index, from, to)`.
+    fn pick_migration(
+        &self,
+        streams: &[StreamSpec],
+        assigned: &[Vec<usize>],
+        reports: &[Option<MultiStreamReport>],
+        moved: &[usize],
+    ) -> Option<(usize, usize, usize)> {
+        let k = assigned.len();
+        if k < 2 {
+            return None;
+        }
+        // Per-shard health: (shed rate, min deadline attainment, load).
+        let health: Vec<Option<(f64, f64, f64)>> = (0..k)
+            .map(|s| {
+                let r = reports[s].as_ref()?;
+                let offered: usize = assigned[s].iter().map(|&i| streams[i].trace.len()).sum();
+                let shed_rate = r.engine.sheds as f64 / offered.max(1) as f64;
+                let dl =
+                    r.streams.iter().map(|sr| sr.report.deadline_attainment).fold(1.0, f64::min);
+                let load: f64 = assigned[s].iter().map(|&i| streams[i].demand()).sum();
+                Some((shed_rate, dl, load))
+            })
+            .collect();
+        let hot = (0..k)
+            .filter(|&s| health[s].is_some() && assigned[s].iter().any(|i| !moved.contains(i)))
+            .max_by(|&a, &b| {
+                let (sa, da, _) = health[a].unwrap();
+                let (sb, db, _) = health[b].unwrap();
+                sa.total_cmp(&sb).then(db.total_cmp(&da)).then(b.cmp(&a))
+            })?;
+        let cold = (0..k)
+            .filter(|&s| s != hot)
+            .min_by(|&a, &b| {
+                let ka = health[a].map(|(sr, _, ld)| (sr, ld)).unwrap_or((0.0, 0.0));
+                let kb = health[b].map(|(sr, _, ld)| (sr, ld)).unwrap_or((0.0, 0.0));
+                ka.0.total_cmp(&kb.0).then(ka.1.total_cmp(&kb.1)).then(a.cmp(&b))
+            })?;
+        let (hot_shed, hot_dl, _) = health[hot].unwrap();
+        let (cold_shed, cold_dl) = health[cold].map(|(s, d, _)| (s, d)).unwrap_or((0.0, 1.0));
+        let shed_trigger =
+            hot_shed > self.cfg.shed_threshold && hot_shed - cold_shed > self.cfg.hysteresis;
+        let dl_trigger =
+            hot_dl < 1.0 - self.cfg.shed_threshold && cold_dl - hot_dl > self.cfg.hysteresis;
+        if !(shed_trigger || dl_trigger) {
+            return None;
+        }
+        let r = reports[hot].as_ref().expect("hot shard has a report");
+        let shed_of = |j: usize| r.streams[j].report.shed;
+        let dl_of = |j: usize| r.streams[j].report.deadline_attainment;
+        let victim = (0..assigned[hot].len())
+            .filter(|&j| !moved.contains(&assigned[hot][j]))
+            .max_by(|&a, &b| {
+                let worst = shed_of(a).cmp(&shed_of(b)).then(dl_of(b).total_cmp(&dl_of(a)));
+                worst.then(assigned[hot][b].cmp(&assigned[hot][a]))
+            })
+            .map(|j| assigned[hot][j])?;
+        Some((victim, hot, cold))
+    }
+}
+
+/// The distinct schedule-cache shapes a stream's trace will look up —
+/// its expected regimes, keyed under a placeholder system fingerprint
+/// (affinity probes ignore the system half by design).
+fn expected_regimes(s: &StreamSpec) -> Vec<CacheKey> {
+    let mut out: Vec<CacheKey> = Vec::new();
+    for r in &s.trace {
+        let key = CacheKey::new(0, &r.workload, s.objective);
+        if !out.contains(&key) {
+            out.push(key);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Interconnect;
+    use crate::coordinator::generate_trace;
+    use crate::devices::GroundTruth;
+    use crate::perfmodel::OracleModels;
+    use crate::workload::{gnn, Dataset};
+
+    fn pool(n_fpga: usize, n_gpu: usize) -> SystemSpec {
+        SystemSpec { n_fpga, n_gpu, ..SystemSpec::paper_testbed(Interconnect::Pcie4) }
+    }
+
+    fn lane(name: &str, small: bool, seed: u64, n: usize) -> StreamSpec {
+        let ds = if small { Dataset::synthetic2() } else { Dataset::synthetic1() };
+        let wl = gnn::gcn_workload(&ds, 2, 128);
+        StreamSpec::new(name, Objective::Performance, generate_trace(&[(wl, n)], 10.0, seed))
+    }
+
+    #[test]
+    fn single_shard_owns_the_whole_pool_and_admission_order() {
+        let sys = pool(3, 2);
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let est = OracleModels { gt: &gt };
+        let fleet = ServingFleet::new(sys.clone(), &est, FleetConfig::default());
+        assert_eq!(fleet.pools().len(), 1);
+        assert_eq!(fleet.pools()[0].n_fpga, sys.n_fpga);
+        assert_eq!(fleet.pools()[0].n_gpu, sys.n_gpu);
+        let streams: Vec<StreamSpec> =
+            (0..3).map(|i| lane(&format!("s{i}"), true, i as u64, 4)).collect();
+        assert_eq!(fleet.route(&streams), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn routing_balances_near_equal_lanes_across_shards() {
+        let sys = pool(12, 8);
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let est = OracleModels { gt: &gt };
+        let fleet = ServingFleet::new(sys, &est, FleetConfig::new(4));
+        for p in fleet.pools() {
+            assert_eq!((p.n_fpga, p.n_gpu), (3, 2), "equal-weight split carves even slices");
+        }
+        let streams: Vec<StreamSpec> =
+            (0..8).map(|i| lane(&format!("s{i}"), true, i as u64, 4)).collect();
+        let shard_of = fleet.route(&streams);
+        let mut counts = [0usize; 4];
+        for &s in &shard_of {
+            counts[s] += 1;
+        }
+        assert_eq!(counts, [2, 2, 2, 2], "near-equal lanes spread evenly: {shard_of:?}");
+    }
+
+    #[test]
+    fn affinity_pulls_a_stream_onto_the_warm_shard() {
+        let sys = pool(6, 6);
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let est = OracleModels { gt: &gt };
+        let fleet = ServingFleet::new(sys, &est, FleetConfig::new(2));
+        let s = lane("warmth", true, 7, 4);
+        assert_eq!(fleet.route(std::slice::from_ref(&s)), vec![0], "cold tie goes to shard 0");
+        // Warm shard 1 with the stream's regime under an arbitrary
+        // system fingerprint — affinity matches shape + objective only.
+        let key = CacheKey::new(0xFEED, &s.trace[0].workload, s.objective);
+        fleet.cache(1).lock().unwrap().insert(key, Vec::new());
+        assert_eq!(fleet.route(std::slice::from_ref(&s)), vec![1], "warmth wins the tie");
+    }
+
+    #[test]
+    fn registry_prewarm_turns_first_admissions_into_hits() {
+        let sys = pool(3, 2);
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let est = OracleModels { gt: &gt };
+        let cfg = FleetConfig {
+            registry_prewarm: true,
+            // Static leases: partitions never change mid-run, so every
+            // lookup stays under the seeded fingerprints.
+            engine: EngineConfig::builder().static_leases().build(),
+            ..FleetConfig::default()
+        };
+        let mut fleet = ServingFleet::new(sys, &est, cfg);
+        let streams = vec![lane("a", true, 1, 6), lane("b", false, 2, 6)];
+        let report = fleet.serve(&streams);
+        let shard = &report.shards[0];
+        assert!(shard.prewarm_seeded >= 2, "one plan per distinct regime per lane");
+        assert_eq!(shard.cache.misses, 0, "a warm-started shard never cold-misses");
+        assert!(shard.cache.hits > 0);
+        assert!(report.conserved());
+    }
+
+    #[test]
+    fn fleet_report_conserves_and_renders() {
+        let sys = pool(4, 2);
+        let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+        let est = OracleModels { gt: &gt };
+        let cfg = FleetConfig { shards: 2, telemetry: true, ..FleetConfig::default() };
+        let mut fleet = ServingFleet::new(sys, &est, cfg);
+        let streams: Vec<StreamSpec> =
+            (0..4).map(|i| lane(&format!("s{i}"), i % 2 == 0, 10 + i as u64, 4)).collect();
+        let report = fleet.serve(&streams);
+        assert_eq!(report.offered, 16);
+        assert!(report.conserved(), "completed + shed must equal offered");
+        assert!(report.aggregate_throughput > 0.0);
+        let names: usize = report.shards.iter().map(|s| s.streams.len()).sum();
+        assert_eq!(names, 4, "every stream lands on exactly one shard");
+        for s in &report.shards {
+            if s.report.is_some() {
+                assert!(!s.timeline.is_empty(), "telemetry captures every occupied shard");
+            }
+        }
+        let rendered = report.render();
+        assert!(rendered.contains("fleet:"), "{rendered}");
+        assert!(rendered.contains("2F1G"), "{rendered}");
+    }
+}

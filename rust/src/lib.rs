@@ -21,7 +21,10 @@
 //!   partition and optionally preempting in-flight slots with partial
 //!   time/energy refunds —
 //!   [`coordinator::MultiStreamServer`] and the single-stream
-//!   [`coordinator::Server`] are both front-ends over it.
+//!   [`coordinator::Server`] are both front-ends over it, and the
+//!   sharded fleet layer ([`fleet`]) scales it out: N engines on
+//!   parallel OS threads over disjoint pool slices, behind an SLO- and
+//!   cache-affinity-aware admission router with cross-shard migration.
 //! * **L2/L1 (build time, `python/`)** — the workloads' actual compute
 //!   (GCN / GIN / sliding-window transformer layers composed from Pallas
 //!   kernels), AOT-lowered to HLO text artifacts executed by [`runtime`]
@@ -36,6 +39,7 @@ pub mod coordinator;
 pub mod devices;
 pub mod engine;
 pub mod experiments;
+pub mod fleet;
 pub mod metrics;
 pub mod perfmodel;
 pub mod pipeline;
@@ -144,6 +148,7 @@ pub mod prelude {
         EnergyBudget, EngineConfig, EngineConfigBuilder, MigrationMode, QueueKind,
         RepartitionPolicy, ServingEngine, SloController, StreamSlo,
     };
+    pub use crate::fleet::{FleetConfig, FleetMigration, FleetReport, ServingFleet, ShardReport};
     pub use crate::perfmodel::{calibrate, ModelRegistry, OracleModels};
     pub use crate::pipeline::sim::PipelineSim;
     pub use crate::scenario::sweep::{Policy, SweepReport};

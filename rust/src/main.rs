@@ -10,6 +10,10 @@
 //!   serving policy (or one manifest from disk), Pareto-annotated;
 //!   `--trace` re-runs the first scenario's winner with a timeline
 //!   recorder and writes a Perfetto `trace_events` JSON.
+//! * `fleet`     — serve one scenario manifest across a sharded engine
+//!   fleet (SLO-aware routing, cache-affinity placement, cross-shard
+//!   migration); `--out` writes the shard-namespaced Perfetto trace,
+//!   `--cache-dir` persists per-shard schedule caches across runs.
 //! * `trace-validate` — strict-parse a trace file and run the exporter's
 //!   structural validator over it.
 //! * `bench-report` — render the tracked perf baseline
@@ -46,6 +50,8 @@ USAGE:
   dype calibrate [--interconnect I]
   dype sweep     [--interconnect I] [--objective O]
   dype scenario-sweep [--manifest FILE.json] [--out TRACE.json]
+  dype fleet     [--manifest FILE.json] [--shards N] [--out TRACE.json]
+                 [--cache-dir DIR]
   dype trace-validate [--trace] FILE.json
   dype bench-report   [--baseline FILE.json] [--fresh FILE.json]
   dype serve     [--inferences N] [--artifact-dir DIR]
@@ -89,6 +95,17 @@ fn sub_usage(cmd: &str) -> Option<&'static str> {
              \x20 --out TRACE      re-run the first scenario's winner with a\n\
              \x20                  recorder, write the Perfetto trace here\n\
              \x20                  (--trace is a back-compat alias)\n"
+        }
+        "fleet" => {
+            "dype fleet — serve a manifest across a sharded engine fleet\n\n\
+             USAGE:\n  dype fleet [--manifest FILE.json] [--shards N] [--out TRACE.json]\n\
+             \x20           [--cache-dir DIR]\n\n\
+             \x20 --manifest FILE  scenario manifest to serve [default: the\n\
+             \x20                  built-in fleet-balanced zoo scenario]\n\
+             \x20 --shards N       engine shards over disjoint pool slices [default: 4]\n\
+             \x20 --out TRACE      write the shard-namespaced Perfetto trace here\n\
+             \x20 --cache-dir DIR  load per-shard schedule caches before the run\n\
+             \x20                  and persist them after it\n"
         }
         "trace-validate" => {
             "dype trace-validate — strict-parse + structurally validate a trace\n\n\
@@ -299,6 +316,14 @@ fn main() -> Result<()> {
             let out = args.kv.get("out").or_else(|| args.kv.get("trace"));
             scenario_sweep(args.kv.get("manifest").map(String::as_str), out.map(String::as_str))?;
         }
+        "fleet" => {
+            fleet(
+                args.kv.get("manifest").map(String::as_str),
+                args.get_usize("shards", 4)?,
+                args.kv.get("out").map(String::as_str),
+                args.kv.get("cache-dir").map(String::as_str),
+            )?;
+        }
         "bench-report" => {
             bench_report(
                 args.get("baseline", "BENCH_serving.json"),
@@ -369,12 +394,13 @@ fn sweep(ic: Interconnect, obj: Objective) -> Result<()> {
 /// policy with a timeline recorder attached, and the Perfetto export is
 /// written to the given path.
 fn scenario_sweep(manifest: Option<&str>, trace: Option<&str>) -> Result<()> {
-    use dype::scenario::sweep::{run_grid, Policy};
+    use dype::scenario::sweep::{run_grid_parallel, Policy};
+    use dype::util::pool::default_threads;
     let manifests = match manifest {
         Some(path) => vec![dype::scenario::ScenarioManifest::load(path)?],
         None => dype::scenario::catalog::all(),
     };
-    let report = run_grid(&manifests, &Policy::ALL)?;
+    let report = run_grid_parallel(&manifests, &Policy::ALL, default_threads())?;
     print!("{}", report.render());
     if let Some(out) = trace {
         let m = &manifests[0];
@@ -408,6 +434,56 @@ fn write_winner_trace(
         m.name,
         policy.name()
     );
+    Ok(())
+}
+
+/// Serve one scenario manifest across a sharded engine fleet: route at
+/// admission, run every shard in parallel, migrate off degraded shards,
+/// and render the per-shard report. With `out`, the shard-namespaced
+/// Perfetto trace is validated and written; with `cache_dir`, per-shard
+/// schedule caches load before the run and persist after it.
+fn fleet(
+    manifest: Option<&str>,
+    shards: usize,
+    out: Option<&str>,
+    cache_dir: Option<&str>,
+) -> Result<()> {
+    use dype::engine::EngineConfig;
+    use dype::fleet::{FleetConfig, ServingFleet};
+    use dype::telemetry::export;
+    let m = match manifest {
+        Some(path) => dype::scenario::ScenarioManifest::load(path)?,
+        None => dype::scenario::catalog::fleet_balanced(),
+    };
+    let built = m.build()?;
+    let sys = built.system.clone();
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+    let cfg = FleetConfig {
+        shards,
+        engine: built.apply(EngineConfig::default()),
+        telemetry: out.is_some(),
+        registry_prewarm: true,
+        ..FleetConfig::default()
+    };
+    let mut fleet = ServingFleet::new(sys, &est, cfg);
+    if let Some(dir) = cache_dir {
+        let loaded = fleet.load_caches(dir)?;
+        println!("caches: loaded {loaded} shard file(s) from {dir}");
+    }
+    let report = fleet.serve(&built.streams);
+    print!("{}", report.render());
+    if let Some(dir) = cache_dir {
+        fleet.save_caches(dir)?;
+        println!("caches: persisted {shards} shard file(s) to {dir}");
+    }
+    if let Some(out) = out {
+        let doc = export::perfetto_fleet(&report.timelines());
+        export::validate(&doc)
+            .map_err(|e| anyhow::anyhow!("exporter produced invalid trace: {e}"))?;
+        std::fs::write(out, format!("{doc}\n"))?;
+        println!("trace: '{}' across {shards} shards -> {out}", m.name);
+    }
     Ok(())
 }
 

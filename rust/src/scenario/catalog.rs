@@ -1,14 +1,17 @@
 //! The checked-in scenario zoo.
 //!
-//! Fourteen manifests: the four canonical serving scenarios the
+//! Sixteen manifests: the four canonical serving scenarios the
 //! experiments module has always built ([`multi_stream`],
 //! [`skewed_pair`], [`energy_slo`], [`deadline`] — the
 //! `crate::experiments::*_scenario` builders now *delegate here*, so the
 //! manifest format is the single source of truth and the round-trip is
 //! bit-identical), plus ten dynamic stressors exercising the arrival
 //! curves and mid-run perturbations the static 86-case grid cannot
-//! express. [`all`] returns the full zoo; every entry has a checked-in
-//! twin under `scenarios/` that CI tree-compares against these builders.
+//! express, plus two fleet-routing scenarios ([`fleet_balanced`],
+//! [`fleet_skewed`]) sized for the sharded fleet layer
+//! ([`crate::fleet`]). [`all`] returns the full zoo; every entry has a
+//! checked-in twin under `scenarios/` that CI tree-compares against
+//! these builders.
 
 use super::{Arrival, BudgetCfg, Phase, ScenarioManifest, StreamCfg, SystemCfg, WorkloadCfg};
 use crate::config::{Interconnect, Objective};
@@ -473,6 +476,88 @@ pub fn flash_crowd_budget() -> ScenarioManifest {
     m
 }
 
+// ---------------------------------------------------------------------
+// The fleet-routing scenarios: stream mixes shaped for the sharded
+// fleet layer (`crate::fleet`) rather than a single engine.
+
+/// Eight near-equal GCN lanes on a 12F+8G pool: a four-shard fleet
+/// splits it into even 3F+2G slices and the router spreads two lanes
+/// per shard — the fleet-throughput baseline (`benches/fleet.rs` scales
+/// its request counts up and measures 1-shard vs 4-shard wall clock).
+/// No deadlines, so no shard ever degrades and no migration triggers.
+pub fn fleet_balanced() -> ScenarioManifest {
+    let streams = (0..8)
+        .map(|i| {
+            stream(
+                &format!("lane-{i}"),
+                poisson(15.0),
+                131 + i as u64,
+                vec![phase(traffic_gcn(20_000_000), 10)],
+                StreamSlo::default(),
+            )
+        })
+        .collect();
+    ScenarioManifest {
+        name: "fleet-balanced".to_string(),
+        description: "Eight near-equal GCN lanes across a four-shard 12F+8G fleet".to_string(),
+        system: SystemCfg { n_fpga: 12, n_gpu: 8, interconnect: Interconnect::Pcie4 },
+        streams,
+        budget: None,
+        perturbations: vec![],
+        telemetry: false,
+    }
+}
+
+/// An overloaded 80/s deadline lane co-locating with bulk on one slice
+/// of a two-shard paper-testbed fleet: the hot shard's shed rate clears
+/// the hysteresis bound while the other shard idles along, forcing at
+/// least one cross-shard migration (pinned in `rust/tests/fleet.rs`).
+pub fn fleet_skewed() -> ScenarioManifest {
+    let hot_slo = StreamSlo::target(0.150, 3.0)
+        .with_deadline(0.250)
+        .with_migration(MigrationMode::Preempt { min_remaining: 0.005 });
+    let streams = vec![
+        stream(
+            "deadline-hot",
+            poisson(80.0),
+            141,
+            vec![phase(traffic_gcn(2_000_000), 40)],
+            hot_slo,
+        ),
+        stream(
+            "bulk-a",
+            poisson(4.0),
+            142,
+            vec![phase(traffic_gcn(150_000_000), 6)],
+            StreamSlo::best_effort(2.0),
+        ),
+        stream(
+            "bulk-b",
+            poisson(4.0),
+            143,
+            vec![phase(traffic_gcn(150_000_000), 6)],
+            StreamSlo::best_effort(2.0),
+        ),
+        stream(
+            "light",
+            poisson(10.0),
+            144,
+            vec![phase(traffic_gcn(2_000_000), 10)],
+            StreamSlo::best_effort(1.0),
+        ),
+    ];
+    ScenarioManifest {
+        name: "fleet-skewed".to_string(),
+        description: "Overloaded deadline lane among bulk on a two-shard fleet: must migrate"
+            .to_string(),
+        system: paper_system(),
+        streams,
+        budget: None,
+        perturbations: vec![],
+        telemetry: false,
+    }
+}
+
 /// The whole zoo, canonical scenarios first. Every entry has a
 /// checked-in twin at `scenarios/<file_name>` (tree-compared in CI).
 pub fn all() -> Vec<ScenarioManifest> {
@@ -491,6 +576,8 @@ pub fn all() -> Vec<ScenarioManifest> {
         mixed_fleet(),
         cxl_fleet(),
         flash_crowd_budget(),
+        fleet_balanced(),
+        fleet_skewed(),
     ]
 }
 
@@ -501,11 +588,11 @@ mod tests {
     use std::collections::BTreeSet;
 
     #[test]
-    fn the_zoo_has_fourteen_unique_buildable_scenarios() {
+    fn the_zoo_has_sixteen_unique_buildable_scenarios() {
         let zoo = all();
-        assert_eq!(zoo.len(), 14);
+        assert_eq!(zoo.len(), 16);
         let names: BTreeSet<&str> = zoo.iter().map(|m| m.name.as_str()).collect();
-        assert_eq!(names.len(), 14, "scenario names must be unique");
+        assert_eq!(names.len(), 16, "scenario names must be unique");
         for m in &zoo {
             let built = m.build().unwrap_or_else(|e| panic!("{} fails to build: {e:#}", m.name));
             assert!(!built.streams.is_empty());
@@ -537,5 +624,11 @@ mod tests {
         assert!(over.streams.len() > over.system.n_fpga + over.system.n_gpu);
         assert!(flash_crowd_budget().budget.is_some());
         assert_eq!(flash_crowd_budget().perturbations.len(), 1);
+        let balanced = fleet_balanced();
+        assert_eq!(balanced.streams.len(), 8);
+        assert_eq!((balanced.system.n_fpga, balanced.system.n_gpu), (12, 8));
+        let skewed = fleet_skewed();
+        assert_eq!(skewed.streams[0].slo.deadline, Some(0.250));
+        assert!(matches!(skewed.streams[0].slo.migration, Some(MigrationMode::Preempt { .. })));
     }
 }

@@ -191,6 +191,39 @@ pub fn run_zoo() -> Result<SweepReport> {
     run_grid(&catalog::all(), &Policy::ALL)
 }
 
+/// [`run_grid`] fanned out over the indexed worker pool
+/// ([`crate::util::pool::run_indexed`]): every (manifest, policy) cell
+/// is one full engine run with no shared mutable state, so up to
+/// `threads` workers claim cells concurrently. Results are collected
+/// **by cell index**, never completion order, so the report — cell
+/// order, scores, rendering — is byte-identical to [`run_grid`]'s
+/// (pinned by a test); only wall time differs. Any cell's error fails
+/// the whole grid, first grid-order error wins, exactly as the serial
+/// path's early return reports it.
+pub fn run_grid_parallel(
+    manifests: &[ScenarioManifest],
+    policies: &[Policy],
+    threads: usize,
+) -> Result<SweepReport> {
+    let jobs: Vec<(&ScenarioManifest, Policy)> =
+        manifests.iter().flat_map(|m| policies.iter().map(move |&p| (m, p))).collect();
+    let results = crate::util::pool::run_indexed(jobs.len(), threads, |i| {
+        let (m, p) = jobs[i];
+        run_cell(m, p)
+    });
+    let mut cells = Vec::with_capacity(results.len());
+    for r in results {
+        cells.push(r?);
+    }
+    Ok(SweepReport { cells })
+}
+
+/// [`run_zoo`] across every available core — what the CI sweep smoke
+/// and the `scenario_sweep` example run.
+pub fn run_zoo_parallel() -> Result<SweepReport> {
+    run_grid_parallel(&catalog::all(), &Policy::ALL, crate::util::pool::default_threads())
+}
+
 /// The finished grid, ready to rank and render.
 #[derive(Debug, Clone, Default)]
 pub struct SweepReport {
@@ -341,6 +374,26 @@ mod tests {
             // Counters ride every cell; traces only opt-in manifests.
             assert!(c.telemetry.events_total() > 0);
             assert_eq!(c.trace_records, 0, "no recorder without the manifest flag");
+        }
+    }
+
+    #[test]
+    fn parallel_grid_is_byte_identical_to_serial() {
+        let manifests = vec![catalog::skewed_pair(2, 11), catalog::mmpp_burst()];
+        let policies = [Policy::Static, Policy::AdaptiveDrain];
+        let serial = run_grid(&manifests, &policies).expect("serial grid runs");
+        for threads in [1, 4] {
+            let par = run_grid_parallel(&manifests, &policies, threads).expect("parallel runs");
+            assert_eq!(par.render(), serial.render(), "threads={threads}");
+            assert_eq!(par.cells.len(), serial.cells.len());
+            for (a, b) in par.cells.iter().zip(&serial.cells) {
+                assert_eq!((a.scenario.as_str(), a.policy), (b.scenario.as_str(), b.policy));
+                assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+                assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+                assert_eq!((a.completed, a.sheds, a.offered), (b.completed, b.sheds, b.offered));
+                assert_eq!(a.telemetry, b.telemetry, "hot-path counters must match");
+                assert_eq!(a.trace_records, b.trace_records);
+            }
         }
     }
 

@@ -448,6 +448,52 @@ impl ScheduleCache {
         report
     }
 
+    /// How many cached plans match `key`'s workload shape and objective
+    /// under *any* system fingerprint — the cache-affinity signal the
+    /// fleet router ([`crate::fleet`]) scores shard placements with. The
+    /// system half of the key is deliberately ignored: a stream's plans
+    /// are keyed under whatever partition slice its lane last held, which
+    /// the router cannot predict before admission; what it can know is
+    /// whether this shard has *ever* solved this quantized regime under
+    /// this objective. Read-only: no stats are touched and no recency is
+    /// refreshed (a placement probe is not serving traffic).
+    pub fn affinity(&self, key: &CacheKey) -> usize {
+        self.entries
+            .keys()
+            .filter(|k| k.obj_fp == key.obj_fp && k.kernels == key.kernels)
+            .count()
+    }
+
+    /// Whether a plan is resident under exactly `key`. Read-only: no
+    /// hit/miss is counted and no recency is refreshed — this is for
+    /// offline seeding passes (fleet registry prewarm) that must probe
+    /// residency without polluting the serving-path statistics.
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// Copy every entry cached under `sys_fp` into `dst`, preserving this
+    /// cache's recency order (oldest first, like a persisted-cache load),
+    /// and return how many entries were offered. The cross-cache leg of a
+    /// fleet stream migration: the source shard's plans for the departing
+    /// stream's old partition are carried into the destination shard's
+    /// cache, then re-keyed onto the stream's prospective partition there
+    /// via [`ScheduleCache::prewarm`] — `self` is never mutated (the
+    /// source shard keeps serving its remaining streams from an
+    /// untouched cache). `dst`'s capacity applies as on any insert, so
+    /// the count is an upper bound on what stays resident; the follow-up
+    /// `prewarm` reports actual residency.
+    pub fn copy_fingerprint_into(&self, dst: &mut ScheduleCache, sys_fp: u64) -> usize {
+        let mut copied = 0;
+        for key in &self.lru {
+            if key.sys_fp == sys_fp && !dst.entries.contains_key(key) {
+                dst.insert(key.clone(), self.entries[key].clone());
+                copied += 1;
+            }
+        }
+        copied
+    }
+
     /// Drop every entry (e.g. after a device-parameter recalibration whose
     /// fingerprint the caller does not thread through keys).
     pub fn clear(&mut self) {
@@ -977,6 +1023,55 @@ mod tests {
         assert_eq!(r, PrewarmReport { hits: 0, misses: 1 });
         assert!(cache.lookup(&CacheKey::new(new_fp, &wl, Objective::Performance)).is_none());
         assert_eq!(cache.stats().prewarm_misses, 1);
+    }
+
+    #[test]
+    fn affinity_matches_shape_and_objective_across_fingerprints() {
+        let a = sys();
+        let b = SystemSpec { n_fpga: 1, n_gpu: 1, ..sys() };
+        let (fp_a, fp_b) = (system_fingerprint(&a), system_fingerprint(&b));
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let other = gnn::gcn_workload(&Dataset::synthetic1(), 2, 128);
+        let mut cache = ScheduleCache::new(8);
+        cache.insert(CacheKey::new(fp_a, &wl, Objective::Performance), plan());
+        cache.insert(CacheKey::new(fp_b, &wl, Objective::Performance), plan());
+        cache.insert(CacheKey::new(fp_a, &other, Objective::Performance), plan());
+
+        // Both fingerprints of the same regime count; any probe
+        // fingerprint sees them.
+        let probe = CacheKey::new(system_fingerprint(&b), &wl, Objective::Performance);
+        assert_eq!(cache.affinity(&probe), 2, "system half of the key is ignored");
+        // A different objective is a different plan family: no affinity.
+        let cold = CacheKey::new(fp_a, &wl, Objective::Energy);
+        assert_eq!(cache.affinity(&cold), 0);
+        // Probing is not traffic: counters and recency untouched.
+        assert_eq!(cache.stats().lookups(), 0);
+    }
+
+    #[test]
+    fn copy_fingerprint_into_carries_entries_for_a_cross_cache_prewarm() {
+        let old = SystemSpec { n_fpga: 2, n_gpu: 1, ..sys() };
+        let new = SystemSpec { n_fpga: 1, n_gpu: 1, ..sys() };
+        let (old_fp, new_fp) = (system_fingerprint(&old), system_fingerprint(&new));
+        let wl = gnn::gcn_workload(&Dataset::ogbn_arxiv(), 2, 128);
+        let key = CacheKey::new(old_fp, &wl, Objective::Performance);
+        let mut src = ScheduleCache::new(8);
+        src.insert(key.clone(), plan());
+        // An unrelated fingerprint must not travel.
+        src.insert(CacheKey::new(7, &wl, Objective::Performance), plan());
+
+        let mut dst = ScheduleCache::new(8);
+        assert_eq!(src.copy_fingerprint_into(&mut dst, old_fp), 1);
+        assert_eq!(dst.len(), 1, "only the requested fingerprint crosses");
+        // The migration leg: re-key inside the destination cache.
+        let r = dst.prewarm(old_fp, new_fp, new.n_fpga, new.n_gpu);
+        assert_eq!(r, PrewarmReport { hits: 1, misses: 0 });
+        assert!(dst.lookup(&CacheKey::new(new_fp, &wl, Objective::Performance)).is_some());
+        // The source cache was never mutated.
+        assert_eq!(src.len(), 2);
+        assert_eq!(src.stats().prewarm_hits, 0);
+        // Copying again is idempotent: already-present keys are skipped.
+        assert_eq!(src.copy_fingerprint_into(&mut dst, old_fp), 0);
     }
 
     #[test]

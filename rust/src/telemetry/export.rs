@@ -80,6 +80,55 @@ fn metadata(kind: &str, pid: usize, tid: usize, name: &str) -> Json {
 /// (metadata first), so [`validate`] accepts every export by
 /// construction.
 pub fn perfetto(records: &[Record], stream_names: &[String]) -> Json {
+    let mut meta = Vec::new();
+    let mut timed = Vec::new();
+    emit_timeline(records, stream_names, 1, "", &mut meta, &mut timed);
+    finish_document(meta, timed)
+}
+
+/// Serialize several shards' timelines into **one** Perfetto document,
+/// namespaced per shard: shard `s` owns pids `3s+1..3s+3` and its three
+/// process names carry a `shardS:` prefix (`shard0:streams`,
+/// `shard0:leases`, `shard0:budget`, …), so a fleet run's parallel
+/// engines land as side-by-side process groups in one trace view
+/// instead of colliding on the single-engine pids. Timed events are
+/// globally timestamp-sorted across shards (ties keep shard order, then
+/// per-shard emission order — deterministic for seeded runs), so
+/// [`validate`] accepts fleet exports by construction too. One shard in,
+/// and the document is the single-engine [`perfetto`] layout with a
+/// `shard0:` prefix.
+pub fn perfetto_fleet(shards: &[(Vec<Record>, Vec<String>)]) -> Json {
+    let mut meta = Vec::new();
+    let mut timed = Vec::new();
+    for (s, (records, names)) in shards.iter().enumerate() {
+        emit_timeline(records, names, 3 * s + 1, &format!("shard{s}:"), &mut meta, &mut timed);
+    }
+    finish_document(meta, timed)
+}
+
+/// Stable-sort the timed events behind the metadata block and wrap the
+/// result as the single-key `trace_events` document [`validate`] expects.
+fn finish_document(mut meta: Vec<Json>, mut timed: Vec<(f64, Json)>) -> Json {
+    // Stable sort: equal timestamps keep emission (= engine event) order.
+    timed.sort_by(|a, b| a.0.total_cmp(&b.0));
+    meta.extend(timed.into_iter().map(|(_, j)| j));
+    obj(vec![("traceEvents", Json::Arr(meta))])
+}
+
+/// Lay one recorded timeline out on three processes rooted at
+/// `pid_base` (streams, leases, budget — see the module docs), pushing
+/// process/thread metadata into `meta` and `(timestamp, event)` pairs
+/// into `timed`. `prefix` namespaces the process names (empty for the
+/// single-engine export, `"shardN:"` for fleet shards).
+fn emit_timeline(
+    records: &[Record],
+    stream_names: &[String],
+    pid_base: usize,
+    prefix: &str,
+    meta: &mut Vec<Json>,
+    timed: &mut Vec<(f64, Json)>,
+) {
+    let (streams_pid, leases_pid, budget_pid) = (pid_base, pid_base + 1, pid_base + 2);
     let n_streams = records
         .iter()
         .filter_map(|r| match r {
@@ -97,44 +146,41 @@ pub fn perfetto(records: &[Record], stream_names: &[String]) -> Json {
     let name_of =
         |s: usize| stream_names.get(s).cloned().unwrap_or_else(|| format!("stream-{s}"));
 
-    let mut meta: Vec<Json> = vec![
-        metadata("process_name", 1, 0, "streams"),
-        metadata("process_name", 2, 0, "leases"),
-        metadata("process_name", 3, 0, "budget"),
-        metadata("thread_name", 2, 0, "repartitions"),
-    ];
+    meta.push(metadata("process_name", streams_pid, 0, &format!("{prefix}streams")));
+    meta.push(metadata("process_name", leases_pid, 0, &format!("{prefix}leases")));
+    meta.push(metadata("process_name", budget_pid, 0, &format!("{prefix}budget")));
+    meta.push(metadata("thread_name", leases_pid, 0, "repartitions"));
     for s in 0..n_streams {
-        meta.push(metadata("thread_name", 1, s + 1, &name_of(s)));
-        meta.push(metadata("thread_name", 2, s + 1, &format!("lease:{}", name_of(s))));
+        meta.push(metadata("thread_name", streams_pid, s + 1, &name_of(s)));
+        meta.push(metadata("thread_name", leases_pid, s + 1, &format!("lease:{}", name_of(s))));
     }
 
-    let mut timed: Vec<(f64, Json)> = Vec::with_capacity(records.len());
     for r in records {
         match r {
             Record::Arrival { t, stream, index } => {
                 let args = vec![("index", Json::Num(*index as f64))];
-                timed.push((*t, instant("arrival", 1, stream + 1, *t, args)));
+                timed.push((*t, instant("arrival", streams_pid, stream + 1, *t, args)));
             }
             Record::Slot { start, end, stream, epoch } => {
                 let args = vec![("epoch", Json::Num(*epoch as f64))];
-                timed.push((*start, span("slot", 1, stream + 1, *start, *end, args)));
+                timed.push((*start, span("slot", streams_pid, stream + 1, *start, *end, args)));
             }
             Record::Shed { t, stream, index, cause } => {
                 let args = vec![
                     ("cause", Json::Str(cause.label().to_string())),
                     ("index", Json::Num(*index as f64)),
                 ];
-                timed.push((*t, instant("shed", 1, stream + 1, *t, args)));
+                timed.push((*t, instant("shed", streams_pid, stream + 1, *t, args)));
             }
             Record::Deferral { t, stream } => {
-                timed.push((*t, instant("deferral", 1, stream + 1, *t, vec![])));
+                timed.push((*t, instant("deferral", streams_pid, stream + 1, *t, vec![])));
             }
             Record::Preempt { t, stream, refunded_time, refunded_joules } => {
                 let args = vec![
                     ("refunded_time", Json::Num(*refunded_time)),
                     ("refunded_joules", Json::Num(*refunded_joules)),
                 ];
-                timed.push((*t, instant("preempt", 1, stream + 1, *t, args)));
+                timed.push((*t, instant("preempt", streams_pid, stream + 1, *t, args)));
             }
             Record::Repartition { t, shift, hysteresis, forced, leases } => {
                 let args = vec![
@@ -142,34 +188,30 @@ pub fn perfetto(records: &[Record], stream_names: &[String]) -> Json {
                     ("hysteresis", Json::Num(*hysteresis)),
                     ("forced", Json::Bool(*forced)),
                 ];
-                timed.push((*t, instant("repartition", 2, 0, *t, args)));
+                timed.push((*t, instant("repartition", leases_pid, 0, *t, args)));
                 for l in leases {
                     let args = vec![
                         ("fpga", Json::Num(l.n_fpga as f64)),
                         ("gpu", Json::Num(l.n_gpu as f64)),
                         ("share", Json::Num(l.share)),
                     ];
-                    timed.push((*t, instant("lease", 2, l.stream + 1, *t, args)));
+                    timed.push((*t, instant("lease", leases_pid, l.stream + 1, *t, args)));
                 }
             }
             Record::BudgetWindow { t, index, joules } => {
                 let args =
                     vec![("index", Json::Num(*index as f64)), ("joules", Json::Num(*joules))];
-                timed.push((*t, counter("window_joules", 3, *t, args)));
+                timed.push((*t, counter("window_joules", budget_pid, *t, args)));
             }
             Record::Perturbation { t, index, label } => {
                 let args = vec![
                     ("index", Json::Num(*index as f64)),
                     ("label", Json::Str(label.to_string())),
                 ];
-                timed.push((*t, instant("perturbation", 2, 0, *t, args)));
+                timed.push((*t, instant("perturbation", leases_pid, 0, *t, args)));
             }
         }
     }
-    // Stable sort: equal timestamps keep emission (= engine event) order.
-    timed.sort_by(|a, b| a.0.total_cmp(&b.0));
-    meta.extend(timed.into_iter().map(|(_, j)| j));
-    obj(vec![("traceEvents", Json::Arr(meta))])
 }
 
 /// Serialize a timeline as compact JSONL: one [`Record::to_json`]
@@ -320,6 +362,37 @@ mod tests {
         assert_eq!(shed.get("args").unwrap().get("cause").unwrap().as_str(), Some("queue-ahead"));
         // Timestamps are microseconds.
         assert_eq!(shed.get("ts").unwrap().as_f64(), Some(0.020 * 1e6));
+    }
+
+    #[test]
+    fn fleet_export_namespaces_shards_and_stays_valid() {
+        let shards = vec![
+            (sample(), vec!["interactive".to_string(), "bulk".to_string()]),
+            (sample(), vec!["east".to_string(), "west".to_string()]),
+        ];
+        let doc = perfetto_fleet(&shards);
+        validate(&doc).expect("fleet export must satisfy the strict validator");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // Each shard owns its own three-process pid block…
+        let process_names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("process_name"))
+            .filter_map(|e| e.get("args")?.get("name")?.as_str())
+            .collect();
+        for name in
+            ["shard0:streams", "shard0:leases", "shard0:budget", "shard1:streams", "shard1:budget"]
+        {
+            assert!(process_names.contains(&name), "missing process {name:?}");
+        }
+        // …on disjoint pids (shard 0: 1-3, shard 1: 4-6).
+        let pids: std::collections::BTreeSet<u64> =
+            events.iter().filter_map(|e| e.get("pid")?.as_u64()).collect();
+        assert_eq!(pids, (1..=6).collect());
+        // A single-shard fleet is the bare export modulo the prefix: the
+        // same events in the same order, byte-for-byte.
+        let solo = perfetto_fleet(&shards[..1]);
+        let bare = perfetto(&sample(), &shards[0].1);
+        assert_eq!(solo.to_string().replace("shard0:", ""), bare.to_string());
     }
 
     #[test]

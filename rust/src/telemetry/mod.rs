@@ -35,8 +35,7 @@
 
 pub mod export;
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::engine::EventKind;
 use crate::util::json::Json;
@@ -273,13 +272,19 @@ impl TraceRecorder for TimelineRecorder {
 /// [`crate::engine::EngineConfig`] carries so the config stays `Clone`
 /// while the caller keeps a handle to drain after the run. Cloning
 /// shares the underlying recorder (both handles see the same timeline).
+///
+/// `Send` by construction (an `Arc<Mutex<..>>` over a `Send` recorder),
+/// so a config carrying one can cross a thread boundary — what the
+/// fleet layer ([`crate::fleet`]) and the parallel sweep rely on. An
+/// engine run drives its recorder from one thread at a time, so the
+/// mutex is uncontended on the hot path.
 #[derive(Clone)]
-pub struct Recorder(Rc<RefCell<dyn TraceRecorder>>);
+pub struct Recorder(Arc<Mutex<dyn TraceRecorder + Send>>);
 
 impl Recorder {
     /// Wrap any recorder implementation.
-    pub fn new(recorder: impl TraceRecorder + 'static) -> Recorder {
-        Recorder(Rc::new(RefCell::new(recorder)))
+    pub fn new(recorder: impl TraceRecorder + Send + 'static) -> Recorder {
+        Recorder(Arc::new(Mutex::new(recorder)))
     }
 
     /// A fresh in-memory [`TimelineRecorder`].
@@ -290,12 +295,12 @@ impl Recorder {
     /// Record one event (the engine's emission path).
     #[inline]
     pub fn push(&self, rec: Record) {
-        self.0.borrow_mut().record(rec);
+        self.0.lock().unwrap().record(rec);
     }
 
     /// Drain the recorded timeline (empty for recorders that keep none).
     pub fn drain(&self) -> Vec<Record> {
-        self.0.borrow_mut().drain()
+        self.0.lock().unwrap().drain()
     }
 }
 

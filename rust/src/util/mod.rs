@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod rng;
 
 pub use json::Json;

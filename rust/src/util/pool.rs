@@ -1,0 +1,110 @@
+//! A minimal indexed worker pool over `std::thread::scope` — the shared
+//! fan-out machinery for the fleet layer ([`crate::fleet`]) and the
+//! parallel sweep ([`crate::scenario::sweep::run_grid_parallel`]).
+//!
+//! Jobs are identified by index; workers pull the next index from one
+//! atomic counter (work-stealing in its simplest form — an idle worker
+//! takes whatever job is next, so one slow job never serializes the
+//! rest), and results are collected **by job index**, never by
+//! completion order. That indexing discipline is what makes parallel
+//! runs deterministic: as long as each job is itself a pure function of
+//! its index, the output vector is byte-identical to a serial loop —
+//! the property the sweep's serial/parallel equivalence test pins.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `n` indexed jobs on up to `threads` OS threads and return their
+/// results in job-index order. `f` is called exactly once per index in
+/// `0..n`, from whichever worker claims it. Panics in a job propagate
+/// to the caller (the scope re-raises them on join).
+///
+/// `threads == 1` degenerates to an in-order serial loop on one spawned
+/// worker; the output is identical either way — only wall time varies.
+pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(threads >= 1, "a pool needs at least one worker");
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.min(n);
+    let next = AtomicUsize::new(0);
+    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
+    });
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for part in parts {
+        for (i, v) in part {
+            debug_assert!(slots[i].is_none(), "job {i} claimed twice");
+            slots[i] = Some(v);
+        }
+    }
+    slots.into_iter().map(|s| s.expect("every job index was claimed exactly once")).collect()
+}
+
+/// The host's available parallelism, floored at 1 — the default worker
+/// count for [`run_indexed`] call sites that take a thread knob.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        for threads in [1, 2, 8] {
+            let out = run_indexed(37, threads, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_oversized_pools_are_fine() {
+        let none: Vec<usize> = run_indexed(0, 4, |i| i);
+        assert!(none.is_empty());
+        let out = run_indexed(2, 64, |i| i + 1);
+        assert_eq!(out, vec![1, 2], "more workers than jobs");
+    }
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        use std::sync::atomic::AtomicU64;
+        let calls = AtomicU64::new(0);
+        let out = run_indexed(101, 8, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 101);
+        assert_eq!(out.len(), 101);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool worker panicked")]
+    fn job_panics_propagate() {
+        run_indexed(4, 2, |i| {
+            if i == 2 {
+                panic!("job 2 exploded");
+            }
+            i
+        });
+    }
+}

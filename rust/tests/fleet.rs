@@ -1,0 +1,188 @@
+//! Fleet-layer guarantees, pinned differentially against the engine.
+//!
+//! * A **single-shard fleet is the bare engine, bit for bit**: same
+//!   per-request completion times, same metrics, same cache counters,
+//!   same telemetry timeline. The fleet layer may only ever add
+//!   horizontal structure — shard 0 of a 1-shard fleet must be
+//!   indistinguishable from calling [`ServingEngine::serve`] directly.
+//! * A **multi-shard fleet conserves requests across migrations**:
+//!   every offered request completes or sheds exactly once, and every
+//!   stream's final report lives on exactly one shard.
+//! * A **registry-prewarmed shard never cold-misses** under static
+//!   leases: seeding from expected regimes at spin-up bounds the
+//!   first-window miss count at zero.
+
+use dype::coordinator::{MultiStreamReport, ServeReport};
+use dype::devices::GroundTruth;
+use dype::engine::{EngineConfig, ServingEngine};
+use dype::fleet::{FleetConfig, ServingFleet};
+use dype::perfmodel::OracleModels;
+use dype::scenario::{catalog, ScenarioManifest};
+use dype::scheduler::ScheduleCache;
+use dype::telemetry::Recorder;
+
+fn assert_serve_reports_equal(a: &ServeReport, b: &ServeReport) {
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.deferrals, b.deferrals);
+    assert_eq!(a.slot_preemptions, b.slot_preemptions);
+    assert_eq!(a.reschedules, b.reschedules);
+    assert_eq!(a.max_queue_depth, b.max_queue_depth);
+    assert_eq!(a.completions.len(), b.completions.len());
+    for (x, y) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+        assert_eq!(x.start.to_bits(), y.start.to_bits());
+        assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+    }
+    for (x, y) in [
+        (a.makespan, b.makespan),
+        (a.throughput, b.throughput),
+        (a.mean_latency, b.mean_latency),
+        (a.p50_latency, b.p50_latency),
+        (a.p90_latency, b.p90_latency),
+        (a.p99_latency, b.p99_latency),
+        (a.reschedule_downtime, b.reschedule_downtime),
+        (a.energy, b.energy),
+        (a.slo_attainment, b.slo_attainment),
+        (a.deadline_attainment, b.deadline_attainment),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+fn assert_multi_reports_equal(a: &MultiStreamReport, b: &MultiStreamReport) {
+    assert_eq!(a.streams.len(), b.streams.len());
+    for (x, y) in a.streams.iter().zip(&b.streams) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.partition, y.partition);
+        assert_serve_reports_equal(&x.report, &y.report);
+    }
+    assert_eq!(a.cache, b.cache);
+    assert_eq!(a.total_completed, b.total_completed);
+    assert_eq!(a.engine, b.engine);
+    for (x, y) in [
+        (a.makespan, b.makespan),
+        (a.aggregate_throughput, b.aggregate_throughput),
+        (a.fairness, b.fairness),
+        (a.total_energy, b.total_energy),
+        (a.throughput_per_joule, b.throughput_per_joule),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+/// Run `m` once through a bare engine and once through a 1-shard fleet
+/// under the same engine template, and demand bit-identity on reports,
+/// cache counters, and the telemetry timeline.
+fn differential(m: &ScenarioManifest, base: EngineConfig) {
+    let built = m.build().expect("manifest builds");
+    let sys = built.system.clone();
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+
+    let rec = Recorder::timeline();
+    let mut bare_cfg = built.apply(base.clone());
+    bare_cfg.recorder = Some(rec.clone());
+    let bare_cache = ScheduleCache::shared(64);
+    let mut engine =
+        ServingEngine::new(sys.clone(), &est).with_cache(bare_cache.clone()).with_config(bare_cfg);
+    let bare = engine.serve(&built.streams);
+    let bare_records = rec.drain();
+    let bare_stats = bare_cache.lock().unwrap().stats();
+
+    let cfg = FleetConfig { telemetry: true, engine: built.apply(base), ..FleetConfig::default() };
+    let mut fleet = ServingFleet::new(sys, &est, cfg);
+    let report = fleet.serve(&built.streams);
+    assert_eq!(report.shards.len(), 1);
+    assert!(report.migrations.is_empty(), "one shard has nowhere to migrate");
+    let shard = &report.shards[0];
+    let fleet_multi = shard.report.as_ref().expect("the only shard serves every stream");
+
+    assert_multi_reports_equal(&bare, fleet_multi);
+    assert_eq!(shard.cache, bare_stats, "{}: cache counters diverge", m.name);
+    assert_eq!(shard.timeline, bare_records, "{}: telemetry timelines diverge", m.name);
+    assert_eq!(report.total_completed, bare.total_completed);
+    assert_eq!(report.total_shed, bare.engine.sheds);
+    assert_eq!(report.makespan.to_bits(), bare.makespan.to_bits());
+    assert!(report.conserved());
+}
+
+#[test]
+fn single_shard_fleet_is_bit_identical_to_the_bare_engine() {
+    // Adaptive default on the canonical drift mix, and the preemptive
+    // policy on the shedding deadline mix — both engine hot paths.
+    differential(&catalog::multi_stream(1, 2, 9), EngineConfig::default());
+    differential(&catalog::deadline(2, 23), EngineConfig::builder().preemptive(1.0).build());
+}
+
+#[test]
+fn multi_shard_fleet_conserves_requests_across_migrations() {
+    let m = catalog::fleet_skewed();
+    let built = m.build().expect("manifest builds");
+    let sys = built.system.clone();
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+    let cfg = FleetConfig {
+        shards: 2,
+        engine: built.apply(EngineConfig::default()),
+        ..FleetConfig::default()
+    };
+    let mut fleet = ServingFleet::new(sys, &est, cfg);
+    let report = fleet.serve(&built.streams);
+
+    assert!(!report.migrations.is_empty(), "the skewed mix must force a migration");
+    assert!(report.conserved(), "completed + shed must equal offered across migrations");
+    // Every stream's final report lives on exactly one shard, and that
+    // report accounts for the stream's whole trace.
+    for s in &built.streams {
+        let owners: Vec<&ServeReport> = report
+            .shards
+            .iter()
+            .filter_map(|sh| sh.report.as_ref())
+            .flat_map(|r| &r.streams)
+            .filter(|sr| sr.name == s.name)
+            .map(|sr| &sr.report)
+            .collect();
+        assert_eq!(owners.len(), 1, "stream '{}' must live on exactly one shard", s.name);
+        assert_eq!(
+            owners[0].completed + owners[0].shed,
+            s.trace.len(),
+            "stream '{}' must account for every offered request",
+            s.name
+        );
+    }
+    for mig in &report.migrations {
+        assert_ne!(mig.from, mig.to, "a migration crosses shards");
+        let dest = &report.shards[mig.to];
+        assert!(dest.streams.contains(&mig.stream), "the migrated stream lands on its target");
+    }
+}
+
+#[test]
+fn registry_prewarmed_shards_never_cold_miss_under_static_leases() {
+    let m = catalog::fleet_balanced();
+    let built = m.build().expect("manifest builds");
+    let sys = built.system.clone();
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+    let cfg = FleetConfig {
+        shards: 4,
+        registry_prewarm: true,
+        engine: EngineConfig::builder().static_leases().build(),
+        ..FleetConfig::default()
+    };
+    let mut fleet = ServingFleet::new(sys, &est, cfg);
+    let report = fleet.serve(&built.streams);
+    assert!(report.conserved());
+    for shard in &report.shards {
+        assert!(shard.prewarm_seeded >= 1, "shard {} seeded nothing at spin-up", shard.shard);
+        assert_eq!(
+            shard.cache.misses,
+            0,
+            "shard {} cold-missed despite the registry prewarm",
+            shard.shard
+        );
+        assert!(shard.cache.hits > 0, "shard {} never hit its seeded plans", shard.shard);
+    }
+}

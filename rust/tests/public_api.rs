@@ -20,12 +20,12 @@
 #[allow(unused_imports)]
 use dype::prelude::{
     baselines, calibrate, generate_trace, gnn, transformer, Arrival, CacheStats, Coordinator,
-    Dataset, DeviceType, DpScheduler, EnergyBudget, EngineConfig, EngineConfigBuilder, GroundTruth,
-    Interconnect, KernelDesc, KernelKind, MigrationMode, ModelRegistry, MultiStreamReport,
-    MultiStreamServer, Objective, OracleModels, PipelineSim, Policy, QueueKind, Recorder,
-    RepartitionPolicy, ScenarioManifest, Schedule, ScheduleCache, ServeReport, Server,
-    ServingEngine, SloController, Snapshot, Stage, StreamSlo, StreamSpec, SweepReport, SystemSpec,
-    TraceRecorder, Workload,
+    Dataset, DeviceType, DpScheduler, EnergyBudget, EngineConfig, EngineConfigBuilder, FleetConfig,
+    FleetMigration, FleetReport, GroundTruth, Interconnect, KernelDesc, KernelKind, MigrationMode,
+    ModelRegistry, MultiStreamReport, MultiStreamServer, Objective, OracleModels, PipelineSim,
+    Policy, QueueKind, Recorder, RepartitionPolicy, ScenarioManifest, Schedule, ScheduleCache,
+    ServeReport, Server, ServingEngine, ServingFleet, ShardReport, SloController, Snapshot, Stage,
+    StreamSlo, StreamSpec, SweepReport, SystemSpec, TraceRecorder, Workload,
 };
 
 /// Every name `dype::prelude` re-exports. Order here is cosmetic (the
@@ -40,6 +40,9 @@ const GOLDEN_PRELUDE: &[&str] = &[
     "EnergyBudget",
     "EngineConfig",
     "EngineConfigBuilder",
+    "FleetConfig",
+    "FleetMigration",
+    "FleetReport",
     "GroundTruth",
     "Interconnect",
     "KernelDesc",
@@ -61,6 +64,8 @@ const GOLDEN_PRELUDE: &[&str] = &[
     "ServeReport",
     "Server",
     "ServingEngine",
+    "ServingFleet",
+    "ShardReport",
     "SloController",
     "Snapshot",
     "Stage",
