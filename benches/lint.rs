@@ -1,0 +1,39 @@
+//! Static-analyzer bench (DESIGN.md §Static Analysis): full-zoo lint
+//! cost, one median for the whole catalog and one for the heaviest
+//! single manifest, recorded to the CI perf trajectory via
+//! `DYPE_BENCH_JSON` (see `util::bench::record_json`).
+//!
+//! Lint runs at the head of every `dype scenario-sweep` and `dype
+//! fleet` invocation, so its cost is part of those commands' startup
+//! latency — the trajectory exists to catch the analyzer's model pass
+//! (one DP + re-time per distinct (lease, workload, objective) triple)
+//! regressing from memoized to quadratic.
+
+use dype::analysis::lint_manifest;
+use dype::scenario::catalog;
+use dype::util::bench::{bench, header, record_json};
+
+fn main() {
+    let zoo = catalog::all();
+    println!("{}", header());
+    let mut entries = Vec::new();
+
+    let name = "lint/zoo".to_string();
+    let stats = bench(&name, 1, 5, || {
+        for m in &zoo {
+            std::hint::black_box(lint_manifest(m));
+        }
+    });
+    println!("{}", stats.report());
+    entries.push((name, stats.median));
+
+    let fleet = catalog::fleet_balanced();
+    let name = "lint/fleet_balanced".to_string();
+    let stats = bench(&name, 1, 5, || {
+        std::hint::black_box(lint_manifest(&fleet));
+    });
+    println!("{}", stats.report());
+    entries.push((name, stats.median));
+
+    record_json(&entries);
+}

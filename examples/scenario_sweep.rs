@@ -14,12 +14,21 @@
 //! Run: `cargo run --release --example scenario_sweep -- [--quick]`
 //! (`--quick` sweeps the three smallest scenarios only).
 
+use dype::analysis::lint_manifest;
 use dype::scenario::catalog;
 use dype::scenario::sweep::{run_grid_parallel, run_zoo_parallel, Policy};
 use dype::util::pool::default_threads;
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
+
+    // Static pre-pass (`dype lint` does the same before every sweep):
+    // prove the zoo feasible without running a single simulated event.
+    let lints: Vec<_> = catalog::all().iter().map(lint_manifest).collect();
+    let warnings: usize = lints.iter().map(|r| r.warnings()).sum();
+    anyhow::ensure!(lints.iter().all(|r| r.is_clean()), "the zoo must lint error-clean");
+    println!("lint: {} manifests feasible ({warnings} advisory warning(s))\n", lints.len());
+
     // The parallel grid fans cells out across a worker pool and is
     // byte-identical to the serial sweep (pinned by a tier-1 test).
     let report = if quick {

@@ -1,0 +1,1077 @@
+//! Static feasibility & consistency analysis — `dype lint`.
+//!
+//! DYPE's premise is that schedule quality is decidable from input-data
+//! characteristics *before* execution; this module brings that analysis
+//! to t = 0. [`lint_manifest`] proves or refutes feasibility of a
+//! [`ScenarioManifest`] without simulating a single event: it replays
+//! the engine's own t = 0 lease math ([`crate::engine::lease::assign`]
+//! over SLO-weighted demands) and derives each stream's **zero-load
+//! batch floor** — the DP plan for each phase's workload, re-timed under
+//! the oracle estimator exactly as the engine's dispatch path would, so
+//! the admission feasibility inequality `elapsed + batch > deadline` can
+//! be evaluated symbolically at zero load. On top of that it walks the
+//! scripted perturbation timeline against the device pool and the trace
+//! horizon, and prices the energy budget against the cheapest per-window
+//! demand of each priority class. [`lint_engine_config`] and
+//! [`lint_fleet`] add config-dependent checks (frozen leases, shard
+//! shapes, prewarm coverage).
+//!
+//! Every finding is a typed [`Diagnostic`] with a stable `DYxxx` code
+//! and the manifest key path it anchors to — the same dotted
+//! `streams[2].slo.deadline` paths the strict JSON codec reports — so a
+//! lint finding and a parse error point at a manifest the same way.
+//!
+//! Severity contract: an **error** means the simulator is known to
+//! refuse, panic, or unconditionally shed (every error code has a
+//! differential test in `rust/tests/lint.rs` where the simulator
+//! confirms the predicted failure mode); a **warning** means the
+//! scenario runs but a stated intent cannot be met. `dype
+//! scenario-sweep` and `dype fleet` refuse error-severity manifests
+//! before building an engine; warnings annotate the run. The full code
+//! table lives in DESIGN.md §Static Analysis.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::config::Objective;
+use crate::devices::GroundTruth;
+use crate::engine::{lease, EngineConfig, MigrationMode, PerturbationKind, SloController};
+use crate::fleet::FleetConfig;
+use crate::perfmodel::OracleModels;
+use crate::scenario::{Arrival, ScenarioManifest, WorkloadCfg};
+use crate::scheduler::{evaluate_plan, DpScheduler, PowerTable};
+use crate::util::json::Json;
+
+/// Diagnostic severity. `Error` means the simulator is known to refuse,
+/// panic, or unconditionally shed; `Warning` means the run proceeds but
+/// a stated intent cannot be met. `Ord` puts `Error` above `Warning` so
+/// reports sort errors first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// One static-analysis finding: a stable code (`DY001`..), a severity,
+/// the manifest key path it anchors to (same dotted spelling as the
+/// strict codec's parse errors), a human-readable claim, and the
+/// numeric evidence backing it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    pub key_path: String,
+    pub message: String,
+    pub evidence: String,
+}
+
+impl Diagnostic {
+    fn error(
+        code: &'static str,
+        key_path: impl Into<String>,
+        message: impl Into<String>,
+        evidence: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: Severity::Error,
+            key_path: key_path.into(),
+            message: message.into(),
+            evidence: evidence.into(),
+        }
+    }
+
+    fn warning(
+        code: &'static str,
+        key_path: impl Into<String>,
+        message: impl Into<String>,
+        evidence: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic {
+            severity: Severity::Warning,
+            ..Diagnostic::error(code, key_path, message, evidence)
+        }
+    }
+
+    /// `severity[code] key_path: message (evidence)` — one line per
+    /// finding, grep-stable.
+    pub fn render(&self) -> String {
+        let Diagnostic { code, severity, key_path, message, evidence } = self;
+        format!("{severity}[{code}] {key_path}: {message} ({evidence})")
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("code".to_string(), Json::Str(self.code.to_string()));
+        m.insert("severity".to_string(), Json::Str(self.severity.to_string()));
+        m.insert("key_path".to_string(), Json::Str(self.key_path.clone()));
+        m.insert("message".to_string(), Json::Str(self.message.clone()));
+        m.insert("evidence".to_string(), Json::Str(self.evidence.clone()));
+        Json::Obj(m)
+    }
+}
+
+/// All findings for one manifest, errors first. [`LintReport::is_clean`]
+/// is the gate `dype scenario-sweep` / `dype fleet` consult before
+/// building an engine.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    /// The linted manifest's `name`.
+    pub manifest: String,
+    /// Findings, sorted errors-first, then by key path, then by code.
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// No error-severity findings (warnings are allowed).
+    pub fn is_clean(&self) -> bool {
+        self.errors() == 0
+    }
+
+    /// True if any finding carries `code`.
+    pub fn has_code(&self, code: &str) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.diagnostics.is_empty() {
+            out.push_str(&format!("{}: clean\n", self.manifest));
+        } else {
+            out.push_str(&format!(
+                "{}: {} error(s), {} warning(s)\n",
+                self.manifest,
+                self.errors(),
+                self.warnings()
+            ));
+            for d in &self.diagnostics {
+                out.push_str("  ");
+                out.push_str(&d.render());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("manifest".to_string(), Json::Str(self.manifest.clone()));
+        m.insert("errors".to_string(), Json::Num(self.errors() as f64));
+        m.insert("warnings".to_string(), Json::Num(self.warnings() as f64));
+        let ds = self.diagnostics.iter().map(Diagnostic::to_json).collect();
+        m.insert("diagnostics".to_string(), Json::Arr(ds));
+        Json::Obj(m)
+    }
+}
+
+fn sort_diagnostics(ds: &mut [Diagnostic]) {
+    ds.sort_by(|a, b| {
+        b.severity
+            .cmp(&a.severity)
+            .then_with(|| a.key_path.cmp(&b.key_path))
+            .then_with(|| a.code.cmp(b.code))
+    });
+}
+
+/// Statically analyze one manifest. Structural (value-level) findings
+/// that would make the scenario panic at build time block the model
+/// checks — a manifest with a negative arrival rate gets its `DY011`
+/// and nothing deeper, because the deeper checks would have to build
+/// exactly the thing that panics.
+pub fn lint_manifest(m: &ScenarioManifest) -> LintReport {
+    let mut out = Vec::new();
+    let blocked = structural_checks(m, &mut out);
+    if !blocked {
+        pool_timeline_checks(m, &mut out);
+        model_checks(m, &mut out);
+    }
+    sort_diagnostics(&mut out);
+    LintReport { manifest: m.name.clone(), diagnostics: out }
+}
+
+/// Config-dependent consistency checks: findings that depend on *which*
+/// engine policy a manifest runs under, not on the manifest alone.
+pub fn lint_engine_config(m: &ScenarioManifest, cfg: &EngineConfig) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if cfg.repartition.is_none() {
+        for (i, s) in m.streams.iter().enumerate() {
+            if let Some(MigrationMode::Preempt { .. }) = s.slo.migration {
+                out.push(Diagnostic::warning(
+                    "DY006",
+                    format!("streams[{i}].slo.migration"),
+                    "preempt override under frozen leases can never fire",
+                    "the engine config has no repartition policy, so no migration ever happens",
+                ));
+            }
+        }
+    }
+    sort_diagnostics(&mut out);
+    out
+}
+
+/// Fleet shape checks for running `m` under `cfg`, including the
+/// engine-config checks for the per-shard template. Run this *before*
+/// constructing a [`crate::fleet::ServingFleet`] — a shard count the
+/// pool cannot cover panics in `split_pool`.
+pub fn lint_fleet(m: &ScenarioManifest, cfg: &FleetConfig) -> Vec<Diagnostic> {
+    let mut out = lint_engine_config(m, &cfg.engine);
+    let devices = m.system.n_fpga + m.system.n_gpu;
+    if cfg.shards == 0 {
+        out.push(Diagnostic::error(
+            "DY009",
+            "fleet.shards",
+            "a fleet needs at least one shard",
+            "shards = 0",
+        ));
+    } else if cfg.shards > devices {
+        out.push(Diagnostic::error(
+            "DY009",
+            "fleet.shards",
+            "more shards than devices: the pool split cannot give every shard a device",
+            format!("{} shards over {devices} devices", cfg.shards),
+        ));
+    } else if cfg.shards > m.streams.len() {
+        out.push(Diagnostic::warning(
+            "DY009",
+            "fleet.shards",
+            "more shards than streams: some shards idle for the whole run",
+            format!("{} shards, {} streams", cfg.shards, m.streams.len()),
+        ));
+    }
+    if cfg.registry_prewarm {
+        for (i, s) in m.streams.iter().enumerate() {
+            if matches!(s.objective, Objective::Balanced { .. }) {
+                out.push(Diagnostic::warning(
+                    "DY010",
+                    format!("streams[{i}].objective"),
+                    "registry prewarm skips balanced-objective lanes",
+                    "balanced schedules bypass the cache, so this lane stays cold",
+                ));
+            }
+        }
+    }
+    sort_diagnostics(&mut out);
+    out
+}
+
+// ---------------------------------------------------------------------
+// Structural pass: value-level mirrors of every build-time panic
+// (DY011) and perturbation-script validation (DY007). Returns true when
+// a finding blocks the model pass.
+
+fn structural_checks(m: &ScenarioManifest, out: &mut Vec<Diagnostic>) -> bool {
+    let mut blocked = false;
+    let mut block = |out: &mut Vec<Diagnostic>, d: Diagnostic| {
+        out.push(d);
+        blocked = true;
+    };
+
+    if m.system.n_fpga + m.system.n_gpu == 0 {
+        let d = Diagnostic::error("DY011", "system", "the device pool is empty", "n_fpga+n_gpu = 0");
+        block(out, d);
+    }
+    if m.streams.is_empty() {
+        let d = Diagnostic::error("DY011", "streams", "the scenario has no streams", "streams = []");
+        block(out, d);
+    }
+    for (i, s) in m.streams.iter().enumerate() {
+        let base = format!("streams[{i}]");
+        if s.phases.is_empty() {
+            block(
+                out,
+                Diagnostic::error(
+                    "DY011",
+                    format!("{base}.phases"),
+                    "the stream has no phases",
+                    "phases = []",
+                ),
+            );
+        } else if s.phases.iter().map(|p| p.count).sum::<usize>() == 0 {
+            block(
+                out,
+                Diagnostic::error(
+                    "DY011",
+                    format!("{base}.phases"),
+                    "every phase count is zero, so the trace is empty",
+                    "sum of phase counts = 0",
+                ),
+            );
+        }
+        for (field, value) in arrival_value_errors(&s.arrival) {
+            block(
+                out,
+                Diagnostic::error(
+                    "DY011",
+                    format!("{base}.arrival.{field}"),
+                    "arrival parameter out of range",
+                    value,
+                ),
+            );
+        }
+        for (field, value) in slo_value_errors(s) {
+            block(
+                out,
+                Diagnostic::error(
+                    "DY011",
+                    format!("{base}.slo.{field}"),
+                    "SLO value out of range",
+                    value,
+                ),
+            );
+        }
+    }
+    if let Some(b) = &m.budget {
+        if !(b.cap_watts > 0.0 && b.cap_watts.is_finite()) {
+            block(
+                out,
+                Diagnostic::error(
+                    "DY011",
+                    "budget.cap_watts",
+                    "power cap must be positive and finite",
+                    format!("cap_watts = {}", b.cap_watts),
+                ),
+            );
+        }
+        if !(b.window > 0.0 && b.window.is_finite()) {
+            block(
+                out,
+                Diagnostic::error(
+                    "DY011",
+                    "budget.window",
+                    "budget window must be positive and finite",
+                    format!("window = {}", b.window),
+                ),
+            );
+        }
+    }
+
+    let mut scale_instants: Vec<f64> = Vec::new();
+    for (i, p) in m.perturbations.iter().enumerate() {
+        let path = format!("perturbations[{i}]");
+        if !(p.at > 0.0 && p.at.is_finite()) {
+            block(
+                out,
+                Diagnostic::error(
+                    "DY007",
+                    path.clone(),
+                    "firing time must be positive and finite",
+                    format!("at = {}", p.at),
+                ),
+            );
+            continue;
+        }
+        match p.kind {
+            PerturbationKind::DeviceCut { n_fpga, n_gpu } => {
+                if n_fpga + n_gpu == 0 {
+                    block(
+                        out,
+                        Diagnostic::error(
+                            "DY007",
+                            path,
+                            "a device cut must remove at least one device",
+                            "n_fpga = 0, n_gpu = 0",
+                        ),
+                    );
+                }
+            }
+            PerturbationKind::BudgetScale { factor } => {
+                if !(factor >= 0.0 && factor.is_finite()) {
+                    block(
+                        out,
+                        Diagnostic::error(
+                            "DY007",
+                            path,
+                            "budget scale factor must be non-negative and finite",
+                            format!("factor = {factor}"),
+                        ),
+                    );
+                } else {
+                    if m.budget.is_none() {
+                        // Non-blocking: the engine runs this as a no-op,
+                        // but the script's intent cannot possibly happen.
+                        out.push(Diagnostic::error(
+                            "DY007",
+                            path.clone(),
+                            "budget-scale without a budget is a guaranteed no-op",
+                            "the manifest defines no energy budget to scale",
+                        ));
+                    }
+                    if scale_instants.iter().any(|t| *t == p.at) {
+                        out.push(Diagnostic::warning(
+                            "DY007",
+                            path,
+                            "duplicate budget-scale at the same instant",
+                            format!("another budget-scale also fires at t = {}", p.at),
+                        ));
+                    }
+                    scale_instants.push(p.at);
+                }
+            }
+            PerturbationKind::SloTighten { stream, p99_scale, deadline_scale } => {
+                if stream >= m.streams.len() {
+                    block(
+                        out,
+                        Diagnostic::error(
+                            "DY007",
+                            path,
+                            "slo-tighten targets a stream that does not exist",
+                            format!("stream = {stream}, but the scenario has {}", m.streams.len()),
+                        ),
+                    );
+                } else if !(p99_scale > 0.0 && p99_scale.is_finite())
+                    || !(deadline_scale > 0.0 && deadline_scale.is_finite())
+                {
+                    block(
+                        out,
+                        Diagnostic::error(
+                            "DY007",
+                            path,
+                            "slo-tighten scales must be positive and finite",
+                            format!("p99_scale = {p99_scale}, deadline_scale = {deadline_scale}"),
+                        ),
+                    );
+                } else {
+                    let slo = &m.streams[stream].slo;
+                    if slo.p99_target.is_none() && slo.deadline.is_none() {
+                        out.push(Diagnostic::warning(
+                            "DY007",
+                            path,
+                            "slo-tighten targets a stream with neither p99 target nor deadline",
+                            format!("stream {stream} has nothing to tighten"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    blocked
+}
+
+/// Value-level mirror of `Arrival::validate` (which panics): each entry
+/// is `(field, evidence)`.
+fn arrival_value_errors(a: &Arrival) -> Vec<(&'static str, String)> {
+    fn positive(out: &mut Vec<(&'static str, String)>, field: &'static str, x: f64) {
+        if !(x > 0.0 && x.is_finite()) {
+            out.push((field, format!("{field} = {x}, must be positive and finite")));
+        }
+    }
+    let mut out = Vec::new();
+    match a {
+        Arrival::Poisson { rate } => positive(&mut out, "rate", *rate),
+        Arrival::Diurnal { base_rate, peak_rate, period } => {
+            positive(&mut out, "base_rate", *base_rate);
+            positive(&mut out, "peak_rate", *peak_rate);
+            positive(&mut out, "period", *period);
+        }
+        Arrival::FlashCrowd { base_rate, peak_rate, start, duration } => {
+            positive(&mut out, "base_rate", *base_rate);
+            positive(&mut out, "peak_rate", *peak_rate);
+            positive(&mut out, "duration", *duration);
+            if !(*start >= 0.0 && start.is_finite()) {
+                out.push(("start", format!("start = {start}, must be >= 0 and finite")));
+            }
+        }
+        Arrival::Mmpp { rates, dwell } => {
+            if rates.is_empty() {
+                out.push(("rates", "rates = [], needs at least one state".to_string()));
+            }
+            for r in rates {
+                if !(*r > 0.0 && r.is_finite()) {
+                    out.push(("rates", format!("rate {r} must be positive and finite")));
+                    break;
+                }
+            }
+            positive(&mut out, "dwell", *dwell);
+        }
+    }
+    out
+}
+
+/// Value-level mirror of `StreamSlo::validate` (which panics).
+fn slo_value_errors(s: &crate::scenario::StreamCfg) -> Vec<(&'static str, String)> {
+    let mut out = Vec::new();
+    let slo = &s.slo;
+    if !(slo.priority > 0.0 && slo.priority.is_finite()) {
+        out.push(("priority", format!("priority = {}, must be positive and finite", slo.priority)));
+    }
+    if let Some(t) = slo.p99_target {
+        if !(t > 0.0 && t.is_finite()) {
+            out.push(("p99_target", format!("p99_target = {t}, must be positive and finite")));
+        }
+    }
+    if let Some(d) = slo.deadline {
+        if !(d > 0.0 && d.is_finite()) {
+            out.push(("deadline", format!("deadline = {d}, must be positive and finite")));
+        }
+    }
+    if let Some(MigrationMode::Preempt { min_remaining }) = slo.migration {
+        if !(min_remaining >= 0.0 && min_remaining.is_finite()) {
+            out.push((
+                "migration",
+                format!("min_remaining = {min_remaining}, must be >= 0 and finite"),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Perturbation-timeline pass: walk the scripted device cuts in firing
+// order against the pool inventory (DY001 pool exhaustion, DY002
+// over-subscription at t = 0 and after each cut).
+
+fn pool_timeline_checks(m: &ScenarioManifest, out: &mut Vec<Diagnostic>) {
+    let k = m.streams.len();
+    let (mut f, mut g) = (m.system.n_fpga, m.system.n_gpu);
+    if k > f + g {
+        out.push(Diagnostic::warning(
+            "DY002",
+            "streams",
+            "streams outnumber devices from the start: every lease is time-sliced",
+            format!("{k} streams over {} devices", f + g),
+        ));
+    }
+    let mut cuts: Vec<(usize, f64, usize, usize)> = m
+        .perturbations
+        .iter()
+        .enumerate()
+        .filter_map(|(i, p)| match p.kind {
+            PerturbationKind::DeviceCut { n_fpga, n_gpu } => Some((i, p.at, n_fpga, n_gpu)),
+            _ => None,
+        })
+        .collect();
+    cuts.sort_by(|a, b| a.1.total_cmp(&b.1));
+    for (i, at, cf, cg) in cuts {
+        let before = f + g;
+        f = f.saturating_sub(cf);
+        g = g.saturating_sub(cg);
+        if f + g == 0 {
+            out.push(Diagnostic::error(
+                "DY001",
+                format!("perturbations[{i}]"),
+                "this cut empties the device pool",
+                format!(
+                    "at t = {at} the pool is {before} devices; the engine would clamp to a \
+                     phantom single GPU the scenario never declared"
+                ),
+            ));
+            // Continue the timeline the way the engine would.
+            g = 1;
+        } else if k > f + g && k <= before {
+            out.push(Diagnostic::warning(
+                "DY002",
+                format!("perturbations[{i}]"),
+                "after this cut streams outnumber the surviving devices",
+                format!("{k} streams over {} devices from t = {at}", f + g),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model pass: build the streams, replay the engine's t = 0 lease
+// assignment, and derive zero-load batch floors per (stream, phase) by
+// running the DP and re-timing its plan — exactly what the engine's
+// first admission does. Feeds DY003 (deadline infeasibility), DY004
+// (budget starvation), DY005 (p99 below floor), DY006 (preemption
+// threshold above any batch), DY008 (events past the trace horizon).
+
+struct StreamModel {
+    /// Zero-load batch floor of the cheapest phase (s).
+    min_floor: f64,
+    /// Zero-load batch floor of the most expensive phase (s).
+    max_floor: f64,
+    /// Phase index of `max_floor`.
+    worst_phase: usize,
+    /// Cheapest modeled energy per inference over the phases (J).
+    min_energy: f64,
+    /// Offered request rate over the trace span (req/s).
+    offered_rate: f64,
+    /// Last arrival instant (s).
+    last_arrival: f64,
+}
+
+fn model_checks(m: &ScenarioManifest, out: &mut Vec<Diagnostic>) {
+    let mut specs = Vec::new();
+    for (i, s) in m.streams.iter().enumerate() {
+        match s.build() {
+            Ok(spec) => specs.push(spec),
+            Err(e) => {
+                out.push(Diagnostic::error(
+                    "DY011",
+                    format!("streams[{i}]"),
+                    "the stream does not build",
+                    format!("{e:#}"),
+                ));
+                return;
+            }
+        }
+    }
+    let sys = m.system.build();
+    let controller = SloController::default();
+    let weighted: Vec<f64> = m
+        .streams
+        .iter()
+        .zip(&specs)
+        .map(|(cfg, spec)| spec.demand() * controller.weight(&cfg.slo, None))
+        .collect();
+    let assignment = lease::assign(&sys, &weighted);
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+    let comm = sys.comm_model();
+    let power = PowerTable::new(sys.gpu.clone(), sys.fpga.clone());
+
+    // One DP run per distinct (partition shape, workload, objective):
+    // partitions share the testbed device configs, so shape is identity.
+    let mut memo: Vec<((usize, usize, WorkloadCfg, Objective), (f64, f64, f64))> = Vec::new();
+
+    let mut models: Vec<StreamModel> = Vec::new();
+    for (i, s) in m.streams.iter().enumerate() {
+        let (part, share) = assignment.lease_of(i);
+        let mut model = StreamModel {
+            min_floor: f64::INFINITY,
+            max_floor: 0.0,
+            worst_phase: 0,
+            min_energy: f64::INFINITY,
+            offered_rate: specs[i].offered_rate(),
+            last_arrival: specs[i].trace.last().map_or(0.0, |r| r.arrival),
+        };
+        if share > 0.0 {
+            for (pi, phase) in s.phases.iter().enumerate() {
+                if phase.count == 0 {
+                    continue;
+                }
+                let key = (part.n_fpga, part.n_gpu, phase.workload.clone(), s.objective);
+                let (period, latency, energy) = match memo.iter().find(|(k, _)| *k == key) {
+                    Some((_, v)) => *v,
+                    None => {
+                        let wl = phase.workload.build();
+                        let sched = DpScheduler::new(part, &est).schedule(&wl, s.objective);
+                        let timed = evaluate_plan(&wl, &sched.plan(), &est, &comm, &power);
+                        let v = (timed.period, timed.latency(), timed.energy_per_inf);
+                        memo.push((key, v));
+                        v
+                    }
+                };
+                // The engine's measured-regime batch estimate at zero
+                // pending load: (period / share) + latency - period.
+                let floor = (period / share).max(1e-12) + latency - period;
+                if floor < model.min_floor {
+                    model.min_floor = floor;
+                }
+                if floor > model.max_floor {
+                    model.max_floor = floor;
+                    model.worst_phase = pi;
+                }
+                if energy < model.min_energy {
+                    model.min_energy = energy;
+                }
+            }
+        }
+        models.push(model);
+    }
+
+    for (i, s) in m.streams.iter().enumerate() {
+        let model = &models[i];
+        if !model.min_floor.is_finite() {
+            continue;
+        }
+        if let Some(d) = s.slo.deadline {
+            if model.min_floor > d {
+                out.push(Diagnostic::error(
+                    "DY003",
+                    format!("streams[{i}].slo.deadline"),
+                    "deadline below the zero-load batch floor of every phase: every request sheds",
+                    format!("cheapest phase floor {:.6}s > deadline {d}s", model.min_floor),
+                ));
+            } else if model.max_floor > d {
+                out.push(Diagnostic::warning(
+                    "DY003",
+                    format!("streams[{i}].slo.deadline"),
+                    format!(
+                        "deadline below the zero-load batch floor of phase {}: its requests shed \
+                         even on an idle pool",
+                        model.worst_phase
+                    ),
+                    format!("phase floor {:.6}s > deadline {d}s", model.max_floor),
+                ));
+            }
+        }
+        if let Some(t) = s.slo.p99_target {
+            if t < model.min_floor {
+                out.push(Diagnostic::warning(
+                    "DY005",
+                    format!("streams[{i}].slo.p99_target"),
+                    "p99 target below the zero-load batch floor of every phase: unattainable",
+                    format!("cheapest phase floor {:.6}s > target {t}s", model.min_floor),
+                ));
+            } else if t < model.max_floor {
+                out.push(Diagnostic::warning(
+                    "DY005",
+                    format!("streams[{i}].slo.p99_target"),
+                    format!(
+                        "p99 target below the zero-load batch floor of phase {}: unattainable \
+                         while it serves",
+                        model.worst_phase
+                    ),
+                    format!("phase floor {:.6}s > target {t}s", model.max_floor),
+                ));
+            }
+        }
+        if let Some(MigrationMode::Preempt { min_remaining }) = s.slo.migration {
+            if model.max_floor > 0.0 && min_remaining >= model.max_floor {
+                out.push(Diagnostic::warning(
+                    "DY006",
+                    format!("streams[{i}].slo.migration"),
+                    "preemption threshold exceeds the longest zero-load batch: it can never fire",
+                    format!(
+                        "min_remaining {min_remaining}s >= worst phase floor {:.6}s",
+                        model.max_floor
+                    ),
+                ));
+            }
+        }
+    }
+
+    if let Some(b) = &m.budget {
+        let jpw = b.cap_watts * b.window;
+        let demand: Vec<f64> = models
+            .iter()
+            .map(|md| {
+                if md.min_energy.is_finite() {
+                    md.min_energy * md.offered_rate * b.window
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let total: f64 = demand.iter().sum();
+        if total > jpw {
+            out.push(Diagnostic::warning(
+                "DY004",
+                "budget",
+                "the cheapest per-window energy demand already exceeds the window budget",
+                format!("{total:.3} J demanded per {}s window vs {jpw:.3} J budgeted", b.window),
+            ));
+        }
+        for (i, s) in m.streams.iter().enumerate() {
+            let Some(d) = s.slo.deadline else { continue };
+            let higher: f64 = m
+                .streams
+                .iter()
+                .zip(&demand)
+                .filter(|(o, _)| o.slo.priority > s.slo.priority)
+                .map(|(_, dem)| *dem)
+                .sum();
+            if higher >= jpw && d < b.window {
+                out.push(Diagnostic::error(
+                    "DY004",
+                    format!("streams[{i}].slo.deadline"),
+                    "budget starvation: strictly-higher-priority classes drain every window \
+                     before this deadline lane runs, and its deadline is shorter than the \
+                     window, so deferral is a shed",
+                    format!(
+                        "higher-priority demand {higher:.3} J >= budget {jpw:.3} J per window; \
+                         deadline {d}s < window {}s",
+                        b.window
+                    ),
+                ));
+            }
+        }
+    }
+
+    let horizon = models.iter().map(|md| md.last_arrival).fold(0.0, f64::max);
+    for (i, p) in m.perturbations.iter().enumerate() {
+        if p.at > horizon {
+            out.push(Diagnostic::warning(
+                "DY008",
+                format!("perturbations[{i}]"),
+                "fires after the last arrival: nothing is left to perturb",
+                format!("at = {}s, trace horizon = {horizon:.3}s", p.at),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Interconnect;
+    use crate::engine::{Perturbation, StreamSlo};
+    use crate::scenario::{catalog, BudgetCfg, Phase, StreamCfg, SystemCfg};
+
+    fn codes(ds: &[Diagnostic]) -> Vec<&'static str> {
+        ds.iter().map(|d| d.code).collect()
+    }
+
+    fn heavy_gcn() -> WorkloadCfg {
+        WorkloadCfg::Gcn {
+            code: "TF".to_string(),
+            graph: "traffic".to_string(),
+            vertices: 1_000_000,
+            edges: 150_000_000,
+            feature_len: 200,
+            degree_skew: 0.2,
+            layers: 2,
+            hidden: 128,
+        }
+    }
+
+    fn light_gcn() -> WorkloadCfg {
+        WorkloadCfg::Gcn {
+            code: "TF".to_string(),
+            graph: "traffic".to_string(),
+            vertices: 1_000_000,
+            edges: 2_000_000,
+            feature_len: 200,
+            degree_skew: 0.2,
+            layers: 2,
+            hidden: 128,
+        }
+    }
+
+    fn one_lane(workload: WorkloadCfg, slo: StreamSlo) -> ScenarioManifest {
+        ScenarioManifest {
+            name: "lint-probe".to_string(),
+            description: "synthetic lint probe".to_string(),
+            system: SystemCfg { n_fpga: 3, n_gpu: 2, interconnect: Interconnect::Pcie4 },
+            streams: vec![StreamCfg {
+                name: "lane".to_string(),
+                objective: Objective::Performance,
+                seed: 7,
+                arrival: Arrival::Poisson { rate: 20.0 },
+                phases: vec![Phase { workload, count: 8 }],
+                slo,
+            }],
+            budget: None,
+            perturbations: Vec::new(),
+            telemetry: false,
+        }
+    }
+
+    #[test]
+    fn the_zoo_is_error_clean() {
+        for m in catalog::all() {
+            let report = lint_manifest(&m);
+            assert!(report.is_clean(), "{}", report.render());
+        }
+    }
+
+    #[test]
+    fn emptying_device_cut_is_dy001() {
+        let mut m = catalog::device_failure();
+        m.perturbations = vec![Perturbation::device_cut(0.6, 99, 99)];
+        let report = lint_manifest(&m);
+        assert!(report.has_code("DY001"), "{}", report.render());
+        assert!(!report.is_clean());
+    }
+
+    #[test]
+    fn oversubscription_warns_dy002_without_blocking() {
+        let report = lint_manifest(&catalog::oversubscribed());
+        assert!(report.has_code("DY002"), "{}", report.render());
+        assert!(report.is_clean(), "over-subscription is a warning: {}", report.render());
+    }
+
+    #[test]
+    fn impossible_deadline_is_a_dy003_error() {
+        let m = one_lane(heavy_gcn(), StreamSlo::best_effort(3.0).with_deadline(0.005));
+        let report = lint_manifest(&m);
+        let d = report.diagnostics.iter().find(|d| d.code == "DY003").expect("DY003 fires");
+        assert_eq!(d.severity, Severity::Error, "{}", report.render());
+        assert_eq!(d.key_path, "streams[0].slo.deadline");
+    }
+
+    #[test]
+    fn mixed_phase_deadline_still_raises_dy003() {
+        // Light phase feasible, heavy phase not: DY003 fires either as
+        // the min-floor error or the per-phase warning; both name the
+        // deadline. Severity is pinned by the heavy-only fixture above.
+        let mut m = one_lane(light_gcn(), StreamSlo::best_effort(3.0).with_deadline(0.250));
+        m.streams[0].phases.push(Phase { workload: heavy_gcn(), count: 8 });
+        let report = lint_manifest(&m);
+        assert!(report.has_code("DY003"), "{}", report.render());
+    }
+
+    #[test]
+    fn budget_starvation_is_a_dy004_error() {
+        let mut m = one_lane(heavy_gcn(), StreamSlo::best_effort(4.0));
+        m.streams.push(StreamCfg {
+            name: "starved".to_string(),
+            objective: Objective::Performance,
+            seed: 9,
+            arrival: Arrival::Poisson { rate: 20.0 },
+            phases: vec![Phase { workload: light_gcn(), count: 8 }],
+            slo: StreamSlo::best_effort(1.0).with_deadline(0.2),
+        });
+        m.budget = Some(BudgetCfg { cap_watts: 0.2, window: 0.5 });
+        let report = lint_manifest(&m);
+        let d = report.diagnostics.iter().find(|d| d.code == "DY004").expect("DY004 fires");
+        assert_eq!(d.severity, Severity::Error, "{}", report.render());
+        assert_eq!(d.key_path, "streams[1].slo.deadline");
+    }
+
+    #[test]
+    fn unattainable_p99_target_warns_dy005() {
+        let mut m = catalog::diurnal();
+        m.streams[0].slo = StreamSlo::target(1e-6, 2.0);
+        let report = lint_manifest(&m);
+        assert!(report.has_code("DY005"), "{}", report.render());
+        assert!(report.is_clean(), "p99 misses are soft: {}", report.render());
+    }
+
+    #[test]
+    fn never_firing_preemption_warns_dy006() {
+        let slo = StreamSlo::best_effort(2.0)
+            .with_migration(MigrationMode::Preempt { min_remaining: 1e6 });
+        let report = lint_manifest(&one_lane(light_gcn(), slo));
+        assert!(report.has_code("DY006"), "{}", report.render());
+        assert!(report.is_clean());
+    }
+
+    #[test]
+    fn preempt_override_under_frozen_leases_warns_dy006() {
+        let slo = StreamSlo::best_effort(2.0)
+            .with_migration(MigrationMode::Preempt { min_remaining: 0.005 });
+        let m = one_lane(light_gcn(), slo);
+        let cfg = EngineConfig::builder().static_leases().build();
+        let ds = lint_engine_config(&m, &cfg);
+        assert_eq!(codes(&ds), vec!["DY006"], "{ds:?}");
+        let adaptive = lint_engine_config(&m, &EngineConfig::default());
+        assert!(adaptive.is_empty(), "adaptive engines migrate, the override can fire");
+    }
+
+    #[test]
+    fn malformed_perturbations_are_dy007_errors_and_never_panic() {
+        let mut m = one_lane(light_gcn(), StreamSlo::default());
+        m.perturbations = vec![Perturbation::device_cut(-1.0, 1, 0)];
+        assert!(!lint_manifest(&m).is_clean(), "negative firing time");
+
+        m.perturbations = vec![Perturbation::device_cut(0.5, 0, 0)];
+        assert!(lint_manifest(&m).has_code("DY007"), "cut that removes nothing");
+
+        m.perturbations = vec![Perturbation::slo_tighten(0.5, 99, 0.5, 0.5)];
+        let report = lint_manifest(&m);
+        assert!(report.has_code("DY007"), "out-of-range stream: {}", report.render());
+        assert!(!report.is_clean());
+    }
+
+    #[test]
+    fn budget_scale_without_budget_is_a_dy007_error() {
+        let mut m = one_lane(light_gcn(), StreamSlo::default());
+        m.perturbations = vec![Perturbation::budget_scale(0.5, 0.5)];
+        let report = lint_manifest(&m);
+        let d = report.diagnostics.iter().find(|d| d.code == "DY007").expect("DY007 fires");
+        assert_eq!(d.severity, Severity::Error, "{}", report.render());
+    }
+
+    #[test]
+    fn duplicate_budget_scales_warn_dy007() {
+        let mut m = one_lane(light_gcn(), StreamSlo::default());
+        m.budget = Some(BudgetCfg { cap_watts: 250.0, window: 0.25 });
+        m.perturbations =
+            vec![Perturbation::budget_scale(0.5, 0.5), Perturbation::budget_scale(0.5, 0.25)];
+        let report = lint_manifest(&m);
+        assert!(report.has_code("DY007"), "{}", report.render());
+        assert!(report.is_clean(), "duplicates are suspicious, not fatal");
+    }
+
+    #[test]
+    fn pointless_slo_tighten_warns_dy007() {
+        let mut m = one_lane(light_gcn(), StreamSlo::default());
+        m.perturbations = vec![Perturbation::slo_tighten(0.5, 0, 0.5, 0.5)];
+        let report = lint_manifest(&m);
+        assert!(report.has_code("DY007"), "{}", report.render());
+        assert!(report.is_clean(), "nothing breaks, nothing tightens: {}", report.render());
+    }
+
+    #[test]
+    fn event_past_the_horizon_warns_dy008() {
+        let mut m = one_lane(light_gcn(), StreamSlo::default());
+        m.perturbations = vec![Perturbation::device_cut(1e9, 1, 0)];
+        let report = lint_manifest(&m);
+        assert!(report.has_code("DY008"), "{}", report.render());
+        assert!(report.is_clean());
+    }
+
+    #[test]
+    fn fleet_shape_errors_are_dy009() {
+        fn dy009_at(ds: &[Diagnostic], severity: Severity) -> bool {
+            ds.iter().any(|d| d.code == "DY009" && d.severity == severity)
+        }
+        let m = catalog::fleet_balanced();
+        let devices = m.system.n_fpga + m.system.n_gpu;
+        let zero = FleetConfig { shards: 0, ..FleetConfig::default() };
+        assert!(dy009_at(&lint_fleet(&m, &zero), Severity::Error));
+        let over = FleetConfig { shards: devices + 1, ..FleetConfig::default() };
+        assert!(dy009_at(&lint_fleet(&m, &over), Severity::Error));
+        let idle = FleetConfig { shards: m.streams.len() + 1, ..FleetConfig::default() };
+        let ds = lint_fleet(&m, &idle);
+        assert!(dy009_at(&ds, Severity::Warning), "{ds:?} (needs streams < shards <= devices)");
+        let ok = FleetConfig { shards: 4, ..FleetConfig::default() };
+        assert!(lint_fleet(&m, &ok).is_empty(), "the shipped fleet scenario lints clean");
+    }
+
+    #[test]
+    fn prewarm_over_balanced_lanes_warns_dy010() {
+        let mut m = catalog::fleet_balanced();
+        m.streams[0].objective = Objective::balanced();
+        let cfg = FleetConfig { shards: 4, registry_prewarm: true, ..FleetConfig::default() };
+        let ds = lint_fleet(&m, &cfg);
+        assert!(ds.iter().any(|d| d.code == "DY010"), "{ds:?}");
+        let cold = FleetConfig { shards: 4, ..FleetConfig::default() };
+        assert!(lint_fleet(&m, &cold).is_empty(), "no prewarm, no claim");
+    }
+
+    #[test]
+    fn degenerate_values_are_dy011_and_never_panic() {
+        let mut m = one_lane(light_gcn(), StreamSlo::default());
+        m.streams[0].arrival = Arrival::Poisson { rate: -3.0 };
+        let report = lint_manifest(&m);
+        assert!(report.has_code("DY011"), "{}", report.render());
+        assert!(!report.is_clean());
+
+        let mut m = one_lane(light_gcn(), StreamSlo::default());
+        m.streams.clear();
+        assert!(lint_manifest(&m).has_code("DY011"), "empty streams");
+
+        let mut m = one_lane(light_gcn(), StreamSlo::default());
+        m.system.n_fpga = 0;
+        m.system.n_gpu = 0;
+        assert!(lint_manifest(&m).has_code("DY011"), "empty pool");
+
+        let mut m = one_lane(light_gcn(), StreamSlo::default());
+        m.streams[0].slo.priority = f64::NAN;
+        assert!(lint_manifest(&m).has_code("DY011"), "NaN priority");
+    }
+
+    #[test]
+    fn reports_sort_errors_first_and_render_one_line_per_finding() {
+        let mut m = one_lane(heavy_gcn(), StreamSlo::best_effort(3.0).with_deadline(0.005));
+        m.perturbations = vec![Perturbation::device_cut(1e9, 1, 0)];
+        let report = lint_manifest(&m);
+        assert!(report.errors() >= 1 && report.warnings() >= 1, "{}", report.render());
+        assert_eq!(report.diagnostics[0].severity, Severity::Error, "errors lead");
+        let rendered = report.render();
+        assert!(rendered.contains("error[DY003] streams[0].slo.deadline:"), "{rendered}");
+        let Json::Obj(top) = report.to_json() else { panic!("report serializes to an object") };
+        assert!(top.contains_key("diagnostics") && top.contains_key("errors"));
+    }
+}

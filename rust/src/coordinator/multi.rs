@@ -48,7 +48,9 @@
 use crate::config::{Objective, SystemSpec};
 use crate::engine::{lease, EngineConfig, EngineMetrics, OverSubscribed, ServingEngine, StreamSlo};
 use crate::perfmodel::PerfEstimator;
-use crate::scheduler::{CacheStats, ScheduleCache, SharedScheduleCache};
+use crate::scheduler::{
+    system_fingerprint, CacheKey, CacheStats, DpScheduler, ScheduleCache, SharedScheduleCache,
+};
 
 use super::server::{Request, ServeReport};
 
@@ -166,6 +168,7 @@ pub struct MultiStreamServer<'a, E: PerfEstimator> {
     est: &'a E,
     cache: SharedScheduleCache,
     cfg: EngineConfig,
+    prewarm: bool,
 }
 
 impl<'a, E: PerfEstimator> MultiStreamServer<'a, E> {
@@ -178,7 +181,17 @@ impl<'a, E: PerfEstimator> MultiStreamServer<'a, E> {
     /// statistics across successive `serve` calls, or one prewarmed via
     /// [`ScheduleCache::load_from`]).
     pub fn with_cache(sys: SystemSpec, est: &'a E, cache: SharedScheduleCache) -> Self {
-        MultiStreamServer { sys, est, cache, cfg: EngineConfig::default() }
+        MultiStreamServer { sys, est, cache, cfg: EngineConfig::default(), prewarm: false }
+    }
+
+    /// Seed the schedule cache from the streams' workload registry
+    /// before the clock starts: `serve` runs
+    /// [`MultiStreamServer::registry_prewarm`] first, so under static
+    /// leases the first serving window takes zero cold misses — the
+    /// single-engine twin of `FleetConfig::registry_prewarm`.
+    pub fn with_registry_prewarm(mut self) -> Self {
+        self.prewarm = true;
+        self
     }
 
     /// Override the engine configuration — e.g.
@@ -198,10 +211,50 @@ impl<'a, E: PerfEstimator> MultiStreamServer<'a, E> {
     /// Lease the pool by stream demand, then serve every stream's trace
     /// to completion through the global event loop.
     pub fn serve(&mut self, streams: &[StreamSpec]) -> MultiStreamReport {
+        if self.prewarm {
+            self.registry_prewarm(streams);
+        }
         ServingEngine::new(self.sys.clone(), self.est)
             .with_cache(self.cache.clone())
             .with_config(self.cfg.clone())
             .serve(streams)
+    }
+
+    /// Seed the cache for `streams` at spin-up: mirror the engine's
+    /// initial lease apportionment (SLO-weighted demand,
+    /// [`crate::engine::lease`] over the whole pool), then run the DP
+    /// once per distinct (lane partition, regime, objective) key the
+    /// streams will look up on first admission and insert the plans —
+    /// exactly what each lane's coordinator would compute on its first
+    /// cold miss, done before the clock starts. `Balanced`-objective
+    /// lanes bypass the cache and are skipped. Returns the number of
+    /// plans seeded.
+    pub fn registry_prewarm(&self, streams: &[StreamSpec]) -> usize {
+        if streams.is_empty() {
+            return 0;
+        }
+        let weighted: Vec<f64> =
+            streams.iter().map(|s| s.demand() * self.cfg.slo.weight(&s.slo, None)).collect();
+        let assignment = lease::assign(&self.sys, &weighted);
+        let mut cache = self.cache.lock().unwrap();
+        let mut seeded = 0;
+        for (i, s) in streams.iter().enumerate() {
+            if matches!(s.objective, Objective::Balanced { .. }) {
+                continue;
+            }
+            let (part, _) = assignment.lease_of(i);
+            let fp = system_fingerprint(part);
+            for r in &s.trace {
+                let key = CacheKey::new(fp, &r.workload, s.objective);
+                if cache.contains(&key) {
+                    continue;
+                }
+                let sched = DpScheduler::new(part, self.est).schedule(&r.workload, s.objective);
+                cache.insert(key, sched.plan());
+                seeded += 1;
+            }
+        }
+        seeded
     }
 }
 

@@ -478,13 +478,12 @@ impl<'a, E: PerfEstimator + Sync> ServingFleet<'a, E> {
             }
             let (part, _) = assignment.lease_of(j);
             let fp = system_fingerprint(part);
-            let part = part.clone();
             for r in &s.trace {
                 let key = CacheKey::new(fp, &r.workload, s.objective);
                 if cache.contains(&key) {
                     continue;
                 }
-                let sched = DpScheduler::new(&part, self.est).schedule(&r.workload, s.objective);
+                let sched = DpScheduler::new(part, self.est).schedule(&r.workload, s.objective);
                 cache.insert(key, sched.plan());
                 seeded += 1;
             }

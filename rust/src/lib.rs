@@ -34,6 +34,13 @@
 //! table, and the experiment index mapping every table/figure of the paper
 //! to a bench target.
 
+// The one sanctioned unsafe block in the workspace is the counting
+// global allocator behind `telemetry-alloc`; every other configuration
+// forbids unsafe outright.
+#![cfg_attr(not(feature = "telemetry-alloc"), forbid(unsafe_code))]
+#![cfg_attr(feature = "telemetry-alloc", deny(unsafe_code))]
+
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod devices;
@@ -138,6 +145,9 @@ pub mod workload;
 /// assert_eq!(heap.makespan, calendar.makespan);
 /// ```
 pub mod prelude {
+    pub use crate::analysis::{
+        lint_engine_config, lint_fleet, lint_manifest, Diagnostic, LintReport, Severity,
+    };
     pub use crate::config::{Interconnect, Objective, SystemSpec};
     pub use crate::coordinator::{
         generate_trace, Coordinator, MultiStreamReport, MultiStreamServer, ServeReport, Server,

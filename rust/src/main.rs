@@ -14,6 +14,13 @@
 //!   fleet (SLO-aware routing, cache-affinity placement, cross-shard
 //!   migration); `--out` writes the shard-namespaced Perfetto trace,
 //!   `--cache-dir` persists per-shard schedule caches across runs.
+//! * `lint`      — static feasibility and consistency analysis over
+//!   scenario manifests, without running a single simulated event:
+//!   deadline floors from the performance model, budget starvation, pool
+//!   timelines under scripted cuts, SLO consistency, fleet shape; `--json`
+//!   for machine-readable diagnostics, nonzero exit on error-severity
+//!   findings. `scenario-sweep` and `fleet` run the same checks before
+//!   building an engine.
 //! * `trace-validate` — strict-parse a trace file and run the exporter's
 //!   structural validator over it.
 //! * `bench-report` — render the tracked perf baseline
@@ -52,6 +59,7 @@ USAGE:
   dype scenario-sweep [--manifest FILE.json] [--out TRACE.json]
   dype fleet     [--manifest FILE.json] [--shards N] [--out TRACE.json]
                  [--cache-dir DIR]
+  dype lint      [--manifest FILE.json | --all] [--json]
   dype trace-validate [--trace] FILE.json
   dype bench-report   [--baseline FILE.json] [--fresh FILE.json]
   dype serve     [--inferences N] [--artifact-dir DIR]
@@ -106,6 +114,20 @@ fn sub_usage(cmd: &str) -> Option<&'static str> {
              \x20 --out TRACE      write the shard-namespaced Perfetto trace here\n\
              \x20 --cache-dir DIR  load per-shard schedule caches before the run\n\
              \x20                  and persist them after it\n"
+        }
+        "lint" => {
+            "dype lint — static feasibility & consistency analysis of manifests\n\n\
+             USAGE:\n  dype lint [--manifest FILE.json | --all] [--json]\n\n\
+             \x20 --manifest FILE  lint one manifest from disk\n\
+             \x20 --all            lint the whole built-in scenario zoo\n\
+             \x20                  (the default when no --manifest is given)\n\
+             \x20 --json           machine-readable output: one JSON report\n\
+             \x20                  per manifest with the typed diagnostics\n\n\
+             Every check runs on the manifest alone — no simulated events.\n\
+             Exit is nonzero iff any error-severity diagnostic fires;\n\
+             warnings alone keep exit 0. Codes and the differential\n\
+             validation policy are documented in DESIGN.md §Static\n\
+             Analysis.\n"
         }
         "trace-validate" => {
             "dype trace-validate — strict-parse + structurally validate a trace\n\n\
@@ -324,6 +346,9 @@ fn main() -> Result<()> {
                 args.kv.get("cache-dir").map(String::as_str),
             )?;
         }
+        "lint" => {
+            lint(args.kv.get("manifest").map(String::as_str), args.flag("json"))?;
+        }
         "bench-report" => {
             bench_report(
                 args.get("baseline", "BENCH_serving.json"),
@@ -388,11 +413,44 @@ fn sweep(ic: Interconnect, obj: Objective) -> Result<()> {
     Ok(())
 }
 
+/// `dype lint` — static feasibility and consistency analysis over one
+/// manifest or the whole zoo, without running a single simulated event.
+/// Prints every diagnostic (a JSON array of per-manifest reports with
+/// `--json`) and exits nonzero iff any error-severity finding fired, so
+/// CI can gate on errors while humans still see the advisories.
+fn lint(manifest: Option<&str>, json: bool) -> Result<()> {
+    use dype::analysis::lint_manifest;
+    use dype::util::json::Json;
+    let manifests = match manifest {
+        Some(path) => vec![dype::scenario::ScenarioManifest::load(path)?],
+        None => dype::scenario::catalog::all(),
+    };
+    let reports: Vec<_> = manifests.iter().map(lint_manifest).collect();
+    let errors: usize = reports.iter().map(|r| r.errors()).sum();
+    let warnings: usize = reports.iter().map(|r| r.warnings()).sum();
+    if json {
+        println!("{}", Json::Arr(reports.iter().map(|r| r.to_json()).collect()));
+    } else {
+        for r in &reports {
+            print!("{}", r.render());
+        }
+        println!("lint: {} manifest(s), {errors} error(s), {warnings} warning(s)", reports.len());
+    }
+    if errors > 0 {
+        bail!("lint: {errors} error-severity diagnostic(s) — see output above");
+    }
+    Ok(())
+}
+
 /// The scenario zoo crossed with every serving policy — or a single
 /// manifest loaded from disk — rendered as the Pareto-annotated grid.
 /// With `trace`, the first scenario is re-run under its score-winning
 /// policy with a timeline recorder attached, and the Perfetto export is
 /// written to the given path.
+///
+/// Every manifest is statically linted first: error-severity findings
+/// refuse the run before any engine is built; warnings are printed and
+/// the sweep proceeds.
 fn scenario_sweep(manifest: Option<&str>, trace: Option<&str>) -> Result<()> {
     use dype::scenario::sweep::{run_grid_parallel, Policy};
     use dype::util::pool::default_threads;
@@ -400,6 +458,20 @@ fn scenario_sweep(manifest: Option<&str>, trace: Option<&str>) -> Result<()> {
         Some(path) => vec![dype::scenario::ScenarioManifest::load(path)?],
         None => dype::scenario::catalog::all(),
     };
+    for m in &manifests {
+        let report = dype::analysis::lint_manifest(m);
+        if !report.is_clean() {
+            bail!("manifest '{}' fails lint; refusing to sweep:\n{}", m.name, report.render());
+        }
+        for d in &report.diagnostics {
+            println!("lint: {}", d.render());
+        }
+        // The grid includes the frozen-lease Static policy — surface the
+        // config-dependent advisories for it too.
+        for d in dype::analysis::lint_engine_config(m, &Policy::Static.engine_config()) {
+            println!("lint[static]: {}", d.render());
+        }
+    }
     let report = run_grid_parallel(&manifests, &Policy::ALL, default_threads())?;
     print!("{}", report.render());
     if let Some(out) = trace {
@@ -455,6 +527,13 @@ fn fleet(
         Some(path) => dype::scenario::ScenarioManifest::load(path)?,
         None => dype::scenario::catalog::fleet_balanced(),
     };
+    // Static gate, phase 1: manifest feasibility. Runs before `build()`
+    // because lint diagnoses (DY011) exactly the degenerate manifests
+    // that would panic inside the builders.
+    let lint = dype::analysis::lint_manifest(&m);
+    if !lint.is_clean() {
+        bail!("manifest '{}' fails lint; refusing to serve:\n{}", m.name, lint.render());
+    }
     let built = m.build()?;
     let sys = built.system.clone();
     let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
@@ -466,6 +545,18 @@ fn fleet(
         registry_prewarm: true,
         ..FleetConfig::default()
     };
+    // Phase 2: fleet shape vs this exact config — refuse shard layouts
+    // `ServingFleet::new` would assert on; print advisories and run.
+    let shape = dype::analysis::lint_fleet(&m, &cfg);
+    let shape_errors: Vec<_> =
+        shape.iter().filter(|d| d.severity == dype::analysis::Severity::Error).collect();
+    if !shape_errors.is_empty() {
+        let rendered: Vec<String> = shape_errors.iter().map(|d| d.render()).collect();
+        bail!("fleet shape for '{}' fails lint:\n  {}", m.name, rendered.join("\n  "));
+    }
+    for d in lint.diagnostics.iter().chain(&shape) {
+        println!("lint: {}", d.render());
+    }
     let mut fleet = ServingFleet::new(sys, &est, cfg);
     if let Some(dir) = cache_dir {
         let loaded = fleet.load_caches(dir)?;

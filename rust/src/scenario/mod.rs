@@ -42,7 +42,7 @@ use crate::coordinator::{Request, StreamSpec};
 use crate::engine::{
     EnergyBudget, EngineConfig, MigrationMode, Perturbation, PerturbationKind, StreamSlo,
 };
-use crate::util::json::{self, Json};
+use crate::util::json::{self, Json, KeyPath};
 use crate::util::Rng;
 use crate::workload::{gnn, transformer, Dataset, Workload};
 
@@ -251,41 +251,41 @@ impl Arrival {
         }
     }
 
-    fn from_json(j: &Json, what: &str) -> Result<Arrival> {
-        let m = obj(j, what)?;
-        let kind = str_field(m, "kind", what)?;
+    fn from_json(j: &Json, at: &KeyPath) -> Result<Arrival> {
+        let m = obj(j, at)?;
+        let kind = str_field(m, "kind", at)?;
         Ok(match kind {
             "poisson" => {
-                check_keys(m, &["kind", "rate"], what)?;
-                Arrival::Poisson { rate: num_field(m, "rate", what)? }
+                check_keys(m, &["kind", "rate"], at)?;
+                Arrival::Poisson { rate: num_field(m, "rate", at)? }
             }
             "diurnal" => {
-                check_keys(m, &["base_rate", "kind", "peak_rate", "period"], what)?;
+                check_keys(m, &["base_rate", "kind", "peak_rate", "period"], at)?;
                 Arrival::Diurnal {
-                    base_rate: num_field(m, "base_rate", what)?,
-                    peak_rate: num_field(m, "peak_rate", what)?,
-                    period: num_field(m, "period", what)?,
+                    base_rate: num_field(m, "base_rate", at)?,
+                    peak_rate: num_field(m, "peak_rate", at)?,
+                    period: num_field(m, "period", at)?,
                 }
             }
             "flash-crowd" => {
-                check_keys(m, &["base_rate", "duration", "kind", "peak_rate", "start"], what)?;
+                check_keys(m, &["base_rate", "duration", "kind", "peak_rate", "start"], at)?;
                 Arrival::FlashCrowd {
-                    base_rate: num_field(m, "base_rate", what)?,
-                    peak_rate: num_field(m, "peak_rate", what)?,
-                    start: num_field(m, "start", what)?,
-                    duration: num_field(m, "duration", what)?,
+                    base_rate: num_field(m, "base_rate", at)?,
+                    peak_rate: num_field(m, "peak_rate", at)?,
+                    start: num_field(m, "start", at)?,
+                    duration: num_field(m, "duration", at)?,
                 }
             }
             "mmpp" => {
-                check_keys(m, &["dwell", "kind", "rates"], what)?;
+                check_keys(m, &["dwell", "kind", "rates"], at)?;
                 let mut rates = Vec::new();
-                for (i, r) in arr_field(m, "rates", what)?.iter().enumerate() {
-                    let msg = || format!("{what}: rates[{i}] must be a number");
+                for (i, r) in arr_field(m, "rates", at)?.iter().enumerate() {
+                    let msg = || format!("{}: must be a number", at.key("rates").index(i));
                     rates.push(r.as_f64().with_context(msg)?);
                 }
-                Arrival::Mmpp { rates, dwell: num_field(m, "dwell", what)? }
+                Arrival::Mmpp { rates, dwell: num_field(m, "dwell", at)? }
             }
-            other => bail!("{what}: unknown arrival kind '{other}'"),
+            other => bail!("{}: unknown arrival kind '{other}'", at.key("kind")),
         })
     }
 }
@@ -360,52 +360,52 @@ impl WorkloadCfg {
         obj_from(pairs)
     }
 
-    fn from_json(j: &Json, what: &str) -> Result<WorkloadCfg> {
-        let m = obj(j, what)?;
+    fn from_json(j: &Json, at: &KeyPath) -> Result<WorkloadCfg> {
+        let m = obj(j, at)?;
         let graph_keys = [
             "code", "degree_skew", "edges", "feature_len", "graph", "hidden", "kind", "layers",
             "vertices",
         ];
-        let kind = str_field(m, "kind", what)?;
+        let kind = str_field(m, "kind", at)?;
         Ok(match kind {
             "gcn" => {
-                check_keys(m, &graph_keys, what)?;
+                check_keys(m, &graph_keys, at)?;
                 WorkloadCfg::Gcn {
-                    code: str_field(m, "code", what)?.to_string(),
-                    graph: str_field(m, "graph", what)?.to_string(),
-                    vertices: int_field(m, "vertices", what)?,
-                    edges: int_field(m, "edges", what)?,
-                    feature_len: int_field(m, "feature_len", what)?,
-                    degree_skew: num_field(m, "degree_skew", what)?,
-                    layers: int_field(m, "layers", what)? as usize,
-                    hidden: int_field(m, "hidden", what)?,
+                    code: str_field(m, "code", at)?.to_string(),
+                    graph: str_field(m, "graph", at)?.to_string(),
+                    vertices: int_field(m, "vertices", at)?,
+                    edges: int_field(m, "edges", at)?,
+                    feature_len: int_field(m, "feature_len", at)?,
+                    degree_skew: num_field(m, "degree_skew", at)?,
+                    layers: int_field(m, "layers", at)? as usize,
+                    hidden: int_field(m, "hidden", at)?,
                 }
             }
             "gin" => {
                 let mut gin_keys = graph_keys.to_vec();
                 gin_keys.push("mlp_layers");
-                check_keys(m, &gin_keys, what)?;
+                check_keys(m, &gin_keys, at)?;
                 WorkloadCfg::Gin {
-                    code: str_field(m, "code", what)?.to_string(),
-                    graph: str_field(m, "graph", what)?.to_string(),
-                    vertices: int_field(m, "vertices", what)?,
-                    edges: int_field(m, "edges", what)?,
-                    feature_len: int_field(m, "feature_len", what)?,
-                    degree_skew: num_field(m, "degree_skew", what)?,
-                    layers: int_field(m, "layers", what)? as usize,
-                    hidden: int_field(m, "hidden", what)?,
-                    mlp_layers: int_field(m, "mlp_layers", what)? as usize,
+                    code: str_field(m, "code", at)?.to_string(),
+                    graph: str_field(m, "graph", at)?.to_string(),
+                    vertices: int_field(m, "vertices", at)?,
+                    edges: int_field(m, "edges", at)?,
+                    feature_len: int_field(m, "feature_len", at)?,
+                    degree_skew: num_field(m, "degree_skew", at)?,
+                    layers: int_field(m, "layers", at)? as usize,
+                    hidden: int_field(m, "hidden", at)?,
+                    mlp_layers: int_field(m, "mlp_layers", at)? as usize,
                 }
             }
             "transformer" => {
-                check_keys(m, &["kind", "layers", "seq", "window"], what)?;
+                check_keys(m, &["kind", "layers", "seq", "window"], at)?;
                 WorkloadCfg::Transformer {
-                    seq: int_field(m, "seq", what)?,
-                    window: int_field(m, "window", what)?,
-                    layers: int_field(m, "layers", what)? as usize,
+                    seq: int_field(m, "seq", at)?,
+                    window: int_field(m, "window", at)?,
+                    layers: int_field(m, "layers", at)? as usize,
                 }
             }
-            other => bail!("{what}: unknown workload kind '{other}'"),
+            other => bail!("{}: unknown workload kind '{other}'", at.key("kind")),
         })
     }
 }
@@ -415,14 +415,14 @@ impl Phase {
         obj_from(vec![("count", jint(self.count as u64)), ("workload", self.workload.to_json())])
     }
 
-    fn from_json(j: &Json, what: &str) -> Result<Phase> {
-        let m = obj(j, what)?;
-        check_keys(m, &["count", "workload"], what)?;
-        let count = int_field(m, "count", what)? as usize;
+    fn from_json(j: &Json, at: &KeyPath) -> Result<Phase> {
+        let m = obj(j, at)?;
+        check_keys(m, &["count", "workload"], at)?;
+        let count = int_field(m, "count", at)? as usize;
         if count == 0 {
-            bail!("{what}: phase count must be >= 1");
+            bail!("{}: phase count must be >= 1", at.key("count"));
         }
-        let workload = WorkloadCfg::from_json(field(m, "workload", what)?, what)?;
+        let workload = WorkloadCfg::from_json(field(m, "workload", at)?, &at.key("workload"))?;
         Ok(Phase { workload, count })
     }
 }
@@ -459,23 +459,23 @@ impl StreamCfg {
         ])
     }
 
-    fn from_json(j: &Json, what: &str) -> Result<StreamCfg> {
-        let m = obj(j, what)?;
-        check_keys(m, &["arrival", "name", "objective", "phases", "seed", "slo"], what)?;
-        let name = str_field(m, "name", what)?.to_string();
-        let what = &format!("{what} ('{name}')");
+    fn from_json(j: &Json, at: &KeyPath) -> Result<StreamCfg> {
+        let m = obj(j, at)?;
+        check_keys(m, &["arrival", "name", "objective", "phases", "seed", "slo"], at)?;
+        let name = str_field(m, "name", at)?.to_string();
         let mut phases = Vec::new();
-        for (i, p) in arr_field(m, "phases", what)?.iter().enumerate() {
-            phases.push(Phase::from_json(p, &format!("{what} phase {i}"))?);
+        for (i, p) in arr_field(m, "phases", at)?.iter().enumerate() {
+            phases.push(Phase::from_json(p, &at.key("phases").index(i))?);
         }
         let slo = match m.get("slo") {
-            Some(s) => slo_from_json(s, what)?,
+            Some(s) => slo_from_json(s, &at.key("slo"))?,
             None => StreamSlo::default(),
         };
         Ok(StreamCfg {
-            objective: objective_from_str(str_field(m, "objective", what)?)?,
-            seed: int_field(m, "seed", what)?,
-            arrival: Arrival::from_json(field(m, "arrival", what)?, what)?,
+            objective: objective_from_str(str_field(m, "objective", at)?)
+                .with_context(|| at.key("objective").to_string())?,
+            seed: int_field(m, "seed", at)?,
+            arrival: Arrival::from_json(field(m, "arrival", at)?, &at.key("arrival"))?,
             phases,
             slo,
             name,
@@ -499,16 +499,17 @@ impl SystemCfg {
         ])
     }
 
-    fn from_json(j: &Json, what: &str) -> Result<SystemCfg> {
-        let m = obj(j, what)?;
-        check_keys(m, &["interconnect", "n_fpga", "n_gpu"], what)?;
+    fn from_json(j: &Json, at: &KeyPath) -> Result<SystemCfg> {
+        let m = obj(j, at)?;
+        check_keys(m, &["interconnect", "n_fpga", "n_gpu"], at)?;
         let cfg = SystemCfg {
-            n_fpga: int_field(m, "n_fpga", what)? as usize,
-            n_gpu: int_field(m, "n_gpu", what)? as usize,
-            interconnect: Interconnect::parse(str_field(m, "interconnect", what)?)?,
+            n_fpga: int_field(m, "n_fpga", at)? as usize,
+            n_gpu: int_field(m, "n_gpu", at)? as usize,
+            interconnect: Interconnect::parse(str_field(m, "interconnect", at)?)
+                .with_context(|| at.key("interconnect").to_string())?,
         };
         if cfg.n_fpga + cfg.n_gpu == 0 {
-            bail!("{what}: the device pool is empty");
+            bail!("{at}: the device pool is empty");
         }
         Ok(cfg)
     }
@@ -523,18 +524,18 @@ impl BudgetCfg {
         obj_from(vec![("cap_watts", jnum(self.cap_watts)), ("window", jnum(self.window))])
     }
 
-    fn from_json(j: &Json, what: &str) -> Result<BudgetCfg> {
-        let m = obj(j, what)?;
-        check_keys(m, &["cap_watts", "window"], what)?;
+    fn from_json(j: &Json, at: &KeyPath) -> Result<BudgetCfg> {
+        let m = obj(j, at)?;
+        check_keys(m, &["cap_watts", "window"], at)?;
         let cfg = BudgetCfg {
-            cap_watts: num_field(m, "cap_watts", what)?,
-            window: num_field(m, "window", what)?,
+            cap_watts: num_field(m, "cap_watts", at)?,
+            window: num_field(m, "window", at)?,
         };
         if cfg.cap_watts <= 0.0 || !cfg.cap_watts.is_finite() {
-            bail!("{what}: cap_watts must be positive and finite");
+            bail!("{}: must be positive and finite", at.key("cap_watts"));
         }
         if cfg.window <= 0.0 || !cfg.window.is_finite() {
-            bail!("{what}: window must be positive and finite");
+            bail!("{}: must be positive and finite", at.key("window"));
         }
         Ok(cfg)
     }
@@ -589,33 +590,40 @@ impl ScenarioManifest {
     }
 
     pub fn from_json(j: &Json) -> Result<ScenarioManifest> {
-        let m = obj(j, "manifest")?;
+        let at = KeyPath::root("manifest");
+        let m = obj(j, &at)?;
         let keys =
             ["budget", "description", "name", "perturbations", "streams", "system", "telemetry"];
-        check_keys(m, &keys, "manifest")?;
-        let name = str_field(m, "name", "manifest")?.to_string();
-        let what = format!("scenario '{name}'");
-        let description = str_field(m, "description", &what)?.to_string();
-        let system = SystemCfg::from_json(field(m, "system", &what)?, &what)?;
+        check_keys(m, &keys, &at)?;
+        let name = str_field(m, "name", &at)?.to_string();
+        Self::from_obj(m, &at).with_context(|| format!("scenario '{name}'"))
+    }
+
+    fn from_obj(m: &BTreeMap<String, Json>, at: &KeyPath) -> Result<ScenarioManifest> {
+        let name = str_field(m, "name", at)?.to_string();
+        let description = str_field(m, "description", at)?.to_string();
+        let system = SystemCfg::from_json(field(m, "system", at)?, &at.key("system"))?;
         let mut streams = Vec::new();
-        for (i, s) in arr_field(m, "streams", &what)?.iter().enumerate() {
-            streams.push(StreamCfg::from_json(s, &format!("{what} stream {i}"))?);
+        for (i, s) in arr_field(m, "streams", at)?.iter().enumerate() {
+            streams.push(StreamCfg::from_json(s, &at.key("streams").index(i))?);
         }
         if streams.is_empty() {
-            bail!("{what}: needs at least one stream");
+            bail!("{}: needs at least one stream", at.key("streams"));
         }
         let budget = match m.get("budget") {
-            Some(b) => Some(BudgetCfg::from_json(b, &what)?),
+            Some(b) => Some(BudgetCfg::from_json(b, &at.key("budget"))?),
             None => None,
         };
         let mut perturbations = Vec::new();
         if m.contains_key("perturbations") {
-            for (i, p) in arr_field(m, "perturbations", &what)?.iter().enumerate() {
-                perturbations.push(perturbation_from_json(p, &format!("{what} perturbation {i}"))?);
+            for (i, p) in arr_field(m, "perturbations", at)?.iter().enumerate() {
+                perturbations.push(perturbation_from_json(p, &at.key("perturbations").index(i))?);
             }
         }
         let telemetry = match m.get("telemetry") {
-            Some(v) => v.as_bool().with_context(|| format!("{what}: telemetry must be a bool"))?,
+            Some(v) => {
+                v.as_bool().with_context(|| format!("{}: must be a bool", at.key("telemetry")))?
+            }
             None => false,
         };
         Ok(ScenarioManifest {
@@ -740,18 +748,21 @@ fn slo_to_json(slo: &StreamSlo) -> Json {
     obj_from(pairs)
 }
 
-fn slo_from_json(j: &Json, what: &str) -> Result<StreamSlo> {
-    let m = obj(j, what)?;
-    check_keys(m, &["deadline", "migration", "p99_target", "priority"], what)?;
+fn slo_from_json(j: &Json, at: &KeyPath) -> Result<StreamSlo> {
+    let m = obj(j, at)?;
+    check_keys(m, &["deadline", "migration", "p99_target", "priority"], at)?;
     let mut slo = StreamSlo::default();
-    if let Some(p) = opt_num(m, "priority", what)? {
+    if let Some(p) = opt_num(m, "priority", at)? {
         slo.priority = p;
     }
-    slo.p99_target = opt_num(m, "p99_target", what)?;
-    slo.deadline = opt_num(m, "deadline", what)?;
+    slo.p99_target = opt_num(m, "p99_target", at)?;
+    slo.deadline = opt_num(m, "deadline", at)?;
     if let Some(v) = m.get("migration") {
-        let msg = || format!("{what}: field 'migration' must be a string");
-        slo.migration = Some(migration_from_str(v.as_str().with_context(msg)?)?);
+        let msg = || format!("{}: must be a string", at.key("migration"));
+        slo.migration = Some(
+            migration_from_str(v.as_str().with_context(msg)?)
+                .with_context(|| at.key("migration").to_string())?,
+        );
     }
     slo.validate();
     Ok(slo)
@@ -779,31 +790,31 @@ fn perturbation_to_json(p: &Perturbation) -> Json {
     obj_from(pairs)
 }
 
-fn perturbation_from_json(j: &Json, what: &str) -> Result<Perturbation> {
-    let m = obj(j, what)?;
-    let at = num_field(m, "at", what)?;
-    let kind = str_field(m, "kind", what)?;
+fn perturbation_from_json(j: &Json, at: &KeyPath) -> Result<Perturbation> {
+    let m = obj(j, at)?;
+    let when = num_field(m, "at", at)?;
+    let kind = str_field(m, "kind", at)?;
     Ok(match kind {
         "device-cut" => {
-            check_keys(m, &["at", "kind", "n_fpga", "n_gpu"], what)?;
-            let n_fpga = int_field(m, "n_fpga", what)? as usize;
-            let n_gpu = int_field(m, "n_gpu", what)? as usize;
-            Perturbation::device_cut(at, n_fpga, n_gpu)
+            check_keys(m, &["at", "kind", "n_fpga", "n_gpu"], at)?;
+            let n_fpga = int_field(m, "n_fpga", at)? as usize;
+            let n_gpu = int_field(m, "n_gpu", at)? as usize;
+            Perturbation::device_cut(when, n_fpga, n_gpu)
         }
         "budget-scale" => {
-            check_keys(m, &["at", "factor", "kind"], what)?;
-            Perturbation::budget_scale(at, num_field(m, "factor", what)?)
+            check_keys(m, &["at", "factor", "kind"], at)?;
+            Perturbation::budget_scale(when, num_field(m, "factor", at)?)
         }
         "slo-tighten" => {
-            check_keys(m, &["at", "deadline_scale", "kind", "p99_scale", "stream"], what)?;
+            check_keys(m, &["at", "deadline_scale", "kind", "p99_scale", "stream"], at)?;
             Perturbation::slo_tighten(
-                at,
-                int_field(m, "stream", what)? as usize,
-                num_field(m, "p99_scale", what)?,
-                num_field(m, "deadline_scale", what)?,
+                when,
+                int_field(m, "stream", at)? as usize,
+                num_field(m, "p99_scale", at)?,
+                num_field(m, "deadline_scale", at)?,
             )
         }
-        other => bail!("{what}: unknown perturbation kind '{other}'"),
+        other => bail!("{}: unknown perturbation kind '{other}'", at.key("kind")),
     })
 }
 
@@ -827,51 +838,51 @@ fn obj_from(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
-fn obj<'a>(j: &'a Json, what: &str) -> Result<&'a BTreeMap<String, Json>> {
-    j.as_obj().with_context(|| format!("{what}: expected an object"))
+fn obj<'a>(j: &'a Json, at: &KeyPath) -> Result<&'a BTreeMap<String, Json>> {
+    j.as_obj().with_context(|| format!("{at}: expected an object"))
 }
 
 /// The strictness gate: every object's keys must be a subset of what the
 /// schema names, so a misspelled manifest key is an error, not a silent
 /// default.
-fn check_keys(m: &BTreeMap<String, Json>, allowed: &[&str], what: &str) -> Result<()> {
+fn check_keys(m: &BTreeMap<String, Json>, allowed: &[&str], at: &KeyPath) -> Result<()> {
     for key in m.keys() {
         if !allowed.contains(&key.as_str()) {
-            bail!("{what}: unknown key '{key}' (expected one of: {})", allowed.join(", "));
+            bail!("{at}: unknown key '{key}' (expected one of: {})", allowed.join(", "));
         }
     }
     Ok(())
 }
 
-fn field<'a>(m: &'a BTreeMap<String, Json>, key: &str, what: &str) -> Result<&'a Json> {
-    m.get(key).with_context(|| format!("{what}: missing field '{key}'"))
+fn field<'a>(m: &'a BTreeMap<String, Json>, key: &str, at: &KeyPath) -> Result<&'a Json> {
+    m.get(key).with_context(|| format!("{at}: missing field '{key}'"))
 }
 
-fn num_field(m: &BTreeMap<String, Json>, key: &str, what: &str) -> Result<f64> {
-    let v = field(m, key, what)?;
-    v.as_f64().with_context(|| format!("{what}: field '{key}' must be a number"))
+fn num_field(m: &BTreeMap<String, Json>, key: &str, at: &KeyPath) -> Result<f64> {
+    let v = field(m, key, at)?;
+    v.as_f64().with_context(|| format!("{}: must be a number", at.key(key)))
 }
 
-fn int_field(m: &BTreeMap<String, Json>, key: &str, what: &str) -> Result<u64> {
-    let v = field(m, key, what)?;
-    v.as_u64().with_context(|| format!("{what}: field '{key}' must be a non-negative integer"))
+fn int_field(m: &BTreeMap<String, Json>, key: &str, at: &KeyPath) -> Result<u64> {
+    let v = field(m, key, at)?;
+    v.as_u64().with_context(|| format!("{}: must be a non-negative integer", at.key(key)))
 }
 
-fn str_field<'a>(m: &'a BTreeMap<String, Json>, key: &str, what: &str) -> Result<&'a str> {
-    let v = field(m, key, what)?;
-    v.as_str().with_context(|| format!("{what}: field '{key}' must be a string"))
+fn str_field<'a>(m: &'a BTreeMap<String, Json>, key: &str, at: &KeyPath) -> Result<&'a str> {
+    let v = field(m, key, at)?;
+    v.as_str().with_context(|| format!("{}: must be a string", at.key(key)))
 }
 
-fn arr_field<'a>(m: &'a BTreeMap<String, Json>, key: &str, what: &str) -> Result<&'a [Json]> {
-    let v = field(m, key, what)?;
-    v.as_arr().with_context(|| format!("{what}: field '{key}' must be an array"))
+fn arr_field<'a>(m: &'a BTreeMap<String, Json>, key: &str, at: &KeyPath) -> Result<&'a [Json]> {
+    let v = field(m, key, at)?;
+    v.as_arr().with_context(|| format!("{}: must be an array", at.key(key)))
 }
 
-fn opt_num(m: &BTreeMap<String, Json>, key: &str, what: &str) -> Result<Option<f64>> {
+fn opt_num(m: &BTreeMap<String, Json>, key: &str, at: &KeyPath) -> Result<Option<f64>> {
     match m.get(key) {
         None => Ok(None),
         Some(v) => {
-            let msg = || format!("{what}: field '{key}' must be a number");
+            let msg = || format!("{}: must be a number", at.key(key));
             Ok(Some(v.as_f64().with_context(msg)?))
         }
     }
@@ -1064,6 +1075,38 @@ mod tests {
         let err = ScenarioManifest::parse_str(text).unwrap_err();
         assert!(format!("{err:#}").contains("missing field 'n_gpu'"), "{err:#}");
         assert!(format!("{err:#}").contains("scenario 'x'"), "{err:#}");
+    }
+
+    #[test]
+    fn codec_errors_carry_full_key_paths() {
+        let bad_deadline = r#"{"description": "d", "name": "x", "system":
+            {"interconnect": "pcie4", "n_fpga": 1, "n_gpu": 1}, "streams": [
+            {"name": "s", "objective": "perf", "seed": 1,
+             "arrival": {"kind": "poisson", "rate": 2.0},
+             "phases": [{"count": 1, "workload":
+                {"kind": "transformer", "seq": 128, "window": 64, "layers": 1}}],
+             "slo": {"deadline": "soon"}}]}"#;
+        let err = ScenarioManifest::parse_str(bad_deadline).unwrap_err();
+        assert!(format!("{err:#}").contains("streams[0].slo.deadline"), "{err:#}");
+
+        let bad_rate = r#"{"description": "d", "name": "x", "system":
+            {"interconnect": "pcie4", "n_fpga": 1, "n_gpu": 1}, "streams": [
+            {"name": "s", "objective": "perf", "seed": 1,
+             "arrival": {"kind": "mmpp", "rates": [4.0, "fast"], "dwell": 0.5},
+             "phases": [{"count": 1, "workload":
+                {"kind": "transformer", "seq": 128, "window": 64, "layers": 1}}]}]}"#;
+        let err = ScenarioManifest::parse_str(bad_rate).unwrap_err();
+        assert!(format!("{err:#}").contains("streams[0].arrival.rates[1]"), "{err:#}");
+
+        let bad_workload = r#"{"description": "d", "name": "x", "system":
+            {"interconnect": "pcie4", "n_fpga": 1, "n_gpu": 1}, "streams": [
+            {"name": "s", "objective": "perf", "seed": 1,
+             "arrival": {"kind": "poisson", "rate": 2.0},
+             "phases": [{"count": 1, "workload":
+                {"kind": "transformer", "seq": 128, "window": 64}}]}]}"#;
+        let err = ScenarioManifest::parse_str(bad_workload).unwrap_err();
+        assert!(format!("{err:#}").contains("streams[0].phases[0].workload"), "{err:#}");
+        assert!(format!("{err:#}").contains("missing field 'layers'"), "{err:#}");
     }
 
     #[test]

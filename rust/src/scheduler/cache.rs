@@ -87,7 +87,7 @@ impl CacheKey {
 fn fnv1a(bytes: impl IntoIterator<Item = u8>) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for b in bytes {
-        h ^= b as u64;
+        h ^= u64::from(b);
         h = h.wrapping_mul(0x100000001b3);
     }
     h

@@ -388,6 +388,7 @@ impl Snapshot {
 /// allocator is a whole-process decision, so it is strictly opt-in.
 pub mod alloc {
     #[cfg(feature = "telemetry-alloc")]
+    #[allow(unsafe_code)] // the GlobalAlloc impl below is the crate's one exception
     mod counting {
         use std::alloc::{GlobalAlloc, Layout, System};
         use std::sync::atomic::{AtomicU64, Ordering};

@@ -90,7 +90,7 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
             '\r' => f.write_str("\\r")?,
             '\u{8}' => f.write_str("\\b")?,
             '\u{c}' => f.write_str("\\f")?,
-            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c if u32::from(c) < 0x20 => write!(f, "\\u{:04x}", u32::from(c))?,
             c => write!(f, "{c}")?,
         }
     }
@@ -134,6 +134,62 @@ impl fmt::Display for Json {
                 }
                 f.write_str("}")
             }
+        }
+    }
+}
+
+/// A dotted key path into a JSON document — `streams[2].slo.deadline` —
+/// built incrementally as a strict codec descends its schema. Every
+/// codec error carries one of these, so a parse failure names the exact
+/// offending node instead of a flat message, and the static analyzer
+/// ([`crate::analysis`]) reuses the same notation for its
+/// `Diagnostic::key_path`.
+///
+/// [`fmt::Display`] falls back to the root label (e.g. `manifest`)
+/// while the path is still empty, so top-level errors stay readable;
+/// [`Self::as_str`] returns the bare path (empty at the root).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KeyPath {
+    label: &'static str,
+    path: String,
+}
+
+impl KeyPath {
+    /// A fresh path at the document root. `label` is what [`fmt::Display`]
+    /// prints while no keys have been pushed.
+    pub fn root(label: &'static str) -> KeyPath {
+        KeyPath { label, path: String::new() }
+    }
+
+    /// Descend into an object field: `a` → `a.b` (or `b` at the root).
+    #[must_use]
+    pub fn key(&self, key: &str) -> KeyPath {
+        let path = if self.path.is_empty() {
+            key.to_string()
+        } else {
+            format!("{}.{key}", self.path)
+        };
+        KeyPath { label: self.label, path }
+    }
+
+    /// Descend into an array element: `a` → `a[i]`.
+    #[must_use]
+    pub fn index(&self, i: usize) -> KeyPath {
+        KeyPath { label: self.label, path: format!("{}[{i}]", self.path) }
+    }
+
+    /// The bare dotted path — empty at the root (no label).
+    pub fn as_str(&self) -> &str {
+        &self.path
+    }
+}
+
+impl fmt::Display for KeyPath {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.path.is_empty() {
+            f.write_str(self.label)
+        } else {
+            f.write_str(&self.path)
         }
     }
 }
@@ -429,5 +485,23 @@ mod tests {
     #[should_panic(expected = "non-finite")]
     fn serializer_rejects_non_finite() {
         let _ = Json::Num(f64::NAN).to_string();
+    }
+
+    #[test]
+    fn key_paths_render_dotted_with_indices() {
+        let root = KeyPath::root("manifest");
+        assert_eq!(root.to_string(), "manifest", "empty path shows the root label");
+        assert_eq!(root.as_str(), "", "bare path is empty at the root");
+        let leaf = root.key("streams").index(2).key("slo").key("deadline");
+        assert_eq!(leaf.to_string(), "streams[2].slo.deadline");
+        assert_eq!(leaf.as_str(), "streams[2].slo.deadline");
+        assert_eq!(root.key("rates").index(0).to_string(), "rates[0]");
+        // Branching from a shared prefix never mutates the parent.
+        let streams = root.key("streams");
+        let a = streams.index(0).key("seed");
+        let b = streams.index(1).key("arrival").key("rate");
+        assert_eq!(a.to_string(), "streams[0].seed");
+        assert_eq!(b.to_string(), "streams[1].arrival.rate");
+        assert_eq!(streams.to_string(), "streams");
     }
 }

@@ -1,0 +1,166 @@
+//! `dype lint` — integration and differential validation (DESIGN.md
+//! §Static Analysis).
+//!
+//! The analyzer's value is that its verdicts *mean something*: every
+//! error-class diagnostic here is validated differentially — a fixture
+//! the linter flags, plus a simulator run proving the flagged outcome
+//! actually happens (every request sheds, the low-priority lane
+//! starves, the builder panics, the fleet constructor asserts). The
+//! negative fixtures live in `scenarios/lint/` — deliberately
+//! infeasible, excluded from the catalog tree-compare, and exercised by
+//! CI's lint-smoke step expecting a nonzero exit.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+
+use dype::analysis::{lint_fleet, lint_manifest, Severity};
+use dype::devices::GroundTruth;
+use dype::engine::{EngineConfig, Perturbation};
+use dype::experiments::run_multi_stream_with;
+use dype::fleet::{FleetConfig, ServingFleet};
+use dype::perfmodel::OracleModels;
+use dype::scenario::{catalog, ScenarioManifest};
+
+fn fixture(name: &str) -> ScenarioManifest {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios/lint").join(name);
+    ScenarioManifest::load(&path).unwrap_or_else(|e| panic!("{e:#}"))
+}
+
+// ---- the analyzer's verdicts on the checked-in inputs ------------------
+
+#[test]
+fn the_deadline_fixture_is_a_dy003_error() {
+    let report = lint_manifest(&fixture("deadline_infeasible.json"));
+    assert!(!report.is_clean(), "{}", report.render());
+    let d = report.diagnostics.iter().find(|d| d.code == "DY003").expect("DY003 fires");
+    assert_eq!(d.severity, Severity::Error, "{}", report.render());
+    assert_eq!(d.key_path, "streams[0].slo.deadline");
+}
+
+#[test]
+fn the_budget_fixture_is_a_dy004_error() {
+    let report = lint_manifest(&fixture("budget_starved.json"));
+    assert!(!report.is_clean(), "{}", report.render());
+    let d = report.diagnostics.iter().find(|d| d.code == "DY004").expect("DY004 fires");
+    assert_eq!(d.severity, Severity::Error, "{}", report.render());
+    assert_eq!(d.key_path, "streams[1].slo.deadline");
+}
+
+/// The gate `dype scenario-sweep` runs over the zoo must never refuse
+/// it: warnings are allowed, error-severity findings are not.
+#[test]
+fn the_whole_zoo_is_error_clean() {
+    for m in catalog::all() {
+        let report = lint_manifest(&m);
+        assert!(report.is_clean(), "{}", report.render());
+    }
+}
+
+// ---- differential validation: the simulator agrees ---------------------
+
+/// DY003's claim is behavioral, not cosmetic: with the deadline below
+/// every phase's zero-load batch floor, no request can ever attain it.
+#[test]
+fn simulator_agrees_the_doomed_deadline_attains_nothing() {
+    let built = fixture("deadline_infeasible.json").build().expect("structurally valid");
+    let cfg = built.apply(EngineConfig::default());
+    let report = run_multi_stream_with(&built.system, &built.streams, cfg);
+    let lane = &report.streams[0].report;
+    assert_eq!(lane.completed + lane.shed, 12, "conservation");
+    assert_eq!(lane.deadline_attainment, 0.0, "no request makes a 5 ms deadline");
+    assert!(lane.shed >= 11, "an infeasible deadline sheds the trace, got {}", lane.shed);
+}
+
+/// DY004's claim: the top-priority lane drains every window, and the
+/// low-priority deadline lane's deferrals become sheds.
+#[test]
+fn simulator_agrees_the_low_priority_lane_starves_under_the_budget() {
+    let built = fixture("budget_starved.json").build().expect("structurally valid");
+    let cfg = built.apply(EngineConfig::default());
+    let report = run_multi_stream_with(&built.system, &built.streams, cfg);
+    let mandatory = &report.streams[0].report;
+    let starved = &report.streams[1].report;
+    assert_eq!(mandatory.completed, 10, "no deadline: the mandatory lane always finishes");
+    assert_eq!(mandatory.shed, 0);
+    assert!(starved.completed <= 5, "starved lane completed {}", starved.completed);
+    assert!(starved.shed >= 10, "starved lane shed only {} of 15", starved.shed);
+    assert!(report.engine.budget_windows >= 1, "the budget was live");
+}
+
+/// DY001: a cut that empties the pool is an error, and the engine's
+/// answer is the documented clamp — it keeps one GPU and finishes the
+/// run rather than stranding it deviceless.
+#[test]
+fn simulator_survives_the_over_cut_the_linter_flags() {
+    let mut m = catalog::device_failure();
+    m.perturbations = vec![Perturbation::device_cut(0.6, 3, 2)];
+    let report = lint_manifest(&m);
+    assert!(report.has_code("DY001"), "{}", report.render());
+    assert!(!report.is_clean(), "{}", report.render());
+
+    let built = m.build().expect("an over-cut is value-valid; only lint objects");
+    let cfg = built.apply(EngineConfig::default());
+    let r = run_multi_stream_with(&built.system, &built.streams, cfg);
+    assert_eq!(r.engine.perturbations_applied, 1, "the clamped cut still fires");
+    let offered: usize = built.streams.iter().map(|s| s.trace.len()).sum();
+    assert_eq!(r.total_completed + r.engine.sheds, offered, "the run still finishes");
+}
+
+/// DY007 (blocking): an out-of-range slo-tighten index. The linter
+/// refuses it statically; the builder panics on the very same script —
+/// the diagnostic exists so nobody has to find out the second way.
+#[test]
+fn out_of_range_slo_tighten_is_dy007_and_a_build_panic() {
+    let mut m = catalog::multi_stream(2, 4, 9);
+    m.perturbations.push(Perturbation::slo_tighten(0.5, 99, 0.5, 0.5));
+    let report = lint_manifest(&m);
+    assert!(report.has_code("DY007"), "{}", report.render());
+    assert!(!report.is_clean(), "{}", report.render());
+    let panicked = catch_unwind(AssertUnwindSafe(|| m.build())).is_err();
+    assert!(panicked, "the builder panics on the same script lint refuses");
+}
+
+/// DY007 (non-blocking): scaling a budget the manifest never declares.
+/// The engine treats the event as a no-op — it fires and changes
+/// nothing — which is exactly why lint calls the script inconsistent.
+#[test]
+fn budget_scale_without_a_budget_is_dy007_and_an_engine_no_op() {
+    let mut m = catalog::multi_stream(2, 4, 9);
+    m.perturbations.push(Perturbation::budget_scale(0.5, 0.5));
+    let report = lint_manifest(&m);
+    assert!(report.has_code("DY007"), "{}", report.render());
+    assert!(!report.is_clean(), "{}", report.render());
+
+    let built = m.build().expect("value-valid");
+    let cfg = built.apply(EngineConfig::default());
+    let r = run_multi_stream_with(&built.system, &built.streams, cfg);
+    assert_eq!(r.engine.budget_windows, 0, "no budget ever existed to scale");
+    assert_eq!(r.engine.perturbations_applied, 1, "the event fires and does nothing");
+}
+
+/// DY009: more shards than devices. `lint_fleet` flags it statically;
+/// `ServingFleet::new` asserts on the same shape (`split_pool` needs
+/// inventory >= partitions) — the `dype fleet` gate runs the check
+/// first so the CLI refuses instead of panicking.
+#[test]
+fn fleet_shape_errors_match_the_serving_fleet_assertion() {
+    let m = catalog::fleet_balanced(); // 8 streams on a 12F + 8G pool
+    let over = FleetConfig::new(21);
+    let ds = lint_fleet(&m, &over);
+    assert!(ds.iter().any(|d| d.code == "DY009" && d.severity == Severity::Error), "{ds:?}");
+
+    let built = m.build().expect("manifest builds");
+    let sys = built.system.clone();
+    let gt = GroundTruth::new(sys.gpu.clone(), sys.fpga.clone(), sys.comm_model());
+    let est = OracleModels { gt: &gt };
+    let cfg = FleetConfig {
+        shards: 21,
+        engine: built.apply(EngineConfig::default()),
+        ..FleetConfig::default()
+    };
+    let panicked = catch_unwind(AssertUnwindSafe(|| ServingFleet::new(sys, &est, cfg))).is_err();
+    assert!(panicked, "ServingFleet::new asserts on more shards than devices");
+
+    let ok = lint_fleet(&m, &FleetConfig::new(4));
+    assert!(ok.iter().all(|d| d.severity != Severity::Error), "{ok:?}");
+}

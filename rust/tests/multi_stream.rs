@@ -8,8 +8,10 @@ use dype::config::{Interconnect, Objective, SystemSpec};
 use dype::coordinator::{partition_system, Coordinator, MultiStreamServer, StreamSpec};
 use dype::coordinator::server::generate_trace;
 use dype::devices::GroundTruth;
+use dype::engine::EngineConfig;
 use dype::experiments::{multi_stream_scenario, run_multi_stream};
 use dype::perfmodel::OracleModels;
+use dype::scenario::catalog;
 use dype::scheduler::{cache::CacheKey, system_fingerprint, ScheduleCache};
 use dype::workload::{gnn, Dataset, Workload};
 
@@ -230,4 +232,29 @@ fn single_and_multi_stream_servers_agree_on_cache_semantics() {
     assert_eq!(sr.completed, mr.total_completed);
     assert_eq!(sr.cache.misses, mr.cache.misses);
     assert!(sr.cache.hit_rate() > 0.5 && mr.cache.hit_rate() > 0.5);
+}
+
+// ---- registry prewarm (single-engine path) -----------------------------
+
+/// The single-engine twin of the fleet guarantee in `tests/fleet.rs`:
+/// a registry-prewarmed [`MultiStreamServer`] never cold-misses under
+/// static leases — seeding plans for every (lease, workload) pair in
+/// the streams' registry before the clock starts bounds the first-window
+/// miss count at zero.
+#[test]
+fn registry_prewarm_eliminates_cold_misses_under_static_leases() {
+    let built = catalog::fleet_balanced().build().expect("manifest builds");
+    let s = built.system.clone();
+    let gt = GroundTruth::new(s.gpu.clone(), s.fpga.clone(), s.comm_model());
+    let oracle = OracleModels { gt: &gt };
+    let mut server = MultiStreamServer::new(s, &oracle)
+        .with_engine_config(EngineConfig::builder().static_leases().build())
+        .with_registry_prewarm();
+    let seeded = server.registry_prewarm(&built.streams);
+    assert!(seeded >= 1, "the registry prewarm seeded nothing");
+    let report = server.serve(&built.streams);
+    let offered: usize = built.streams.iter().map(|st| st.trace.len()).sum();
+    assert_eq!(report.total_completed + report.engine.sheds, offered);
+    assert_eq!(report.cache.misses, 0, "cold miss despite the registry prewarm");
+    assert!(report.cache.hits > 0, "the seeded plans were never hit");
 }

@@ -19,13 +19,14 @@
 // exercises a handful of them.
 #[allow(unused_imports)]
 use dype::prelude::{
-    baselines, calibrate, generate_trace, gnn, transformer, Arrival, CacheStats, Coordinator,
-    Dataset, DeviceType, DpScheduler, EnergyBudget, EngineConfig, EngineConfigBuilder, FleetConfig,
-    FleetMigration, FleetReport, GroundTruth, Interconnect, KernelDesc, KernelKind, MigrationMode,
-    ModelRegistry, MultiStreamReport, MultiStreamServer, Objective, OracleModels, PipelineSim,
-    Policy, QueueKind, Recorder, RepartitionPolicy, ScenarioManifest, Schedule, ScheduleCache,
-    ServeReport, Server, ServingEngine, ServingFleet, ShardReport, SloController, Snapshot, Stage,
-    StreamSlo, StreamSpec, SweepReport, SystemSpec, TraceRecorder, Workload,
+    baselines, calibrate, generate_trace, gnn, lint_engine_config, lint_fleet, lint_manifest,
+    transformer, Arrival, CacheStats, Coordinator, Dataset, DeviceType, Diagnostic, DpScheduler,
+    EnergyBudget, EngineConfig, EngineConfigBuilder, FleetConfig, FleetMigration, FleetReport,
+    GroundTruth, Interconnect, KernelDesc, KernelKind, LintReport, MigrationMode, ModelRegistry,
+    MultiStreamReport, MultiStreamServer, Objective, OracleModels, PipelineSim, Policy, QueueKind,
+    Recorder, RepartitionPolicy, ScenarioManifest, Schedule, ScheduleCache, ServeReport, Server,
+    ServingEngine, ServingFleet, Severity, ShardReport, SloController, Snapshot, Stage, StreamSlo,
+    StreamSpec, SweepReport, SystemSpec, TraceRecorder, Workload,
 };
 
 /// Every name `dype::prelude` re-exports. Order here is cosmetic (the
@@ -36,6 +37,7 @@ const GOLDEN_PRELUDE: &[&str] = &[
     "Coordinator",
     "Dataset",
     "DeviceType",
+    "Diagnostic",
     "DpScheduler",
     "EnergyBudget",
     "EngineConfig",
@@ -47,6 +49,7 @@ const GOLDEN_PRELUDE: &[&str] = &[
     "Interconnect",
     "KernelDesc",
     "KernelKind",
+    "LintReport",
     "MigrationMode",
     "ModelRegistry",
     "MultiStreamReport",
@@ -65,6 +68,7 @@ const GOLDEN_PRELUDE: &[&str] = &[
     "Server",
     "ServingEngine",
     "ServingFleet",
+    "Severity",
     "ShardReport",
     "SloController",
     "Snapshot",
@@ -79,6 +83,9 @@ const GOLDEN_PRELUDE: &[&str] = &[
     "calibrate",
     "generate_trace",
     "gnn",
+    "lint_engine_config",
+    "lint_fleet",
+    "lint_manifest",
     "transformer",
 ];
 
